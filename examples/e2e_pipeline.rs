@@ -1,0 +1,11 @@
+//! End-to-end validation driver (the EXPERIMENTS.md §E2E record):
+//! trained checkpoint -> Rust quantizer -> coordinator + TCP server ->
+//! concurrent batched clients -> throughput/latency/PPL report.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_pipeline
+//! ```
+
+fn main() -> anyhow::Result<()> {
+    itq3s::bench::tables::e2e("artifacts")
+}

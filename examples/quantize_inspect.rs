@@ -1,0 +1,42 @@
+//! Inspect the trained checkpoint: weight statistics, the Theorem 1
+//! Gaussianization effect, Corollary 1 outlier suppression, the
+//! Theorem 2 bound, and per-format reconstruction errors — the paper's
+//! §3 analysis on real (trained, not synthetic) weights.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quantize_inspect
+//! ```
+
+use itq3s::quant::{format_by_name, QuantizedMatrix, TABLE1_FORMATS};
+use itq3s::util::stats;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let ckpt = Path::new("artifacts/model_fp32.iguf");
+    if !ckpt.exists() {
+        eprintln!("artifacts/model_fp32.iguf missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let dense = itq3s::gguf::load_dense(ckpt)?;
+    itq3s::bench::tables::inspect_model(&dense);
+
+    println!("\n=== per-tensor reconstruction error (layer 0) ===");
+    let l = &dense.layers[0];
+    for (name, t) in [("wq", &l.wq), ("wo", &l.wo), ("w1", &l.w1), ("w2", &l.w2)] {
+        print!("  {name:<4}");
+        for fmt_name in TABLE1_FORMATS {
+            let fmt = format_by_name(fmt_name).unwrap();
+            let q = QuantizedMatrix::quantize(fmt, t);
+            let rel = stats::rel_l2_err(t.data(), q.dequantize().data());
+            print!("  {fmt_name}={rel:.4}");
+        }
+        println!();
+    }
+
+    println!("\n=== rotation gain per layer (MSE_unrotated / MSE_rotated, 3-bit) ===");
+    for (i, l) in dense.layers.iter().enumerate() {
+        let gain = itq3s::quant::error::rotation_gain(l.w2.data(), 256);
+        println!("  layer {i} w2: {gain:.2}x");
+    }
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Serving demo: start the coordinator on the quantized checkpoint,
+//! drive it as a client over TCP (streaming tokens), print stats.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example serve_client
+//! # or against an external server started with:
+//! #   itq3s serve --model artifacts/model_itq3s.iguf --addr 127.0.0.1:8090
+//! cargo run --release --example serve_client -- 127.0.0.1:8090
+//! ```
+
+use itq3s::coordinator::CoordinatorConfig;
+use itq3s::model::NativeEngine;
+use itq3s::server::{self, Client};
+use itq3s::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let external: Option<String> = std::env::args().nth(1);
+
+    let (addr, handle) = match external {
+        Some(a) => (a, None),
+        None => {
+            let qm = itq3s::gguf::load_quantized(std::path::Path::new(
+                "artifacts/model_itq3s.iguf",
+            ))?;
+            println!("loaded itq3_s model ({} of packed linears)",
+                itq3s::util::human_bytes(qm.linear_nbytes() as u64));
+            let (a, h) = server::spawn_ephemeral(
+                Box::new(NativeEngine::quantized(qm)),
+                CoordinatorConfig { max_batch: 4, kv_budget_bytes: 128 << 20, prefill_chunk: 32 },
+            )?;
+            (a.to_string(), Some(h))
+        }
+    };
+
+    let mut c = Client::connect(&addr)?;
+    for prompt in [
+        "the archive of the glass city was ",
+        "in the year 8",
+        "quick update: rowan ",
+    ] {
+        print!("[prompt] {prompt:?} -> ");
+        c.send(&Json::obj(vec![
+            ("op", Json::str("generate")),
+            ("prompt", Json::str(prompt)),
+            ("max_tokens", Json::num(40.0)),
+            ("stop_at_sentence", Json::Bool(true)),
+        ]))?;
+        loop {
+            let msg = c.recv()?;
+            if let Some(t) = msg.get("token").and_then(|t| t.as_str()) {
+                print!("{t}");
+                use std::io::Write;
+                std::io::stdout().flush()?;
+            } else if msg.get("done").is_some() {
+                println!(
+                    "   [{} tok, ttft {:.0} ms, total {:.0} ms]",
+                    msg.get("gen_tokens").and_then(|v| v.as_u64()).unwrap_or(0),
+                    msg.get("ttft_ms").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                    msg.get("total_ms").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                );
+                break;
+            }
+        }
+    }
+
+    c.send(&Json::obj(vec![("op", Json::str("stats"))]))?;
+    println!("\nserver stats: {}", c.recv()?);
+
+    if let Some(h) = handle {
+        c.send(&Json::obj(vec![("op", Json::str("shutdown"))]))?;
+        let _ = c.recv();
+        h.join().unwrap()?;
+    }
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""Build-time Python: JAX model (L2) + Pallas kernels (L1) + AOT lowering."""

@@ -1,0 +1,91 @@
+"""AOT lowering: JAX model -> HLO text artifacts for the Rust runtime.
+
+HLO *text* is the interchange format (NOT serialized HloModuleProto):
+jax >= 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to --out, default ../artifacts):
+- model_fp32.hlo.txt    score(tokens, *dense weights) -> logits
+- model_itq3s.hlo.txt   score(tokens, *packed ITQ3_S buffers) -> logits
+                        (fused Pallas dequant+IFWHT+matmul in-graph)
+- manifest.json         seq length, config, exact input ordering
+
+Usage: python -m compile.aot [--seq 128] [--out DIR]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def input_order(cfg, kind: str):
+    """Human/machine-readable input ordering for the manifest."""
+    names = ["tokens", "embed", "final_norm"]
+    for i in range(cfg["n_layers"]):
+        names.append(f"layers.{i}.attn_norm")
+        for n in model.LINEARS:
+            if kind == "fp32":
+                names.append(f"layers.{i}.{n}")
+            else:
+                names.extend(
+                    f"layers.{i}.{n}.{part}" for part in ["codes", "sel", "d", "z"]
+                )
+        names.append(f"layers.{i}.ffn_norm")
+    return names
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = model.config_tiny()
+
+    print("lowering fp32 artifact...", flush=True)
+    fp32 = jax.jit(model.score_fp32(cfg)).lower(*model.fp32_arg_shapes(cfg, args.seq))
+    fp32_path = os.path.join(args.out, "model_fp32.hlo.txt")
+    with open(fp32_path, "w") as f:
+        f.write(to_hlo_text(fp32))
+    print(f"  wrote {fp32_path}", flush=True)
+
+    print("lowering itq3s artifact (fused Pallas kernel in-graph)...", flush=True)
+    q = jax.jit(model.score_itq3s(cfg)).lower(*model.itq3s_arg_shapes(cfg, args.seq))
+    q_path = os.path.join(args.out, "model_itq3s.hlo.txt")
+    with open(q_path, "w") as f:
+        f.write(to_hlo_text(q))
+    print(f"  wrote {q_path}", flush=True)
+
+    manifest = {
+        "seq": args.seq,
+        "config": cfg,
+        "artifacts": {
+            "fp32": {"file": "model_fp32.hlo.txt", "inputs": input_order(cfg, "fp32")},
+            "itq3_s": {
+                "file": "model_itq3s.hlo.txt",
+                "inputs": input_order(cfg, "itq3s"),
+            },
+        },
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("wrote manifest.json", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""IGUF checkpoint writer/reader (python side of the container contract).
+
+Binary layout must match ``rust/src/gguf/mod.rs`` byte-for-byte; the Rust
+test-suite loads checkpoints written here (`rust/tests/artifacts.rs`).
+"""
+
+import json
+import struct
+
+import numpy as np
+
+MAGIC = b"IGUF"
+VERSION = 1
+ALIGN = 64
+
+
+def _entry_header(name: str, dtype: str, rows: int, cols: int, padded: int, dlen: int):
+    nb = name.encode()
+    db = dtype.encode()
+    return (
+        struct.pack("<I", len(nb)) + nb
+        + struct.pack("<I", len(db)) + db
+        + struct.pack("<QQQQ", rows, cols, padded, dlen)
+    )
+
+
+def write_iguf(path: str, meta: dict, tensors: list):
+    """tensors: list of (name, np.ndarray f32 2-D or 1-D)."""
+    buf = bytearray()
+    buf += MAGIC
+    buf += struct.pack("<I", VERSION)
+    mb = json.dumps(meta, separators=(",", ":")).encode()
+    buf += struct.pack("<Q", len(mb)) + mb
+    buf += struct.pack("<Q", len(tensors))
+    payloads = []
+    for name, arr in tensors:
+        arr = np.ascontiguousarray(arr, dtype=np.float32)
+        if arr.ndim == 1:
+            rows, cols = 1, arr.shape[0]
+        else:
+            rows, cols = arr.shape
+        data = arr.tobytes()
+        buf += _entry_header(name, "f32", rows, cols, cols, len(data))
+        payloads.append(data)
+    for data in payloads:
+        while len(buf) % ALIGN != 0:
+            buf += b"\x00"
+        buf += data
+    with open(path, "wb") as f:
+        f.write(bytes(buf))
+
+
+def read_iguf(path: str):
+    """Returns (meta dict, {name: np.ndarray}). f32 tensors only."""
+    with open(path, "rb") as f:
+        raw = f.read()
+    pos = 0
+
+    def take(n):
+        nonlocal pos
+        s = raw[pos : pos + n]
+        assert len(s) == n, "truncated IGUF"
+        pos += n
+        return s
+
+    assert take(4) == MAGIC, "bad magic"
+    (ver,) = struct.unpack("<I", take(4))
+    assert ver == VERSION
+    (mlen,) = struct.unpack("<Q", take(8))
+    meta = json.loads(take(mlen))
+    (n,) = struct.unpack("<Q", take(8))
+    headers = []
+    for _ in range(n):
+        (nl,) = struct.unpack("<I", take(4))
+        name = take(nl).decode()
+        (dl,) = struct.unpack("<I", take(4))
+        dtype = take(dl).decode()
+        rows, cols, padded, dlen = struct.unpack("<QQQQ", take(32))
+        headers.append((name, dtype, rows, cols, dlen))
+    tensors = {}
+    for name, dtype, rows, cols, dlen in headers:
+        while pos % ALIGN != 0:
+            pos += 1
+        data = take(dlen)
+        if dtype == "f32":
+            arr = np.frombuffer(data, dtype=np.float32).reshape(rows, cols)
+            tensors[name] = arr[0] if rows == 1 else arr
+        else:
+            tensors[name] = data  # opaque quant payload
+    return meta, tensors
+
+
+def save_dense_checkpoint(path: str, params: dict, cfg: dict):
+    """Write a dense model in the layout rust `gguf::load_dense` expects."""
+    tensors = [("embed", params["embed"])]
+    for i, l in enumerate(params["layers"]):
+        tensors.append((f"layers.{i}.attn_norm", l["attn_norm"]))
+        for n in ["wq", "wk", "wv", "wo"]:
+            tensors.append((f"layers.{i}.{n}", l[n]))
+        tensors.append((f"layers.{i}.ffn_norm", l["ffn_norm"]))
+        for n in ["w1", "w3", "w2"]:
+            tensors.append((f"layers.{i}.{n}", l[n]))
+    tensors.append(("final_norm", params["final_norm"]))
+    meta = {"kind": "dense", "config": cfg}
+    write_iguf(path, meta, tensors)
+
+
+def load_dense_checkpoint(path: str):
+    """Read a dense model back into the python params pytree."""
+    meta, t = read_iguf(path)
+    cfg = meta["config"]
+    params = {"embed": t["embed"], "final_norm": t["final_norm"], "layers": []}
+    for i in range(cfg["n_layers"]):
+        layer = {}
+        for n in ["attn_norm", "wq", "wk", "wv", "wo", "ffn_norm", "w1", "w3", "w2"]:
+            layer[n] = t[f"layers.{i}.{n}"]
+        params["layers"].append(layer)
+    return cfg, params

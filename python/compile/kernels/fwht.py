@@ -1,0 +1,60 @@
+"""Layer-1 Pallas kernel: blocked Fast Walsh-Hadamard Transform.
+
+The TPU rethink of the paper's CUDA shared-memory butterfly (Listing 2):
+instead of per-thread index arithmetic with ``__syncthreads`` between the
+8 stages, the whole 256-wide block lives in VMEM and each butterfly stage
+is a reshape + add/sub over VPU lanes. ``interpret=True`` everywhere —
+the CPU PJRT plugin cannot execute Mosaic custom-calls (see
+DESIGN.md §Hardware-Adaptation for the VMEM/MXU analysis).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256
+
+
+def _fwht_last_axis(x, n):
+    """Normalized FWHT along the last axis (size n), butterfly stages."""
+    shape = x.shape
+    y = x
+    m = 1
+    while m < n:
+        y = y.reshape(*shape[:-1], n // (2 * m), 2, m)
+        top = y[..., 0, :] + y[..., 1, :]
+        bot = y[..., 0, :] - y[..., 1, :]
+        y = jnp.stack([top, bot], axis=-2).reshape(*shape)
+        m *= 2
+    return y * (1.0 / jnp.sqrt(jnp.float32(n)))
+
+
+def _fwht_kernel(x_ref, o_ref, *, block):
+    rows = x_ref[...]  # (tile_rows, nblocks*block)
+    t, c = rows.shape
+    wb = rows.reshape(t, c // block, block)
+    o_ref[...] = _fwht_last_axis(wb, block).reshape(t, c)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def fwht_blocked(x, block: int = BLOCK):
+    """Apply the normalized FWHT to each contiguous `block` of the last
+    axis of a 2-D array (rows are independent)."""
+    rows, cols = x.shape
+    assert cols % block == 0, f"cols {cols} % block {block}"
+    tile = min(rows, 64)
+    assert rows % tile == 0
+    return pl.pallas_call(
+        functools.partial(_fwht_kernel, block=block),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        grid=(rows // tile,),
+        in_specs=[pl.BlockSpec((tile, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile, cols), lambda i: (i, 0)),
+        interpret=True,
+    )(x.astype(jnp.float32))
+
+
+# The transform is involutory; expose the paper's name for call sites.
+ifwht_blocked = fwht_blocked

@@ -1,0 +1,89 @@
+"""Layer-1 Pallas kernel: fused ITQ3_S dequantize + inverse-FWHT + matmul.
+
+This is the paper's core kernel (Alg 2, `load_tiles_itq3_s` + MMQ) mapped
+to TPU idioms:
+
+- a (TILE_R x cols) tile of packed quants is staged into VMEM by the
+  BlockSpec (the analog of the CUDA global->shared load),
+- 3-bit codes are unpacked with vectorized shift/mask int32 ops (the
+  "single 32-bit load + bitfield extraction" of §4.2),
+- the 256-point inverse FWHT runs as 8 reshape/± butterfly stages over
+  VPU lanes (the analog of the shared-memory butterfly with
+  __syncthreads),
+- the reconstructed tile immediately feeds the matmul (MXU), so rotated
+  weights never leave on-chip memory — the fusion that gives the paper
+  its "no off-chip traffic penalty" property.
+
+`interpret=True` (CPU correctness); the VMEM budget of the tile is
+analyzed in DESIGN.md §Hardware-Adaptation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fwht import _fwht_last_axis
+
+BLOCK = 256
+
+
+def _unpack_tile(codes, sel, d, z, cols):
+    """Vectorized decode of the packed planes to rotated-domain values.
+
+    codes: u32 (R, nb*16), sel: u32 (R, nb*8), d/z: f32 (R, nb).
+    Returns f32 (R, cols).
+    """
+    r = codes.shape[0]
+    nb = cols // BLOCK
+    # 2-bit codes: expand each u32 word into its 16 fields.
+    shifts = (2 * jnp.arange(16, dtype=jnp.uint32))[None, None, :]
+    c = (codes[:, :, None] >> shifts) & jnp.uint32(3)  # (R, nb*16, 16)
+    digit = c.astype(jnp.float32).reshape(r, nb, BLOCK) - 1.0
+    # selector bits: expand each u32 word into its 32 bits.
+    sshifts = jnp.arange(32, dtype=jnp.uint32)[None, None, :]
+    s = (sel[:, :, None] >> sshifts) & jnp.uint32(1)  # (R, nb*8, 32)
+    sbit = s.astype(jnp.float32).reshape(r, nb, BLOCK)
+    mag = d[:, :, None] * (1.0 + 2.0 * sbit)  # d or 3d
+    return (digit * mag + z[:, :, None]).reshape(r, cols)
+
+
+def _fused_kernel(codes_ref, sel_ref, d_ref, z_ref, x_ref, o_ref, *, cols):
+    rot = _unpack_tile(codes_ref[...], sel_ref[...], d_ref[...], z_ref[...], cols)
+    # In-place inverse rotation in "VMEM" (H is involutory).
+    r = rot.shape[0]
+    w = _fwht_last_axis(rot.reshape(r, cols // BLOCK, BLOCK), BLOCK).reshape(r, cols)
+    # Fused matmul: the dequantized tile feeds the MXU directly.
+    o_ref[...] = w @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "cols"))
+def dequant_matmul(codes, sel, d, z, x, *, rows: int, cols: int):
+    """Fused `W_hat @ x` for an ITQ3_S-packed `(rows, cols)` matrix and
+    activations `x: (cols, s)`. Returns `(rows, s)` f32."""
+    s = x.shape[1]
+    tile = 64 if rows % 64 == 0 else rows
+    assert rows % tile == 0
+    nb = cols // BLOCK
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, cols=cols),
+        out_shape=jax.ShapeDtypeStruct((rows, s), jnp.float32),
+        grid=(rows // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, nb * 16), lambda i: (i, 0)),
+            pl.BlockSpec((tile, nb * 8), lambda i: (i, 0)),
+            pl.BlockSpec((tile, nb), lambda i: (i, 0)),
+            pl.BlockSpec((tile, nb), lambda i: (i, 0)),
+            pl.BlockSpec((cols, s), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, s), lambda i: (i, 0)),
+        interpret=True,
+    )(codes, sel, d, z, x.astype(jnp.float32))
+
+
+def dequantize(codes, sel, d, z, *, rows: int, cols: int):
+    """Standalone dequantization (Alg 2 without the matmul): identity
+    activations through the fused kernel."""
+    eye = jnp.eye(cols, dtype=jnp.float32)
+    return dequant_matmul(codes, sel, d, z, eye, rows=rows, cols=cols)

@@ -1,0 +1,140 @@
+"""Pure-jnp/numpy reference oracles for the Pallas kernels.
+
+Everything here is the *specification*: the Pallas kernels in
+``fwht.py``/``itq3s_matmul.py`` must match these references bit-for-bit
+(integer unpacking) or to float tolerance (transforms, matmuls); pytest
+enforces it (``python/tests/test_kernels.py``).
+
+The packed layout is the contract with the Rust encoder
+(``rust/src/quant/itq3s.rs`` / ``packing.rs``):
+
+- base plane  u32[rows, nblocks*16]: code for column t of block b sits at
+  bits ``2*(t%16)`` of word ``b*16 + t//16`` (LSB-first, little-endian).
+- selector    u32[rows, nblocks*8]:  bit for column t of block b sits at
+  bit ``t%32`` of word ``b*8 + t//32``.
+- d, z        f32[rows, nblocks] (f16-rounded values, widened to f32).
+
+Grid: value = (code-1) * d * (1 + 2*sel) + z, then a 256-point inverse
+FWHT per block returns the weight to the original domain.
+"""
+
+import numpy as np
+
+BLOCK = 256
+# MSE-optimal dual-ternary step for N(0,1) (see rust quant::ternary).
+DUAL_SCALE_STAR = 0.5682
+
+
+def fwht_ref(x: np.ndarray) -> np.ndarray:
+    """Normalized FWHT along the last axis via the dense H matrix (oracle)."""
+    n = x.shape[-1]
+    assert n & (n - 1) == 0
+    i = np.arange(n)
+    h = np.where(np.bitwise_count(i[:, None] & i[None, :]) % 2 == 0, 1.0, -1.0)
+    h = (h / np.sqrt(n)).astype(np.float32)
+    return (x.astype(np.float32) @ h.T).astype(np.float32)
+
+
+def fwht_butterfly(x: np.ndarray) -> np.ndarray:
+    """Normalized FWHT along the last axis via butterflies (fast reference,
+    same stage order as the Rust and Pallas implementations)."""
+    n = x.shape[-1]
+    y = x.astype(np.float32).copy()
+    m = 1
+    while m < n:
+        y = y.reshape(*y.shape[:-1], n // (2 * m), 2, m)
+        top = y[..., 0, :] + y[..., 1, :]
+        bot = y[..., 0, :] - y[..., 1, :]
+        y = np.stack([top, bot], axis=-2).reshape(*top.shape[:-2], -1, n)
+        y = y.reshape(*y.shape[:-2], n)
+        m *= 2
+    return y / np.float32(np.sqrt(n))
+
+
+def f16_round(x: np.ndarray) -> np.ndarray:
+    """Round-trip through IEEE binary16 (numpy uses RNE, same as Rust)."""
+    return np.asarray(x, dtype=np.float32).astype(np.float16).astype(np.float32)
+
+
+def encode_block(w: np.ndarray):
+    """ITQ3_S-encode one 256-vector. Returns (codes u8[256] in {0,1,2},
+    sel u8[256] in {0,1}, d f32, z f32). Mirrors rust Itq3S::quantize_block."""
+    assert w.shape == (BLOCK,)
+    rot = fwht_butterfly(w[None, :])[0]
+    z = float(f16_round(rot.mean()))
+    c = rot - z
+    d = float(f16_round(np.float32(DUAL_SCALE_STAR * c.std())))
+    d = max(d, 1e-8)
+    a = np.abs(c)
+    zero = a <= 0.5 * d
+    coarse = a > 2.0 * d
+    digit = np.where(zero, 0, np.sign(c)).astype(np.int8)
+    codes = (digit + 1).astype(np.uint8)
+    sel = (coarse & ~zero).astype(np.uint8)
+    return codes, sel, np.float32(d), np.float32(z)
+
+
+def pack_planes(codes: np.ndarray, sel: np.ndarray):
+    """Pack per-block codes/sel (shape (nblocks, 256)) into the u32 planes."""
+    nb = codes.shape[0]
+    cw = np.zeros((nb, 16), dtype=np.uint32)
+    sw = np.zeros((nb, 8), dtype=np.uint32)
+    for t in range(BLOCK):
+        cw[:, t // 16] |= codes[:, t].astype(np.uint32) << np.uint32(2 * (t % 16))
+        sw[:, t // 32] |= sel[:, t].astype(np.uint32) << np.uint32(t % 32)
+    return cw.reshape(-1), sw.reshape(-1)
+
+
+def quantize_matrix(w: np.ndarray):
+    """Quantize a (rows, cols) matrix to the ITQ3_S input-array layout.
+
+    Returns dict with codes u32[rows, nb*16], sel u32[rows, nb*8],
+    d f32[rows, nb], z f32[rows, nb].
+    """
+    rows, cols = w.shape
+    assert cols % BLOCK == 0
+    nb = cols // BLOCK
+    codes = np.zeros((rows, nb * 16), dtype=np.uint32)
+    sel = np.zeros((rows, nb * 8), dtype=np.uint32)
+    d = np.zeros((rows, nb), dtype=np.float32)
+    z = np.zeros((rows, nb), dtype=np.float32)
+    for r in range(rows):
+        cs = np.zeros((nb, BLOCK), dtype=np.uint8)
+        ss = np.zeros((nb, BLOCK), dtype=np.uint8)
+        for b in range(nb):
+            c, s, dd, zz = encode_block(w[r, b * BLOCK : (b + 1) * BLOCK])
+            cs[b], ss[b] = c, s
+            d[r, b], z[r, b] = dd, zz
+        codes[r], sel[r] = pack_planes(cs, ss)
+    return {"codes": codes, "sel": sel, "d": d, "z": z}
+
+
+def unpack_ref(q: dict, rows: int, cols: int) -> np.ndarray:
+    """Reference decode of the packed planes to rotated-domain values."""
+    nb = cols // BLOCK
+    t = np.arange(cols)
+    b = t // BLOCK
+    ti = t % BLOCK
+    word = b * 16 + ti // 16
+    shift = (2 * (ti % 16)).astype(np.uint32)
+    code = (q["codes"][:, word] >> shift[None, :]) & 3
+    digit = code.astype(np.float32) - 1.0
+    sword = b * 8 + ti // 32
+    sshift = (ti % 32).astype(np.uint32)
+    sbit = ((q["sel"][:, sword] >> sshift[None, :]) & 1).astype(np.float32)
+    dcol = np.repeat(q["d"], BLOCK, axis=1)
+    zcol = np.repeat(q["z"], BLOCK, axis=1)
+    return (digit * dcol * (1.0 + 2.0 * sbit) + zcol).astype(np.float32)
+
+
+def dequantize_matrix_ref(q: dict, rows: int, cols: int) -> np.ndarray:
+    """Full reference dequantization back to the original weight domain."""
+    rot = unpack_ref(q, rows, cols)
+    wb = rot.reshape(rows, cols // BLOCK, BLOCK)
+    return fwht_butterfly(wb).reshape(rows, cols)
+
+
+def dequant_matmul_ref(q: dict, rows: int, cols: int, x: np.ndarray) -> np.ndarray:
+    """Reference fused op: W_hat @ x for x of shape (cols, S)."""
+    w = dequantize_matrix_ref(q, rows, cols)
+    return (w @ x).astype(np.float32)

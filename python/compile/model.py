@@ -1,0 +1,290 @@
+"""Layer-2: the JAX transformer (build-time only).
+
+A LLaMA-style decoder (RMSNorm, interleaved-pair RoPE, causal MHA,
+SwiGLU, tied embeddings) in two flavors:
+
+- ``score_fp32``: dense f32 weights — the training target and the FP16
+  baseline artifact.
+- ``score_itq3s``: every large linear is an ITQ3_S-packed buffer applied
+  through the fused Pallas dequant+IFWHT+matmul kernel (L1) — the
+  quantized-serving artifact. The packed planes are *runtime inputs*, so
+  the Rust coordinator feeds weights quantized by its own encoder.
+
+The math mirrors ``rust/src/model/native.rs`` op-for-op; the PJRT parity
+integration test asserts logits agreement.
+
+Flat argument order (the L3 contract, also emitted in
+``artifacts/manifest.json``): ``tokens``, ``embed``, ``final_norm``, then
+per layer: ``attn_norm``, [7 linears], ``ffn_norm`` where each linear is
+one f32 array (fp32 flavor) or four arrays ``codes,sel,d,z`` (itq3s).
+Linear order: wq wk wv wo w1 w3 w2.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.itq3s_matmul import dequant_matmul
+
+LINEARS = ["wq", "wk", "wv", "wo", "w1", "w3", "w2"]
+
+
+def config_tiny():
+    return dict(
+        vocab=256, dim=256, n_layers=4, n_heads=8, n_kv_heads=8,
+        ffn=1024, max_seq=256, rope_theta=10_000.0, eps=1e-5,
+    )
+
+
+def linear_shapes(cfg):
+    d, f = cfg["dim"], cfg["ffn"]
+    return {
+        "wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+        "w1": (f, d), "w3": (f, d), "w2": (d, f),
+    }
+
+
+def rmsnorm(x, w, eps):
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def rope(x, pos, n_heads, head_dim, theta):
+    """Interleaved-pair RoPE for x: (S, dim); pos: (S,)."""
+    s = x.shape[0]
+    xh = x.reshape(s, n_heads, head_dim // 2, 2)
+    i = jnp.arange(head_dim // 2, dtype=jnp.float32)
+    freq = 1.0 / (theta ** (2.0 * i / head_dim))  # (hd/2,)
+    ang = pos[:, None].astype(jnp.float32) * freq[None, :]  # (S, hd/2)
+    sin = jnp.sin(ang)[:, None, :]
+    cos = jnp.cos(ang)[:, None, :]
+    a, b = xh[..., 0], xh[..., 1]
+    rot = jnp.stack([a * cos - b * sin, a * sin + b * cos], axis=-1)
+    return rot.reshape(s, n_heads * head_dim)
+
+
+def attention(q, k, v, cfg):
+    """Causal MHA for (S, dim) q/k/v."""
+    s = q.shape[0]
+    nh, hd = cfg["n_heads"], cfg["dim"] // cfg["n_heads"]
+    qh = q.reshape(s, nh, hd).transpose(1, 0, 2)  # (nh, S, hd)
+    kh = k.reshape(s, nh, hd).transpose(1, 0, 2)
+    vh = v.reshape(s, nh, hd).transpose(1, 0, 2)
+    scores = jnp.einsum("hqd,hkd->hqk", qh, kh) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask[None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hqk,hkd->hqd", probs, vh)  # (nh, S, hd)
+    return out.transpose(1, 0, 2).reshape(s, nh * hd)
+
+
+def _block(x, pos, layer, apply_linear, cfg):
+    """One decoder layer; `apply_linear(name, h)` abstracts the weight
+    representation (dense f32 vs fused ITQ3_S kernel)."""
+    h = rmsnorm(x, layer["attn_norm"], cfg["eps"])
+    q = apply_linear(layer, "wq", h)
+    k = apply_linear(layer, "wk", h)
+    v = apply_linear(layer, "wv", h)
+    hd = cfg["dim"] // cfg["n_heads"]
+    q = rope(q, pos, cfg["n_heads"], hd, cfg["rope_theta"])
+    k = rope(k, pos, cfg["n_heads"], hd, cfg["rope_theta"])
+    x = x + apply_linear(layer, "wo", attention(q, k, v, cfg))
+    h = rmsnorm(x, layer["ffn_norm"], cfg["eps"])
+    gate = apply_linear(layer, "w1", h)
+    up = apply_linear(layer, "w3", h)
+    x = x + apply_linear(layer, "w2", jax.nn.silu(gate) * up)
+    return x
+
+
+def _forward(tokens, params, apply_linear, cfg):
+    """tokens: (S,) int32 -> logits (S, vocab)."""
+    s = tokens.shape[0]
+    pos = jnp.arange(s)
+    x = params["embed"][tokens]  # (S, dim)
+    for layer in params["layers"]:
+        x = _block(x, pos, layer, apply_linear, cfg)
+    h = rmsnorm(x, params["final_norm"], cfg["eps"])
+    return h @ params["embed"].T  # tied LM head
+
+
+def _dense_apply(layer, name, h):
+    return h @ layer[name].T
+
+
+def forward_fp32(tokens, params, cfg):
+    return _forward(tokens, params, _dense_apply, cfg)
+
+
+def _make_quant_apply(cfg):
+    shapes = linear_shapes(cfg)
+
+    def apply(layer, name, h):
+        rows, cols = shapes[name]
+        q = layer[name]
+        # Fused kernel computes W @ x for x (cols, S); h is (S, cols).
+        y = dequant_matmul(
+            q["codes"], q["sel"], q["d"], q["z"], h.T, rows=rows, cols=cols
+        )
+        return y.T
+
+    return apply
+
+
+def forward_itq3s(tokens, params, cfg):
+    return _forward(tokens, params, _make_quant_apply(cfg), cfg)
+
+
+# ---------------------------------------------------------------------
+# Flat-argument entry points for AOT lowering (L3 feeds buffers in this
+# exact order; see module docstring).
+# ---------------------------------------------------------------------
+
+def flatten_fp32(params):
+    out = [params["embed"], params["final_norm"]]
+    for l in params["layers"]:
+        out.append(l["attn_norm"])
+        for n in LINEARS:
+            out.append(l[n])
+        out.append(l["ffn_norm"])
+    return out
+
+
+def unflatten_fp32(cfg, args):
+    args = list(args)
+    params = {"embed": args.pop(0), "final_norm": args.pop(0), "layers": []}
+    for _ in range(cfg["n_layers"]):
+        layer = {"attn_norm": args.pop(0)}
+        for n in LINEARS:
+            layer[n] = args.pop(0)
+        layer["ffn_norm"] = args.pop(0)
+        params["layers"].append(layer)
+    assert not args
+    return params
+
+
+def flatten_itq3s(params):
+    out = [params["embed"], params["final_norm"]]
+    for l in params["layers"]:
+        out.append(l["attn_norm"])
+        for n in LINEARS:
+            q = l[n]
+            out.extend([q["codes"], q["sel"], q["d"], q["z"]])
+        out.append(l["ffn_norm"])
+    return out
+
+
+def unflatten_itq3s(cfg, args):
+    args = list(args)
+    params = {"embed": args.pop(0), "final_norm": args.pop(0), "layers": []}
+    for _ in range(cfg["n_layers"]):
+        layer = {"attn_norm": args.pop(0)}
+        for n in LINEARS:
+            layer[n] = {
+                "codes": args.pop(0), "sel": args.pop(0),
+                "d": args.pop(0), "z": args.pop(0),
+            }
+        layer["ffn_norm"] = args.pop(0)
+        params["layers"].append(layer)
+    assert not args
+    return params
+
+
+def score_fp32(cfg):
+    """Returns f(tokens, *flat_params) -> (S, vocab) logits."""
+
+    def f(tokens, *flat):
+        return (forward_fp32(tokens, unflatten_fp32(cfg, flat), cfg),)
+
+    return f
+
+
+def score_itq3s(cfg):
+    def f(tokens, *flat):
+        return (forward_itq3s(tokens, unflatten_itq3s(cfg, flat), cfg),)
+
+    return f
+
+
+def fp32_arg_shapes(cfg, seq):
+    """ShapeDtypeStructs for lowering the fp32 artifact."""
+    d, f, v = cfg["dim"], cfg["ffn"], cfg["vocab"]
+    sds = jax.ShapeDtypeStruct
+    args = [sds((seq,), jnp.int32), sds((v, d), jnp.float32), sds((d,), jnp.float32)]
+    shapes = linear_shapes(cfg)
+    for _ in range(cfg["n_layers"]):
+        args.append(sds((d,), jnp.float32))
+        for n in LINEARS:
+            args.append(sds(shapes[n], jnp.float32))
+        args.append(sds((d,), jnp.float32))
+    return args
+
+
+def itq3s_arg_shapes(cfg, seq):
+    d, v = cfg["dim"], cfg["vocab"]
+    sds = jax.ShapeDtypeStruct
+    args = [sds((seq,), jnp.int32), sds((v, d), jnp.float32), sds((d,), jnp.float32)]
+    shapes = linear_shapes(cfg)
+    for _ in range(cfg["n_layers"]):
+        args.append(sds((d,), jnp.float32))
+        for n in LINEARS:
+            rows, cols = shapes[n]
+            nb = cols // 256
+            args.append(sds((rows, nb * 16), jnp.uint32))
+            args.append(sds((rows, nb * 8), jnp.uint32))
+            args.append(sds((rows, nb), jnp.float32))
+            args.append(sds((rows, nb), jnp.float32))
+        args.append(sds((d,), jnp.float32))
+    return args
+
+
+def init_params(cfg, seed=0, tail_dof=None):
+    """Random dense initialization.
+
+    ``tail_dof``: None for Gaussian; a float t-distribution dof induces the
+    heavy-tailed, outlier-bearing weight statistics that large trained
+    LLMs exhibit (paper §1; kurtosis 4-20 in practice). A tiny model
+    trained a few hundred steps from Gaussian init stays near-Gaussian,
+    so the Table-1 regime is induced at init — the documented
+    substitution (DESIGN.md §6) that preserves the phenomenon ITQ3_S
+    targets. Training proceeds normally from this init and the tails
+    persist.
+    """
+    rng = np.random.default_rng(seed)
+    shapes = linear_shapes(cfg)
+
+    def mat(rows, cols):
+        if tail_dof is None:
+            w = rng.standard_normal((rows, cols))
+        else:
+            w = rng.standard_t(tail_dof, size=(rows, cols))
+            w /= np.sqrt(tail_dof / (tail_dof - 2.0))  # unit variance
+        return (w / np.sqrt(cols)).astype(np.float32)
+
+    layers = []
+    for _ in range(cfg["n_layers"]):
+        layer = {"attn_norm": np.ones(cfg["dim"], np.float32),
+                 "ffn_norm": np.ones(cfg["dim"], np.float32)}
+        for n in LINEARS:
+            layer[n] = mat(*shapes[n])
+        layers.append(layer)
+    return {
+        "embed": mat(cfg["vocab"], cfg["dim"]),
+        "final_norm": np.ones(cfg["dim"], np.float32),
+        "layers": layers,
+    }
+
+
+def quantize_params(params, cfg):
+    """ITQ3_S-quantize all linears (python-side, for tests and AOT
+    examples; the serving path quantizes in Rust)."""
+    from .kernels import ref
+
+    out = {"embed": params["embed"], "final_norm": params["final_norm"], "layers": []}
+    for l in params["layers"]:
+        ql = {"attn_norm": l["attn_norm"], "ffn_norm": l["ffn_norm"]}
+        for n in LINEARS:
+            ql[n] = ref.quantize_matrix(np.asarray(l[n]))
+        out["layers"].append(ql)
+    return out

@@ -1,0 +1,151 @@
+"""Build-time training of the tiny byte LM (the LLaMA-checkpoint stand-in).
+
+Trains the L2 model on the Rust-generated synthetic corpus
+(`artifacts/corpus/train.txt`, written by `itq3s gen-corpus`) with a
+hand-rolled Adam (optax is not in the offline image). Emits:
+
+- `artifacts/model_fp32.iguf` — the dense checkpoint (IGUF container,
+  loaded by both the Rust quantizer and `aot.py`),
+- `artifacts/train_log.json` — loss curve + final PPL (the E2E record
+  referenced by EXPERIMENTS.md).
+
+Usage: python -m compile.train [--steps N] [--out DIR]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import checkpoint, model
+
+
+def load_corpus(path: str, fallback_bytes: int = 300_000) -> bytes:
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            return f.read()
+    raise SystemExit(
+        f"corpus not found at {path}; run `cargo run --release -- gen-corpus` first"
+    )
+
+
+def batches(data: np.ndarray, batch: int, seq: int, rng: np.random.Generator):
+    """Random windows; target is the next byte. BOS (0) prepended."""
+    while True:
+        idx = rng.integers(0, len(data) - seq - 1, size=batch)
+        x = np.zeros((batch, seq), dtype=np.int32)
+        y = np.zeros((batch, seq), dtype=np.int32)
+        for i, j in enumerate(idx):
+            x[i, 0] = 0  # BOS
+            x[i, 1:] = data[j : j + seq - 1]
+            y[i] = data[j : j + seq]
+        yield jnp.asarray(x), jnp.asarray(y)
+
+
+def make_loss(cfg):
+    def loss_fn(params, x, y):
+        # vmap the single-sequence forward over the batch.
+        logits = jax.vmap(lambda t: model.forward_fp32(t, params, cfg))(x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, y[..., None], axis=-1).squeeze(-1)
+        return nll.mean()
+
+    return loss_fn
+
+
+def adam_update(grads, m, v, step, lr, b1=0.9, b2=0.95, eps=1e-8):
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    bc1 = 1 - b1 ** step
+    bc2 = 1 - b2 ** step
+    upd = jax.tree.map(lambda mm, vv: lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps), m, v)
+    return upd, m, v
+
+
+def clip_by_global_norm(grads, max_norm=1.0):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=260)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=96)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--tail-dof", type=float, default=4.0,
+        help="student-t dof for heavy-tailed init (0 = Gaussian); see init_params",
+    )
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--corpus", default="../artifacts/corpus/train.txt")
+    args = ap.parse_args()
+
+    cfg = model.config_tiny()
+    tail = args.tail_dof if args.tail_dof > 0 else None
+    params = model.init_params(cfg, seed=args.seed, tail_dof=tail)
+    params = jax.tree.map(jnp.asarray, params)
+
+    data = np.frombuffer(load_corpus(args.corpus), dtype=np.uint8).astype(np.int32)
+    print(f"corpus: {len(data)} bytes; model: ~{6.6:.1f}M params", flush=True)
+
+    loss_fn = make_loss(cfg)
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    rng = np.random.default_rng(args.seed)
+    gen = batches(data, args.batch, args.seq, rng)
+
+    log = []
+    t0 = time.time()
+    warmup = max(10, args.steps // 20)
+    for step in range(1, args.steps + 1):
+        x, y = next(gen)
+        loss, grads = grad_fn(params, x, y)
+        grads, gn = clip_by_global_norm(grads)
+        # Linear warmup, cosine decay.
+        frac = step / args.steps
+        lr = args.lr * min(1.0, step / warmup) * 0.5 * (1 + np.cos(np.pi * frac))
+        upd, m, v = adam_update(grads, m, v, step, lr)
+        params = jax.tree.map(lambda p, u: p - u, params, upd)
+        if step % 10 == 0 or step == 1:
+            el = time.time() - t0
+            print(
+                f"step {step:4d}  loss {float(loss):.4f}  ppl {float(jnp.exp(loss)):8.2f}"
+                f"  gnorm {float(gn):6.2f}  lr {lr:.2e}  {el:6.1f}s",
+                flush=True,
+            )
+        log.append({"step": step, "loss": float(loss)})
+
+    os.makedirs(args.out, exist_ok=True)
+    np_params = jax.tree.map(np.asarray, params)
+    ckpt = os.path.join(args.out, "model_fp32.iguf")
+    checkpoint.save_dense_checkpoint(ckpt, np_params, cfg)
+    with open(os.path.join(args.out, "train_log.json"), "w") as f:
+        json.dump(
+            {
+                "config": cfg,
+                "steps": args.steps,
+                "batch": args.batch,
+                "seq": args.seq,
+                "final_loss": log[-1]["loss"],
+                "final_ppl": float(np.exp(log[-1]["loss"])),
+                "wall_seconds": time.time() - t0,
+                "curve": log,
+            },
+            f,
+            indent=1,
+        )
+    print(f"saved {ckpt}; final loss {log[-1]['loss']:.4f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

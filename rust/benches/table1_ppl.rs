@@ -1,0 +1,7 @@
+//! Regenerates paper Table 1 (perplexity vs bit-width).
+//! `ITQ3S_PPL_BYTES` controls text volume per cell (default 8192).
+fn main() {
+    itq3s::bench::tables::table1("artifacts").unwrap_or_else(|e| {
+        eprintln!("table1: {e:#} (run `make artifacts` first)");
+    });
+}

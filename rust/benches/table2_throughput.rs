@@ -1,0 +1,6 @@
+//! Regenerates paper Table 2 (decode/prefill throughput).
+fn main() {
+    itq3s::bench::tables::table2("artifacts").unwrap_or_else(|e| {
+        eprintln!("table2: {e:#} (run `make artifacts` first)");
+    });
+}

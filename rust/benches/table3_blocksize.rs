@@ -1,0 +1,6 @@
+//! Regenerates paper Table 3 (FWHT block-size ablation).
+fn main() {
+    itq3s::bench::tables::table3("artifacts").unwrap_or_else(|e| {
+        eprintln!("table3: {e:#} (run `make artifacts` first)");
+    });
+}

@@ -1,0 +1,76 @@
+//! Minimal timing harness (criterion stand-in).
+
+use std::time::Instant;
+
+/// Result of a timed benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.mean_s
+    }
+}
+
+/// Time `f` with warmup; `iters` timed runs.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_s: times.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
+/// Render a fixed-width table row.
+pub fn row(cells: &[String], widths: &[usize]) -> String {
+    let mut s = String::new();
+    for (c, w) in cells.iter().zip(widths) {
+        s.push_str(&format!("{c:<w$}  ", w = w));
+    }
+    s.trim_end().to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_times_work() {
+        let r = bench("spin", 1, 5, || {
+            std::hint::black_box((0..10_000).sum::<u64>());
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_s > 0.0);
+        assert!(r.min_s <= r.mean_s && r.mean_s <= r.max_s);
+    }
+
+    #[test]
+    fn per_sec_inverts_mean() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_s: 0.5,
+            min_s: 0.5,
+            max_s: 0.5,
+        };
+        assert_eq!(r.per_sec(10.0), 20.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Benchmark infrastructure.
+//!
+//! `criterion` is not in the offline vendor set, so `harness` provides a
+//! small timing core (warmup + N timed iterations + stats) that the
+//! `rust/benches/*` targets (`harness = false`) and the `tables` drivers
+//! share.
+
+pub mod harness;
+pub mod tables;

@@ -1,0 +1,138 @@
+//! KV-cache pool: budget accounting, admission control, and cache reuse.
+//!
+//! The paper's §7.3 economics (quantized weights leave VRAM headroom for
+//! KV state) become an explicit admission policy here: a sequence is
+//! admitted only if its worst-case KV footprint (prompt + max new
+//! tokens) fits the configured budget. Finished sequences return their
+//! `KvCache` allocation to a free list so steady-state serving does no
+//! large allocations (see EXPERIMENTS.md §Perf).
+
+use crate::model::{KvCache, ModelConfig};
+
+pub struct KvPool {
+    cfg: ModelConfig,
+    budget_bytes: usize,
+    reserved_bytes: usize,
+    free_list: Vec<KvCache>,
+    /// High-water mark of reserved bytes (for metrics).
+    pub peak_bytes: usize,
+}
+
+/// Worst-case KV bytes for a sequence of `tokens` (f32 native cache).
+pub fn seq_bytes(cfg: &ModelConfig, tokens: usize) -> usize {
+    2 * cfg.n_layers * tokens.min(cfg.max_seq) * cfg.dim * 4
+}
+
+impl KvPool {
+    pub fn new(cfg: ModelConfig, budget_bytes: usize) -> Self {
+        KvPool { cfg, budget_bytes, reserved_bytes: 0, free_list: Vec::new(), peak_bytes: 0 }
+    }
+
+    pub fn reserved(&self) -> usize {
+        self.reserved_bytes
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Can a sequence with this worst-case length be admitted now?
+    pub fn can_admit(&self, max_tokens: usize) -> bool {
+        self.reserved_bytes + seq_bytes(&self.cfg, max_tokens) <= self.budget_bytes
+    }
+
+    /// Reserve budget and hand out a (recycled) cache. Returns `None`
+    /// when over budget — the caller keeps the request queued.
+    pub fn admit(&mut self, max_tokens: usize) -> Option<(KvCache, usize)> {
+        let bytes = seq_bytes(&self.cfg, max_tokens);
+        if self.reserved_bytes + bytes > self.budget_bytes {
+            return None;
+        }
+        self.reserved_bytes += bytes;
+        self.peak_bytes = self.peak_bytes.max(self.reserved_bytes);
+        let cache = self.free_list.pop().unwrap_or_else(|| KvCache::new(&self.cfg));
+        Some((cache, bytes))
+    }
+
+    /// Return a finished sequence's cache and release its reservation.
+    pub fn release(&mut self, mut cache: KvCache, bytes: usize) {
+        debug_assert!(bytes <= self.reserved_bytes);
+        self.reserved_bytes = self.reserved_bytes.saturating_sub(bytes);
+        cache.reset();
+        // Cap the free list so a burst doesn't pin memory forever.
+        if self.free_list.len() < 16 {
+            self.free_list.push(cache);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn pool(budget_seqs: usize, max_tokens: usize) -> KvPool {
+        let cfg = ModelConfig::test();
+        let budget = budget_seqs * seq_bytes(&cfg, max_tokens);
+        KvPool::new(cfg, budget)
+    }
+
+    #[test]
+    fn admission_respects_budget() {
+        let mut p = pool(2, 64);
+        let a = p.admit(64).expect("first fits");
+        let b = p.admit(64).expect("second fits");
+        assert!(p.admit(64).is_none(), "third must not fit");
+        p.release(a.0, a.1);
+        assert!(p.admit(64).is_some(), "released budget is reusable");
+        drop(b);
+    }
+
+    #[test]
+    fn release_recycles_allocation() {
+        let mut p = pool(1, 64);
+        let (c, b) = p.admit(64).unwrap();
+        p.release(c, b);
+        assert_eq!(p.reserved(), 0);
+        let (c2, _) = p.admit(64).unwrap();
+        assert!(c2.is_empty(), "recycled cache must be reset");
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut p = pool(3, 32);
+        let a = p.admit(32).unwrap();
+        let b = p.admit(32).unwrap();
+        let peak = p.peak_bytes;
+        p.release(a.0, a.1);
+        p.release(b.0, b.1);
+        assert_eq!(p.peak_bytes, peak);
+        assert_eq!(p.reserved(), 0);
+    }
+
+    #[test]
+    fn prop_reserved_never_exceeds_budget_and_never_leaks() {
+        // Invariant under random admit/release interleavings.
+        forall("kv pool accounting", 60, |g| {
+            let cfg = ModelConfig::test();
+            let budget = seq_bytes(&cfg, 64) * g.usize_in(1, 5);
+            let mut p = KvPool::new(cfg, budget);
+            let mut live: Vec<(KvCache, usize)> = Vec::new();
+            for _ in 0..40 {
+                if g.bool() || live.is_empty() {
+                    let want = g.usize_in(1, 64);
+                    if let Some(pair) = p.admit(want) {
+                        live.push(pair);
+                    }
+                } else {
+                    let i = g.usize_in(0, live.len() - 1);
+                    let (c, b) = live.swap_remove(i);
+                    p.release(c, b);
+                }
+                assert!(p.reserved() <= p.budget());
+                let live_sum: usize = live.iter().map(|(_, b)| *b).sum();
+                assert_eq!(p.reserved(), live_sum, "reservation leak");
+            }
+        });
+    }
+}

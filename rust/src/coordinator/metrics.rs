@@ -1,0 +1,88 @@
+//! Serving metrics: request counters, latency distributions, throughput.
+
+use crate::util::json::Json;
+use crate::util::stats::Welford;
+use std::time::Instant;
+
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    pub requests_submitted: u64,
+    pub requests_finished: u64,
+    pub requests_rejected: u64,
+    pub prompt_tokens: u64,
+    pub gen_tokens: u64,
+    pub ttft_ms: Welford,
+    pub decode_step_ms: Welford,
+    pub prefill_tokens_per_round: Welford,
+    pub batch_occupancy: Welford,
+    pub kv_peak_bytes: usize,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            started: Instant::now(),
+            requests_submitted: 0,
+            requests_finished: 0,
+            requests_rejected: 0,
+            prompt_tokens: 0,
+            gen_tokens: 0,
+            ttft_ms: Welford::new(),
+            decode_step_ms: Welford::new(),
+            prefill_tokens_per_round: Welford::new(),
+            batch_occupancy: Welford::new(),
+            kv_peak_bytes: 0,
+        }
+    }
+
+    /// Aggregate decode throughput since start (tokens/sec).
+    pub fn decode_tps(&self) -> f64 {
+        let el = self.started.elapsed().as_secs_f64();
+        if el > 0.0 {
+            self.gen_tokens as f64 / el
+        } else {
+            0.0
+        }
+    }
+
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("uptime_s", Json::num(self.started.elapsed().as_secs_f64())),
+            ("requests_submitted", Json::num(self.requests_submitted as f64)),
+            ("requests_finished", Json::num(self.requests_finished as f64)),
+            ("requests_rejected", Json::num(self.requests_rejected as f64)),
+            ("prompt_tokens", Json::num(self.prompt_tokens as f64)),
+            ("gen_tokens", Json::num(self.gen_tokens as f64)),
+            ("decode_tps", Json::num(self.decode_tps())),
+            ("ttft_ms_mean", Json::num(self.ttft_ms.mean())),
+            ("ttft_ms_max", Json::num(self.ttft_ms.max())),
+            ("decode_step_ms_mean", Json::num(self.decode_step_ms.mean())),
+            ("batch_occupancy_mean", Json::num(self.batch_occupancy.mean())),
+            ("kv_peak_bytes", Json::num(self.kv_peak_bytes as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_has_core_fields() {
+        let mut m = Metrics::new();
+        m.requests_submitted = 3;
+        m.gen_tokens = 42;
+        m.ttft_ms.push(12.5);
+        let s = m.snapshot();
+        assert_eq!(s.get("requests_submitted").unwrap().as_u64(), Some(3));
+        assert_eq!(s.get("gen_tokens").unwrap().as_u64(), Some(42));
+        assert!(s.get("ttft_ms_mean").unwrap().as_f64().unwrap() > 12.0);
+    }
+}

@@ -1,0 +1,108 @@
+//! Request/response types for the serving coordinator.
+
+use crate::util::json::Json;
+
+/// A generation request as submitted by a client.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    /// 0.0 = greedy; > 0 = temperature sampling (seeded, reproducible).
+    pub temperature: f32,
+    pub seed: u64,
+    /// Stop generation at the first '.' after this many tokens (0 = off).
+    pub stop_at_sentence: bool,
+}
+
+impl Default for GenRequest {
+    fn default() -> Self {
+        GenRequest {
+            prompt: String::new(),
+            max_new_tokens: 32,
+            temperature: 0.0,
+            seed: 0,
+            stop_at_sentence: false,
+        }
+    }
+}
+
+impl GenRequest {
+    pub fn from_json(j: &Json) -> Self {
+        let mut r = GenRequest::default();
+        if let Some(p) = j.get("prompt").and_then(|v| v.as_str()) {
+            r.prompt = p.to_string();
+        }
+        if let Some(m) = j.get("max_tokens").and_then(|v| v.as_u64()) {
+            r.max_new_tokens = m as usize;
+        }
+        if let Some(t) = j.get("temperature").and_then(|v| v.as_f64()) {
+            r.temperature = t as f32;
+        }
+        if let Some(s) = j.get("seed").and_then(|v| v.as_u64()) {
+            r.seed = s;
+        }
+        if let Some(s) = j.get("stop_at_sentence").and_then(|v| v.as_bool()) {
+            r.stop_at_sentence = s;
+        }
+        r
+    }
+}
+
+/// Why a sequence finished.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    MaxTokens,
+    StopCondition,
+    ContextFull,
+    Cancelled,
+}
+
+impl FinishReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::MaxTokens => "max_tokens",
+            FinishReason::StopCondition => "stop",
+            FinishReason::ContextFull => "context_full",
+            FinishReason::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// Streamed events for one request.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// One generated token (id + decoded text fragment).
+    Token { token: u32, text: String },
+    /// Generation finished.
+    Done {
+        reason: FinishReason,
+        text: String,
+        prompt_tokens: usize,
+        gen_tokens: usize,
+        ttft_ms: f64,
+        total_ms: f64,
+    },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_from_json() {
+        let j = Json::parse(r#"{"prompt":"hi","max_tokens":5,"temperature":0.7,"seed":9}"#)
+            .unwrap();
+        let r = GenRequest::from_json(&j);
+        assert_eq!(r.prompt, "hi");
+        assert_eq!(r.max_new_tokens, 5);
+        assert!((r.temperature - 0.7).abs() < 1e-6);
+        assert_eq!(r.seed, 9);
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let r = GenRequest::from_json(&Json::parse("{}").unwrap());
+        assert_eq!(r.max_new_tokens, 32);
+        assert_eq!(r.temperature, 0.0);
+    }
+}

@@ -1,0 +1,208 @@
+//! Deterministic synthetic corpus generator (WikiText-2 / C4 stand-in).
+//!
+//! Sentences are drawn from a small templated grammar with enough
+//! structure (agreement between templates, recurring entities, numeric
+//! patterns) that a ~6M-parameter byte LM trains to a low perplexity —
+//! and therefore *degrades measurably* when its weights are quantized,
+//! which is what Table 1 needs. Two styles:
+//!
+//! - [`Style::Wiki`]: encyclopedic sentences (train + valid splits).
+//! - [`Style::Web`]: the "C4-like" distribution-shifted split — chattier
+//!   templates, partially overlapping vocabulary.
+
+use crate::util::XorShift;
+
+const NAMES: &[&str] = &[
+    "aster", "bryn", "corin", "dara", "evin", "farrow", "galen", "hollis", "iris",
+    "jorin", "kara", "lorin", "merek", "nessa", "orin", "petra", "quill", "rowan",
+    "sable", "tamsin",
+];
+
+const PLACES: &[&str] = &[
+    "the northern valley", "the old harbor", "the glass city", "the salt flats",
+    "the cedar forest", "the river delta", "the high plateau", "the iron hills",
+    "the quiet archive", "the stone bridge",
+];
+
+const NOUNS: &[&str] = &[
+    "archive", "bridge", "canal", "dialect", "engine", "festival", "granary",
+    "harvest", "instrument", "journal", "kiln", "ledger", "market", "northroad",
+    "observatory", "press", "quarry", "reservoir", "senate", "tower",
+];
+
+const ADJS: &[&str] = &[
+    "ancient", "broad", "careful", "distant", "early", "formal", "gradual",
+    "hollow", "inner", "joint", "known", "late",
+];
+
+const VERBS: &[&str] = &[
+    "described", "founded", "mapped", "measured", "rebuilt", "recorded",
+    "restored", "studied", "surveyed", "translated",
+];
+
+const WEB_OPENERS: &[&str] = &[
+    "honestly,", "quick update:", "note to self:", "for what it is worth,",
+    "as promised,", "in short,",
+];
+
+const WEB_VERBS: &[&str] =
+    &["posted", "shared", "reviewed", "shipped", "tested", "fixed", "packed"];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Style {
+    Wiki,
+    Web,
+}
+
+/// Deterministic corpus generator.
+pub struct CorpusGen {
+    rng: XorShift,
+    style: Style,
+}
+
+impl CorpusGen {
+    pub fn new(seed: u64, style: Style) -> Self {
+        CorpusGen { rng: XorShift::new(seed), style }
+    }
+
+    fn pick<'a>(&mut self, items: &'a [&'a str]) -> &'a str {
+        items[self.rng.next_below(items.len() as u64) as usize]
+    }
+
+    /// One sentence, terminated by a space.
+    pub fn sentence(&mut self) -> String {
+        match self.style {
+            Style::Wiki => self.wiki_sentence(),
+            Style::Web => self.web_sentence(),
+        }
+    }
+
+    fn wiki_sentence(&mut self) -> String {
+        let t = self.rng.next_below(5);
+        match t {
+            0 => format!(
+                "{} {} the {} {} in {}. ",
+                self.pick(NAMES),
+                self.pick(VERBS),
+                self.pick(ADJS),
+                self.pick(NOUNS),
+                self.pick(PLACES)
+            ),
+            1 => format!(
+                "the {} of {} was {} by {}. ",
+                self.pick(NOUNS),
+                self.pick(PLACES),
+                self.pick(VERBS),
+                self.pick(NAMES)
+            ),
+            2 => format!(
+                "in the year {}, the {} {} held {} {}s. ",
+                700 + self.rng.next_below(300),
+                self.pick(ADJS),
+                self.pick(NOUNS),
+                2 + self.rng.next_below(9),
+                self.pick(NOUNS)
+            ),
+            3 => format!(
+                "{} and {} {} the {} together. ",
+                self.pick(NAMES),
+                self.pick(NAMES),
+                self.pick(VERBS),
+                self.pick(NOUNS)
+            ),
+            _ => format!(
+                "the {} {} is {} miles from {}. ",
+                self.pick(ADJS),
+                self.pick(NOUNS),
+                1 + self.rng.next_below(40),
+                self.pick(PLACES)
+            ),
+        }
+    }
+
+    fn web_sentence(&mut self) -> String {
+        let t = self.rng.next_below(3);
+        match t {
+            0 => format!(
+                "{} {} {} the {} today. ",
+                self.pick(WEB_OPENERS),
+                self.pick(NAMES),
+                self.pick(WEB_VERBS),
+                self.pick(NOUNS)
+            ),
+            1 => format!(
+                "{} the {} looks {} now. ",
+                self.pick(WEB_OPENERS),
+                self.pick(NOUNS),
+                self.pick(ADJS)
+            ),
+            _ => format!(
+                "{} {} it in {} minutes. ",
+                self.pick(NAMES),
+                self.pick(WEB_VERBS),
+                1 + self.rng.next_below(59)
+            ),
+        }
+    }
+
+    /// Generate at least `nbytes` of text.
+    pub fn text(&mut self, nbytes: usize) -> String {
+        let mut out = String::with_capacity(nbytes + 80);
+        while out.len() < nbytes {
+            out.push_str(&self.sentence());
+        }
+        out
+    }
+}
+
+/// The canonical splits used by training (python) and evaluation (rust).
+/// Seeds are fixed constants shared with `python/compile/train.py`.
+pub fn standard_splits(nbytes: usize) -> (String, String, String) {
+    let train = CorpusGen::new(0x7261_494E, Style::Wiki).text(nbytes);
+    let valid = CorpusGen::new(0x7661_4C49, Style::Wiki).text(nbytes / 8);
+    let web = CorpusGen::new(0x7765_4221, Style::Web).text(nbytes / 8);
+    (train, valid, web)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = CorpusGen::new(1, Style::Wiki).text(1000);
+        let b = CorpusGen::new(1, Style::Wiki).text(1000);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn splits_disjoint_seeds() {
+        let (t, v, w) = standard_splits(4000);
+        assert!(t.len() >= 4000 && v.len() >= 500 && w.len() >= 500);
+        assert_ne!(&t[..200], &v[..200]);
+        assert_ne!(&v[..200], &w[..200]);
+    }
+
+    #[test]
+    fn ascii_only_no_nul() {
+        let t = CorpusGen::new(3, Style::Web).text(5000);
+        assert!(t.bytes().all(|b| b != 0 && b.is_ascii()));
+    }
+
+    #[test]
+    fn styles_differ() {
+        let wiki = CorpusGen::new(5, Style::Wiki).text(3000);
+        let web = CorpusGen::new(5, Style::Web).text(3000);
+        assert!(web.contains("update:") || web.contains("honestly,"));
+        assert!(!wiki.contains("update:"));
+    }
+
+    #[test]
+    fn sentences_terminate() {
+        let mut g = CorpusGen::new(7, Style::Wiki);
+        for _ in 0..50 {
+            let s = g.sentence();
+            assert!(s.ends_with(". "), "{s:?}");
+        }
+    }
+}

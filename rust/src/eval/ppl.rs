@@ -1,0 +1,103 @@
+//! Perplexity evaluation (Table 1 / Table 3 metric).
+//!
+//! Standard sliding-window PPL: the text is tokenized, split into
+//! `max_seq`-sized chunks (each prefixed with BOS), and the model scores
+//! every next-token prediction. `PPL = exp(mean NLL)`.
+
+use crate::model::native::Engine;
+use crate::model::{tokenizer, KvCache};
+
+/// Scoring window. Matches the AOT artifact window (manifest.seq = 128)
+/// and stays within the context length the tiny model was trained on —
+/// RoPE positions beyond the training window are out-of-distribution and
+/// would inflate PPL for engines with longer `max_seq`, making
+/// cross-engine numbers incomparable.
+pub const EVAL_WINDOW: usize = 128;
+
+/// Result of a perplexity run.
+#[derive(Clone, Debug)]
+pub struct PplReport {
+    pub ppl: f64,
+    pub nll: f64,
+    pub tokens: usize,
+}
+
+/// log-softmax value of `logits[target]`.
+fn log_prob(logits: &[f32], target: usize) -> f64 {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lse = m + logits.iter().map(|&x| ((x as f64) - m).exp()).sum::<f64>().ln();
+    logits[target] as f64 - lse
+}
+
+/// Compute perplexity of `text` under `engine`.
+pub fn perplexity(engine: &dyn Engine, text: &str) -> PplReport {
+    let cfg = engine.config().clone();
+    let ids = tokenizer::encode_raw(text);
+    let chunk = cfg.max_seq.min(EVAL_WINDOW) - 1;
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    for window in ids.chunks(chunk) {
+        if window.len() < 2 {
+            continue;
+        }
+        // BOS + window; predictions for window[i] come from position i.
+        let mut toks = Vec::with_capacity(window.len() + 1);
+        toks.push(tokenizer::BOS);
+        toks.extend_from_slice(window);
+        let mut cache = KvCache::new(&cfg);
+        let logits = engine.prefill(&mut cache, &toks);
+        for i in 0..window.len() {
+            nll -= log_prob(logits.row(i), window[i] as usize);
+            count += 1;
+        }
+    }
+    let mean_nll = if count > 0 { nll / count as f64 } else { f64::NAN };
+    PplReport { ppl: mean_nll.exp(), nll: mean_nll, tokens: count }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{DenseModel, ModelConfig, NativeEngine};
+
+    #[test]
+    fn log_prob_is_log_softmax() {
+        let logits = vec![0.0f32, 1.0, 2.0];
+        let p: f64 = (0..3).map(|i| log_prob(&logits, i).exp()).sum();
+        assert!((p - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn random_model_ppl_near_vocab() {
+        // An untrained model must score near uniform: PPL ≈ vocab size.
+        let cfg = ModelConfig::test();
+        let eng = NativeEngine::dense(DenseModel::random(&cfg, 9, None));
+        let text = "abcd efgh ijkl mnop qrst";
+        let r = perplexity(&eng, text);
+        assert!(r.tokens > 0);
+        assert!(
+            (cfg.vocab as f64 * 0.3..cfg.vocab as f64 * 3.0).contains(&r.ppl),
+            "ppl={}",
+            r.ppl
+        );
+    }
+
+    #[test]
+    fn ppl_deterministic() {
+        let cfg = ModelConfig::test();
+        let eng = NativeEngine::dense(DenseModel::random(&cfg, 10, None));
+        let a = perplexity(&eng, "the quick brown fox").ppl;
+        let b = perplexity(&eng, "the quick brown fox").ppl;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn longer_text_spans_chunks() {
+        let cfg = ModelConfig::test(); // max_seq 64
+        let eng = NativeEngine::dense(DenseModel::random(&cfg, 11, None));
+        let text = "x".repeat(200);
+        let r = perplexity(&eng, &text);
+        assert_eq!(r.tokens, 200);
+        assert!(r.ppl.is_finite());
+    }
+}

@@ -1,0 +1,170 @@
+//! IEEE 754 binary16 ("half") conversion.
+//!
+//! The ITQ3_S format stores the per-block scale `d_k` and zero-point `z_k`
+//! as FP16 (paper §4.1), as do the Q4/Q8 baseline formats, so the container
+//! stores raw `u16` and converts at the block boundary. The `half` crate is
+//! not in the offline vendor set; conversions are implemented bit-exactly
+//! here (round-to-nearest-even on encode).
+
+/// Convert an `f32` to IEEE binary16 bits, rounding to nearest-even,
+/// with overflow to ±inf and graceful subnormal handling.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf or NaN.
+        return if man == 0 {
+            sign | 0x7C00
+        } else {
+            // Preserve a quiet NaN with some payload.
+            sign | 0x7E00 | ((man >> 13) as u16 & 0x01FF)
+        };
+    }
+
+    // Unbiased exponent, rebiasing from 127 to 15.
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // Normal half. 23-bit mantissa -> 10-bit with RNE.
+        let mant = man >> 13;
+        let rem = man & 0x1FFF;
+        let half_exp = ((unbiased + 15) as u16) << 10;
+        let mut out = sign | half_exp | mant as u16;
+        // Round: rem > half, or rem == half and mant odd.
+        if rem > 0x1000 || (rem == 0x1000 && (mant & 1) == 1) {
+            out = out.wrapping_add(1); // may carry into exponent: correct (rounds to inf)
+        }
+        return out;
+    }
+    if unbiased >= -25 {
+        // Subnormal half.
+        let full_man = man | 0x0080_0000; // implicit leading 1
+        let shift = (-14 - unbiased) as u32 + 13;
+        let mant = full_man >> shift;
+        let rem_mask = (1u32 << shift) - 1;
+        let rem = full_man & rem_mask;
+        let halfway = 1u32 << (shift - 1);
+        let mut out = sign | mant as u16;
+        if rem > halfway || (rem == halfway && (mant & 1) == 1) {
+            out = out.wrapping_add(1);
+        }
+        return out;
+    }
+    sign // underflow -> signed zero
+}
+
+/// Convert IEEE binary16 bits to `f32` (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign // signed zero
+        } else {
+            // Subnormal: normalize.
+            let mut e = -1i32;
+            let mut m = man;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x03FF;
+            sign | (((e - 13 + 127) as u32) << 23) | (m << 13)
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (man << 13) // inf / nan
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round-trip an f32 through f16 precision (quantize-to-half).
+pub fn f16_round(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Largest finite f16 value.
+pub const F16_MAX: f32 = 65504.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn known_values() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF);
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16_bits(1e10), 0x7C00); // overflow
+        assert_eq!(f16_bits_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_bits_to_f32(0x7C00), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(0xFC00), f32::NEG_INFINITY);
+        // Smallest positive subnormal: 2^-24.
+        assert_eq!(f16_bits_to_f32(0x0001), 2.0f32.powi(-24));
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-24)), 0x0001);
+    }
+
+    #[test]
+    fn nan_preserved() {
+        let h = f32_to_f16_bits(f32::NAN);
+        assert!(f16_bits_to_f32(h).is_nan());
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1.0 + 2^-11 is exactly halfway between 1.0 and the next half;
+        // RNE picks the even mantissa (1.0).
+        let x = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(x), 0x3C00);
+        // 1.0 + 3*2^-11 is halfway between odd and even; rounds up to even.
+        let y = 1.0 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(y), 0x3C02);
+    }
+
+    #[test]
+    fn exact_halves_roundtrip() {
+        // Every f16 value must round-trip bit-exactly through f32.
+        for h in 0u16..=0xFFFF {
+            let f = f16_bits_to_f32(h);
+            if f.is_nan() {
+                assert!(f16_bits_to_f32(f32_to_f16_bits(f)).is_nan());
+            } else {
+                assert_eq!(f32_to_f16_bits(f), h, "h={h:#06x} f={f}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_error_bounded() {
+        forall("f16 relative error <= 2^-11", 500, |g| {
+            let x = g.f32_in(-60000.0, 60000.0);
+            let y = f16_round(x);
+            if x != 0.0 && x.abs() >= 2.0f32.powi(-14) {
+                let rel = ((y - x) / x).abs();
+                assert!(rel <= 2.0f32.powi(-11) + 1e-7, "x={x} y={y} rel={rel}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_monotone() {
+        forall("f16 conversion is monotone", 300, |g| {
+            let a = g.f32_in(-1000.0, 1000.0);
+            let b = g.f32_in(-1000.0, 1000.0);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            assert!(f16_round(lo) <= f16_round(hi));
+        });
+    }
+}

@@ -1,0 +1,320 @@
+//! Fast Walsh-Hadamard Transform (FWHT).
+//!
+//! This is the rotation at the heart of ITQ3_S (paper §2.3, §3): the
+//! normalized WHT `H_n` is involutory (`H_n H_n = I`) and an isometry, so
+//! the same routine serves as forward rotation (offline quantization,
+//! Alg 1) and inverse rotation (online dequantization, Alg 2 /
+//! `ifwht_256` in Listing 2). Block sizes are powers of two in
+//! `32..=512` — the ablation range of Table 3.
+//!
+//! Three implementations are provided:
+//! - [`fwht_inplace`]: textbook radix-2 butterflies, any power-of-two `n`
+//!   (the reference; mirrors the CUDA kernel stage-for-stage).
+//! - [`fwht_256`]: the hot-path 256-point transform used by the serving
+//!   dequantization loop, with radix-4 stages for fewer passes over the
+//!   block (see EXPERIMENTS.md §Perf for the measured speedup).
+//! - [`WalshMatrix`]: explicit dense `H_n` for oracle tests.
+
+mod radix;
+
+pub use radix::fwht_256;
+
+/// Largest supported block size (ablation upper bound, Table 3).
+pub const MAX_BLOCK: usize = 512;
+
+/// In-place normalized FWHT of a power-of-two-length slice.
+///
+/// Applies `log2(n)` butterfly stages `(u, v) -> (u + v, u - v)` then a
+/// single `1/sqrt(n)` normalization pass, matching the paper's Eq. (2)-(4)
+/// and the normalization convention of Listing 2 (`0.0625` for n = 256).
+///
+/// Panics if `v.len()` is not a power of two.
+pub fn fwht_inplace(v: &mut [f32]) {
+    let n = v.len();
+    assert!(n.is_power_of_two(), "FWHT length must be a power of two, got {n}");
+    let mut step = 1;
+    while step < n {
+        let stride = step * 2;
+        for block in (0..n).step_by(stride) {
+            for j in block..block + step {
+                let a = v[j];
+                let b = v[j + step];
+                v[j] = a + b;
+                v[j + step] = a - b;
+            }
+        }
+        step = stride;
+    }
+    let norm = 1.0 / (n as f32).sqrt();
+    for x in v.iter_mut() {
+        *x *= norm;
+    }
+}
+
+/// Inverse FWHT. `H_n` is involutory under the normalized convention, so
+/// this is literally the forward transform — kept as a named alias so call
+/// sites read like the paper (`ifwht` in Alg 2).
+#[inline]
+pub fn ifwht_inplace(v: &mut [f32]) {
+    fwht_inplace(v);
+}
+
+/// Unnormalized FWHT (no `1/sqrt(n)` pass). Useful to fuse the
+/// normalization into a subsequent scale multiply: `H_n = unnorm / sqrt(n)`,
+/// so dequantization can fold `d_k / sqrt(n)` into one constant.
+pub fn fwht_unnormalized(v: &mut [f32]) {
+    let n = v.len();
+    assert!(n.is_power_of_two(), "FWHT length must be a power of two, got {n}");
+    let mut step = 1;
+    while step < n {
+        let stride = step * 2;
+        for block in (0..n).step_by(stride) {
+            for j in block..block + step {
+                let a = v[j];
+                let b = v[j + step];
+                v[j] = a + b;
+                v[j + step] = a - b;
+            }
+        }
+        step = stride;
+    }
+}
+
+/// Apply the FWHT independently to each contiguous `block` of `v`.
+/// `v.len()` must be a multiple of `block`. This is the whole-tensor
+/// rotation of Alg 1 step 2 (per-256-block in the paper; `block` is the
+/// Table 3 ablation knob).
+pub fn fwht_blocked(v: &mut [f32], block: usize) {
+    assert!(block.is_power_of_two(), "block must be a power of two");
+    assert_eq!(v.len() % block, 0, "length {} not a multiple of block {}", v.len(), block);
+    if block == 256 {
+        for chunk in v.chunks_exact_mut(256) {
+            fwht_256(chunk.try_into().unwrap());
+        }
+    } else {
+        for chunk in v.chunks_exact_mut(block) {
+            fwht_inplace(chunk);
+        }
+    }
+}
+
+/// Dense Walsh-Hadamard matrix `H_n` (normalized), for oracle testing and
+/// for the `H_16 ⊗ H_16` MXU decomposition analysis (DESIGN.md §5).
+pub struct WalshMatrix {
+    pub n: usize,
+    /// Row-major `n x n` entries, each `±1/sqrt(n)`.
+    pub data: Vec<f32>,
+}
+
+impl WalshMatrix {
+    pub fn new(n: usize) -> Self {
+        assert!(n.is_power_of_two());
+        let norm = 1.0 / (n as f32).sqrt();
+        let mut data = vec![0.0f32; n * n];
+        for (i, row) in data.chunks_exact_mut(n).enumerate() {
+            for (j, x) in row.iter_mut().enumerate() {
+                // H[i][j] = (-1)^{popcount(i & j)} / sqrt(n)  (natural order)
+                *x = if (i & j).count_ones() % 2 == 0 { norm } else { -norm };
+            }
+        }
+        WalshMatrix { n, data }
+    }
+
+    /// y = H x (dense, O(n^2); oracle only).
+    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.n);
+        let mut y = vec![0.0f32; self.n];
+        for (i, yi) in y.iter_mut().enumerate() {
+            let row = &self.data[i * self.n..(i + 1) * self.n];
+            *yi = row.iter().zip(x).map(|(&h, &v)| h * v).sum();
+        }
+        y
+    }
+}
+
+/// FLOP count of one blocked FWHT application over `len` elements: each
+/// block does `n log2 n` add/subs plus `n` multiplies. Used by the
+/// overhead model for Table 3.
+pub fn fwht_flops(len: usize, block: usize) -> u64 {
+    let blocks = (len / block) as u64;
+    let n = block as u64;
+    blocks * (n * (block as f64).log2() as u64 + n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::stats;
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() <= tol, "idx {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matches_walsh_matrix_all_sizes() {
+        for k in 1..=9 {
+            let n = 1 << k;
+            let m = WalshMatrix::new(n);
+            let mut rng = crate::util::XorShift::new(n as u64);
+            let x: Vec<f32> = (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+            let oracle = m.apply(&x);
+            let mut fast = x.clone();
+            fwht_inplace(&mut fast);
+            assert_close(&fast, &oracle, 1e-4);
+        }
+    }
+
+    #[test]
+    fn hadamard_4_known_values() {
+        // H_4 * [1,0,0,0] = [1,1,1,1]/2
+        let mut v = [1.0f32, 0.0, 0.0, 0.0];
+        fwht_inplace(&mut v);
+        assert_close(&v, &[0.5, 0.5, 0.5, 0.5], 1e-7);
+        // H_2 * [a,b] = [(a+b), (a-b)]/sqrt(2)
+        let mut w = [3.0f32, 1.0];
+        fwht_inplace(&mut w);
+        let s = 2.0f32.sqrt();
+        assert_close(&w, &[4.0 / s, 2.0 / s], 1e-6);
+    }
+
+    #[test]
+    fn involution_identity() {
+        // H(H(x)) == x — Prop 1's round-trip exactness, pre-quantization.
+        let mut rng = crate::util::XorShift::new(1);
+        for &n in &[32usize, 64, 128, 256, 512] {
+            let x: Vec<f32> = (0..n).map(|_| rng.next_gaussian() as f32).collect();
+            let mut y = x.clone();
+            fwht_inplace(&mut y);
+            ifwht_inplace(&mut y);
+            assert_close(&y, &x, 1e-4);
+        }
+    }
+
+    #[test]
+    fn isometry() {
+        // ||Hx||_2 == ||x||_2 — the property Theorem 2's proof leans on.
+        forall("fwht is an isometry", 100, |g| {
+            let k = g.usize_in(5, 9);
+            let x = g.vec_f32(1 << k, -3.0, 3.0);
+            let mut y = x.clone();
+            fwht_inplace(&mut y);
+            let nx = stats::l2(&x);
+            let ny = stats::l2(&y);
+            assert!((nx - ny).abs() <= 1e-3 * nx.max(1.0), "{nx} vs {ny}");
+        });
+    }
+
+    #[test]
+    fn unnormalized_scales_by_sqrt_n() {
+        let mut rng = crate::util::XorShift::new(2);
+        let x: Vec<f32> = (0..64).map(|_| rng.next_f32()).collect();
+        let mut a = x.clone();
+        let mut b = x.clone();
+        fwht_inplace(&mut a);
+        fwht_unnormalized(&mut b);
+        for (u, v) in a.iter().zip(&b) {
+            assert!((u * 8.0 - v).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn fwht_256_matches_reference() {
+        let mut rng = crate::util::XorShift::new(3);
+        for _ in 0..20 {
+            let x: Vec<f32> = (0..256).map(|_| (rng.next_gaussian() as f32) * 0.3).collect();
+            let mut a: [f32; 256] = x.clone().try_into().unwrap();
+            let mut b = x.clone();
+            fwht_256(&mut a);
+            fwht_inplace(&mut b);
+            assert_close(&a, &b, 1e-4);
+        }
+    }
+
+    #[test]
+    fn blocked_is_per_block() {
+        let mut rng = crate::util::XorShift::new(4);
+        let x: Vec<f32> = (0..1024).map(|_| rng.next_f32() - 0.5).collect();
+        let mut whole = x.clone();
+        fwht_blocked(&mut whole, 256);
+        for (bi, chunk) in x.chunks_exact(256).enumerate() {
+            let mut c = chunk.to_vec();
+            fwht_inplace(&mut c);
+            assert_close(&c, &whole[bi * 256..(bi + 1) * 256], 1e-5);
+        }
+    }
+
+    #[test]
+    fn outlier_energy_spreads() {
+        // Corollary 1: a single outlier M contributes M/sqrt(n) per
+        // coefficient after rotation.
+        let n = 256;
+        let mut v = vec![0.0f32; n];
+        v[17] = 16.0; // M = 16, so each |coeff| must be 16/16 = 1
+        fwht_inplace(&mut v);
+        for &c in &v {
+            assert!((c.abs() - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gaussianizes_heavy_tails() {
+        // Theorem 1 reproduction: rotated heavy-tailed blocks have
+        // kurtosis near 3 and much smaller than the input's.
+        let mut rng = crate::util::XorShift::new(7);
+        let n = 256;
+        let mut input_kurt = 0.0;
+        let mut rot_kurt = 0.0;
+        let trials = 200;
+        for _ in 0..trials {
+            let mut v: Vec<f32> = (0..n).map(|_| rng.next_student_t(4.0) as f32).collect();
+            input_kurt += stats::kurtosis(&v);
+            fwht_inplace(&mut v);
+            rot_kurt += stats::kurtosis(&v);
+        }
+        input_kurt /= trials as f64;
+        rot_kurt /= trials as f64;
+        assert!(input_kurt > 4.5, "t(4) should be heavy-tailed: {input_kurt}");
+        assert!(rot_kurt < 3.6, "rotated kurtosis should be near 3: {rot_kurt}");
+        assert!(rot_kurt < input_kurt * 0.8);
+    }
+
+    #[test]
+    fn linf_reduction_on_outlier_blocks() {
+        // Cor 1's practical claim: E[linf] after rotation ~ sigma*sqrt(log n),
+        // far below the raw outlier magnitude.
+        let mut rng = crate::util::XorShift::new(8);
+        let n = 256;
+        let mut reduced = 0usize;
+        let trials = 100;
+        for _ in 0..trials {
+            let mut v: Vec<f32> = (0..n).map(|_| rng.next_gaussian() as f32 * 0.02).collect();
+            // Plant outliers at 20x sigma.
+            v[3] = 0.4;
+            v[100] = -0.4;
+            let before = stats::linf(&v);
+            fwht_inplace(&mut v);
+            let after = stats::linf(&v);
+            if after < before * 0.5 {
+                reduced += 1;
+            }
+        }
+        assert!(reduced > 90, "linf halved in only {reduced}/{trials} trials");
+    }
+
+    #[test]
+    fn flops_model() {
+        assert_eq!(fwht_flops(256, 256), 256 * 8 + 256);
+        assert_eq!(fwht_flops(512, 256), 2 * (256 * 8 + 256));
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_power_of_two_rejected() {
+        let mut v = vec![0.0f32; 100];
+        fwht_inplace(&mut v);
+    }
+}

@@ -1,0 +1,107 @@
+//! Optimized 256-point FWHT for the serving hot path.
+//!
+//! The dequantization loop of the Rust fallback/native path applies one
+//! 256-point inverse FWHT per weight block (Alg 2). The generic
+//! [`super::fwht_inplace`] makes 8 passes over the block (one per
+//! butterfly stage). This variant fuses pairs of stages into radix-4
+//! passes — 4 passes total — which roughly halves memory traffic per
+//! block and lets the compiler keep the 4-point kernel in registers.
+//! (The CUDA analog keeps the whole block in shared memory; on CPU the
+//! win is cache/loop-overhead, not synchronization.)
+//!
+//! Equivalence with the reference is covered by
+//! `fwht::tests::fwht_256_matches_reference` and the property tests.
+
+/// Normalized 256-point FWHT, radix-4 stages, in place.
+pub fn fwht_256(v: &mut [f32; 256]) {
+    // Stages (step=1,2), (4,8), (16,32), (64,128) fused as radix-4 passes.
+    // One radix-4 pass with quarter-stride s combines elements
+    // {i, i+s, i+2s, i+3s} as the 4-point Hadamard:
+    //   y0 = a+b+c+d, y1 = a-b+c-d, y2 = a+b-c-d, y3 = a-b-c+d
+    let mut s = 1usize;
+    while s < 256 {
+        let stride = s * 4;
+        let mut base = 0usize;
+        while base < 256 {
+            for i in base..base + s {
+                let a = v[i];
+                let b = v[i + s];
+                let c = v[i + 2 * s];
+                let d = v[i + 3 * s];
+                let apb = a + b;
+                let amb = a - b;
+                let cpd = c + d;
+                let cmd = c - d;
+                v[i] = apb + cpd;
+                v[i + s] = amb + cmd;
+                v[i + 2 * s] = apb - cpd;
+                v[i + 3 * s] = amb - cmd;
+            }
+            base += stride;
+        }
+        s = stride;
+    }
+    // 1/sqrt(256) = 0.0625 — the paper's Listing 2 normalization constant.
+    for x in v.iter_mut() {
+        *x *= 0.0625;
+    }
+}
+
+/// Unnormalized 256-point FWHT (for fusing the 0.0625 into a scale).
+pub fn fwht_256_unnorm(v: &mut [f32; 256]) {
+    let mut s = 1usize;
+    while s < 256 {
+        let stride = s * 4;
+        let mut base = 0usize;
+        while base < 256 {
+            for i in base..base + s {
+                let a = v[i];
+                let b = v[i + s];
+                let c = v[i + 2 * s];
+                let d = v[i + 3 * s];
+                let apb = a + b;
+                let amb = a - b;
+                let cpd = c + d;
+                let cmd = c - d;
+                v[i] = apb + cpd;
+                v[i + s] = amb + cmd;
+                v[i + 2 * s] = apb - cpd;
+                v[i + 3 * s] = amb - cmd;
+            }
+            base += stride;
+        }
+        s = stride;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn radix4_covers_all_stages() {
+        // 256 = 4^4, so exactly four radix-4 passes and no radix-2
+        // remainder; verify on the impulse response (all-equal output).
+        let mut v = [0.0f32; 256];
+        v[0] = 16.0;
+        fwht_256(&mut v);
+        for &x in &v {
+            assert!((x - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn unnorm_matches_norm_times_16() {
+        let mut a = [0.0f32; 256];
+        let mut b = [0.0f32; 256];
+        for i in 0..256 {
+            a[i] = (i as f32).sin();
+            b[i] = a[i];
+        }
+        fwht_256(&mut a);
+        fwht_256_unnorm(&mut b);
+        for i in 0..256 {
+            assert!((a[i] * 16.0 - b[i]).abs() < 1e-3);
+        }
+    }
+}

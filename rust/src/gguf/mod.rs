@@ -1,0 +1,426 @@
+//! IGUF — a GGUF-like single-file model container.
+//!
+//! The paper's formats live inside GGUF files (llama.cpp); this is the
+//! equivalent substrate built from scratch: a magic/version header, a
+//! JSON metadata blob (model config, format name, training provenance),
+//! and a table of named tensors whose payloads are either raw f32 or
+//! packed quantized blocks. `python/compile/train.py` writes the f32
+//! checkpoint in this format; `itq3s quantize` rewrites it in any
+//! [`crate::quant::Format`].
+//!
+//! Layout (all integers little-endian):
+//! ```text
+//! magic "IGUF" | version u32 | meta_len u64 | meta JSON bytes
+//! | n_tensors u64 | entries... | payloads (64-byte aligned each)
+//! entry := name_len u32, name, dtype_len u32, dtype,
+//!          rows u64, cols u64, padded_cols u64, data_len u64
+//! ```
+
+use crate::model::{
+    weights::{DenseLayer, PaddedLinear, QuantLayer},
+    DenseModel, ModelConfig, QuantizedModel,
+};
+use crate::quant::{format_by_name, matmul::QuantizedLinear, QuantizedMatrix};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+pub const MAGIC: &[u8; 4] = b"IGUF";
+pub const VERSION: u32 = 1;
+const ALIGN: usize = 64;
+
+/// One stored tensor.
+#[derive(Clone, Debug)]
+pub struct TensorEntry {
+    pub name: String,
+    /// `"f32"` or a quant format name (`"itq3_s"`, ...).
+    pub dtype: String,
+    pub rows: usize,
+    /// Logical column count.
+    pub cols: usize,
+    /// Stored column count (>= cols when the format required padding).
+    pub padded_cols: usize,
+    pub data: Vec<u8>,
+}
+
+impl TensorEntry {
+    pub fn from_f32(name: &str, rows: usize, cols: usize, data: &[f32]) -> Self {
+        assert_eq!(rows * cols, data.len());
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for &x in data {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        TensorEntry {
+            name: name.to_string(),
+            dtype: "f32".to_string(),
+            rows,
+            cols,
+            padded_cols: cols,
+            data: bytes,
+        }
+    }
+
+    pub fn to_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != "f32" {
+            bail!("tensor {} has dtype {}, expected f32", self.name, self.dtype);
+        }
+        if self.data.len() != self.rows * self.cols * 4 {
+            bail!("tensor {}: payload size mismatch", self.name);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    pub fn to_tensor(&self) -> Result<Tensor> {
+        Ok(Tensor::new(vec![self.rows, self.cols], self.to_f32()?))
+    }
+}
+
+/// A parsed IGUF file.
+pub struct IgufFile {
+    pub meta: Json,
+    pub tensors: Vec<TensorEntry>,
+}
+
+impl IgufFile {
+    pub fn tensor(&self, name: &str) -> Result<&TensorEntry> {
+        self.tensors
+            .iter()
+            .find(|t| t.name == name)
+            .with_context(|| format!("missing tensor '{name}'"))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        let meta = self.meta.to_string().into_bytes();
+        buf.extend_from_slice(&(meta.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&meta);
+        buf.extend_from_slice(&(self.tensors.len() as u64).to_le_bytes());
+        for t in &self.tensors {
+            buf.extend_from_slice(&(t.name.len() as u32).to_le_bytes());
+            buf.extend_from_slice(t.name.as_bytes());
+            buf.extend_from_slice(&(t.dtype.len() as u32).to_le_bytes());
+            buf.extend_from_slice(t.dtype.as_bytes());
+            for v in [t.rows as u64, t.cols as u64, t.padded_cols as u64, t.data.len() as u64]
+            {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        for t in &self.tensors {
+            while buf.len() % ALIGN != 0 {
+                buf.push(0);
+            }
+            buf.extend_from_slice(&t.data);
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(&buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?
+            .read_to_end(&mut bytes)?;
+        Self::parse(&bytes)
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > bytes.len() {
+                bail!("truncated IGUF file at offset {}", *pos);
+            }
+            let s = &bytes[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        let u32_at = |pos: &mut usize| -> Result<u32> {
+            Ok(u32::from_le_bytes(take(pos, 4)?.try_into().unwrap()))
+        };
+        let u64_at = |pos: &mut usize| -> Result<u64> {
+            Ok(u64::from_le_bytes(take(pos, 8)?.try_into().unwrap()))
+        };
+
+        if take(&mut pos, 4)? != MAGIC {
+            bail!("bad magic (not an IGUF file)");
+        }
+        let ver = u32_at(&mut pos)?;
+        if ver != VERSION {
+            bail!("unsupported IGUF version {ver}");
+        }
+        let meta_len = u64_at(&mut pos)? as usize;
+        let meta_str = std::str::from_utf8(take(&mut pos, meta_len)?)
+            .context("metadata is not UTF-8")?;
+        let meta = Json::parse(meta_str).map_err(|e| anyhow::anyhow!("metadata: {e}"))?;
+        let n = u64_at(&mut pos)? as usize;
+        if n > 1_000_000 {
+            bail!("implausible tensor count {n}");
+        }
+        let mut headers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let nl = u32_at(&mut pos)? as usize;
+            let name = String::from_utf8(take(&mut pos, nl)?.to_vec())?;
+            let dl = u32_at(&mut pos)? as usize;
+            let dtype = String::from_utf8(take(&mut pos, dl)?.to_vec())?;
+            let rows = u64_at(&mut pos)? as usize;
+            let cols = u64_at(&mut pos)? as usize;
+            let padded = u64_at(&mut pos)? as usize;
+            let dlen = u64_at(&mut pos)? as usize;
+            headers.push((name, dtype, rows, cols, padded, dlen));
+        }
+        let mut tensors = Vec::with_capacity(n);
+        for (name, dtype, rows, cols, padded_cols, dlen) in headers {
+            while pos % ALIGN != 0 {
+                pos += 1;
+            }
+            let data = take(&mut pos, dlen)?.to_vec();
+            tensors.push(TensorEntry { name, dtype, rows, cols, padded_cols, data });
+        }
+        Ok(IgufFile { meta, tensors })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Model <-> IGUF
+// ---------------------------------------------------------------------
+
+fn layer_names(i: usize) -> [String; 9] {
+    [
+        format!("layers.{i}.attn_norm"),
+        format!("layers.{i}.wq"),
+        format!("layers.{i}.wk"),
+        format!("layers.{i}.wv"),
+        format!("layers.{i}.wo"),
+        format!("layers.{i}.ffn_norm"),
+        format!("layers.{i}.w1"),
+        format!("layers.{i}.w3"),
+        format!("layers.{i}.w2"),
+    ]
+}
+
+/// Serialize a dense f32 model.
+pub fn save_dense(model: &DenseModel, path: &Path) -> Result<()> {
+    let mut tensors = Vec::new();
+    tensors.push(TensorEntry::from_f32(
+        "embed",
+        model.cfg.vocab,
+        model.cfg.dim,
+        model.embed.data(),
+    ));
+    for (i, l) in model.layers.iter().enumerate() {
+        let names = layer_names(i);
+        tensors.push(TensorEntry::from_f32(&names[0], 1, model.cfg.dim, &l.attn_norm));
+        for (name, t) in [
+            (&names[1], &l.wq),
+            (&names[2], &l.wk),
+            (&names[3], &l.wv),
+            (&names[4], &l.wo),
+        ] {
+            tensors.push(TensorEntry::from_f32(name, t.rows(), t.cols(), t.data()));
+        }
+        tensors.push(TensorEntry::from_f32(&names[5], 1, model.cfg.dim, &l.ffn_norm));
+        for (name, t) in [(&names[6], &l.w1), (&names[7], &l.w3), (&names[8], &l.w2)] {
+            tensors.push(TensorEntry::from_f32(name, t.rows(), t.cols(), t.data()));
+        }
+    }
+    tensors.push(TensorEntry::from_f32("final_norm", 1, model.cfg.dim, &model.final_norm));
+    let meta = Json::obj(vec![
+        ("kind", Json::str("dense")),
+        ("config", model.cfg.to_json()),
+    ]);
+    IgufFile { meta, tensors }.save(path)
+}
+
+/// Load a dense f32 model.
+pub fn load_dense(path: &Path) -> Result<DenseModel> {
+    let f = IgufFile::load(path)?;
+    let cfg = ModelConfig::from_json(f.meta.get("config").context("missing config")?)
+        .context("bad config")?;
+    let embed = f.tensor("embed")?.to_tensor()?;
+    let mut layers = Vec::with_capacity(cfg.n_layers);
+    for i in 0..cfg.n_layers {
+        let names = layer_names(i);
+        layers.push(DenseLayer {
+            attn_norm: f.tensor(&names[0])?.to_f32()?,
+            wq: f.tensor(&names[1])?.to_tensor()?,
+            wk: f.tensor(&names[2])?.to_tensor()?,
+            wv: f.tensor(&names[3])?.to_tensor()?,
+            wo: f.tensor(&names[4])?.to_tensor()?,
+            ffn_norm: f.tensor(&names[5])?.to_f32()?,
+            w1: f.tensor(&names[6])?.to_tensor()?,
+            w3: f.tensor(&names[7])?.to_tensor()?,
+            w2: f.tensor(&names[8])?.to_tensor()?,
+        });
+    }
+    let final_norm = f.tensor("final_norm")?.to_f32()?;
+    Ok(DenseModel { cfg, embed, layers, final_norm })
+}
+
+fn quant_entry(name: &str, pl: &PaddedLinear, fmt_name: &str) -> TensorEntry {
+    TensorEntry {
+        name: name.to_string(),
+        dtype: fmt_name.to_string(),
+        rows: pl.lin.w.rows,
+        cols: pl.logical_in,
+        padded_cols: pl.lin.w.cols,
+        data: pl.lin.w.data.clone(),
+    }
+}
+
+fn load_quant_entry(t: &TensorEntry) -> Result<PaddedLinear> {
+    let fmt = format_by_name(&t.dtype)
+        .with_context(|| format!("unknown format '{}' for tensor {}", t.dtype, t.name))?;
+    let expect = t.rows * (t.padded_cols / fmt.block_elems()) * fmt.block_bytes();
+    if t.data.len() != expect {
+        bail!("tensor {}: payload {} != expected {}", t.name, t.data.len(), expect);
+    }
+    Ok(PaddedLinear {
+        lin: QuantizedLinear {
+            w: QuantizedMatrix {
+                fmt,
+                rows: t.rows,
+                cols: t.padded_cols,
+                data: t.data.clone(),
+            },
+        },
+        logical_in: t.cols,
+    })
+}
+
+/// Serialize a quantized model.
+pub fn save_quantized(model: &QuantizedModel, path: &Path) -> Result<()> {
+    let fmt = &model.fmt_name;
+    let mut tensors = Vec::new();
+    tensors.push(TensorEntry::from_f32(
+        "embed",
+        model.cfg.vocab,
+        model.cfg.dim,
+        model.embed.data(),
+    ));
+    for (i, l) in model.layers.iter().enumerate() {
+        let names = layer_names(i);
+        tensors.push(TensorEntry::from_f32(&names[0], 1, model.cfg.dim, &l.attn_norm));
+        tensors.push(quant_entry(&names[1], &l.wq, fmt));
+        tensors.push(quant_entry(&names[2], &l.wk, fmt));
+        tensors.push(quant_entry(&names[3], &l.wv, fmt));
+        tensors.push(quant_entry(&names[4], &l.wo, fmt));
+        tensors.push(TensorEntry::from_f32(&names[5], 1, model.cfg.dim, &l.ffn_norm));
+        tensors.push(quant_entry(&names[6], &l.w1, fmt));
+        tensors.push(quant_entry(&names[7], &l.w3, fmt));
+        tensors.push(quant_entry(&names[8], &l.w2, fmt));
+    }
+    tensors.push(TensorEntry::from_f32("final_norm", 1, model.cfg.dim, &model.final_norm));
+    let meta = Json::obj(vec![
+        ("kind", Json::str("quantized")),
+        ("format", Json::str(fmt.as_str())),
+        ("config", model.cfg.to_json()),
+    ]);
+    IgufFile { meta, tensors }.save(path)
+}
+
+/// Load a quantized model.
+pub fn load_quantized(path: &Path) -> Result<QuantizedModel> {
+    let f = IgufFile::load(path)?;
+    let cfg = ModelConfig::from_json(f.meta.get("config").context("missing config")?)
+        .context("bad config")?;
+    let fmt_name = f
+        .meta
+        .get("format")
+        .and_then(|j| j.as_str())
+        .context("missing format")?
+        .to_string();
+    let embed = f.tensor("embed")?.to_tensor()?;
+    let mut layers = Vec::with_capacity(cfg.n_layers);
+    for i in 0..cfg.n_layers {
+        let names = layer_names(i);
+        layers.push(QuantLayer {
+            attn_norm: f.tensor(&names[0])?.to_f32()?,
+            wq: load_quant_entry(f.tensor(&names[1])?)?,
+            wk: load_quant_entry(f.tensor(&names[2])?)?,
+            wv: load_quant_entry(f.tensor(&names[3])?)?,
+            wo: load_quant_entry(f.tensor(&names[4])?)?,
+            ffn_norm: f.tensor(&names[5])?.to_f32()?,
+            w1: load_quant_entry(f.tensor(&names[6])?)?,
+            w3: load_quant_entry(f.tensor(&names[7])?)?,
+            w2: load_quant_entry(f.tensor(&names[8])?)?,
+        });
+    }
+    let final_norm = f.tensor("final_norm")?.to_f32()?;
+    Ok(QuantizedModel { cfg, fmt_name, embed, layers, final_norm })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::format_by_name as fbn;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("itq3s-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn file_roundtrip_raw() {
+        let meta = Json::obj(vec![("hello", Json::str("world"))]);
+        let t = TensorEntry::from_f32("x", 2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let path = tmp("raw.iguf");
+        IgufFile { meta: meta.clone(), tensors: vec![t] }.save(&path).unwrap();
+        let f = IgufFile::load(&path).unwrap();
+        assert_eq!(f.meta, meta);
+        assert_eq!(f.tensor("x").unwrap().to_f32().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn dense_model_roundtrip() {
+        let cfg = ModelConfig::test();
+        let m = DenseModel::random(&cfg, 1, Some(5.0));
+        let path = tmp("dense.iguf");
+        save_dense(&m, &path).unwrap();
+        let m2 = load_dense(&path).unwrap();
+        assert_eq!(m2.cfg, cfg);
+        assert_eq!(m.embed.data(), m2.embed.data());
+        assert_eq!(m.layers[1].w2.data(), m2.layers[1].w2.data());
+        assert_eq!(m.final_norm, m2.final_norm);
+    }
+
+    #[test]
+    fn quantized_model_roundtrip_bit_exact() {
+        let cfg = ModelConfig::test();
+        let dense = DenseModel::random(&cfg, 2, Some(5.0));
+        let qm = QuantizedModel::quantize(&dense, fbn("itq3_s").unwrap());
+        let path = tmp("quant.iguf");
+        save_quantized(&qm, &path).unwrap();
+        let qm2 = load_quantized(&path).unwrap();
+        assert_eq!(qm2.fmt_name, "itq3_s");
+        // Packed payloads are byte-identical.
+        assert_eq!(qm.layers[0].wq.lin.w.data, qm2.layers[0].wq.lin.w.data);
+        // And they dequantize identically.
+        let a = qm.layers[0].w2.lin.w.dequantize();
+        let b = qm2.layers[0].w2.lin.w.dequantize();
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn corrupted_file_rejected() {
+        let path = tmp("bad.iguf");
+        std::fs::write(&path, b"NOPE____junk").unwrap();
+        assert!(IgufFile::load(&path).is_err());
+        // Truncation is caught too.
+        let cfg = ModelConfig::test();
+        let m = DenseModel::random(&cfg, 3, None);
+        let good = tmp("good.iguf");
+        save_dense(&m, &good).unwrap();
+        let bytes = std::fs::read(&good).unwrap();
+        assert!(IgufFile::parse(&bytes[..bytes.len() / 2]).is_err());
+    }
+}

@@ -1,0 +1,40 @@
+//! # ITQ3_S — Interleaved Ternary Quantization with Rotation-Domain Smoothing
+//!
+//! A from-scratch reproduction of *"ITQ3_S: High-Fidelity 3-bit LLM
+//! Inference via Interleaved Ternary Quantization with Rotation-Domain
+//! Smoothing"* (Yoon, 2026) as a three-layer Rust + JAX/Pallas stack:
+//!
+//! - **Layer 1** (build-time Python): Pallas kernels for the fused
+//!   unpack → dequantize → inverse-FWHT → matmul pipeline
+//!   (`python/compile/kernels/`).
+//! - **Layer 2** (build-time Python): a LLaMA-style transformer in JAX
+//!   whose linears consume packed ITQ3_S buffers, AOT-lowered to HLO text
+//!   (`python/compile/model.py`, `aot.py`).
+//! - **Layer 3** (this crate): the serving coordinator — request router,
+//!   continuous batcher, KV-cache manager — plus every substrate the
+//!   paper depends on: the FWHT, the full quantization format zoo
+//!   (ITQ3_S and all evaluated baselines), a GGUF-like model container,
+//!   a perplexity evaluator, and the PJRT runtime that executes the AOT
+//!   artifacts. Python never runs on the request path.
+//!
+//! See `DESIGN.md` for the paper → module map and `EXPERIMENTS.md` for
+//! the reproduced tables.
+
+pub mod bench;
+pub mod coordinator;
+pub mod eval;
+pub mod f16;
+pub mod fwht;
+pub mod gguf;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod util;
+
+/// Temporary CLI placeholder (replaced by the full CLI in `main.rs`).
+#[doc(hidden)]
+pub fn cli_placeholder() {
+    println!("itq3s: CLI under construction");
+}

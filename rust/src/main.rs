@@ -1,0 +1,172 @@
+//! `itq3s` — the L3 coordinator binary.
+//!
+//! Subcommands (hand-rolled parser; `clap` is not in the offline vendor
+//! set):
+//!
+//! ```text
+//! itq3s gen-corpus  [--out DIR] [--bytes N]        synthetic corpus splits
+//! itq3s quantize    --model M.iguf --fmt F --out Q.iguf
+//! itq3s inspect     --model M.iguf                 distribution + Thm1/2 stats
+//! itq3s eval-ppl    --model M.iguf [--split valid|web] [--engine native|pjrt]
+//! itq3s serve       --model M.iguf [--addr A] [--engine native|pjrt]
+//! itq3s table1|table2|table3                       paper-table harnesses
+//! itq3s e2e                                        end-to-end pipeline check
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: itq3s <gen-corpus|quantize|inspect|eval-ppl|serve|table1|table2|table3|e2e> [flags]"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let (_pos, flags) = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "gen-corpus" => gen_corpus(&flags),
+        "quantize" => quantize(&flags),
+        "inspect" => inspect(&flags),
+        "eval-ppl" => eval_ppl(&flags),
+        "serve" => serve(&flags),
+        "table1" => itq3s::bench::tables::table1(&flag_or(&flags, "artifacts", "artifacts")),
+        "table2" => itq3s::bench::tables::table2(&flag_or(&flags, "artifacts", "artifacts")),
+        "table3" => itq3s::bench::tables::table3(&flag_or(&flags, "artifacts", "artifacts")),
+        "e2e" => e2e(&flags),
+        _ => usage(),
+    }
+}
+
+fn flag_or(flags: &HashMap<String, String>, key: &str, default: &str) -> String {
+    flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+}
+
+fn gen_corpus(flags: &HashMap<String, String>) -> Result<()> {
+    let out = PathBuf::from(flag_or(flags, "out", "artifacts/corpus"));
+    let bytes: usize = flag_or(flags, "bytes", "400000").parse()?;
+    std::fs::create_dir_all(&out)?;
+    let (train, valid, web) = itq3s::eval::corpus::standard_splits(bytes);
+    for (name, text) in [("train.txt", &train), ("valid.txt", &valid), ("web.txt", &web)] {
+        std::fs::write(out.join(name), text)?;
+        println!("wrote {} ({} bytes)", out.join(name).display(), text.len());
+    }
+    Ok(())
+}
+
+fn quantize(flags: &HashMap<String, String>) -> Result<()> {
+    let model = PathBuf::from(flags.get("model").context("--model required")?);
+    let fmt_name = flag_or(flags, "fmt", "itq3_s");
+    let out = PathBuf::from(flags.get("out").context("--out required")?);
+    let fmt = itq3s::quant::format_by_name(&fmt_name)
+        .with_context(|| format!("unknown format {fmt_name}"))?;
+    let dense = itq3s::gguf::load_dense(&model)?;
+    let t0 = std::time::Instant::now();
+    let qm = itq3s::model::QuantizedModel::quantize(&dense, fmt.clone());
+    let dt = t0.elapsed();
+    itq3s::gguf::save_quantized(&qm, &out)?;
+    println!(
+        "quantized {} -> {} [{}], {} of packed linears ({:.3} b/w) in {:.2}s",
+        model.display(),
+        out.display(),
+        fmt_name,
+        itq3s::util::human_bytes(qm.linear_nbytes() as u64),
+        fmt.bits_per_weight(),
+        dt.as_secs_f64(),
+    );
+    Ok(())
+}
+
+fn inspect(flags: &HashMap<String, String>) -> Result<()> {
+    let model = PathBuf::from(flags.get("model").context("--model required")?);
+    let dense = itq3s::gguf::load_dense(&model)?;
+    itq3s::bench::tables::inspect_model(&dense);
+    Ok(())
+}
+
+fn load_engine(
+    path: &Path,
+    engine: &str,
+    artifacts: &str,
+) -> Result<Box<dyn itq3s::model::native::Engine>> {
+    match engine {
+        "native" => {
+            // Accept either a dense or a quantized IGUF.
+            if let Ok(qm) = itq3s::gguf::load_quantized(path) {
+                Ok(Box::new(itq3s::model::NativeEngine::quantized(qm)))
+            } else {
+                let dense = itq3s::gguf::load_dense(path)?;
+                Ok(Box::new(itq3s::model::NativeEngine::dense(dense)))
+            }
+        }
+        "pjrt" => Ok(Box::new(itq3s::runtime::PjrtEngine::load(path, Path::new(artifacts))?)),
+        other => bail!("unknown engine '{other}' (native|pjrt)"),
+    }
+}
+
+fn eval_ppl(flags: &HashMap<String, String>) -> Result<()> {
+    let model = PathBuf::from(flags.get("model").context("--model required")?);
+    let split = flag_or(flags, "split", "valid");
+    let artifacts = flag_or(flags, "artifacts", "artifacts");
+    let engine = flag_or(flags, "engine", "native");
+    let text = std::fs::read_to_string(
+        PathBuf::from(&artifacts).join("corpus").join(format!("{split}.txt")),
+    )?;
+    let eng = load_engine(&model, &engine, &artifacts)?;
+    let t0 = std::time::Instant::now();
+    let r = itq3s::eval::perplexity(eng.as_ref(), &text);
+    println!(
+        "{} [{engine}] split={split}: ppl={:.4} nll={:.4} tokens={} ({:.1}s)",
+        model.display(),
+        r.ppl,
+        r.nll,
+        r.tokens,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn serve(flags: &HashMap<String, String>) -> Result<()> {
+    let model = PathBuf::from(flags.get("model").context("--model required")?);
+    let addr = flag_or(flags, "addr", "127.0.0.1:8090");
+    let engine = flag_or(flags, "engine", "native");
+    let artifacts = flag_or(flags, "artifacts", "artifacts");
+    let eng = load_engine(&model, &engine, &artifacts)?;
+    let cfg = itq3s::coordinator::CoordinatorConfig {
+        max_batch: flag_or(flags, "max-batch", "8").parse()?,
+        kv_budget_bytes: flag_or(flags, "kv-budget", "268435456").parse()?,
+        ..Default::default()
+    };
+    println!("serving {} on {addr} [{engine}]", model.display());
+    itq3s::server::run(&addr, eng, cfg)
+}
+
+fn e2e(flags: &HashMap<String, String>) -> Result<()> {
+    let artifacts = flag_or(flags, "artifacts", "artifacts");
+    itq3s::bench::tables::e2e(&artifacts)
+}

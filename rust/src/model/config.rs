@@ -1,0 +1,192 @@
+//! Transformer architecture configuration.
+
+use crate::util::json::Json;
+
+/// LLaMA-style decoder configuration. The default is the tiny build-time
+/// model; `llama3_8b()`/`llama3_70b()` give the paper's target shapes for
+//  the analytic memory model (§7.3).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    /// Vocabulary size (byte-level tokenizer: 256).
+    pub vocab: usize,
+    /// Residual width.
+    pub dim: usize,
+    /// Decoder layers.
+    pub n_layers: usize,
+    /// Attention heads (no GQA in the tiny model).
+    pub n_heads: usize,
+    /// KV heads (GQA); equals `n_heads` when GQA is off. The tiny model
+    /// always uses full MHA — this field only drives the analytic memory
+    /// model for the paper's LLaMA-3 shapes (§7.3).
+    pub n_kv_heads: usize,
+    /// SwiGLU hidden width.
+    pub ffn: usize,
+    /// Maximum sequence length (RoPE table size, KV capacity).
+    pub max_seq: usize,
+    /// RoPE base.
+    pub rope_theta: f32,
+    /// RMSNorm epsilon.
+    pub eps: f32,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig::tiny()
+    }
+}
+
+impl ModelConfig {
+    /// The build-time trained model: ~6.6M parameters, dims chosen as
+    /// multiples of 256 so every linear quantizes without padding.
+    pub fn tiny() -> Self {
+        ModelConfig {
+            vocab: 256,
+            dim: 256,
+            n_layers: 4,
+            n_heads: 8,
+            n_kv_heads: 8,
+            ffn: 1024,
+            max_seq: 256,
+            rope_theta: 10_000.0,
+            eps: 1e-5,
+        }
+    }
+
+    /// A smaller unit-test model (fast to randomly initialize and run).
+    pub fn test() -> Self {
+        ModelConfig {
+            vocab: 256,
+            dim: 256,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 4,
+            ffn: 512,
+            max_seq: 64,
+            rope_theta: 10_000.0,
+            eps: 1e-5,
+        }
+    }
+
+    /// LLaMA-3 8B shape (for the memory model only).
+    pub fn llama3_8b() -> Self {
+        ModelConfig {
+            vocab: 128_256,
+            dim: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            n_kv_heads: 8,
+            ffn: 14_336,
+            max_seq: 8192,
+            rope_theta: 500_000.0,
+            eps: 1e-5,
+        }
+    }
+
+    /// LLaMA-3 70B shape (for the §7.3 fit analysis).
+    pub fn llama3_70b() -> Self {
+        ModelConfig {
+            vocab: 128_256,
+            dim: 8192,
+            n_layers: 80,
+            n_heads: 64,
+            n_kv_heads: 8,
+            ffn: 28_672,
+            max_seq: 8192,
+            rope_theta: 500_000.0,
+            eps: 1e-5,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.n_heads
+    }
+
+    /// KV projection width (`dim` scaled by the GQA ratio).
+    pub fn kv_dim(&self) -> usize {
+        self.dim * self.n_kv_heads / self.n_heads
+    }
+
+    /// Parameters in the seven quantizable linears per layer.
+    pub fn linear_params_per_layer(&self) -> u64 {
+        // wq, wo: dim x dim; wk, wv: kv_dim x dim (GQA);
+        // w1, w3: ffn x dim; w2: dim x ffn.
+        (2 * self.dim * self.dim
+            + 2 * self.kv_dim() * self.dim
+            + 3 * self.dim * self.ffn) as u64
+    }
+
+    /// Total parameter count (tied embedding counted once).
+    pub fn param_count(&self) -> u64 {
+        let embed = (self.vocab * self.dim) as u64;
+        let norms = ((2 * self.n_layers + 1) * self.dim) as u64;
+        embed + norms + self.n_layers as u64 * self.linear_params_per_layer()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("vocab", Json::num(self.vocab as f64)),
+            ("dim", Json::num(self.dim as f64)),
+            ("n_layers", Json::num(self.n_layers as f64)),
+            ("n_heads", Json::num(self.n_heads as f64)),
+            ("n_kv_heads", Json::num(self.n_kv_heads as f64)),
+            ("ffn", Json::num(self.ffn as f64)),
+            ("max_seq", Json::num(self.max_seq as f64)),
+            ("rope_theta", Json::num(self.rope_theta as f64)),
+            ("eps", Json::num(self.eps as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Self> {
+        Some(ModelConfig {
+            vocab: j.get("vocab")?.as_u64()? as usize,
+            dim: j.get("dim")?.as_u64()? as usize,
+            n_layers: j.get("n_layers")?.as_u64()? as usize,
+            n_heads: j.get("n_heads")?.as_u64()? as usize,
+            n_kv_heads: j
+                .get("n_kv_heads")
+                .and_then(|v| v.as_u64())
+                .map(|v| v as usize)
+                .unwrap_or(j.get("n_heads")?.as_u64()? as usize),
+            ffn: j.get("ffn")?.as_u64()? as usize,
+            max_seq: j.get("max_seq")?.as_u64()? as usize,
+            rope_theta: j.get("rope_theta")?.as_f64()? as f32,
+            eps: j.get("eps")?.as_f64()? as f32,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_param_count() {
+        let c = ModelConfig::tiny();
+        // 4 layers x (4*256^2 + 3*256*1024) + 256*256 + 9*256
+        let expect = 4 * (4 * 256 * 256 + 3 * 256 * 1024) + 256 * 256 + 9 * 256;
+        assert_eq!(c.param_count(), expect as u64);
+        assert!(c.param_count() > 4_000_000);
+    }
+
+    #[test]
+    fn llama_70b_param_count_about_70b() {
+        let p = ModelConfig::llama3_70b().param_count() as f64;
+        assert!((6.5e10..7.3e10).contains(&p), "p={p}");
+        // GQA matters: kv projections are 1/8 width.
+        assert_eq!(ModelConfig::llama3_70b().kv_dim(), 1024);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ModelConfig::tiny();
+        let j = c.to_json();
+        let c2 = ModelConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn head_dim_divides() {
+        let c = ModelConfig::tiny();
+        assert_eq!(c.head_dim() * c.n_heads, c.dim);
+    }
+}

@@ -1,0 +1,117 @@
+//! Per-sequence KV cache.
+//!
+//! The coordinator allocates one of these per active sequence (block-
+//! granular accounting lives in `coordinator::kvpool`; this is the dense
+//! storage the native engine reads/writes). It also retains the raw token
+//! history so the PJRT recompute engine can score growing sequences.
+
+use super::ModelConfig;
+
+/// Dense KV storage for a single sequence: `k[layer][pos][dim]`.
+pub struct KvCache {
+    pub cfg_layers: usize,
+    pub dim: usize,
+    pub max_seq: usize,
+    /// Token history (BOS included); `len()` is the current position.
+    pub tokens: Vec<u32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        KvCache {
+            cfg_layers: cfg.n_layers,
+            dim: cfg.dim,
+            max_seq: cfg.max_seq,
+            tokens: Vec::new(),
+            k: vec![0.0; cfg.n_layers * cfg.max_seq * cfg.dim],
+            v: vec![0.0; cfg.n_layers * cfg.max_seq * cfg.dim],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.tokens.len() >= self.max_seq
+    }
+
+    #[inline]
+    fn off(&self, layer: usize, pos: usize) -> usize {
+        (layer * self.max_seq + pos) * self.dim
+    }
+
+    pub fn k_at(&self, layer: usize, pos: usize) -> &[f32] {
+        let o = self.off(layer, pos);
+        &self.k[o..o + self.dim]
+    }
+
+    pub fn v_at(&self, layer: usize, pos: usize) -> &[f32] {
+        let o = self.off(layer, pos);
+        &self.v[o..o + self.dim]
+    }
+
+    pub fn write_kv(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        assert!(pos < self.max_seq, "kv overflow at pos {pos}");
+        let o = self.off(layer, pos);
+        self.k[o..o + self.dim].copy_from_slice(k);
+        self.v[o..o + self.dim].copy_from_slice(v);
+    }
+
+    /// Bytes of live KV state (both planes, f32 here; fp16 on the paper's
+    /// target — the coordinator's accounting uses this for admission).
+    pub fn live_bytes(&self) -> usize {
+        2 * self.cfg_layers * self.len() * self.dim * 4
+    }
+
+    /// Drop all state (sequence finished); capacity is retained for reuse.
+    pub fn reset(&mut self) {
+        self.tokens.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip() {
+        let cfg = ModelConfig::test();
+        let mut c = KvCache::new(&cfg);
+        let k: Vec<f32> = (0..cfg.dim).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..cfg.dim).map(|i| -(i as f32)).collect();
+        c.write_kv(1, 3, &k, &v);
+        assert_eq!(c.k_at(1, 3), &k[..]);
+        assert_eq!(c.v_at(1, 3), &v[..]);
+        // Other slots untouched.
+        assert!(c.k_at(0, 3).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn accounting() {
+        let cfg = ModelConfig::test();
+        let mut c = KvCache::new(&cfg);
+        assert!(c.is_empty());
+        c.tokens.push(0);
+        c.tokens.push(65);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.live_bytes(), 2 * cfg.n_layers * 2 * cfg.dim * 4);
+        c.reset();
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn overflow_panics() {
+        let cfg = ModelConfig::test();
+        let mut c = KvCache::new(&cfg);
+        let z = vec![0.0; cfg.dim];
+        c.write_kv(0, cfg.max_seq, &z, &z);
+    }
+}

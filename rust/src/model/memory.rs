@@ -1,0 +1,68 @@
+//! Analytic memory model — reproduces the paper's §7.3 claim that
+//! LLaMA-3 70B at 3.125 b/w fits a 32 GiB GPU with KV-cache headroom for
+//! a ~16K context, and the "Mem (GiB)" column of Table 1.
+
+use super::ModelConfig;
+
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// Weight bytes at a given bits/weight rate (linears at `bpw`, embeddings
+/// and norms at fp16 — the convention llama.cpp and the paper share).
+pub fn weight_bytes(cfg: &ModelConfig, bpw: f64) -> f64 {
+    let linear = cfg.n_layers as f64 * cfg.linear_params_per_layer() as f64;
+    let other = (cfg.param_count() - cfg.n_layers as u64 * cfg.linear_params_per_layer()) as f64;
+    linear * bpw / 8.0 + other * 2.0
+}
+
+/// KV-cache bytes for `tokens` context at fp16 (GQA-aware).
+pub fn kv_bytes(cfg: &ModelConfig, tokens: usize) -> f64 {
+    // 2 (K and V) x layers x tokens x kv_dim x 2 bytes.
+    2.0 * cfg.n_layers as f64 * tokens as f64 * cfg.kv_dim() as f64 * 2.0
+}
+
+/// Max context length that fits alongside the weights in `budget` bytes.
+pub fn max_context(cfg: &ModelConfig, bpw: f64, budget: f64) -> usize {
+    let spare = budget - weight_bytes(cfg, bpw);
+    if spare <= 0.0 {
+        return 0;
+    }
+    (spare / (2.0 * cfg.n_layers as f64 * cfg.kv_dim() as f64 * 2.0)) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_7_3_70b_fits_32gib() {
+        let cfg = ModelConfig::llama3_70b();
+        let w = weight_bytes(&cfg, 3.125) / GIB;
+        // Paper: "~27.3 GiB". Our count lands within ~1.5 GiB (the paper
+        // does not state its embedding precision).
+        assert!((26.0..29.0).contains(&w), "w={w}");
+        assert!(w < 32.0);
+        // KV headroom: paper claims ~16K context in the remaining space.
+        let ctx = max_context(&cfg, 3.125, 32.0 * GIB);
+        assert!((10_000..24_000).contains(&ctx), "ctx={ctx} (paper: ~16K)");
+    }
+
+    #[test]
+    fn paper_table1_8b_memory_column() {
+        let cfg = ModelConfig::llama3_8b();
+        // Table 1: FP16 15.0 GiB, ITQ3_S 3.1 GiB, Q4_K_M 4.8 GiB.
+        let fp16 = weight_bytes(&cfg, 16.0) / GIB;
+        let itq3 = weight_bytes(&cfg, 3.125) / GIB;
+        let q4 = weight_bytes(&cfg, 4.5) / GIB;
+        // (the paper's 15.0 includes LLaMA-3's untied LM head, which the
+        // tied-embedding accounting here omits)
+        assert!((12.5..16.5).contains(&fp16), "fp16={fp16}");
+        assert!((2.6..4.2).contains(&itq3), "itq3={itq3}");
+        assert!((4.0..5.5).contains(&q4), "q4={q4}");
+    }
+
+    #[test]
+    fn fp16_cannot_load_70b() {
+        let cfg = ModelConfig::llama3_70b();
+        assert_eq!(max_context(&cfg, 16.0, 32.0 * GIB), 0);
+    }
+}

@@ -1,0 +1,22 @@
+//! LLaMA-style transformer: configuration, weights (dense and
+//! quantized), and the native CPU inference engine.
+//!
+//! The paper evaluates on LLaMA-3 8B/70B; those checkpoints (and the
+//! RTX 5090) are unavailable here, so the reproduction trains a tiny
+//! same-architecture model (RMSNorm + RoPE + causal MHA + SwiGLU, tied
+//! embeddings) at build time (`python/compile/train.py`) and serves it
+//! through this module (native engine) or through the AOT-lowered JAX
+//! graph (`runtime::PjrtEngine`). Both engines implement the same math;
+//! `rust/tests/` cross-checks them numerically.
+
+pub mod config;
+pub mod kv;
+pub mod memory;
+pub mod native;
+pub mod tokenizer;
+pub mod weights;
+
+pub use config::ModelConfig;
+pub use kv::KvCache;
+pub use native::NativeEngine;
+pub use weights::{DenseModel, QuantizedModel};

@@ -1,0 +1,470 @@
+//! Native CPU inference engine.
+//!
+//! Implements the transformer forward pass directly over the quantized
+//! (or dense) weights — the Rust analog of the paper's CUDA MMQ/MMVQ
+//! kernels. Two entry points:
+//!
+//! - [`NativeEngine::decode_step`] — the MMVQ path (§5.4): one token,
+//!   fused dequant matvecs, per-sequence KV cache.
+//! - [`NativeEngine::prefill`] — the MMQ path (§5.2): all prompt
+//!   positions batched through each linear so every weight block is
+//!   dequantized once per *tile* rather than once per token (the
+//!   mechanism behind the paper's prefill-throughput win in Table 2).
+//!
+//! Math matches `python/compile/model.py` op-for-op (RMSNorm → QKV →
+//! interleaved-pair RoPE → causal softmax(QKᵀ/√hd)V → Wo → residual →
+//! RMSNorm → SwiGLU → residual; tied-embedding LM head), verified by the
+//! integration tests in `rust/tests/pjrt_parity.rs`.
+
+use super::{weights::PaddedLinear, DenseModel, KvCache, ModelConfig, QuantizedModel};
+use crate::tensor::{matvec_accum, Tensor};
+
+/// Engine abstraction shared by the native and PJRT backends.
+pub trait Engine: Send + Sync {
+    fn config(&self) -> &ModelConfig;
+    /// Append `token` at position `cache.len()`, returning next-token
+    /// logits.
+    fn decode_step(&self, cache: &mut KvCache, token: u32) -> Vec<f32>;
+    /// Ingest a whole prompt, returning logits at every position
+    /// (`(len, vocab)`).
+    fn prefill(&self, cache: &mut KvCache, tokens: &[u32]) -> Tensor;
+}
+
+/// Weight storage variants the native engine can run.
+pub enum Weights {
+    Dense(DenseModel),
+    Quant(QuantizedModel),
+}
+
+pub struct NativeEngine {
+    pub weights: Weights,
+}
+
+/// `x * w / rms(x)` into `out`.
+fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    let ms = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / x.len() as f64;
+    let inv = 1.0 / (ms + eps as f64).sqrt() as f32;
+    for ((o, &v), &g) in out.iter_mut().zip(x).zip(w) {
+        *o = v * inv * g;
+    }
+}
+
+/// Interleaved-pair RoPE applied in place to one `(dim,)` vector laid out
+/// as `n_heads` x `head_dim`; pair `(2i, 2i+1)` within each head rotates
+/// by `pos / theta^(2i/head_dim)`.
+fn rope(x: &mut [f32], pos: usize, n_heads: usize, head_dim: usize, theta: f32) {
+    for h in 0..n_heads {
+        let base = h * head_dim;
+        for i in 0..head_dim / 2 {
+            let freq = 1.0 / (theta as f64).powf(2.0 * i as f64 / head_dim as f64);
+            let ang = pos as f64 * freq;
+            let (sin, cos) = (ang.sin() as f32, ang.cos() as f32);
+            let (a, b) = (x[base + 2 * i], x[base + 2 * i + 1]);
+            x[base + 2 * i] = a * cos - b * sin;
+            x[base + 2 * i + 1] = a * sin + b * cos;
+        }
+    }
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// In-place softmax over a slice.
+fn softmax(xs: &mut [f32]) {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in xs.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// Apply a linear in whichever representation the layer holds.
+enum Lin<'a> {
+    Dense(&'a Tensor),
+    Quant(&'a PaddedLinear),
+}
+
+impl<'a> Lin<'a> {
+    fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        match self {
+            Lin::Dense(t) => {
+                y.fill(0.0);
+                matvec_accum(t, x, y);
+            }
+            Lin::Quant(q) => q.matvec(x, y),
+        }
+    }
+
+    fn matmul(&self, x: &Tensor) -> Tensor {
+        match self {
+            Lin::Dense(t) => x.matmul(&t.transpose()),
+            Lin::Quant(q) => q.matmul(x),
+        }
+    }
+}
+
+/// Uniform view over one layer's seven linears.
+struct LayerView<'a> {
+    attn_norm: &'a [f32],
+    wq: Lin<'a>,
+    wk: Lin<'a>,
+    wv: Lin<'a>,
+    wo: Lin<'a>,
+    ffn_norm: &'a [f32],
+    w1: Lin<'a>,
+    w3: Lin<'a>,
+    w2: Lin<'a>,
+}
+
+impl NativeEngine {
+    pub fn dense(m: DenseModel) -> Self {
+        NativeEngine { weights: Weights::Dense(m) }
+    }
+
+    pub fn quantized(m: QuantizedModel) -> Self {
+        NativeEngine { weights: Weights::Quant(m) }
+    }
+
+    fn cfg(&self) -> &ModelConfig {
+        match &self.weights {
+            Weights::Dense(m) => &m.cfg,
+            Weights::Quant(m) => &m.cfg,
+        }
+    }
+
+    fn embed(&self) -> &Tensor {
+        match &self.weights {
+            Weights::Dense(m) => &m.embed,
+            Weights::Quant(m) => &m.embed,
+        }
+    }
+
+    fn final_norm(&self) -> &[f32] {
+        match &self.weights {
+            Weights::Dense(m) => &m.final_norm,
+            Weights::Quant(m) => &m.final_norm,
+        }
+    }
+
+    fn layer(&self, i: usize) -> LayerView<'_> {
+        match &self.weights {
+            Weights::Dense(m) => {
+                let l = &m.layers[i];
+                LayerView {
+                    attn_norm: &l.attn_norm,
+                    wq: Lin::Dense(&l.wq),
+                    wk: Lin::Dense(&l.wk),
+                    wv: Lin::Dense(&l.wv),
+                    wo: Lin::Dense(&l.wo),
+                    ffn_norm: &l.ffn_norm,
+                    w1: Lin::Dense(&l.w1),
+                    w3: Lin::Dense(&l.w3),
+                    w2: Lin::Dense(&l.w2),
+                }
+            }
+            Weights::Quant(m) => {
+                let l = &m.layers[i];
+                LayerView {
+                    attn_norm: &l.attn_norm,
+                    wq: Lin::Quant(&l.wq),
+                    wk: Lin::Quant(&l.wk),
+                    wv: Lin::Quant(&l.wv),
+                    wo: Lin::Quant(&l.wo),
+                    ffn_norm: &l.ffn_norm,
+                    w1: Lin::Quant(&l.w1),
+                    w3: Lin::Quant(&l.w3),
+                    w2: Lin::Quant(&l.w2),
+                }
+            }
+        }
+    }
+
+    /// LM-head logits for one hidden vector (tied embedding).
+    fn logits_for(&self, h: &[f32]) -> Vec<f32> {
+        let cfg = self.cfg();
+        let mut hn = vec![0.0f32; cfg.dim];
+        rmsnorm(h, self.final_norm(), cfg.eps, &mut hn);
+        let mut logits = vec![0.0f32; cfg.vocab];
+        matvec_accum(self.embed(), &hn, &mut logits);
+        logits
+    }
+}
+
+impl Engine for NativeEngine {
+    fn config(&self) -> &ModelConfig {
+        self.cfg()
+    }
+
+    fn decode_step(&self, cache: &mut KvCache, token: u32) -> Vec<f32> {
+        let cfg = self.cfg().clone();
+        let pos = cache.len();
+        assert!(pos < cfg.max_seq, "sequence overflows max_seq");
+        let (dim, hd, nh) = (cfg.dim, cfg.head_dim(), cfg.n_heads);
+
+        let mut x = self.embed().row(token as usize).to_vec();
+        let mut h = vec![0.0f32; dim];
+        let mut q = vec![0.0f32; dim];
+        let mut k = vec![0.0f32; dim];
+        let mut v = vec![0.0f32; dim];
+        let mut attn = vec![0.0f32; dim];
+        let mut o = vec![0.0f32; dim];
+        let mut g1 = vec![0.0f32; cfg.ffn];
+        let mut g3 = vec![0.0f32; cfg.ffn];
+        let mut ff = vec![0.0f32; dim];
+        let mut scores = vec![0.0f32; pos + 1];
+
+        for li in 0..cfg.n_layers {
+            let l = self.layer(li);
+            // --- attention ---
+            rmsnorm(&x, l.attn_norm, cfg.eps, &mut h);
+            l.wq.matvec(&h, &mut q);
+            l.wk.matvec(&h, &mut k);
+            l.wv.matvec(&h, &mut v);
+            rope(&mut q, pos, nh, hd, cfg.rope_theta);
+            rope(&mut k, pos, nh, hd, cfg.rope_theta);
+            cache.write_kv(li, pos, &k, &v);
+            let scale = 1.0 / (hd as f32).sqrt();
+            for hh in 0..nh {
+                let qh = &q[hh * hd..(hh + 1) * hd];
+                for (t, s) in scores.iter_mut().enumerate() {
+                    let kh = &cache.k_at(li, t)[hh * hd..(hh + 1) * hd];
+                    *s = crate::quant::matmul::dot(qh, kh) * scale;
+                }
+                softmax(&mut scores);
+                let out = &mut attn[hh * hd..(hh + 1) * hd];
+                out.fill(0.0);
+                for (t, &p) in scores.iter().enumerate() {
+                    let vh = &cache.v_at(li, t)[hh * hd..(hh + 1) * hd];
+                    for (oj, &vj) in out.iter_mut().zip(vh) {
+                        *oj += p * vj;
+                    }
+                }
+            }
+            l.wo.matvec(&attn, &mut o);
+            for (xi, oi) in x.iter_mut().zip(&o) {
+                *xi += oi;
+            }
+            // --- SwiGLU FFN ---
+            rmsnorm(&x, l.ffn_norm, cfg.eps, &mut h);
+            l.w1.matvec(&h, &mut g1);
+            l.w3.matvec(&h, &mut g3);
+            for (a, &b) in g1.iter_mut().zip(&g3) {
+                *a = silu(*a) * b;
+            }
+            l.w2.matvec(&g1, &mut ff);
+            for (xi, fi) in x.iter_mut().zip(&ff) {
+                *xi += fi;
+            }
+        }
+        cache.tokens.push(token);
+        self.logits_for(&x)
+    }
+
+    fn prefill(&self, cache: &mut KvCache, tokens: &[u32]) -> Tensor {
+        let cfg = self.cfg().clone();
+        let seq = tokens.len();
+        let pos0 = cache.len();
+        assert!(pos0 + seq <= cfg.max_seq, "prefill overflows max_seq");
+        let (dim, hd, nh) = (cfg.dim, cfg.head_dim(), cfg.n_heads);
+
+        // X: (seq, dim) residual stream.
+        let mut x = Tensor::zeros(vec![seq, dim]);
+        for (t, &tok) in tokens.iter().enumerate() {
+            x.row_mut(t).copy_from_slice(self.embed().row(tok as usize));
+        }
+        let mut hn = Tensor::zeros(vec![seq, dim]);
+        for li in 0..cfg.n_layers {
+            let l = self.layer(li);
+            // Batched QKV over all positions (the MMQ path).
+            for t in 0..seq {
+                rmsnorm(x.row(t), l.attn_norm, cfg.eps, hn.row_mut(t));
+            }
+            let mut q = l.wq.matmul(&hn);
+            let mut k = l.wk.matmul(&hn);
+            let v = l.wv.matmul(&hn);
+            for t in 0..seq {
+                rope(q.row_mut(t), pos0 + t, nh, hd, cfg.rope_theta);
+                rope(k.row_mut(t), pos0 + t, nh, hd, cfg.rope_theta);
+                cache.write_kv(li, pos0 + t, k.row(t), v.row(t));
+            }
+            // Causal attention per position (reads K/V back from cache so
+            // chunked prefill after a prior prefix is handled uniformly).
+            let scale = 1.0 / (hd as f32).sqrt();
+            let mut attn = Tensor::zeros(vec![seq, dim]);
+            let mut scores = Vec::new();
+            for t in 0..seq {
+                let ctx = pos0 + t + 1;
+                scores.resize(ctx, 0.0);
+                for hh in 0..nh {
+                    let qh = &q.row(t)[hh * hd..(hh + 1) * hd];
+                    for (u, s) in scores.iter_mut().enumerate() {
+                        let kh = &cache.k_at(li, u)[hh * hd..(hh + 1) * hd];
+                        *s = crate::quant::matmul::dot(qh, kh) * scale;
+                    }
+                    softmax(&mut scores);
+                    let out = &mut attn.row_mut(t)[hh * hd..(hh + 1) * hd];
+                    for (u, &p) in scores.iter().enumerate() {
+                        let vh = &cache.v_at(li, u)[hh * hd..(hh + 1) * hd];
+                        for (oj, &vj) in out.iter_mut().zip(vh) {
+                            *oj += p * vj;
+                        }
+                    }
+                }
+            }
+            let o = l.wo.matmul(&attn);
+            for t in 0..seq {
+                for (xi, oi) in x.row_mut(t).iter_mut().zip(o.row(t)) {
+                    *xi += oi;
+                }
+            }
+            // FFN, batched.
+            for t in 0..seq {
+                rmsnorm(x.row(t), l.ffn_norm, cfg.eps, hn.row_mut(t));
+            }
+            let mut g1 = l.w1.matmul(&hn);
+            let g3 = l.w3.matmul(&hn);
+            for t in 0..seq {
+                for (a, &b) in g1.row_mut(t).iter_mut().zip(g3.row(t)) {
+                    *a = silu(*a) * b;
+                }
+            }
+            let ff = l.w2.matmul(&g1);
+            for t in 0..seq {
+                for (xi, fi) in x.row_mut(t).iter_mut().zip(ff.row(t)) {
+                    *xi += fi;
+                }
+            }
+        }
+        cache.tokens.extend_from_slice(tokens);
+        // Logits at every position.
+        let mut logits = Tensor::zeros(vec![seq, cfg.vocab]);
+        for t in 0..seq {
+            logits.row_mut(t).copy_from_slice(&self.logits_for(x.row(t)));
+        }
+        logits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::format_by_name;
+
+    fn engine_pair() -> (NativeEngine, NativeEngine) {
+        let cfg = ModelConfig::test();
+        let dense = DenseModel::random(&cfg, 42, Some(5.0));
+        let q = QuantizedModel::quantize(&dense, format_by_name("q8_0").unwrap());
+        (NativeEngine::dense(dense), NativeEngine::quantized(q))
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = [2.0f32, 2.0, 2.0, 2.0];
+        let w = [1.0f32; 4];
+        let mut out = [0.0f32; 4];
+        rmsnorm(&x, &w, 0.0, &mut out);
+        for &o in &out {
+            assert!((o - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_pos0_identity() {
+        let mut x: Vec<f32> = (0..16).map(|i| i as f32 * 0.1).collect();
+        let orig = x.clone();
+        rope(&mut x, 0, 2, 8, 10_000.0);
+        assert_eq!(x, orig, "pos 0 must be identity");
+        rope(&mut x, 7, 2, 8, 10_000.0);
+        let n0: f32 = orig.iter().map(|v| v * v).sum();
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-3);
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut s = vec![1.0f32, 2.0, 3.0];
+        softmax(&mut s);
+        assert!((s.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(s[2] > s[1] && s[1] > s[0]);
+    }
+
+    #[test]
+    fn prefill_matches_decode_loop() {
+        // The MMQ (batched) and MMVQ (token-by-token) paths must produce
+        // identical logits and identical KV state.
+        let (dense, _) = engine_pair();
+        let tokens = [0u32, 10, 20, 30, 5];
+        let cfg = dense.config().clone();
+        let mut c1 = KvCache::new(&cfg);
+        let lp = dense.prefill(&mut c1, &tokens);
+        let mut c2 = KvCache::new(&cfg);
+        let mut last = Vec::new();
+        for &t in &tokens {
+            last = dense.decode_step(&mut c2, t);
+        }
+        assert_eq!(c1.len(), c2.len());
+        for (a, b) in lp.row(tokens.len() - 1).iter().zip(&last) {
+            assert!((a - b).abs() < 2e-4, "{a} vs {b}");
+        }
+        // KV parity at a middle layer/position.
+        for (a, b) in c1.k_at(1, 3).iter().zip(c2.k_at(1, 3)) {
+            assert!((a - b).abs() < 2e-4);
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_matches_single_shot() {
+        let (dense, _) = engine_pair();
+        let cfg = dense.config().clone();
+        let tokens = [0u32, 3, 9, 27, 33, 11, 7];
+        let mut c1 = KvCache::new(&cfg);
+        let l1 = dense.prefill(&mut c1, &tokens);
+        let mut c2 = KvCache::new(&cfg);
+        dense.prefill(&mut c2, &tokens[..4]);
+        let l2 = dense.prefill(&mut c2, &tokens[4..]);
+        for (a, b) in l1.row(6).iter().zip(l2.row(2)) {
+            assert!((a - b).abs() < 2e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn quantized_engine_tracks_dense() {
+        // q8_0 is near-lossless, so its logits must track the dense
+        // engine closely even after several layers.
+        let (dense, quant) = engine_pair();
+        let cfg = dense.config().clone();
+        let tokens = [0u32, 4, 8, 15, 16, 23, 42];
+        let mut cd = KvCache::new(&cfg);
+        let mut cq = KvCache::new(&cfg);
+        let ld = dense.prefill(&mut cd, &tokens);
+        let lq = quant.prefill(&mut cq, &tokens);
+        let rel = crate::util::stats::rel_l2_err(ld.data(), lq.data());
+        assert!(rel < 0.04, "rel={rel}");
+    }
+
+    #[test]
+    fn decode_is_deterministic() {
+        let (dense, _) = engine_pair();
+        let cfg = dense.config().clone();
+        let mut c1 = KvCache::new(&cfg);
+        let mut c2 = KvCache::new(&cfg);
+        let a = dense.decode_step(&mut c1, 7);
+        let b = dense.decode_step(&mut c2, 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn logits_shape() {
+        let (dense, _) = engine_pair();
+        let cfg = dense.config().clone();
+        let mut c = KvCache::new(&cfg);
+        let l = dense.prefill(&mut c, &[1, 2, 3]);
+        assert_eq!(l.shape(), &[3, cfg.vocab]);
+    }
+}

@@ -1,0 +1,56 @@
+//! Byte-level tokenizer (vocab = 256).
+//!
+//! The tiny build-time model is a byte LM: token ids are raw UTF-8 bytes.
+//! Byte 0x00 doubles as BOS/pad — the corpus generator never emits it.
+
+pub const VOCAB: usize = 256;
+pub const BOS: u32 = 0;
+
+/// Encode text to token ids, prepending BOS.
+pub fn encode(text: &str) -> Vec<u32> {
+    let mut out = Vec::with_capacity(text.len() + 1);
+    out.push(BOS);
+    out.extend(text.bytes().map(|b| b as u32));
+    out
+}
+
+/// Encode without BOS (for continuation chunks).
+pub fn encode_raw(text: &str) -> Vec<u32> {
+    text.bytes().map(|b| b as u32).collect()
+}
+
+/// Decode token ids to text (lossy on invalid UTF-8, skips BOS/pad).
+pub fn decode(tokens: &[u32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .filter(|&&t| t != BOS && t < 256)
+        .map(|&t| t as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let text = "the quick brown fox";
+        let toks = encode(text);
+        assert_eq!(toks[0], BOS);
+        assert_eq!(toks.len(), text.len() + 1);
+        assert_eq!(decode(&toks), text);
+    }
+
+    #[test]
+    fn raw_has_no_bos() {
+        assert_eq!(encode_raw("ab"), vec![97, 98]);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        for t in encode("hello, world! 123") {
+            assert!((t as usize) < VOCAB);
+        }
+    }
+}

@@ -1,0 +1,263 @@
+//! Model weights: dense (f32) and quantized representations.
+//!
+//! Quantization policy mirrors the paper / llama.cpp: the seven large
+//! linears per layer (`wq wk wv wo w1 w2 w3`) are quantized; embeddings
+//! (tied with the LM head) and RMSNorm gains stay in high precision.
+
+use crate::quant::{matmul::QuantizedLinear, pad_cols, Format};
+use crate::tensor::Tensor;
+use crate::util::XorShift;
+use std::sync::Arc;
+
+use super::ModelConfig;
+
+/// One decoder layer, dense.
+pub struct DenseLayer {
+    pub attn_norm: Vec<f32>,
+    /// All weight matrices are row-major `(out_dim, in_dim)`.
+    pub wq: Tensor,
+    pub wk: Tensor,
+    pub wv: Tensor,
+    pub wo: Tensor,
+    pub ffn_norm: Vec<f32>,
+    pub w1: Tensor, // gate: (ffn, dim)
+    pub w3: Tensor, // up:   (ffn, dim)
+    pub w2: Tensor, // down: (dim, ffn)
+}
+
+/// Dense f32 model (training-checkpoint precision).
+pub struct DenseModel {
+    pub cfg: ModelConfig,
+    /// `(vocab, dim)`; tied LM head.
+    pub embed: Tensor,
+    pub layers: Vec<DenseLayer>,
+    pub final_norm: Vec<f32>,
+}
+
+impl DenseModel {
+    /// Random initialization (for tests and synthetic experiments).
+    /// `tail_dof`: `None` for Gaussian init, `Some(dof)` for heavy-tailed
+    /// weights that exhibit the paper's outlier phenomenon.
+    pub fn random(cfg: &ModelConfig, seed: u64, tail_dof: Option<f64>) -> Self {
+        let mut rng = XorShift::new(seed);
+        let mut mat = |rows: usize, cols: usize| {
+            let scale = 1.0 / (cols as f64).sqrt();
+            let mut t = Tensor::zeros(vec![rows, cols]);
+            for x in t.data_mut() {
+                let v = match tail_dof {
+                    Some(dof) => rng.next_student_t(dof) / (dof / (dof - 2.0)).sqrt(),
+                    None => rng.next_gaussian(),
+                };
+                *x = (v * scale) as f32;
+            }
+            t
+        };
+        let layers = (0..cfg.n_layers)
+            .map(|_| DenseLayer {
+                attn_norm: vec![1.0; cfg.dim],
+                wq: mat(cfg.dim, cfg.dim),
+                wk: mat(cfg.dim, cfg.dim),
+                wv: mat(cfg.dim, cfg.dim),
+                wo: mat(cfg.dim, cfg.dim),
+                ffn_norm: vec![1.0; cfg.dim],
+                w1: mat(cfg.ffn, cfg.dim),
+                w3: mat(cfg.ffn, cfg.dim),
+                w2: mat(cfg.dim, cfg.ffn),
+            })
+            .collect();
+        DenseModel {
+            cfg: cfg.clone(),
+            embed: mat(cfg.vocab, cfg.dim),
+            layers,
+            final_norm: vec![1.0; cfg.dim],
+        }
+    }
+
+    /// All linear weights flattened (for distribution analysis).
+    pub fn all_linear_weights(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        for l in &self.layers {
+            for t in [&l.wq, &l.wk, &l.wv, &l.wo, &l.w1, &l.w3, &l.w2] {
+                out.extend_from_slice(t.data());
+            }
+        }
+        out
+    }
+}
+
+/// A quantized linear that transparently handles an input dimension that
+/// is not a multiple of the format block (paper §8): columns are zero-
+/// padded at quantization time and activations at apply time.
+pub struct PaddedLinear {
+    pub lin: QuantizedLinear,
+    pub logical_in: usize,
+}
+
+impl PaddedLinear {
+    pub fn new(fmt: Arc<dyn Format>, dense: &Tensor) -> Self {
+        let logical_in = dense.cols();
+        let padded = pad_cols(dense, fmt.block_elems());
+        PaddedLinear { lin: QuantizedLinear::new(fmt, &padded), logical_in }
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.lin.out_dim()
+    }
+
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.logical_in);
+        if self.lin.in_dim() == self.logical_in {
+            self.lin.matvec(x, y);
+        } else {
+            let mut xp = vec![0.0f32; self.lin.in_dim()];
+            xp[..self.logical_in].copy_from_slice(x);
+            self.lin.matvec(&xp, y);
+        }
+    }
+
+    /// Batched apply: `X (batch, logical_in)` -> `(batch, out)`.
+    pub fn matmul(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.cols(), self.logical_in);
+        if self.lin.in_dim() == self.logical_in {
+            self.lin.matmul(x)
+        } else {
+            let mut xp = Tensor::zeros(vec![x.rows(), self.lin.in_dim()]);
+            for r in 0..x.rows() {
+                xp.row_mut(r)[..self.logical_in].copy_from_slice(x.row(r));
+            }
+            self.lin.matmul(&xp)
+        }
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.lin.w.nbytes()
+    }
+}
+
+/// One decoder layer, quantized.
+pub struct QuantLayer {
+    pub attn_norm: Vec<f32>,
+    pub wq: PaddedLinear,
+    pub wk: PaddedLinear,
+    pub wv: PaddedLinear,
+    pub wo: PaddedLinear,
+    pub ffn_norm: Vec<f32>,
+    pub w1: PaddedLinear,
+    pub w3: PaddedLinear,
+    pub w2: PaddedLinear,
+}
+
+/// Quantized model: linears packed in a [`Format`], embeddings dense.
+pub struct QuantizedModel {
+    pub cfg: ModelConfig,
+    pub fmt_name: String,
+    pub embed: Tensor,
+    pub layers: Vec<QuantLayer>,
+    pub final_norm: Vec<f32>,
+}
+
+impl QuantizedModel {
+    pub fn quantize(dense: &DenseModel, fmt: Arc<dyn Format>) -> Self {
+        let layers = dense
+            .layers
+            .iter()
+            .map(|l| QuantLayer {
+                attn_norm: l.attn_norm.clone(),
+                wq: PaddedLinear::new(fmt.clone(), &l.wq),
+                wk: PaddedLinear::new(fmt.clone(), &l.wk),
+                wv: PaddedLinear::new(fmt.clone(), &l.wv),
+                wo: PaddedLinear::new(fmt.clone(), &l.wo),
+                ffn_norm: l.ffn_norm.clone(),
+                w1: PaddedLinear::new(fmt.clone(), &l.w1),
+                w3: PaddedLinear::new(fmt.clone(), &l.w3),
+                w2: PaddedLinear::new(fmt.clone(), &l.w2),
+            })
+            .collect();
+        QuantizedModel {
+            cfg: dense.cfg.clone(),
+            fmt_name: fmt.name().to_string(),
+            embed: dense.embed.clone(),
+            layers,
+            final_norm: dense.final_norm.clone(),
+        }
+    }
+
+    /// Packed bytes of all quantized linears (the Table 1 "Mem" column,
+    /// measured rather than modeled).
+    pub fn linear_nbytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.wq.nbytes()
+                    + l.wk.nbytes()
+                    + l.wv.nbytes()
+                    + l.wo.nbytes()
+                    + l.w1.nbytes()
+                    + l.w3.nbytes()
+                    + l.w2.nbytes()
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::format_by_name;
+
+    #[test]
+    fn random_model_shapes() {
+        let cfg = ModelConfig::test();
+        let m = DenseModel::random(&cfg, 1, None);
+        assert_eq!(m.embed.shape(), &[cfg.vocab, cfg.dim]);
+        assert_eq!(m.layers.len(), cfg.n_layers);
+        assert_eq!(m.layers[0].w1.shape(), &[cfg.ffn, cfg.dim]);
+        assert_eq!(m.layers[0].w2.shape(), &[cfg.dim, cfg.ffn]);
+    }
+
+    #[test]
+    fn heavy_tail_init_has_outliers() {
+        let cfg = ModelConfig::test();
+        let g = DenseModel::random(&cfg, 2, None).all_linear_weights();
+        let h = DenseModel::random(&cfg, 2, Some(4.0)).all_linear_weights();
+        let kg = crate::util::stats::kurtosis(&g);
+        let kh = crate::util::stats::kurtosis(&h);
+        assert!(kg < 3.5, "gaussian kurtosis {kg}");
+        assert!(kh > 4.0, "heavy kurtosis {kh}");
+    }
+
+    #[test]
+    fn quantize_model_size_matches_bpw() {
+        let cfg = ModelConfig::test();
+        let dense = DenseModel::random(&cfg, 3, Some(5.0));
+        let fmt = format_by_name("itq3_s").unwrap();
+        let qm = QuantizedModel::quantize(&dense, fmt.clone());
+        let params = cfg.n_layers as u64 * cfg.linear_params_per_layer();
+        let expect = params as f64 * fmt.bits_per_weight() / 8.0;
+        let got = qm.linear_nbytes() as f64;
+        assert!((got - expect).abs() / expect < 1e-9, "{got} vs {expect}");
+    }
+
+    #[test]
+    fn padded_linear_handles_odd_cols() {
+        let mut rng = XorShift::new(4);
+        let w = Tensor::randn(vec![8, 300], 0.05, &mut rng); // 300 % 256 != 0
+        let pl = PaddedLinear::new(format_by_name("itq3_s").unwrap(), &w);
+        assert_eq!(pl.logical_in, 300);
+        assert_eq!(pl.lin.in_dim(), 512);
+        let x: Vec<f32> = (0..300).map(|_| rng.next_f32() - 0.5).collect();
+        let mut y = vec![0.0f32; 8];
+        pl.matvec(&x, &mut y);
+        // vs dense reference
+        let mut y_ref = vec![0.0f32; 8];
+        crate::tensor::matvec_accum(&w, &x, &mut y_ref);
+        let rel = crate::util::stats::rel_l2_err(&y_ref, &y);
+        assert!(rel < 0.9, "rel={rel}");
+        // batched agrees with matvec
+        let xt = Tensor::new(vec![1, 300], x.clone());
+        let ym = pl.matmul(&xt);
+        for (a, b) in ym.row(0).iter().zip(&y) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}

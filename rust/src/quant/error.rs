@@ -1,0 +1,123 @@
+//! Reconstruction-error analysis (paper Theorem 2 / Proposition 1).
+//!
+//! Theorem 2 bounds `‖ŵ − w‖₂²` by the ternary grid alone, using the
+//! isometry of `H`: quantization error in the rotated domain transfers
+//! unchanged through the inverse transform. These helpers compute the
+//! bound for a given block so tests (and the `quantize_inspect` example)
+//! can verify it holds on every block of a real checkpoint.
+
+use crate::fwht;
+use crate::util::stats;
+
+/// Per-element worst-case error of the dual-ternary grid `{0, ±d, ±3d}`
+/// for an input `x` (already rotated and mean-removed):
+/// - inside the grid (`|x| ≤ 3d`): at most `d` (half the largest gap,
+///   which is `2d` between `d` and `3d`),
+/// - beyond the grid: clamping error `|x| − 3d`.
+#[inline]
+pub fn dual_grid_elem_bound(x: f64, d: f64) -> f64 {
+    let a = x.abs();
+    if a <= 0.5 * d {
+        0.5 * d
+    } else {
+        d.max(a - 3.0 * d)
+    }
+}
+
+/// Theorem-2-style ℓ2² bound for an ITQ3_S block: rotate `w`, remove the
+/// (f16-rounded) mean, and sum per-element grid bounds. The FWHT rounding
+/// term `ε_FWHT` of the paper is O(n·log n·u) and is absorbed by callers
+/// as a ~1% slack.
+pub fn thm2_bound_l2sq(w: &[f32], d: f64, n: usize) -> f64 {
+    assert_eq!(w.len(), n);
+    let mut rot = w.to_vec();
+    fwht::fwht_inplace(&mut rot);
+    let z = crate::f16::f16_round(stats::mean(&rot) as f32) as f64;
+    rot.iter()
+        .map(|&x| dual_grid_elem_bound(x as f64 - z, d).powi(2))
+        .sum()
+}
+
+/// The paper's headline bound shape (Eq. 6): `n·d²/4 + ε` — valid when no
+/// element clamps. Returns `None` when clamping occurs (outliers beyond
+/// `3d` survive rotation), in which case [`thm2_bound_l2sq`] is the tight
+/// form.
+pub fn thm2_bound_unclamped(w: &[f32], d: f64, n: usize) -> Option<f64> {
+    let mut rot = w.to_vec();
+    fwht::fwht_inplace(&mut rot);
+    let z = crate::f16::f16_round(stats::mean(&rot) as f32) as f64;
+    if rot.iter().any(|&x| (x as f64 - z).abs() > 3.0 * d) {
+        return None;
+    }
+    // Largest per-element error inside the grid is d (not d/2) for the
+    // dual grid; the paper's n·d²/4 applies to its plain-ternary analysis.
+    Some(n as f64 * d * d)
+}
+
+/// Empirical MSE improvement factor of rotating before quantization,
+/// reported by the `quantize_inspect` example (reproduces the paper's §3
+/// motivation numbers).
+pub fn rotation_gain(w: &[f32], block: usize) -> f64 {
+    use crate::quant::{iq3s::Iq3S, itq3s::Itq3S, Format};
+    let rot = Itq3S::new(block);
+    let raw = Iq3S::new();
+    let mut mse_rot = 0.0;
+    let mut mse_raw = 0.0;
+    let mut out = vec![0.0f32; block];
+    for (bi, chunk) in w.chunks_exact(block).enumerate() {
+        let mut bytes = Vec::new();
+        rot.quantize_block(bi as u64, chunk, &mut bytes);
+        rot.dequantize_block(bi as u64, &bytes, &mut out);
+        mse_rot += stats::mse(chunk, &out);
+        bytes.clear();
+        raw.quantize_block(bi as u64, chunk, &mut bytes);
+        raw.dequantize_block(bi as u64, &bytes, &mut out);
+        mse_raw += stats::mse(chunk, &out);
+    }
+    mse_raw / mse_rot.max(1e-30)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elem_bound_cases() {
+        let d = 1.0;
+        assert_eq!(dual_grid_elem_bound(0.0, d), 0.5);
+        assert_eq!(dual_grid_elem_bound(1.5, d), 1.0);
+        assert_eq!(dual_grid_elem_bound(2.9, d), 1.0);
+        assert!((dual_grid_elem_bound(5.0, d) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unclamped_bound_on_tame_block() {
+        let mut rng = crate::util::XorShift::new(1);
+        let w: Vec<f32> = (0..256).map(|_| rng.next_gaussian() as f32 * 0.01).collect();
+        // Generous d so nothing clamps.
+        let d = 0.02;
+        let b = thm2_bound_unclamped(&w, d, 256).expect("should not clamp");
+        assert!((b - 256.0 * d * d).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clamped_block_detected() {
+        let mut w = vec![0.0f32; 256];
+        // Index 1 (not 0): an impulse at index 0 rotates to an all-equal
+        // block whose mean removal cancels it; index 1 gives ±6.25 coeffs
+        // with zero mean, far beyond 3d for small d.
+        w[1] = 100.0;
+        assert!(thm2_bound_unclamped(&w, 0.01, 256).is_none());
+    }
+
+    #[test]
+    fn rotation_gain_exceeds_one_on_outlier_weights() {
+        let mut rng = crate::util::XorShift::new(2);
+        let mut w: Vec<f32> = (0..2048).map(|_| rng.next_gaussian() as f32 * 0.02).collect();
+        for i in (0..2048).step_by(97) {
+            w[i] = 0.4 * rng.next_sign();
+        }
+        let gain = rotation_gain(&w, 256);
+        assert!(gain > 1.3, "gain={gain}");
+    }
+}

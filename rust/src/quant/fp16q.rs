@@ -1,0 +1,73 @@
+//! FP16 "format" — the Table 1 baseline row. Stores IEEE binary16
+//! directly (16 b/w); quantization error is only the f32→f16 rounding.
+
+use super::Format;
+use crate::f16;
+
+pub struct Fp16 {
+    n: usize,
+}
+
+impl Fp16 {
+    pub fn new() -> Self {
+        Fp16 { n: 32 }
+    }
+}
+
+impl Default for Fp16 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Format for Fp16 {
+    fn name(&self) -> &'static str {
+        "fp16"
+    }
+
+    fn block_elems(&self) -> usize {
+        self.n
+    }
+
+    fn block_bytes(&self) -> usize {
+        self.n * 2
+    }
+
+    fn quantize_block(&self, _idx: u64, w: &[f32], out: &mut Vec<u8>) {
+        assert_eq!(w.len(), self.n);
+        for &x in w {
+            out.extend_from_slice(&f16::f32_to_f16_bits(x).to_le_bytes());
+        }
+    }
+
+    fn dequantize_block(&self, _idx: u64, bytes: &[u8], out: &mut [f32]) {
+        for (i, o) in out.iter_mut().enumerate() {
+            let bits = u16::from_le_bytes([bytes[2 * i], bytes[2 * i + 1]]);
+            *o = f16::f16_bits_to_f32(bits);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Format as _;
+
+    #[test]
+    fn sixteen_bits_per_weight() {
+        assert_eq!(Fp16::new().bits_per_weight(), 16.0);
+    }
+
+    #[test]
+    fn roundtrip_is_f16_rounding() {
+        let w: Vec<f32> = (0..32).map(|i| (i as f32 - 16.0) * 0.013).collect();
+        let f = Fp16::new();
+        let mut bytes = Vec::new();
+        f.quantize_block(0, &w, &mut bytes);
+        let mut out = vec![0.0f32; 32];
+        f.dequantize_block(0, &bytes, &mut out);
+        for (a, b) in w.iter().zip(&out) {
+            assert_eq!(crate::f16::f16_round(*a), *b);
+        }
+    }
+}

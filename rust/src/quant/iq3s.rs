@@ -1,0 +1,192 @@
+//! IQ3_S — the paper's 3-bit *baseline* (Table 1 row "IQ3_S"): the same
+//! interleaved dual-ternary 3-bit grid as ITQ3_S but **no rotation**, plus
+//! llama.cpp-style per-32 sub-scales (which is why the real IQ3_S sits at
+//! ~3.5 b/w rather than 3.125). Outliers in the raw weight domain inflate
+//! each sub-block's scale and waste grid levels — exactly the failure
+//! mode §1 describes and the FWHT removes.
+
+use super::packing::*;
+use super::ternary;
+use super::Format;
+
+pub struct Iq3S {
+    n: usize,
+    sub: usize,
+}
+
+impl Iq3S {
+    pub fn new() -> Self {
+        Iq3S { n: 256, sub: 32 }
+    }
+
+    fn nsub(&self) -> usize {
+        self.n / self.sub
+    }
+}
+
+impl Default for Iq3S {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Format for Iq3S {
+    fn name(&self) -> &'static str {
+        "iq3_s"
+    }
+
+    fn block_elems(&self) -> usize {
+        self.n
+    }
+
+    fn block_bytes(&self) -> usize {
+        // planes (96) + z (2) + 8 sub-scale f16s (16) = 114 @ n=256
+        // -> 3.5625 b/w, matching the paper's "3.5".
+        self.n * 3 / 8 + 2 + 2 * self.nsub()
+    }
+
+    fn quantize_block(&self, _idx: u64, w: &[f32], out: &mut Vec<u8>) {
+        assert_eq!(w.len(), self.n);
+        let z = crate::f16::f16_round(crate::util::stats::mean(w) as f32);
+        let centered: Vec<f32> = w.iter().map(|&x| x - z).collect();
+        let mut codes = vec![0u8; self.n];
+        let mut sel = vec![false; self.n];
+        let mut subs = Vec::with_capacity(self.nsub());
+        for (s, chunk) in centered.chunks_exact(self.sub).enumerate() {
+            let ds = crate::f16::f16_round(ternary::block_scale_dual(chunk)).max(1e-8);
+            subs.push(ds);
+            for (j, &v) in chunk.iter().enumerate() {
+                let (digit, coarse) = ternary::dual_ternary_digit(v, ds);
+                codes[s * self.sub + j] = (digit + 1) as u8;
+                sel[s * self.sub + j] = coarse;
+            }
+        }
+        pack_2bit(&codes, out);
+        pack_bits(&sel, out);
+        push_f16(out, z);
+        for &ds in &subs {
+            push_f16(out, ds);
+        }
+    }
+
+    fn dequantize_block(&self, _idx: u64, bytes: &[u8], out: &mut [f32]) {
+        assert_eq!(bytes.len(), self.block_bytes());
+        let planes = self.n * 3 / 8;
+        let z = read_f16(bytes, planes);
+        let base = &bytes[..self.n / 4];
+        let sel = &bytes[self.n / 4..planes];
+        for s in 0..self.nsub() {
+            let ds = read_f16(bytes, planes + 2 + 2 * s);
+            for j in 0..self.sub {
+                let i = s * self.sub + j;
+                let code = (base[i / 4] >> ((i % 4) * 2)) & 0x3;
+                let coarse = get_bit(sel, i);
+                out[i] = ternary::dual_ternary_value(code as i8 - 1, coarse, ds) + z;
+            }
+        }
+    }
+
+    /// Fused LUT dot (per-sub-block scale; zero-point factored out).
+    fn dot_block_raw(
+        &self,
+        _idx: u64,
+        bytes: &[u8],
+        x: &[f32],
+        x_sum: f32,
+        _s: &mut Vec<f32>,
+    ) -> f32 {
+        let n = self.n;
+        let planes = n * 3 / 8;
+        let z = read_f16(bytes, planes);
+        let base = &bytes[..n / 4];
+        let sel = &bytes[n / 4..planes];
+        let mut acc = [0.0f32; 2];
+        for s in 0..self.nsub() {
+            let ds = read_f16(bytes, planes + 2 + 2 * s);
+            let lut = [-ds, 0.0, ds, 0.0, -3.0 * ds, 0.0, 3.0 * ds, 0.0];
+            for g in 0..self.sub / 8 {
+                let gi = s * self.sub / 8 + g;
+                let codes = u16::from_le_bytes([base[2 * gi], base[2 * gi + 1]]) as usize;
+                let sb = sel[gi] as usize;
+                let xs = &x[gi * 8..gi * 8 + 8];
+                for j in 0..8 {
+                    let idx = ((codes >> (2 * j)) & 3) | (((sb >> j) & 1) << 2);
+                    acc[j & 1] += lut[idx] * xs[j];
+                }
+            }
+        }
+        acc[0] + acc[1] + z * x_sum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{stats, XorShift};
+
+    #[test]
+    fn bits_per_weight_is_3_5ish() {
+        let f = Iq3S::new();
+        assert!((f.bits_per_weight() - 3.5625).abs() < 1e-9);
+    }
+
+    #[test]
+    fn roundtrip_on_gaussian() {
+        let mut rng = XorShift::new(1);
+        let w: Vec<f32> = (0..256).map(|_| rng.next_gaussian() as f32 * 0.04).collect();
+        let f = Iq3S::new();
+        let mut bytes = Vec::new();
+        f.quantize_block(0, &w, &mut bytes);
+        let mut out = vec![0.0f32; 256];
+        f.dequantize_block(0, &bytes, &mut out);
+        let rel = stats::rel_l2_err(&w, &out);
+        assert!(rel < 0.65, "rel={rel}");
+    }
+
+    #[test]
+    fn outliers_degrade_whole_subblock() {
+        // The motivating pathology: one 25σ outlier inflates its
+        // sub-block's scale, so the *other* 31 weights there reconstruct
+        // much worse than in a clean sub-block.
+        let mut rng = XorShift::new(2);
+        let mut w: Vec<f32> = (0..256).map(|_| rng.next_gaussian() as f32 * 0.02).collect();
+        w[5] = 0.5;
+        let f = Iq3S::new();
+        let mut bytes = Vec::new();
+        f.quantize_block(0, &w, &mut bytes);
+        let mut out = vec![0.0f32; 256];
+        f.dequantize_block(0, &bytes, &mut out);
+        let mut mse_hit = 0.0; // sub-block 0, excluding the outlier itself
+        for i in 0..32 {
+            if i != 5 {
+                mse_hit += ((w[i] - out[i]) as f64).powi(2);
+            }
+        }
+        mse_hit /= 31.0;
+        let mut mse_clean = 0.0;
+        for i in 32..64 {
+            mse_clean += ((w[i] - out[i]) as f64).powi(2);
+        }
+        mse_clean /= 32.0;
+        assert!(
+            mse_hit > 3.0 * mse_clean,
+            "hit={mse_hit} clean={mse_clean}: outlier should poison its sub-block"
+        );
+    }
+
+    #[test]
+    fn not_rotated() {
+        let f = Iq3S::new();
+        assert!(!f.is_rotated());
+        // raw == full dequant for non-rotated formats.
+        let mut rng = XorShift::new(3);
+        let w: Vec<f32> = (0..256).map(|_| rng.next_f32() - 0.5).collect();
+        let mut bytes = Vec::new();
+        f.quantize_block(0, &w, &mut bytes);
+        let mut a = vec![0.0f32; 256];
+        let mut b = vec![0.0f32; 256];
+        f.dequantize_block(0, &bytes, &mut a);
+        f.dequantize_block_raw(0, &bytes, &mut b);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,181 @@
+//! IQ4_XS-style 4-bit baseline (Table 1 row "IQ4_XS"): a *nonlinear*
+//! 16-level codebook (llama.cpp's IQ4_NL table, denser near zero where
+//! Gaussian weights concentrate) with per-32 sub-scales quantized to
+//! 6 bits. 138 bytes per 256 weights = 4.3125 b/w (paper: 4.3).
+
+use super::packing::*;
+use super::Format;
+
+/// llama.cpp IQ4_NL codebook (values are in units of the sub-scale/127).
+pub const IQ4_NL: [i8; 16] = [
+    -127, -104, -83, -65, -49, -35, -22, -10, 1, 13, 25, 38, 53, 69, 89, 113,
+];
+
+pub struct Iq4Xs {
+    n: usize,
+    sub: usize,
+}
+
+impl Iq4Xs {
+    pub fn new() -> Self {
+        Iq4Xs { n: 256, sub: 32 }
+    }
+
+    fn nsub(&self) -> usize {
+        self.n / self.sub
+    }
+}
+
+impl Default for Iq4Xs {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Nearest codebook index for `x` in units of `scale/127`.
+fn nearest_code(x: f32, scale: f32) -> u8 {
+    if scale <= 0.0 {
+        return 8; // code for value 1 (≈0)
+    }
+    let t = x / scale * 127.0;
+    let mut best = 0usize;
+    let mut bd = f32::INFINITY;
+    for (i, &kv) in IQ4_NL.iter().enumerate() {
+        let d = (t - kv as f32).abs();
+        if d < bd {
+            bd = d;
+            best = i;
+        }
+    }
+    best as u8
+}
+
+impl Format for Iq4Xs {
+    fn name(&self) -> &'static str {
+        "iq4_xs"
+    }
+
+    fn block_elems(&self) -> usize {
+        self.n
+    }
+
+    fn block_bytes(&self) -> usize {
+        // d (2) + 8 x 6-bit sub-scales (6) + hi nibble pad (2) + codes (128)
+        // = 138 bytes -> 4.3125 b/w.
+        2 + 6 + 2 + self.n / 2
+    }
+
+    fn quantize_block(&self, _idx: u64, w: &[f32], out: &mut Vec<u8>) {
+        assert_eq!(w.len(), self.n);
+        // Per-sub scale: fit max|x| to the codebook extreme (127/127 = 1).
+        let mut scales = [0.0f32; 8];
+        for (s, chunk) in w.chunks_exact(self.sub).enumerate() {
+            scales[s] = chunk.iter().fold(0.0f32, |m, &x| m.max(x.abs())).max(1e-10);
+        }
+        let d = crate::f16::f16_round(scales.iter().cloned().fold(0.0f32, f32::max) / 63.0)
+            .max(1e-10);
+        let mut six = [0u8; 8];
+        for s in 0..8 {
+            six[s] = ((scales[s] / d).round() as i64).clamp(1, 63) as u8;
+        }
+        push_f16(out, d);
+        // 8 six-bit scales in 6 bytes.
+        let mut acc: u64 = 0;
+        let mut nbits = 0;
+        for &v in &six {
+            acc |= (v as u64) << nbits;
+            nbits += 6;
+            while nbits >= 8 {
+                out.push((acc & 0xFF) as u8);
+                acc >>= 8;
+                nbits -= 8;
+            }
+        }
+        out.extend_from_slice(&[0, 0]); // alignment pad (counted in b/w)
+        let mut codes = vec![0u8; self.n];
+        for (s, chunk) in w.chunks_exact(self.sub).enumerate() {
+            let sc = d * six[s] as f32;
+            for (j, &x) in chunk.iter().enumerate() {
+                codes[s * self.sub + j] = nearest_code(x, sc);
+            }
+        }
+        pack_4bit(&codes, out);
+    }
+
+    fn dequantize_block(&self, _idx: u64, bytes: &[u8], out: &mut [f32]) {
+        assert_eq!(bytes.len(), self.block_bytes());
+        let d = read_f16(bytes, 0);
+        let sixb = &bytes[2..8];
+        let codes = &bytes[10..];
+        for s in 0..self.nsub() {
+            let bit = s * 6;
+            let byte = bit / 8;
+            let off = bit % 8;
+            let lo = sixb[byte] as u16;
+            let hi = if byte + 1 < 6 { sixb[byte + 1] as u16 } else { 0 };
+            let sc = d * (((lo | (hi << 8)) >> off) & 0x3F) as f32;
+            for j in 0..self.sub {
+                let i = s * self.sub + j;
+                let c = (codes[i / 2] >> ((i % 2) * 4)) & 0xF;
+                out[i] = sc * IQ4_NL[c as usize] as f32 / 127.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{stats, XorShift};
+
+    #[test]
+    fn bits_per_weight() {
+        assert!((Iq4Xs::new().bits_per_weight() - 4.3125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn codebook_is_monotone() {
+        for w in IQ4_NL.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn nearest_code_exact_on_codebook_points() {
+        for (i, &kv) in IQ4_NL.iter().enumerate() {
+            let x = kv as f32 / 127.0 * 0.05;
+            assert_eq!(nearest_code(x, 0.05) as usize, i);
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_between_q4km_and_3bit() {
+        let mut rng = XorShift::new(1);
+        let mut e_iq4 = 0.0;
+        let mut e_q4k = 0.0;
+        let mut e_it3 = 0.0;
+        for bi in 0..10u64 {
+            let w: Vec<f32> =
+                (0..256).map(|_| rng.next_student_t(4.0) as f32 * 0.02).collect();
+            let mut out = vec![0.0f32; 256];
+            let mut bytes = Vec::new();
+            let f = Iq4Xs::new();
+            f.quantize_block(bi, &w, &mut bytes);
+            f.dequantize_block(bi, &bytes, &mut out);
+            e_iq4 += stats::mse(&w, &out);
+            bytes.clear();
+            let g = crate::quant::q4km::Q4KM::new();
+            g.quantize_block(bi, &w, &mut bytes);
+            g.dequantize_block(bi, &bytes, &mut out);
+            e_q4k += stats::mse(&w, &out);
+            bytes.clear();
+            let h = crate::quant::itq3s::Itq3S::new(256);
+            h.quantize_block(bi, &w, &mut bytes);
+            h.dequantize_block(bi, &bytes, &mut out);
+            e_it3 += stats::mse(&w, &out);
+        }
+        // Table 1 ordering: Q4_K_M <= IQ4_XS < ITQ3_S in error.
+        assert!(e_iq4 < e_it3, "iq4_xs {e_iq4} vs itq3_s {e_it3}");
+        assert!(e_q4k < e_it3);
+    }
+}

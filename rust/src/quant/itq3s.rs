@@ -1,0 +1,441 @@
+//! ITQ3_S — the paper's format (§4): FWHT rotation + interleaved ternary
+//! 3-bit coding, 3.125 bits/weight (3.625 for the sub-scale variant).
+//!
+//! Per block of `n` (default 256, ablatable 32..512 — Table 3):
+//!
+//! ```text
+//! [ base plane: n/4 bytes ][ selector plane: n/8 bytes ][ d: f16 ][ z: f16 ]
+//! ```
+//!
+//! Encoding (paper Alg 1, with the §3.3 scale erratum fixed — see
+//! `ternary::block_scale_ternary`):
+//! 1. `w' = H_n w` (forward FWHT; Gaussianizes the block, Thm 1),
+//! 2. `z = mean(w')`, `d = 0.5505·σ(w')` (MSE-optimal dual-ternary step
+//!    for the Gaussianized block),
+//! 3. each `x = w'_i − z` is coded to the nearest level of
+//!    `{0, ±d, ±3d}` as (ternary digit, coarse-selector bit) — the
+//!    "interleaved ternary" 3-bit code.
+//!
+//! Decoding (paper Alg 2 / Listing 2): reconstruct grid values, add `z`,
+//! apply the inverse FWHT (involution: `H⁻¹ = H`). The serving fast path
+//! skips the inverse and rotates activations instead
+//! ([`Format::rotate_activation_block`]), which is algebraically identical
+//! because `H` is orthogonal and symmetric — this is the CPU/TPU analog of
+//! the paper's "fused into the shared-memory loading stage".
+
+use super::packing::*;
+use super::ternary;
+use super::Format;
+use crate::fwht;
+
+/// ITQ3_S with configurable rotation block size (Table 3 ablation knob).
+pub struct Itq3S {
+    n: usize,
+}
+
+impl Itq3S {
+    pub fn new(n: usize) -> Self {
+        assert!(n.is_power_of_two() && (32..=512).contains(&n), "block {n}");
+        Itq3S { n }
+    }
+
+    /// Shared encode core (also used by the sub-scale variant for its
+    /// rotated, mean-removed input).
+    fn encode_codes(x: &[f32], d: f32, out: &mut Vec<u8>) {
+        let n = x.len();
+        let mut codes = vec![0u8; n];
+        let mut sel = vec![false; n];
+        for (i, &v) in x.iter().enumerate() {
+            let (digit, coarse) = ternary::dual_ternary_digit(v, d);
+            codes[i] = (digit + 1) as u8; // {-1,0,1} -> {0,1,2}
+            sel[i] = coarse;
+        }
+        pack_2bit(&codes, out);
+        pack_bits(&sel, out);
+    }
+
+    /// 8-entry value LUT for one block: index `(sel << 2) | code`.
+    /// Codes {0,1,2} map to digits {-1,0,1}; sel selects the x3 sub-grid.
+    #[inline]
+    fn value_lut(d: f32) -> [f32; 8] {
+        [-d, 0.0, d, 0.0, -3.0 * d, 0.0, 3.0 * d, 0.0]
+    }
+
+    /// Shared decode core: grid values (rotated domain, mean-removed).
+    /// Branchless word-at-a-time unpack + LUT (§Perf: ~3x over the
+    /// original per-element bit/branch decode).
+    fn decode_codes(bytes: &[u8], n: usize, d: f32, out: &mut [f32]) {
+        let lut = Self::value_lut(d);
+        let base = &bytes[..n / 4];
+        let sel = &bytes[n / 4..n / 4 + n / 8];
+        // 8 codes per base byte-pair, 8 sel bits per sel byte: process 8
+        // elements per iteration from one u16 of codes and one u8 of sel.
+        for g in 0..n / 8 {
+            let codes = u16::from_le_bytes([base[2 * g], base[2 * g + 1]]) as usize;
+            let s = sel[g] as usize;
+            let o = &mut out[g * 8..g * 8 + 8];
+            for j in 0..8 {
+                let idx = ((codes >> (2 * j)) & 3) | (((s >> j) & 1) << 2);
+                o[j] = lut[idx];
+            }
+        }
+    }
+}
+
+impl Format for Itq3S {
+    fn name(&self) -> &'static str {
+        "itq3_s"
+    }
+
+    fn block_elems(&self) -> usize {
+        self.n
+    }
+
+    fn block_bytes(&self) -> usize {
+        // 3 bits/weight of planes + d + z.
+        self.n * 3 / 8 + 4
+    }
+
+    fn quantize_block(&self, _idx: u64, w: &[f32], out: &mut Vec<u8>) {
+        assert_eq!(w.len(), self.n);
+        let mut rot = w.to_vec();
+        fwht::fwht_inplace(&mut rot);
+        // Round z and d through f16 *before* coding so encode and decode
+        // use the identical grid (both are stored as f16).
+        let z = crate::f16::f16_round(crate::util::stats::mean(&rot) as f32);
+        for v in rot.iter_mut() {
+            *v -= z;
+        }
+        let d = crate::f16::f16_round(ternary::block_scale_dual(&rot)).max(1e-8);
+        Self::encode_codes(&rot, d, out);
+        push_f16(out, d);
+        push_f16(out, z);
+    }
+
+    fn dequantize_block_raw(&self, _idx: u64, bytes: &[u8], out: &mut [f32]) {
+        assert_eq!(bytes.len(), self.block_bytes());
+        assert_eq!(out.len(), self.n);
+        let d = read_f16(bytes, self.n * 3 / 8);
+        let z = read_f16(bytes, self.n * 3 / 8 + 2);
+        Self::decode_codes(bytes, self.n, d, out);
+        for v in out.iter_mut() {
+            *v += z;
+        }
+    }
+
+    fn dequantize_block(&self, idx: u64, bytes: &[u8], out: &mut [f32]) {
+        self.dequantize_block_raw(idx, bytes, out);
+        // Inverse rotation (H is an involution) — paper Alg 2 step 6-12.
+        if self.n == 256 {
+            fwht::fwht_256(out.try_into().unwrap());
+        } else {
+            fwht::ifwht_inplace(out);
+        }
+    }
+
+    fn rotate_activation_block(&self, _idx: u64, x: &mut [f32]) {
+        // dot(Hw, Hx) == dot(w, x): rotate the activation once instead of
+        // inverse-rotating every weight block that touches it.
+        if x.len() == 256 {
+            fwht::fwht_256(x.try_into().unwrap());
+        } else {
+            fwht::fwht_inplace(x);
+        }
+    }
+
+    fn is_rotated(&self) -> bool {
+        true
+    }
+
+    /// Single-pass fused dot: unpack -> LUT -> FMA without materializing
+    /// the block (the MMVQ hot loop; paper §5.4). The zero-point term
+    /// factors out: `dot = Σ lut[c_i]·x_i + z·Σ x_i`.
+    fn dot_block_raw(
+        &self,
+        _idx: u64,
+        bytes: &[u8],
+        x: &[f32],
+        x_sum: f32,
+        _scratch: &mut Vec<f32>,
+    ) -> f32 {
+        let n = self.n;
+        debug_assert_eq!(bytes.len(), self.block_bytes());
+        debug_assert_eq!(x.len(), n);
+        let d = read_f16(bytes, n * 3 / 8);
+        let z = read_f16(bytes, n * 3 / 8 + 2);
+        let lut = Self::value_lut(d);
+        let base = &bytes[..n / 4];
+        let sel = &bytes[n / 4..n * 3 / 8];
+        let mut acc = [0.0f32; 2];
+        for g in 0..n / 8 {
+            let codes = u16::from_le_bytes([base[2 * g], base[2 * g + 1]]) as usize;
+            let s = sel[g] as usize;
+            let xs = &x[g * 8..g * 8 + 8];
+            // Two interleaved accumulators break the FMA dependency chain.
+            for j in 0..8 {
+                let idx = ((codes >> (2 * j)) & 3) | (((s >> j) & 1) << 2);
+                acc[j & 1] += lut[idx] * xs[j];
+            }
+        }
+        // Zero-point term via the precomputed activation sum (O(1)).
+        acc[0] + acc[1] + z * x_sum
+    }
+}
+
+/// ITQ3_S sub-scale variant (paper §4.1 "Sub-block scales"): adds eight
+/// per-32-element f16 scale refinements, 3.625 bits/weight at n=256.
+pub struct Itq3SSub {
+    n: usize,
+    sub: usize,
+}
+
+impl Itq3SSub {
+    pub fn new() -> Self {
+        Itq3SSub { n: 256, sub: 32 }
+    }
+
+    fn nsub(&self) -> usize {
+        self.n / self.sub
+    }
+}
+
+impl Default for Itq3SSub {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Format for Itq3SSub {
+    fn name(&self) -> &'static str {
+        "itq3_s_sub"
+    }
+
+    fn block_elems(&self) -> usize {
+        self.n
+    }
+
+    fn block_bytes(&self) -> usize {
+        // planes + d + z + 8 sub-scale f16s = 96 + 4 + 16 = 116 @ n=256.
+        self.n * 3 / 8 + 4 + 2 * self.nsub()
+    }
+
+    fn quantize_block(&self, _idx: u64, w: &[f32], out: &mut Vec<u8>) {
+        assert_eq!(w.len(), self.n);
+        let mut rot = w.to_vec();
+        fwht::fwht_inplace(&mut rot);
+        let z = crate::f16::f16_round(crate::util::stats::mean(&rot) as f32);
+        for v in rot.iter_mut() {
+            *v -= z;
+        }
+        let d = crate::f16::f16_round(ternary::block_scale_dual(&rot)).max(1e-8);
+        // Per-sub-block refinement factor, quantized to f16.
+        let mut subs = Vec::with_capacity(self.nsub());
+        for chunk in rot.chunks_exact(self.sub) {
+            let ds = ternary::block_scale_dual(chunk);
+            subs.push(crate::f16::f16_round((ds / d).clamp(0.25, 4.0)));
+        }
+        // Code each sub-block against its refined step.
+        let mut codes = vec![0u8; self.n];
+        let mut sel = vec![false; self.n];
+        for (s, chunk) in rot.chunks_exact(self.sub).enumerate() {
+            let ds = d * subs[s];
+            for (j, &v) in chunk.iter().enumerate() {
+                let (digit, coarse) = ternary::dual_ternary_digit(v, ds);
+                codes[s * self.sub + j] = (digit + 1) as u8;
+                sel[s * self.sub + j] = coarse;
+            }
+        }
+        pack_2bit(&codes, out);
+        pack_bits(&sel, out);
+        push_f16(out, d);
+        push_f16(out, z);
+        for &f in &subs {
+            push_f16(out, f);
+        }
+    }
+
+    fn dequantize_block_raw(&self, _idx: u64, bytes: &[u8], out: &mut [f32]) {
+        assert_eq!(bytes.len(), self.block_bytes());
+        let planes = self.n * 3 / 8;
+        let d = read_f16(bytes, planes);
+        let z = read_f16(bytes, planes + 2);
+        let base = &bytes[..self.n / 4];
+        let sel = &bytes[self.n / 4..planes];
+        for s in 0..self.nsub() {
+            let ds = d * read_f16(bytes, planes + 4 + 2 * s);
+            for j in 0..self.sub {
+                let i = s * self.sub + j;
+                let code = (base[i / 4] >> ((i % 4) * 2)) & 0x3;
+                let coarse = get_bit(sel, i);
+                out[i] = ternary::dual_ternary_value(code as i8 - 1, coarse, ds) + z;
+            }
+        }
+    }
+
+    fn dequantize_block(&self, idx: u64, bytes: &[u8], out: &mut [f32]) {
+        self.dequantize_block_raw(idx, bytes, out);
+        fwht::fwht_256(out.try_into().unwrap());
+    }
+
+    fn rotate_activation_block(&self, _idx: u64, x: &mut [f32]) {
+        fwht::fwht_256(x.try_into().unwrap());
+    }
+
+    fn is_rotated(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::error::thm2_bound_l2sq;
+    use crate::util::prop::forall;
+    use crate::util::{stats, XorShift};
+
+    fn roundtrip(fmt: &dyn Format, w: &[f32]) -> Vec<f32> {
+        let mut bytes = Vec::new();
+        fmt.quantize_block(0, w, &mut bytes);
+        assert_eq!(bytes.len(), fmt.block_bytes());
+        let mut out = vec![0.0f32; w.len()];
+        fmt.dequantize_block(0, &bytes, &mut out);
+        out
+    }
+
+    #[test]
+    fn bits_per_weight() {
+        assert_eq!(Itq3S::new(256).bits_per_weight(), 3.125);
+        assert_eq!(Itq3SSub::new().bits_per_weight(), 3.625);
+        // Smaller rotation blocks amortize metadata worse (Table 3).
+        assert!(Itq3S::new(32).bits_per_weight() > Itq3S::new(256).bits_per_weight());
+    }
+
+    #[test]
+    fn roundtrip_reconstruction_error_small_on_gaussian() {
+        let mut rng = XorShift::new(1);
+        let w: Vec<f32> = (0..256).map(|_| rng.next_gaussian() as f32 * 0.03).collect();
+        let fmt = Itq3S::new(256);
+        let out = roundtrip(&fmt, &w);
+        let rel = stats::rel_l2_err(&w, &out);
+        // Dual-ternary on a Gaussian has MSE ≈ 0.29 σ² → rel ≈ 0.54.
+        assert!(rel < 0.62, "rel={rel}");
+    }
+
+    #[test]
+    fn sub_variant_at_least_as_good() {
+        let mut rng = XorShift::new(2);
+        let mut worse = 0;
+        for _ in 0..30 {
+            let w: Vec<f32> =
+                (0..256).map(|_| rng.next_student_t(4.0) as f32 * 0.02).collect();
+            let base = stats::mse(&w, &roundtrip(&Itq3S::new(256), &w));
+            let sub = stats::mse(&w, &roundtrip(&Itq3SSub::new(), &w));
+            if sub > base * 1.02 {
+                worse += 1;
+            }
+        }
+        assert!(worse <= 6, "sub variant worse on {worse}/30 heavy-tailed blocks");
+    }
+
+    #[test]
+    fn rotation_beats_no_rotation_on_outlier_blocks() {
+        // The core claim: on blocks with planted outliers, ITQ3_S (with
+        // FWHT) reconstructs much better than the identical grid applied
+        // in the raw domain (= IQ3_S-style).
+        let mut rng = XorShift::new(3);
+        let mut wins = 0;
+        let trials = 50;
+        for _ in 0..trials {
+            let mut w: Vec<f32> = (0..256).map(|_| rng.next_gaussian() as f32 * 0.02).collect();
+            let oi = (rng.next_below(256)) as usize;
+            w[oi] = 0.5 * rng.next_sign(); // 25-sigma outlier
+            let rot = stats::mse(&w, &roundtrip(&Itq3S::new(256), &w));
+            let raw = stats::mse(&w, &roundtrip(&crate::quant::iq3s::Iq3S::new(), &w));
+            if rot < raw {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 40, "rotation won only {wins}/{trials}");
+    }
+
+    #[test]
+    fn thm2_bound_holds() {
+        // ‖ŵ−w‖² ≤ n·(3d)²/4·(grid clamp caveat) — we assert the paper's
+        // bound with the dual-grid step: max per-element error inside the
+        // representable range is d/2 (fine region) or d (between d..3d),
+        // and the isometry transfers it through H⁻¹ exactly.
+        forall("Theorem 2 reconstruction bound", 40, |g| {
+            let w = g.weight_block(256);
+            let fmt = Itq3S::new(256);
+            let mut bytes = Vec::new();
+            fmt.quantize_block(0, &w, &mut bytes);
+            let mut out = vec![0.0f32; 256];
+            fmt.dequantize_block(0, &bytes, &mut out);
+            let d = read_f16(&bytes, 96) as f64;
+            let err_sq: f64 = w
+                .iter()
+                .zip(&out)
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum();
+            let bound = thm2_bound_l2sq(&w, d, 256);
+            assert!(err_sq <= bound * 1.01 + 1e-9, "err²={err_sq} bound={bound}");
+        });
+    }
+
+    #[test]
+    fn all_block_sizes_roundtrip() {
+        let mut rng = XorShift::new(4);
+        for &n in &[32usize, 64, 128, 256, 512] {
+            let w: Vec<f32> = (0..n).map(|_| rng.next_gaussian() as f32 * 0.05).collect();
+            let fmt = Itq3S::new(n);
+            let out = roundtrip(&fmt, &w);
+            let rel = stats::rel_l2_err(&w, &out);
+            assert!(rel < 0.8, "n={n} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn raw_plus_activation_rotation_equals_full_dequant_dot() {
+        // The fast-path identity: dot(raw(q), H x) == dot(dequant(q), x).
+        forall("fused rotation identity", 60, |g| {
+            let w = g.weight_block(256);
+            let x = g.vec_f32(256, -1.0, 1.0);
+            let fmt = Itq3S::new(256);
+            let mut bytes = Vec::new();
+            fmt.quantize_block(0, &w, &mut bytes);
+
+            let mut full = vec![0.0f32; 256];
+            fmt.dequantize_block(0, &bytes, &mut full);
+            let slow: f64 = full.iter().zip(&x).map(|(&a, &b)| (a * b) as f64).sum();
+
+            let mut raw = vec![0.0f32; 256];
+            fmt.dequantize_block_raw(0, &bytes, &mut raw);
+            let mut xr = x.clone();
+            fmt.rotate_activation_block(0, &mut xr);
+            let fast: f64 = raw.iter().zip(&xr).map(|(&a, &b)| (a * b) as f64).sum();
+
+            assert!((slow - fast).abs() <= 1e-3 * slow.abs().max(1.0), "{slow} vs {fast}");
+        });
+    }
+
+    #[test]
+    fn deterministic_encoding() {
+        let mut rng = XorShift::new(5);
+        let w: Vec<f32> = (0..256).map(|_| rng.next_f32() - 0.5).collect();
+        let fmt = Itq3S::new(256);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        fmt.quantize_block(7, &w, &mut a);
+        fmt.quantize_block(7, &w, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn zero_block_roundtrips_to_zero() {
+        let w = vec![0.0f32; 256];
+        let out = roundtrip(&Itq3S::new(256), &w);
+        for &x in &out {
+            assert!(x.abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,270 @@
+//! Quantized linear algebra — the serving hot path (L3's analog of the
+//! paper's fused MMQ/MMVQ CUDA kernels, §5.2/§5.4).
+//!
+//! Two evaluation strategies:
+//!
+//! - **naive**: dequantize every weight block to the original domain
+//!   (inverse FWHT per block per use) and dot with raw activations — the
+//!   paper's Alg 2 executed literally. O(rows·blocks·(n + n·log n)).
+//! - **fused** (default): exploit `dot(Hw, Hx) = dot(w, x)` — rotate each
+//!   *activation* block once per matvec, then dot raw (still-rotated)
+//!   weight grids against rotated activations. The inverse transform
+//!   disappears from the per-row loop entirely: O(cols·log n) once plus
+//!   O(rows·cols) of pure dot products. This is the CPU realization of
+//!   "fusing the IFWHT into the load stage" and is benchmarked against
+//!   naive in `benches/micro_kernels.rs` and EXPERIMENTS.md §Perf.
+
+use super::{Format, QuantizedMatrix};
+use crate::tensor::Tensor;
+use std::sync::Arc;
+
+/// A quantized weight matrix `(out_dim, in_dim)` with the scratch needed
+/// to apply it. Cloneable view — scratch is allocated per call site.
+pub struct QuantizedLinear {
+    pub w: QuantizedMatrix,
+}
+
+/// Dot product with 4-way accumulator splitting (helps the autovectorizer
+/// and breaks the dependency chain; see §Perf).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+impl QuantizedLinear {
+    pub fn new(fmt: Arc<dyn Format>, dense: &Tensor) -> Self {
+        QuantizedLinear { w: QuantizedMatrix::quantize(fmt, dense) }
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.w.rows
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.w.cols
+    }
+
+    /// Rotate a full activation vector into the storage domain, block by
+    /// block (no-op for unrotated formats). The block ordinal passed to
+    /// the format is the *column* block index: every weight row uses the
+    /// same rotation per column block, which is why activations can be
+    /// rotated once. (QuIP#-sim derives its signs from this index, so
+    /// its per-block transforms also match across rows — see
+    /// `quip3::tests::fused_rotation_identity`.)
+    pub fn rotate_activations(&self, x: &mut [f32]) {
+        if !self.w.fmt.is_rotated() {
+            return;
+        }
+        let be = self.w.fmt.block_elems();
+        for (b, chunk) in x.chunks_exact_mut(be).enumerate() {
+            self.w.fmt.rotate_activation_block(b as u64, chunk);
+        }
+    }
+
+    /// Fused matvec: `y = W x`. `x` is consumed in the *rotated* domain —
+    /// call [`Self::rotate_activations`] first (or use [`Self::matvec`]).
+    pub fn matvec_rotated(&self, x_rot: &[f32], y: &mut [f32], scratch: &mut Vec<f32>) {
+        assert_eq!(x_rot.len(), self.in_dim());
+        assert_eq!(y.len(), self.out_dim());
+        let be = self.w.fmt.block_elems();
+        let bb = self.w.fmt.block_bytes();
+        let bpr = self.w.blocks_per_row();
+        // Per-block activation sums, shared by every weight row (the
+        // zero-point contribution of a block is z * sum(x_block)).
+        let xsums: Vec<f32> = x_rot
+            .chunks_exact(be)
+            .map(|c| c.iter().sum::<f32>())
+            .collect();
+        for (r, yo) in y.iter_mut().enumerate() {
+            let row_bytes = &self.w.data[r * bpr * bb..(r + 1) * bpr * bb];
+            let mut acc = 0.0f32;
+            for b in 0..bpr {
+                // Fused unpack+dot per block (formats specialize this —
+                // the MMVQ hot loop; see §Perf).
+                acc += self.w.fmt.dot_block_raw(
+                    b as u64,
+                    &row_bytes[b * bb..(b + 1) * bb],
+                    &x_rot[b * be..(b + 1) * be],
+                    xsums[b],
+                    scratch,
+                );
+            }
+            *yo = acc;
+        }
+    }
+
+    /// Convenience fused matvec on raw activations.
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        let mut xr = x.to_vec();
+        self.rotate_activations(&mut xr);
+        let mut scratch = Vec::new();
+        self.matvec_rotated(&xr, y, &mut scratch);
+    }
+
+    /// Naive matvec: dequantize each block to the original domain
+    /// (inverse rotation per block) and dot raw activations. Kept for
+    /// correctness cross-checks and the §Perf before/after.
+    pub fn matvec_naive(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.in_dim());
+        assert_eq!(y.len(), self.out_dim());
+        let be = self.w.fmt.block_elems();
+        let mut buf = vec![0.0f32; be];
+        let bpr = self.w.blocks_per_row();
+        for (r, yo) in y.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for b in 0..bpr {
+                let idx = self.w.block_idx(r, b);
+                self.w.fmt.dequantize_block(idx, self.w.block_bytes(r, b), &mut buf);
+                acc += dot(&buf, &x[b * be..(b + 1) * be]);
+            }
+            *yo = acc;
+        }
+    }
+
+    /// Fused batched matmul: `Y = X Wᵀ` for `X: (batch, in)`, returning
+    /// `(batch, out)`. Each weight block is dequantized **once** and
+    /// reused across the whole batch — the prefill-path optimization that
+    /// Table 2 attributes to the interleaved layout.
+    pub fn matmul(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.cols(), self.in_dim());
+        let batch = x.rows();
+        let be = self.w.fmt.block_elems();
+        let bpr = self.w.blocks_per_row();
+        // Rotate all activation rows once.
+        let mut xr = x.clone();
+        for t in 0..batch {
+            self.rotate_activations(xr.row_mut(t));
+        }
+        let mut out = Tensor::zeros(vec![batch, self.out_dim()]);
+        let mut buf = vec![0.0f32; be];
+        let bb = self.w.fmt.block_bytes();
+        for r in 0..self.w.rows {
+            for b in 0..bpr {
+                let idx = b as u64;
+                self.w.fmt.dequantize_block_raw(
+                    idx,
+                    &self.w.data[(r * bpr + b) * bb..(r * bpr + b + 1) * bb],
+                    &mut buf,
+                );
+                for t in 0..batch {
+                    let xa = &xr.row(t)[b * be..(b + 1) * be];
+                    out.row_mut(t)[r] += dot(&buf, xa);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::format_by_name;
+    use crate::util::{stats, XorShift};
+
+    fn test_weight(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut rng = XorShift::new(seed);
+        let mut t = Tensor::zeros(vec![rows, cols]);
+        for x in t.data_mut() {
+            *x = (rng.next_student_t(5.0) as f32) * 0.02;
+        }
+        t
+    }
+
+    #[test]
+    fn dot_matches_reference() {
+        let mut rng = XorShift::new(1);
+        for n in [1usize, 3, 4, 7, 256, 511] {
+            let a: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - want).abs() < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn fused_equals_naive_all_formats() {
+        let w = test_weight(16, 512, 2);
+        let mut rng = XorShift::new(3);
+        let x: Vec<f32> = (0..512).map(|_| rng.next_f32() - 0.5).collect();
+        for name in crate::quant::TABLE1_FORMATS {
+            let lin = QuantizedLinear::new(format_by_name(name).unwrap(), &w);
+            let mut y_fused = vec![0.0f32; 16];
+            let mut y_naive = vec![0.0f32; 16];
+            lin.matvec(&x, &mut y_fused);
+            lin.matvec_naive(&x, &mut y_naive);
+            for (a, b) in y_fused.iter().zip(&y_naive) {
+                assert!((a - b).abs() < 2e-3 * b.abs().max(1.0), "{name}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_matvec_approximates_dense() {
+        let w = test_weight(32, 512, 4);
+        let mut rng = XorShift::new(5);
+        let x: Vec<f32> = (0..512).map(|_| rng.next_gaussian() as f32).collect();
+        // Dense reference.
+        let mut y_ref = vec![0.0f32; 32];
+        crate::tensor::matvec_accum(&w, &x, &mut y_ref);
+        for (name, tol) in
+            [("fp16", 0.01), ("q8_0", 0.02), ("q4_k_m", 0.2), ("itq3_s", 0.8)]
+        {
+            let lin = QuantizedLinear::new(format_by_name(name).unwrap(), &w);
+            let mut y = vec![0.0f32; 32];
+            lin.matvec(&x, &mut y);
+            let rel = stats::rel_l2_err(&y_ref, &y);
+            assert!(rel < tol, "{name}: rel={rel}");
+        }
+    }
+
+    #[test]
+    fn batched_matmul_matches_matvec() {
+        let w = test_weight(24, 256, 6);
+        let lin = QuantizedLinear::new(format_by_name("itq3_s").unwrap(), &w);
+        let mut rng = XorShift::new(7);
+        let batch = 5;
+        let mut x = Tensor::zeros(vec![batch, 256]);
+        for v in x.data_mut() {
+            *v = rng.next_f32() - 0.5;
+        }
+        let y = lin.matmul(&x);
+        for t in 0..batch {
+            let mut yt = vec![0.0f32; 24];
+            lin.matvec(x.row(t), &mut yt);
+            for (a, b) in y.row(t).iter().zip(&yt) {
+                assert!((a - b).abs() < 1e-3, "row {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_is_per_column_block_consistent() {
+        // Two different rows of W must be usable with a single rotated x.
+        let w = test_weight(2, 256, 8);
+        let lin = QuantizedLinear::new(format_by_name("quip3").unwrap(), &w);
+        let mut rng = XorShift::new(9);
+        let x: Vec<f32> = (0..256).map(|_| rng.next_f32() - 0.5).collect();
+        let mut y_fused = vec![0.0f32; 2];
+        let mut y_naive = vec![0.0f32; 2];
+        lin.matvec(&x, &mut y_fused);
+        lin.matvec_naive(&x, &mut y_naive);
+        for (a, b) in y_fused.iter().zip(&y_naive) {
+            assert!((a - b).abs() < 2e-3 * b.abs().max(1.0));
+        }
+    }
+}

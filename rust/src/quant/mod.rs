@@ -1,0 +1,328 @@
+//! Quantization formats: ITQ3_S and every baseline the paper evaluates.
+//!
+//! | Format        | b/w    | Grid                         | Rotation |
+//! |---------------|--------|------------------------------|----------|
+//! | `itq3_s`      | 3.125  | dual ternary {0,±d,±3d}      | FWHT-256 (Table 3 ablates 32..512) |
+//! | `itq3_s_sub`  | 3.625  | dual ternary + 8 sub-scales  | FWHT-256 |
+//! | `iq3_s`       | 3.5625 | dual ternary + 8 sub-scales  | none (llama.cpp-style baseline) |
+//! | `quip3`       | 3.0625 | dual ternary                 | random-sign ⊙ FWHT (QuIP#-sim) |
+//! | `q4_k_m`      | 4.5625 | asymmetric int4, sub-scales  | none |
+//! | `iq4_xs`      | 4.3125 | nonlinear int4 codebook      | none |
+//! | `q8_0`        | 8.5    | symmetric int8, 32-block     | none |
+//! | `fp16`        | 16     | IEEE binary16                | none |
+//!
+//! All formats quantize independent blocks laid out along matrix rows, so
+//! a row of a `(rows, cols)` weight matrix occupies an integral number of
+//! blocks — the same constraint the paper inherits from GGUF (`cols` must
+//! be a multiple of the block size; §8 "non-power-of-two layers" is
+//! handled by [`pad_cols`]).
+
+pub mod error;
+pub mod fp16q;
+pub mod iq3s;
+pub mod iq4xs;
+pub mod itq3s;
+pub mod matmul;
+pub mod packing;
+pub mod q4km;
+pub mod q8;
+pub mod quip3;
+pub mod ternary;
+
+use crate::tensor::Tensor;
+use std::sync::Arc;
+
+/// Default rotation/quantization block size (paper §4.1).
+pub const BLOCK: usize = 256;
+
+/// A weight-block quantization format.
+///
+/// `block_idx` is the global block ordinal within the tensor; formats
+/// with per-block randomness (QuIP#-sim) derive their seed from it so
+/// encode and decode agree without storing seeds.
+pub trait Format: Send + Sync {
+    /// Short identifier, e.g. `"itq3_s"`.
+    fn name(&self) -> &'static str;
+
+    /// Elements per quantization block.
+    fn block_elems(&self) -> usize;
+
+    /// Encoded bytes per block.
+    fn block_bytes(&self) -> usize;
+
+    /// Quantize one block of exactly `block_elems()` values, appending
+    /// exactly `block_bytes()` bytes to `out`.
+    fn quantize_block(&self, block_idx: u64, w: &[f32], out: &mut Vec<u8>);
+
+    /// Reconstruct one block into `out` (original weight domain — rotated
+    /// formats apply the inverse rotation here).
+    fn dequantize_block(&self, block_idx: u64, bytes: &[u8], out: &mut [f32]);
+
+    /// Reconstruct one block **without** inverse rotation (grid values in
+    /// the storage domain). For non-rotated formats this equals
+    /// `dequantize_block`. The fast matvec path uses this together with
+    /// [`Format::rotate_activation_block`].
+    fn dequantize_block_raw(&self, block_idx: u64, bytes: &[u8], out: &mut [f32]) {
+        self.dequantize_block(block_idx, bytes, out);
+    }
+
+    /// Apply this format's forward rotation to an *activation* block so
+    /// that `dot(raw_weights, rotated_activations) == dot(weights, activations)`
+    /// (valid because the rotations used are orthogonal & symmetric).
+    /// Identity for non-rotated formats.
+    fn rotate_activation_block(&self, _block_idx: u64, _x: &mut [f32]) {}
+
+    /// Whether the storage domain differs from the weight domain.
+    fn is_rotated(&self) -> bool {
+        false
+    }
+
+    /// Fused dot product of one packed block against a (rotated-domain)
+    /// activation slice — the per-block core of the serving matvec
+    /// (paper Alg 2 with the multiply folded into the unpack loop).
+    /// `x_sum` is `Σ x_i` over the slice, precomputed once per matvec and
+    /// shared across all weight rows so zero-point terms are O(1).
+    /// Default: dequantize into `scratch` and dot; hot formats override
+    /// with a single-pass LUT+FMA implementation (§Perf).
+    fn dot_block_raw(
+        &self,
+        idx: u64,
+        bytes: &[u8],
+        x: &[f32],
+        x_sum: f32,
+        scratch: &mut Vec<f32>,
+    ) -> f32 {
+        let _ = x_sum;
+        scratch.resize(self.block_elems(), 0.0);
+        self.dequantize_block_raw(idx, bytes, scratch);
+        matmul::dot(scratch, x)
+    }
+
+    /// Effective bits per weight, including metadata.
+    fn bits_per_weight(&self) -> f64 {
+        self.block_bytes() as f64 * 8.0 / self.block_elems() as f64
+    }
+}
+
+/// Look up a format by name (CLI / config entry point).
+pub fn format_by_name(name: &str) -> Option<Arc<dyn Format>> {
+    Some(match name {
+        "itq3_s" => Arc::new(itq3s::Itq3S::new(BLOCK)),
+        "itq3_s_sub" => Arc::new(itq3s::Itq3SSub::new()),
+        "iq3_s" => Arc::new(iq3s::Iq3S::new()),
+        "quip3" => Arc::new(quip3::Quip3::new(0x51A5)),
+        "q4_k_m" => Arc::new(q4km::Q4KM::new()),
+        "iq4_xs" => Arc::new(iq4xs::Iq4Xs::new()),
+        "q8_0" => Arc::new(q8::Q8_0::new()),
+        "fp16" => Arc::new(fp16q::Fp16::new()),
+        _ => {
+            // itq3_s@N selects the Table-3 ablation block size.
+            if let Some(n) = name.strip_prefix("itq3_s@") {
+                let n: usize = n.parse().ok()?;
+                if n.is_power_of_two() && (32..=512).contains(&n) {
+                    return Some(Arc::new(itq3s::Itq3S::new(n)));
+                }
+            }
+            return None;
+        }
+    })
+}
+
+/// All evaluated format names in Table-1 order.
+pub const TABLE1_FORMATS: &[&str] =
+    &["fp16", "q8_0", "q4_k_m", "iq4_xs", "iq3_s", "quip3", "itq3_s"];
+
+/// A quantized 2-D weight matrix: `rows` independent rows, each an
+/// integral number of format blocks over `cols` columns.
+pub struct QuantizedMatrix {
+    pub fmt: Arc<dyn Format>,
+    pub rows: usize,
+    pub cols: usize,
+    /// Packed blocks, row-major: row 0's blocks, then row 1's, ...
+    pub data: Vec<u8>,
+}
+
+impl QuantizedMatrix {
+    /// Quantize a dense `(rows, cols)` tensor. `cols` must be a multiple
+    /// of the format block size (pad first via [`pad_cols`] if not).
+    pub fn quantize(fmt: Arc<dyn Format>, w: &Tensor) -> Self {
+        let (rows, cols) = (w.rows(), w.cols());
+        let be = fmt.block_elems();
+        assert_eq!(
+            cols % be,
+            0,
+            "cols {cols} not a multiple of block {be} for {}",
+            fmt.name()
+        );
+        let blocks_per_row = cols / be;
+        let mut data = Vec::with_capacity(rows * blocks_per_row * fmt.block_bytes());
+        for r in 0..rows {
+            let row = w.row(r);
+            for (b, chunk) in row.chunks_exact(be).enumerate() {
+                // Rotation index is the COLUMN block ordinal, shared by all
+                // rows: this is what lets the fused matvec rotate each
+                // activation block once and reuse it for every weight row
+                // (QuIP#-sim derives its sign diagonal from this index).
+                fmt.quantize_block(b as u64, chunk, &mut data);
+            }
+        }
+        QuantizedMatrix { fmt, rows, cols, data }
+    }
+
+    pub fn blocks_per_row(&self) -> usize {
+        self.cols / self.fmt.block_elems()
+    }
+
+    /// Raw bytes of block `(row, block_in_row)`.
+    pub fn block_bytes(&self, row: usize, block: usize) -> &[u8] {
+        let bb = self.fmt.block_bytes();
+        let idx = row * self.blocks_per_row() + block;
+        &self.data[idx * bb..(idx + 1) * bb]
+    }
+
+    /// Rotation index of block `(row, block_in_row)` — the column block
+    /// ordinal (see [`QuantizedMatrix::quantize`]).
+    pub fn block_idx(&self, _row: usize, block: usize) -> u64 {
+        block as u64
+    }
+
+    /// Full dense reconstruction (original weight domain).
+    pub fn dequantize(&self) -> Tensor {
+        let be = self.fmt.block_elems();
+        let mut out = Tensor::zeros(vec![self.rows, self.cols]);
+        for r in 0..self.rows {
+            for b in 0..self.blocks_per_row() {
+                let idx = b as u64;
+                let bytes = self.block_bytes(r, b);
+                let dst = &mut out.row_mut(r)[b * be..(b + 1) * be];
+                self.fmt.dequantize_block(idx, bytes, dst);
+            }
+        }
+        out
+    }
+
+    /// Total packed size in bytes.
+    pub fn nbytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Pad the column dimension up to a multiple of `block` with zeros
+/// (paper §8 "non-power-of-two layers": zero-padding leaves the FWHT
+/// energy argument intact because H maps zero-padded blocks to blocks of
+/// the same norm).
+pub fn pad_cols(w: &Tensor, block: usize) -> Tensor {
+    let (rows, cols) = (w.rows(), w.cols());
+    let padded = cols.div_ceil(block) * block;
+    if padded == cols {
+        return w.clone();
+    }
+    let mut out = Tensor::zeros(vec![rows, padded]);
+    for r in 0..rows {
+        out.row_mut(r)[..cols].copy_from_slice(w.row(r));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    fn heavy_tensor(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut rng = XorShift::new(seed);
+        let mut t = Tensor::zeros(vec![rows, cols]);
+        for x in t.data_mut() {
+            *x = (rng.next_student_t(4.0) as f32) * 0.02;
+        }
+        t
+    }
+
+    #[test]
+    fn registry_has_all_table1_formats() {
+        for &name in TABLE1_FORMATS {
+            let f = format_by_name(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(f.name(), name);
+            assert!(f.bits_per_weight() > 2.9 && f.bits_per_weight() <= 16.0);
+        }
+        assert!(format_by_name("nope").is_none());
+        assert!(format_by_name("itq3_s@64").is_some());
+        assert!(format_by_name("itq3_s@100").is_none());
+    }
+
+    #[test]
+    fn bits_per_weight_match_paper_table1() {
+        // Paper Table 1 bit-widths (ours differ slightly where the paper's
+        // own metadata accounting is rounded; asserted to 0.15 b/w).
+        let expect = [
+            ("itq3_s", 3.125),
+            ("quip3", 3.0625),
+            ("iq3_s", 3.5),
+            ("q4_k_m", 4.5),
+            ("iq4_xs", 4.3),
+            ("q8_0", 8.5),
+            ("fp16", 16.0),
+        ];
+        for (name, bw) in expect {
+            let f = format_by_name(name).unwrap();
+            assert!(
+                (f.bits_per_weight() - bw).abs() < 0.15,
+                "{name}: {} vs {bw}",
+                f.bits_per_weight()
+            );
+        }
+    }
+
+    #[test]
+    fn quantize_dequantize_all_formats_reasonable_error() {
+        let w = heavy_tensor(8, 512, 42);
+        let sd = crate::util::stats::stddev(w.data());
+        for &name in TABLE1_FORMATS {
+            let fmt = format_by_name(name).unwrap();
+            let q = QuantizedMatrix::quantize(fmt.clone(), &w);
+            let recon = q.dequantize();
+            let rmse = crate::util::stats::mse(w.data(), recon.data()).sqrt();
+            // Even the coarsest 3-bit format must reconstruct to within
+            // ~0.8 sigma RMSE on heavy-tailed input.
+            assert!(rmse < 0.8 * sd, "{name}: rmse={rmse} sd={sd}");
+            // And size accounting must be exact.
+            assert_eq!(
+                q.nbytes(),
+                8 * (512 / fmt.block_elems()) * fmt.block_bytes()
+            );
+        }
+    }
+
+    #[test]
+    fn format_fidelity_ordering_matches_table1_shape() {
+        // The reproduction claim of Table 1: on heavy-tailed weights,
+        // reconstruction error ranks fp16 < q8 < q4 < itq3_s < quip3 <= iq3_s.
+        let w = heavy_tensor(16, 1024, 7);
+        let rmse = |name: &str| {
+            let fmt = format_by_name(name).unwrap();
+            let q = QuantizedMatrix::quantize(fmt, &w);
+            crate::util::stats::mse(w.data(), q.dequantize().data()).sqrt()
+        };
+        let fp16 = rmse("fp16");
+        let q8 = rmse("q8_0");
+        let q4 = rmse("q4_k_m");
+        let itq3 = rmse("itq3_s");
+        let quip3 = rmse("quip3");
+        let iq3 = rmse("iq3_s");
+        assert!(fp16 < q8 && q8 < q4 && q4 < itq3, "{fp16} {q8} {q4} {itq3}");
+        assert!(itq3 < iq3, "itq3_s {itq3} must beat iq3_s {iq3}");
+        assert!(quip3 < iq3, "quip3 {quip3} must beat iq3_s {iq3}");
+    }
+
+    #[test]
+    fn pad_cols_zero_fills() {
+        let w = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let p = pad_cols(&w, 4);
+        assert_eq!(p.shape(), &[2, 4]);
+        assert_eq!(p.row(0), &[1., 2., 3., 0.]);
+        assert_eq!(p.row(1), &[4., 5., 6., 0.]);
+        // Already aligned: untouched.
+        let q = pad_cols(&p, 4);
+        assert_eq!(q.data(), p.data());
+    }
+}

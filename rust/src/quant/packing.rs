@@ -1,0 +1,158 @@
+//! Bit-packing primitives for the quantized formats.
+//!
+//! ITQ3_S stores 256 weights in 96 bytes (= exactly 3 bits/weight) as two
+//! interleaved planes, the coherent realization of the paper's Eq. (9)
+//! "interleaved nibble streams" (see DESIGN.md — the paper's packing
+//! description is internally inconsistent; the two-plane layout below
+//! preserves its stated size, alignment, and single-32-bit-load decode
+//! property):
+//!
+//! - **base plane** (64 bytes): 2-bit ternary codes, 16 codes per `u32`
+//!   little-endian word, code `c ∈ {0,1,2}` ≘ ternary digit `c−1`.
+//! - **selector plane** (32 bytes): 1 bit per weight choosing the fine
+//!   (×1) or coarse (×3) sub-grid — the "interleave selector" that turns
+//!   two ternary sub-grids into a 3-bit code.
+//!
+//! Decoding a weight touches one aligned `u32` from each plane — the CPU
+//! analog of the paper's "single 32-bit load and bitfield extraction".
+
+/// Pack 2-bit codes (values 0..=3) into little-endian bytes, 4 per byte.
+pub fn pack_2bit(codes: &[u8], out: &mut Vec<u8>) {
+    assert_eq!(codes.len() % 4, 0, "2-bit pack length must be a multiple of 4");
+    for chunk in codes.chunks_exact(4) {
+        debug_assert!(chunk.iter().all(|&c| c < 4));
+        out.push(chunk[0] | (chunk[1] << 2) | (chunk[2] << 4) | (chunk[3] << 6));
+    }
+}
+
+/// Unpack 2-bit codes; `n` values from `bytes`.
+pub fn unpack_2bit(bytes: &[u8], n: usize, out: &mut [u8]) {
+    assert!(out.len() >= n);
+    assert!(bytes.len() * 4 >= n);
+    for i in 0..n {
+        out[i] = (bytes[i / 4] >> ((i % 4) * 2)) & 0x3;
+    }
+}
+
+/// Pack single bits into little-endian bytes, 8 per byte.
+pub fn pack_bits(bits: &[bool], out: &mut Vec<u8>) {
+    assert_eq!(bits.len() % 8, 0, "bit pack length must be a multiple of 8");
+    for chunk in bits.chunks_exact(8) {
+        let mut b = 0u8;
+        for (j, &bit) in chunk.iter().enumerate() {
+            if bit {
+                b |= 1 << j;
+            }
+        }
+        out.push(b);
+    }
+}
+
+/// Read bit `i` of a packed bit plane.
+#[inline]
+pub fn get_bit(bytes: &[u8], i: usize) -> bool {
+    (bytes[i / 8] >> (i % 8)) & 1 == 1
+}
+
+/// Pack 4-bit codes (values 0..=15), 2 per byte, low nibble first.
+pub fn pack_4bit(codes: &[u8], out: &mut Vec<u8>) {
+    assert_eq!(codes.len() % 2, 0);
+    for chunk in codes.chunks_exact(2) {
+        debug_assert!(chunk.iter().all(|&c| c < 16));
+        out.push(chunk[0] | (chunk[1] << 4));
+    }
+}
+
+/// Unpack 4-bit codes; `n` values.
+pub fn unpack_4bit(bytes: &[u8], n: usize, out: &mut [u8]) {
+    assert!(out.len() >= n);
+    for i in 0..n {
+        out[i] = (bytes[i / 2] >> ((i % 2) * 4)) & 0xF;
+    }
+}
+
+/// Write an f16 scale into a byte stream.
+pub fn push_f16(out: &mut Vec<u8>, x: f32) {
+    let bits = crate::f16::f32_to_f16_bits(x);
+    out.extend_from_slice(&bits.to_le_bytes());
+}
+
+/// Read an f16 at byte offset `off`.
+pub fn read_f16(bytes: &[u8], off: usize) -> f32 {
+    let bits = u16::from_le_bytes([bytes[off], bytes[off + 1]]);
+    crate::f16::f16_bits_to_f32(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn pack_unpack_2bit_roundtrip() {
+        let codes: Vec<u8> = (0..64).map(|i| (i % 3) as u8).collect();
+        let mut packed = Vec::new();
+        pack_2bit(&codes, &mut packed);
+        assert_eq!(packed.len(), 16);
+        let mut out = vec![0u8; 64];
+        unpack_2bit(&packed, 64, &mut out);
+        assert_eq!(out, codes);
+    }
+
+    #[test]
+    fn pack_unpack_4bit_roundtrip() {
+        let codes: Vec<u8> = (0..32).map(|i| (i % 16) as u8).collect();
+        let mut packed = Vec::new();
+        pack_4bit(&codes, &mut packed);
+        assert_eq!(packed.len(), 16);
+        let mut out = vec![0u8; 32];
+        unpack_4bit(&packed, 32, &mut out);
+        assert_eq!(out, codes);
+    }
+
+    #[test]
+    fn bit_plane_roundtrip() {
+        let bits: Vec<bool> = (0..256).map(|i| i % 3 == 0).collect();
+        let mut packed = Vec::new();
+        pack_bits(&bits, &mut packed);
+        assert_eq!(packed.len(), 32);
+        for (i, &b) in bits.iter().enumerate() {
+            assert_eq!(get_bit(&packed, i), b);
+        }
+    }
+
+    #[test]
+    fn f16_stream_roundtrip() {
+        let mut out = Vec::new();
+        push_f16(&mut out, 0.0625);
+        push_f16(&mut out, -3.5);
+        assert_eq!(out.len(), 4);
+        assert_eq!(read_f16(&out, 0), 0.0625);
+        assert_eq!(read_f16(&out, 2), -3.5);
+    }
+
+    #[test]
+    fn prop_random_codes_roundtrip() {
+        forall("2/4-bit packing round-trips", 100, |g| {
+            let n = 4 * g.usize_in(1, 64);
+            let codes: Vec<u8> = (0..n).map(|_| g.usize_in(0, 3) as u8).collect();
+            let mut packed = Vec::new();
+            pack_2bit(&codes, &mut packed);
+            let mut out = vec![0u8; n];
+            unpack_2bit(&packed, n, &mut out);
+            assert_eq!(out, codes);
+        });
+    }
+
+    #[test]
+    fn itq3s_plane_sizes() {
+        // 256 weights: base plane 64 B + selector plane 32 B = 96 B = 3 b/w.
+        let codes = vec![1u8; 256];
+        let bits = vec![false; 256];
+        let mut base = Vec::new();
+        let mut sel = Vec::new();
+        pack_2bit(&codes, &mut base);
+        pack_bits(&bits, &mut sel);
+        assert_eq!(base.len() + sel.len(), 96);
+    }
+}

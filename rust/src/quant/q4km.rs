@@ -1,0 +1,196 @@
+//! Q4_K_M-style 4-bit baseline (Table 1 row "Q4_K_M"), modeled on
+//! llama.cpp's Q4_K super-block: 256 weights = 8 sub-blocks of 32, each
+//! with an asymmetric uint4 grid whose (scale, min) pair is itself
+//! quantized to 6 bits against two global f16s.
+//!
+//! Layout per 256-weight block (144 bytes = 4.5 b/w, the paper's figure):
+//!
+//! ```text
+//! [ d: f16 ][ dmin: f16 ][ 16 x 6-bit sc/mc: 12 bytes ][ codes: 128 bytes ]
+//! ```
+//!
+//! Reconstruction: `x̂ = (d·sc_s)·code − (dmin·mc_s)` for sub-block `s`.
+
+use super::packing::*;
+use super::Format;
+
+pub struct Q4KM {
+    n: usize,
+    sub: usize,
+}
+
+impl Q4KM {
+    pub fn new() -> Self {
+        Q4KM { n: 256, sub: 32 }
+    }
+
+    fn nsub(&self) -> usize {
+        self.n / self.sub
+    }
+}
+
+impl Default for Q4KM {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Pack 16 six-bit values into 12 bytes (little-endian bit stream).
+fn pack_6bit(vals: &[u8; 16], out: &mut Vec<u8>) {
+    let mut acc: u64 = 0;
+    let mut nbits = 0;
+    for &v in vals {
+        debug_assert!(v < 64);
+        acc |= (v as u64) << nbits;
+        nbits += 6;
+        while nbits >= 8 {
+            out.push((acc & 0xFF) as u8);
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    debug_assert_eq!(nbits, 0);
+}
+
+/// Read the i-th 6-bit value from a 12-byte stream.
+fn get_6bit(bytes: &[u8], i: usize) -> u8 {
+    let bit = i * 6;
+    let byte = bit / 8;
+    let off = bit % 8;
+    let lo = bytes[byte] as u16;
+    let hi = if byte + 1 < bytes.len() { bytes[byte + 1] as u16 } else { 0 };
+    (((lo | (hi << 8)) >> off) & 0x3F) as u8
+}
+
+impl Format for Q4KM {
+    fn name(&self) -> &'static str {
+        "q4_k_m"
+    }
+
+    fn block_elems(&self) -> usize {
+        self.n
+    }
+
+    fn block_bytes(&self) -> usize {
+        // 2 + 2 + 12 + 128 = 144 bytes -> 4.5 b/w.
+        4 + (self.nsub() * 2 * 6) / 8 + self.n / 2
+    }
+
+    fn quantize_block(&self, _idx: u64, w: &[f32], out: &mut Vec<u8>) {
+        assert_eq!(w.len(), self.n);
+        // Per-sub asymmetric fit: scale = (max-min)/15, min clamped <= 0
+        // (llama.cpp stores the min as a positive magnitude subtracted).
+        let mut scales = [0.0f32; 8];
+        let mut mins = [0.0f32; 8];
+        for (s, chunk) in w.chunks_exact(self.sub).enumerate() {
+            let mx = chunk.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mn = chunk.iter().cloned().fold(f32::INFINITY, f32::min).min(0.0);
+            scales[s] = ((mx - mn) / 15.0).max(1e-10);
+            mins[s] = -mn; // stored magnitude, >= 0
+        }
+        let d = crate::f16::f16_round(
+            scales.iter().cloned().fold(0.0f32, f32::max) / 63.0,
+        )
+        .max(1e-10);
+        let dmin = crate::f16::f16_round(
+            mins.iter().cloned().fold(0.0f32, f32::max) / 63.0,
+        )
+        .max(1e-10);
+        let mut six = [0u8; 16];
+        for s in 0..8 {
+            six[s] = ((scales[s] / d).round() as i64).clamp(0, 63) as u8;
+            six[8 + s] = ((mins[s] / dmin).round() as i64).clamp(0, 63) as u8;
+        }
+        push_f16(out, d);
+        push_f16(out, dmin);
+        pack_6bit(&six, out);
+        let mut codes = vec![0u8; self.n];
+        for (s, chunk) in w.chunks_exact(self.sub).enumerate() {
+            let sc = d * six[s] as f32;
+            let m = dmin * six[8 + s] as f32;
+            for (j, &x) in chunk.iter().enumerate() {
+                let c = if sc > 0.0 { ((x + m) / sc).round() } else { 0.0 };
+                codes[s * self.sub + j] = (c as i64).clamp(0, 15) as u8;
+            }
+        }
+        pack_4bit(&codes, out);
+    }
+
+    fn dequantize_block(&self, _idx: u64, bytes: &[u8], out: &mut [f32]) {
+        assert_eq!(bytes.len(), self.block_bytes());
+        let d = read_f16(bytes, 0);
+        let dmin = read_f16(bytes, 2);
+        let six = &bytes[4..16];
+        let codes = &bytes[16..];
+        for s in 0..self.nsub() {
+            let sc = d * get_6bit(six, s) as f32;
+            let m = dmin * get_6bit(six, 8 + s) as f32;
+            for j in 0..self.sub {
+                let i = s * self.sub + j;
+                let c = (codes[i / 2] >> ((i % 2) * 4)) & 0xF;
+                out[i] = sc * c as f32 - m;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{stats, XorShift};
+
+    #[test]
+    fn six_bit_pack_roundtrip() {
+        let vals: [u8; 16] = core::array::from_fn(|i| (i * 4 + 1) as u8);
+        let mut out = Vec::new();
+        pack_6bit(&vals, &mut out);
+        assert_eq!(out.len(), 12);
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(get_6bit(&out, i), v, "i={i}");
+        }
+    }
+
+    #[test]
+    fn bits_per_weight_is_4_5() {
+        assert!((Q4KM::new().bits_per_weight() - 4.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn roundtrip_beats_3bit() {
+        let mut rng = XorShift::new(1);
+        let w: Vec<f32> = (0..256).map(|_| rng.next_student_t(4.0) as f32 * 0.02).collect();
+        let q4 = Q4KM::new();
+        let q3 = crate::quant::itq3s::Itq3S::new(256);
+        let mut b4 = Vec::new();
+        let mut b3 = Vec::new();
+        q4.quantize_block(0, &w, &mut b4);
+        q3.quantize_block(0, &w, &mut b3);
+        let mut o4 = vec![0.0f32; 256];
+        let mut o3 = vec![0.0f32; 256];
+        q4.dequantize_block(0, &b4, &mut o4);
+        q3.dequantize_block(0, &b3, &mut o3);
+        assert!(stats::mse(&w, &o4) < stats::mse(&w, &o3));
+    }
+
+    #[test]
+    fn asymmetric_grid_handles_shifted_blocks() {
+        // All-positive block: the asymmetric grid must not waste levels.
+        let mut rng = XorShift::new(2);
+        let w: Vec<f32> = (0..256).map(|_| rng.next_f32() * 0.1 + 0.05).collect();
+        let f = Q4KM::new();
+        let mut bytes = Vec::new();
+        f.quantize_block(0, &w, &mut bytes);
+        let mut out = vec![0.0f32; 256];
+        f.dequantize_block(0, &bytes, &mut out);
+        assert!(stats::rel_l2_err(&w, &out) < 0.06);
+    }
+
+    #[test]
+    fn exact_block_size() {
+        let f = Q4KM::new();
+        let w = vec![0.1f32; 256];
+        let mut bytes = Vec::new();
+        f.quantize_block(0, &w, &mut bytes);
+        assert_eq!(bytes.len(), 144);
+    }
+}

@@ -1,0 +1,238 @@
+//! Ternary grid theory: optimal scales for Gaussian inputs.
+//!
+//! Reproduces paper §3.3 and Appendix A: for `x ~ N(0, σ²)` the ternary
+//! quantizer `{-α, 0, +α}` (with decision threshold α/2... the paper uses
+//! round-to-nearest, i.e. threshold α/2) has an MSE-optimal scale
+//! `α* ≈ 0.798 σ` under the paper's stationarity condition. We provide
+//! both the closed-form constant and a numeric golden-section minimizer
+//! so tests can cross-check the derivation, plus the dual-scale variant
+//! used by the full ITQ3_S 3-bit grid (levels `{0, ±1, ±3}·d`).
+
+/// The constant printed in the paper (§3.3, Eq. 8): `√2·erfinv(2/3) ≈ 0.7979`.
+///
+/// ERRATUM: this is *not* the MSE-optimal scale for the quantizer the
+/// paper actually defines. Eq. (5) is round-to-nearest (decision
+/// threshold d/2), whose Gaussian optimum is the 3-level Lloyd-Max scale
+/// [`ALPHA_STAR`] ≈ 1.2235σ; Appendix A's integral assumes a dead-zone
+/// threshold at α, whose optimum is ≈ 0.8767σ — neither equals 0.798.
+/// We keep the paper's constant for reference and use the correct
+/// Lloyd-Max values in the quantizers (verified numerically in tests).
+pub const ALPHA_STAR_PAPER: f64 = 0.797_884_560_802_865_4;
+
+/// MSE-optimal scale for round-to-nearest ternary `{-α,0,+α}` on N(0,1):
+/// the 3-level Lloyd-Max solution (numeric minimum 1.2235, MSE 0.1903σ²).
+pub const ALPHA_STAR: f64 = 1.2235;
+
+/// Optimal dual-scale grid step for `{0, ±d, ±3d}` on N(0,1), found by
+/// numeric MSE minimization (minimum 0.5682, MSE 0.0898σ²); hard-coded so
+/// the hot quantization path does no solving.
+pub const DUAL_SCALE_STAR: f64 = 0.5682;
+
+/// Round-to-nearest ternary quantization of `x` on grid `{-d, 0, +d}`:
+/// returns the digit in {-1, 0, +1}.
+#[inline]
+pub fn ternary_digit(x: f32, d: f32) -> i8 {
+    // Nearest of {-d, 0, d}: thresholds at ±d/2.
+    let t = 0.5 * d;
+    if x > t {
+        1
+    } else if x < -t {
+        -1
+    } else {
+        0
+    }
+}
+
+/// Nearest level of the ITQ3_S dual-scale grid `{0, ±d, ±3d}` (the
+/// "interleaved ternary" 3-bit grid: a fine ternary sub-grid `{0,±d}`
+/// and a coarse one `{0,±3d}` selected by the interleave bit).
+/// Returns (digit ∈ {-1,0,1}, coarse_selector).
+#[inline]
+pub fn dual_ternary_digit(x: f32, d: f32) -> (i8, bool) {
+    // Levels: -3d, -d, 0, d, 3d. Midpoints: ±d/2, ±2d.
+    let a = x.abs();
+    if a <= 0.5 * d {
+        (0, false)
+    } else {
+        let digit = if x > 0.0 { 1 } else { -1 };
+        (digit, a > 2.0 * d)
+    }
+}
+
+/// Reconstruct a value from a dual-scale code.
+#[inline]
+pub fn dual_ternary_value(digit: i8, coarse: bool, d: f32) -> f32 {
+    let mag = if coarse { 3.0 * d } else { d };
+    digit as f32 * mag
+}
+
+/// Monte-Carlo MSE of plain ternary quantization at scale `alpha` on
+/// N(0,1) samples (used by tests and the solver below).
+pub fn ternary_mse_gaussian(alpha: f64, samples: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for &x in samples {
+        let d = ternary_digit(x as f32, alpha as f32) as f64;
+        let e = x - d * alpha;
+        acc += e * e;
+    }
+    acc / samples.len() as f64
+}
+
+/// Monte-Carlo MSE of the dual-scale grid at step `d`.
+pub fn dual_mse_gaussian(d: f64, samples: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for &x in samples {
+        let (dg, coarse) = dual_ternary_digit(x as f32, d as f32);
+        let e = x - dual_ternary_value(dg, coarse, d as f32) as f64;
+        acc += e * e;
+    }
+    acc / samples.len() as f64
+}
+
+/// Golden-section minimizer over [lo, hi] for a unimodal f.
+pub fn golden_min(lo: f64, hi: f64, iters: usize, f: impl Fn(f64) -> f64) -> f64 {
+    const PHI: f64 = 0.618_033_988_749_894_8;
+    let (mut a, mut b) = (lo, hi);
+    let mut c = b - PHI * (b - a);
+    let mut d = a + PHI * (b - a);
+    let (mut fc, mut fd) = (f(c), f(d));
+    for _ in 0..iters {
+        if fc < fd {
+            b = d;
+            d = c;
+            fd = fc;
+            c = b - PHI * (b - a);
+            fc = f(c);
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            d = a + PHI * (b - a);
+            fd = f(d);
+        }
+    }
+    0.5 * (a + b)
+}
+
+/// Numerically find the MSE-optimal plain-ternary scale on N(0,1),
+/// cross-checking `ALPHA_STAR` (Appendix A reproduction).
+pub fn optimal_scale_numeric(samples: &[f64]) -> f64 {
+    golden_min(0.3, 2.0, 60, |a| ternary_mse_gaussian(a, samples))
+}
+
+/// Numerically find the optimal dual-scale step on N(0,1).
+pub fn optimal_dual_scale_numeric(samples: &[f64]) -> f64 {
+    golden_min(0.2, 1.5, 60, |d| dual_mse_gaussian(d, samples))
+}
+
+/// Per-block scale for plain ternary: `d_k = α*·σ(block)`.
+///
+/// NOTE (erratum): the paper's Algorithm 1 line 3 prints `d_k ← α*/σ(w')`,
+/// which is dimensionally inconsistent with its own §3.3 (`α* = 0.798 σ`);
+/// we implement the §3.3 form.
+pub fn block_scale_ternary(block: &[f32]) -> f32 {
+    (ALPHA_STAR * crate::util::stats::stddev(block)) as f32
+}
+
+/// Per-block step for the dual-scale ITQ3_S grid: `d_k = 0.5505·σ(block)`.
+pub fn block_scale_dual(block: &[f32]) -> f32 {
+    (DUAL_SCALE_STAR * crate::util::stats::stddev(block)) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    fn gaussian_samples(n: usize, seed: u64) -> Vec<f64> {
+        let mut r = XorShift::new(seed);
+        (0..n).map(|_| r.next_gaussian()).collect()
+    }
+
+    #[test]
+    fn alpha_star_matches_numeric_minimum() {
+        // Appendix A: the closed form α* ≈ 0.798 must agree with direct
+        // numeric minimization of the Monte-Carlo MSE.
+        let samples = gaussian_samples(400_000, 1);
+        let a = optimal_scale_numeric(&samples);
+        assert!((a - ALPHA_STAR).abs() < 0.02, "numeric α* = {a}");
+        // ...and the paper's printed constant is demonstrably not optimal
+        // under its own Eq. (5) round-to-nearest rule (the erratum).
+        let mse_paper = ternary_mse_gaussian(ALPHA_STAR_PAPER, &samples);
+        let mse_ours = ternary_mse_gaussian(ALPHA_STAR, &samples);
+        assert!(mse_ours < mse_paper * 0.75, "{mse_ours} vs {mse_paper}");
+    }
+
+    #[test]
+    fn dual_scale_constant_matches_numeric() {
+        let samples = gaussian_samples(400_000, 2);
+        let d = optimal_dual_scale_numeric(&samples);
+        assert!((d - DUAL_SCALE_STAR).abs() < 0.02, "numeric d* = {d}");
+    }
+
+    #[test]
+    fn dual_grid_strictly_beats_plain_ternary_on_gaussian() {
+        // The 3-bit interleaved grid must dominate the 2-bit ternary grid —
+        // this is what pays for the extra bit.
+        let samples = gaussian_samples(200_000, 3);
+        let t = ternary_mse_gaussian(ALPHA_STAR, &samples);
+        let d = dual_mse_gaussian(DUAL_SCALE_STAR, &samples);
+        assert!(d < t * 0.65, "dual {d} vs ternary {t}");
+    }
+
+    #[test]
+    fn digit_thresholds() {
+        assert_eq!(ternary_digit(0.0, 1.0), 0);
+        assert_eq!(ternary_digit(0.49, 1.0), 0);
+        assert_eq!(ternary_digit(0.51, 1.0), 1);
+        assert_eq!(ternary_digit(-0.51, 1.0), -1);
+    }
+
+    #[test]
+    fn dual_digit_nearest_level() {
+        let d = 1.0f32;
+        // Levels -3,-1,0,1,3. Check representative points.
+        for (x, want) in [
+            (0.0, 0.0),
+            (0.4, 0.0),
+            (0.6, 1.0),
+            (1.9, 1.0),
+            (2.1, 3.0),
+            (10.0, 3.0),
+            (-0.7, -1.0),
+            (-2.5, -3.0),
+        ] {
+            let (dg, c) = dual_ternary_digit(x, d);
+            assert_eq!(dual_ternary_value(dg, c, d), want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn dual_digit_is_nearest_everywhere() {
+        crate::util::prop::forall("dual grid picks the nearest level", 300, |g| {
+            let d = g.f32_in(0.05, 2.0);
+            let x = g.f32_in(-8.0, 8.0);
+            let (dg, c) = dual_ternary_digit(x, d);
+            let picked = dual_ternary_value(dg, c, d);
+            let levels = [-3.0 * d, -d, 0.0, d, 3.0 * d];
+            let best = levels
+                .iter()
+                .copied()
+                .min_by(|a, b| (x - a).abs().partial_cmp(&(x - b).abs()).unwrap())
+                .unwrap();
+            assert!(
+                (x - picked).abs() <= (x - best).abs() + 1e-6,
+                "x={x} d={d} picked={picked} best={best}"
+            );
+        });
+    }
+
+    #[test]
+    fn block_scales_track_sigma() {
+        let mut r = XorShift::new(4);
+        let block: Vec<f32> = (0..256).map(|_| r.next_gaussian() as f32 * 0.05).collect();
+        let sd = crate::util::stats::stddev(&block);
+        assert!((block_scale_ternary(&block) as f64 - ALPHA_STAR * sd).abs() < 1e-6);
+        assert!((block_scale_dual(&block) as f64 - DUAL_SCALE_STAR * sd).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,188 @@
+//! PJRT runtime: load + execute the AOT-compiled JAX artifacts.
+//!
+//! The L2 model is lowered once at build time (`python/compile/aot.py`)
+//! to HLO **text** (serialized protos from jax ≥ 0.5 are rejected by the
+//! image's xla_extension 0.5.1). This module compiles the text on the
+//! PJRT CPU client, uploads the model weights to device buffers **once**
+//! (`execute_b` reuses them every call), and exposes the result behind
+//! the same [`Engine`] trait as the native backend.
+//!
+//! The lowered graph scores a fixed-length window (`manifest.seq`,
+//! default 128): `score(tokens[S], *weights) -> logits[S, vocab]`.
+//! Prefill slices the rows it needs; decode re-scores the growing
+//! sequence (the recompute strategy — KV state lives in the graph-free
+//! native engine; see DESIGN.md §2). Python is never on this path.
+
+pub mod pack;
+
+use crate::gguf;
+use crate::model::native::Engine;
+use crate::model::{KvCache, ModelConfig};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+pub struct PjrtEngine {
+    cfg: ModelConfig,
+    seq: usize,
+    vocab: usize,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    /// Device-resident weight buffers in manifest order (after `tokens`).
+    weights: Vec<xla::PjRtBuffer>,
+}
+
+// SAFETY: the PJRT CPU client is internally synchronized for the
+// single-owner usage here — the engine is moved into the coordinator's
+// single worker thread and never aliased across threads (the coordinator
+// owns it behind a Box; no concurrent access in this codebase).
+unsafe impl Send for PjrtEngine {}
+// SAFETY: all &self entry points funnel into PJRT Execute; we never
+// share one PjrtEngine across threads (single worker ownership).
+unsafe impl Sync for PjrtEngine {}
+
+impl PjrtEngine {
+    /// Load `model.iguf` (dense → fp32 artifact; itq3_s-quantized →
+    /// fused-kernel artifact) against the artifacts directory produced by
+    /// `make artifacts`.
+    pub fn load(model: &Path, artifacts: &Path) -> Result<Self> {
+        let manifest_text = std::fs::read_to_string(artifacts.join("manifest.json"))
+            .context("read manifest.json (run `make artifacts`)")?;
+        let manifest =
+            Json::parse(&manifest_text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let seq = manifest.get("seq").and_then(|j| j.as_u64()).context("manifest.seq")? as usize;
+
+        // Peek at the checkpoint kind to pick the artifact.
+        let f = gguf::IgufFile::load(model)?;
+        let kind = f.meta.get("kind").and_then(|j| j.as_str()).unwrap_or("dense").to_string();
+        drop(f);
+
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt: {e:?}"))?;
+
+        let (hlo_name, cfg, weights) = match kind.as_str() {
+            "dense" => {
+                let m = gguf::load_dense(model)?;
+                let mut bufs: Vec<xla::PjRtBuffer> = Vec::new();
+                let mut push = |data: &[f32], dims: &[usize]| -> Result<()> {
+                    bufs.push(
+                        client
+                            .buffer_from_host_buffer(data, dims, None)
+                            .map_err(|e| anyhow::anyhow!("upload: {e:?}"))?,
+                    );
+                    Ok(())
+                };
+                push(m.embed.data(), &[m.cfg.vocab, m.cfg.dim])?;
+                push(&m.final_norm, &[m.cfg.dim])?;
+                for l in &m.layers {
+                    push(&l.attn_norm, &[m.cfg.dim])?;
+                    for t in [&l.wq, &l.wk, &l.wv, &l.wo, &l.w1, &l.w3, &l.w2] {
+                        push(t.data(), &[t.rows(), t.cols()])?;
+                    }
+                    push(&l.ffn_norm, &[m.cfg.dim])?;
+                }
+                ("model_fp32.hlo.txt", m.cfg.clone(), bufs)
+            }
+            "quantized" => {
+                let m = gguf::load_quantized(model)?;
+                if m.fmt_name != "itq3_s" {
+                    bail!("PJRT artifact supports itq3_s; model is {}", m.fmt_name);
+                }
+                let mut bufs: Vec<xla::PjRtBuffer> = Vec::new();
+                let up_f32 = |client: &xla::PjRtClient, d: &[f32], dims: &[usize]| {
+                    client
+                        .buffer_from_host_buffer(d, dims, None)
+                        .map_err(|e| anyhow::anyhow!("upload: {e:?}"))
+                };
+                let up_u32 = |client: &xla::PjRtClient, d: &[u32], dims: &[usize]| {
+                    client
+                        .buffer_from_host_buffer(d, dims, None)
+                        .map_err(|e| anyhow::anyhow!("upload: {e:?}"))
+                };
+                bufs.push(up_f32(&client, m.embed.data(), &[m.cfg.vocab, m.cfg.dim])?);
+                bufs.push(up_f32(&client, &m.final_norm, &[m.cfg.dim])?);
+                for l in &m.layers {
+                    bufs.push(up_f32(&client, &l.attn_norm, &[m.cfg.dim])?);
+                    for pl in [&l.wq, &l.wk, &l.wv, &l.wo, &l.w1, &l.w3, &l.w2] {
+                        let p = pack::to_planes(&pl.lin.w)?;
+                        bufs.push(up_u32(&client, &p.codes, &[p.rows, p.nb * 16])?);
+                        bufs.push(up_u32(&client, &p.sel, &[p.rows, p.nb * 8])?);
+                        bufs.push(up_f32(&client, &p.d, &[p.rows, p.nb])?);
+                        bufs.push(up_f32(&client, &p.z, &[p.rows, p.nb])?);
+                    }
+                    bufs.push(up_f32(&client, &l.ffn_norm, &[m.cfg.dim])?);
+                }
+                ("model_itq3s.hlo.txt", m.cfg.clone(), bufs)
+            }
+            other => bail!("unknown checkpoint kind '{other}'"),
+        };
+
+        let hlo_path = artifacts.join(hlo_name);
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("path utf8")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow::anyhow!("compile: {e:?}"))?;
+
+        // The PJRT window bounds the effective context length.
+        let mut cfg = cfg;
+        let vocab = cfg.vocab;
+        cfg.max_seq = cfg.max_seq.min(seq);
+        Ok(PjrtEngine { cfg, seq, vocab, exe, client, weights })
+    }
+
+    /// Score a full window: returns `(seq, vocab)` logits.
+    fn score(&self, tokens: &[u32]) -> Result<Tensor> {
+        assert!(tokens.len() <= self.seq);
+        let mut padded = vec![0i32; self.seq];
+        for (p, &t) in padded.iter_mut().zip(tokens) {
+            *p = t as i32;
+        }
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer(&padded, &[self.seq], None)
+            .map_err(|e| anyhow::anyhow!("tokens upload: {e:?}"))?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weights.len());
+        args.push(&tok_buf);
+        args.extend(self.weights.iter());
+        let result = self
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("download: {e:?}"))?
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        let data = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+        Ok(Tensor::new(vec![self.seq, self.vocab], data))
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn decode_step(&self, cache: &mut KvCache, token: u32) -> Vec<f32> {
+        cache.tokens.push(token);
+        let n = cache.tokens.len();
+        assert!(n <= self.seq, "PJRT window ({}) exceeded", self.seq);
+        let logits = self.score(&cache.tokens).expect("pjrt score");
+        logits.row(n - 1).to_vec()
+    }
+
+    fn prefill(&self, cache: &mut KvCache, tokens: &[u32]) -> Tensor {
+        let start = cache.tokens.len();
+        cache.tokens.extend_from_slice(tokens);
+        let n = cache.tokens.len();
+        assert!(n <= self.seq, "PJRT window ({}) exceeded", self.seq);
+        let logits = self.score(&cache.tokens).expect("pjrt score");
+        let mut out = Tensor::zeros(vec![tokens.len(), self.vocab]);
+        for (i, r) in (start..n).enumerate() {
+            out.row_mut(i).copy_from_slice(logits.row(r));
+        }
+        out
+    }
+}

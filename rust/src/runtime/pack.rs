@@ -1,0 +1,98 @@
+//! Repack ITQ3_S block bytes into the flat plane arrays the AOT-lowered
+//! JAX graph consumes (the L3 side of the L1 kernel's input contract —
+//! see `python/compile/kernels/ref.py` for the layout spec).
+//!
+//! Per 256-element block the Rust encoder emits
+//! `[base 64B][sel 32B][d f16][z f16]`; the HLO inputs want, per linear,
+//! `codes u32[rows, nb*16]`, `sel u32[rows, nb*8]`, `d f32[rows, nb]`,
+//! `z f32[rows, nb]` (little-endian words, so the byte planes reinterpret
+//! directly as u32).
+
+use crate::quant::QuantizedMatrix;
+use anyhow::{bail, Result};
+
+/// Flat plane arrays for one packed matrix.
+pub struct Planes {
+    pub rows: usize,
+    pub nb: usize,
+    pub codes: Vec<u32>,
+    pub sel: Vec<u32>,
+    pub d: Vec<f32>,
+    pub z: Vec<f32>,
+}
+
+pub fn to_planes(m: &QuantizedMatrix) -> Result<Planes> {
+    if m.fmt.name() != "itq3_s" || m.fmt.block_elems() != 256 {
+        bail!(
+            "PJRT artifact expects itq3_s@256 packing, model is {}@{}",
+            m.fmt.name(),
+            m.fmt.block_elems()
+        );
+    }
+    let bb = m.fmt.block_bytes(); // 100
+    let nb = m.blocks_per_row();
+    let rows = m.rows;
+    let mut codes = Vec::with_capacity(rows * nb * 16);
+    let mut sel = Vec::with_capacity(rows * nb * 8);
+    let mut d = Vec::with_capacity(rows * nb);
+    let mut z = Vec::with_capacity(rows * nb);
+    for r in 0..rows {
+        for b in 0..nb {
+            let bytes = &m.data[(r * nb + b) * bb..(r * nb + b + 1) * bb];
+            for w in bytes[..64].chunks_exact(4) {
+                codes.push(u32::from_le_bytes(w.try_into().unwrap()));
+            }
+            for w in bytes[64..96].chunks_exact(4) {
+                sel.push(u32::from_le_bytes(w.try_into().unwrap()));
+            }
+            d.push(crate::quant::packing::read_f16(bytes, 96));
+            z.push(crate::quant::packing::read_f16(bytes, 98));
+        }
+    }
+    Ok(Planes { rows, nb, codes, sel, d, z })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::format_by_name;
+    use crate::tensor::Tensor;
+    use crate::util::XorShift;
+
+    #[test]
+    fn planes_decode_consistently() {
+        // Decoding via the plane layout must equal the byte-level decoder.
+        let mut rng = XorShift::new(1);
+        let w = Tensor::randn(vec![4, 512], 0.05, &mut rng);
+        let q = QuantizedMatrix::quantize(format_by_name("itq3_s").unwrap(), &w);
+        let p = to_planes(&q).unwrap();
+        assert_eq!(p.codes.len(), 4 * 2 * 16);
+        let full = q.dequantize();
+        // Manual decode of row 2, block 1 from planes + ifwht.
+        let (r, b) = (2usize, 1usize);
+        let mut vals = [0.0f32; 256];
+        for t in 0..256 {
+            let word = p.codes[(r * 2 + b) * 16 + t / 16];
+            let code = (word >> (2 * (t % 16))) & 3;
+            let sword = p.sel[(r * 2 + b) * 8 + t / 32];
+            let sbit = (sword >> (t % 32)) & 1;
+            let dd = p.d[r * 2 + b];
+            let zz = p.z[r * 2 + b];
+            let digit = code as f32 - 1.0;
+            vals[t] = digit * dd * (1.0 + 2.0 * sbit as f32) + zz;
+        }
+        crate::fwht::fwht_256(&mut vals);
+        for (i, &v) in vals.iter().enumerate() {
+            let want = full.row(r)[b * 256 + i];
+            assert!((v - want).abs() < 1e-5, "t={i}: {v} vs {want}");
+        }
+    }
+
+    #[test]
+    fn rejects_non_itq3s() {
+        let mut rng = XorShift::new(2);
+        let w = Tensor::randn(vec![2, 256], 0.05, &mut rng);
+        let q = QuantizedMatrix::quantize(format_by_name("q8_0").unwrap(), &w);
+        assert!(to_planes(&q).is_err());
+    }
+}

@@ -1,0 +1,328 @@
+//! TCP front-end: JSON-lines protocol over `std::net` (tokio is not in
+//! the offline vendor set; a thread-per-connection model with the
+//! single-worker coordinator behind channels gives the same separation
+//! of IO and compute).
+//!
+//! Protocol (one JSON object per line, both directions):
+//!
+//! ```text
+//! -> {"op":"generate","prompt":"...","max_tokens":32,"temperature":0.0}
+//! <- {"token":"t"} ... streamed ...
+//! <- {"done":true,"reason":"max_tokens","text":"...","gen_tokens":32,
+//!     "ttft_ms":12.0,"total_ms":230.0}
+//! -> {"op":"score","text":"..."}
+//! <- {"ppl":3.21,"nll":1.166,"tokens":512}
+//! -> {"op":"stats"}
+//! <- {...metrics snapshot...}
+//! -> {"op":"shutdown"}
+//! <- {"ok":true}
+//! ```
+
+use crate::coordinator::{Coordinator, CoordinatorConfig, Event, GenRequest};
+use crate::model::native::Engine;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Run the server until a client sends `{"op":"shutdown"}`.
+pub fn run(addr: &str, engine: Box<dyn Engine>, cfg: CoordinatorConfig) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    serve_on(listener, engine, cfg)
+}
+
+/// Bind to an OS-assigned port; returns the bound address (tests, e2e).
+pub fn spawn_ephemeral(
+    engine: Box<dyn Engine>,
+    cfg: CoordinatorConfig,
+) -> Result<(std::net::SocketAddr, std::thread::JoinHandle<Result<()>>)> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let h = std::thread::spawn(move || serve_on(listener, engine, cfg));
+    Ok((addr, h))
+}
+
+fn serve_on(
+    listener: TcpListener,
+    engine: Box<dyn Engine>,
+    cfg: CoordinatorConfig,
+) -> Result<()> {
+    let coord = Arc::new(Coordinator::new(engine, cfg));
+    let stop = Arc::new(AtomicBool::new(false));
+    listener.set_nonblocking(true)?;
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let coord = coord.clone();
+                let stop = stop.clone();
+                conns.push(std::thread::spawn(move || {
+                    let _ = handle_conn(stream, &coord, &stop);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    for c in conns {
+        let _ = c.join();
+    }
+    Ok(())
+}
+
+fn send(stream: &mut TcpStream, j: &Json) -> std::io::Result<()> {
+    stream.write_all(j.to_string().as_bytes())?;
+    stream.write_all(b"\n")
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    coord: &Coordinator,
+    stop: &AtomicBool,
+) -> Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let msg = match Json::parse(&line) {
+            Ok(m) => m,
+            Err(e) => {
+                send(&mut stream, &Json::obj(vec![("error", Json::str(e.to_string()))]))?;
+                continue;
+            }
+        };
+        match msg.get("op").and_then(|o| o.as_str()).unwrap_or("") {
+            "generate" => {
+                let req = GenRequest::from_json(&msg);
+                let rx = coord.generate(req);
+                for ev in rx.iter() {
+                    match ev {
+                        Event::Token { text, .. } => {
+                            send(&mut stream, &Json::obj(vec![("token", Json::str(text))]))?;
+                        }
+                        Event::Done {
+                            reason,
+                            text,
+                            prompt_tokens,
+                            gen_tokens,
+                            ttft_ms,
+                            total_ms,
+                        } => {
+                            send(
+                                &mut stream,
+                                &Json::obj(vec![
+                                    ("done", Json::Bool(true)),
+                                    ("reason", Json::str(reason.as_str())),
+                                    ("text", Json::str(text)),
+                                    ("prompt_tokens", Json::num(prompt_tokens as f64)),
+                                    ("gen_tokens", Json::num(gen_tokens as f64)),
+                                    ("ttft_ms", Json::num(ttft_ms)),
+                                    ("total_ms", Json::num(total_ms)),
+                                ]),
+                            )?;
+                            break;
+                        }
+                    }
+                }
+            }
+            "score" => {
+                let text = msg.get("text").and_then(|t| t.as_str()).unwrap_or("").to_string();
+                match coord.score(text) {
+                    Ok(r) => send(
+                        &mut stream,
+                        &Json::obj(vec![
+                            ("ppl", Json::num(r.ppl)),
+                            ("nll", Json::num(r.nll)),
+                            ("tokens", Json::num(r.tokens as f64)),
+                        ]),
+                    )?,
+                    Err(e) => send(
+                        &mut stream,
+                        &Json::obj(vec![("error", Json::str(e.to_string()))]),
+                    )?,
+                }
+            }
+            "stats" => {
+                let s = coord.stats().unwrap_or(Json::Null);
+                send(&mut stream, &s)?;
+            }
+            "shutdown" => {
+                send(&mut stream, &Json::obj(vec![("ok", Json::Bool(true))]))?;
+                stop.store(true, Ordering::SeqCst);
+                return Ok(());
+            }
+            other => {
+                send(
+                    &mut stream,
+                    &Json::obj(vec![("error", Json::str(format!("unknown op '{other}'")))]),
+                )?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Minimal blocking client (used by examples, benches, and tests).
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    pub fn send(&mut self, j: &Json) -> Result<()> {
+        self.stream.write_all(j.to_string().as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        Ok(())
+    }
+
+    pub fn recv(&mut self) -> Result<Json> {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let n = self.reader.read_line(&mut line)?;
+            if n == 0 {
+                anyhow::bail!("connection closed");
+            }
+            if !line.trim().is_empty() {
+                return Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("{e}"));
+            }
+        }
+    }
+
+    /// Generate and collect the full response.
+    pub fn generate(&mut self, prompt: &str, max_tokens: usize) -> Result<Json> {
+        self.send(&Json::obj(vec![
+            ("op", Json::str("generate")),
+            ("prompt", Json::str(prompt)),
+            ("max_tokens", Json::num(max_tokens as f64)),
+        ]))?;
+        loop {
+            let msg = self.recv()?;
+            if msg.get("done").is_some() || msg.get("error").is_some() {
+                return Ok(msg);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{DenseModel, ModelConfig, NativeEngine};
+
+    fn spawn_test_server() -> (std::net::SocketAddr, std::thread::JoinHandle<Result<()>>) {
+        let cfg = ModelConfig::test();
+        let engine = NativeEngine::dense(DenseModel::random(&cfg, 5, None));
+        spawn_ephemeral(
+            Box::new(engine),
+            CoordinatorConfig { max_batch: 4, kv_budget_bytes: 64 << 20, prefill_chunk: 16 },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn generate_score_stats_shutdown_roundtrip() {
+        let (addr, handle) = spawn_test_server();
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+
+        let done = c.generate("hello world", 5).unwrap();
+        assert_eq!(done.get("done"), Some(&Json::Bool(true)));
+        assert_eq!(done.get("gen_tokens").unwrap().as_u64(), Some(5));
+        assert!(done.get("ttft_ms").unwrap().as_f64().unwrap() >= 0.0);
+
+        c.send(&Json::obj(vec![
+            ("op", Json::str("score")),
+            ("text", Json::str("score this text")),
+        ]))
+        .unwrap();
+        let score = c.recv().unwrap();
+        assert!(score.get("ppl").unwrap().as_f64().unwrap() > 1.0);
+
+        c.send(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+        let stats = c.recv().unwrap();
+        assert_eq!(stats.get("requests_finished").unwrap().as_u64(), Some(1));
+
+        c.send(&Json::obj(vec![("op", Json::str("shutdown"))])).unwrap();
+        let ok = c.recv().unwrap();
+        assert_eq!(ok.get("ok"), Some(&Json::Bool(true)));
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn streaming_tokens_arrive_before_done() {
+        let (addr, handle) = spawn_test_server();
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        c.send(&Json::obj(vec![
+            ("op", Json::str("generate")),
+            ("prompt", Json::str("abc")),
+            ("max_tokens", Json::num(4.0)),
+        ]))
+        .unwrap();
+        let mut tokens = 0;
+        loop {
+            let msg = c.recv().unwrap();
+            if msg.get("token").is_some() {
+                tokens += 1;
+            } else if msg.get("done").is_some() {
+                break;
+            }
+        }
+        assert_eq!(tokens, 4);
+        c.send(&Json::obj(vec![("op", Json::str("shutdown"))])).unwrap();
+        let _ = c.recv();
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn bad_json_reports_error_and_keeps_connection() {
+        let (addr, handle) = spawn_test_server();
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        c.stream.write_all(b"{not json\n").unwrap();
+        let err = c.recv().unwrap();
+        assert!(err.get("error").is_some());
+        // Connection still works.
+        let done = c.generate("x", 2).unwrap();
+        assert_eq!(done.get("done"), Some(&Json::Bool(true)));
+        c.send(&Json::obj(vec![("op", Json::str("shutdown"))])).unwrap();
+        let _ = c.recv();
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let (addr, handle) = spawn_test_server();
+        let addrs = addr.to_string();
+        let threads: Vec<_> = (0..3)
+            .map(|i| {
+                let a = addrs.clone();
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(&a).unwrap();
+                    let done = c.generate(&format!("client {i}"), 3).unwrap();
+                    assert_eq!(done.get("gen_tokens").unwrap().as_u64(), Some(3));
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let mut c = Client::connect(&addrs).unwrap();
+        c.send(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+        let stats = c.recv().unwrap();
+        assert_eq!(stats.get("requests_finished").unwrap().as_u64(), Some(3));
+        c.send(&Json::obj(vec![("op", Json::str("shutdown"))])).unwrap();
+        let _ = c.recv();
+        handle.join().unwrap().unwrap();
+    }
+}

@@ -1,0 +1,232 @@
+//! Minimal host-side tensor type.
+//!
+//! The coordinator needs a small amount of host linear algebra: staging
+//! weights for quantization, the native-Rust fallback forward pass (used
+//! when PJRT artifacts are absent, e.g. in unit tests), and marshalling
+//! literals in and out of the XLA runtime. This is a deliberately simple
+//! row-major f32 tensor — not a general ndarray.
+
+use std::fmt;
+
+/// Row-major f32 tensor with up to 4 dimensions.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    /// Create from shape and data; panics if sizes disagree.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape {shape:?} != data len {}", data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    /// Filled with i.i.d. N(0, sigma^2) entries.
+    pub fn randn(shape: Vec<usize>, sigma: f32, rng: &mut crate::util::XorShift) -> Self {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_gaussian(&mut t.data, sigma);
+        t
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of rows for a 2-D tensor.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[0]
+    }
+
+    /// Number of columns for a 2-D tensor.
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[1]
+    }
+
+    /// Borrow row `r` of a 2-D tensor.
+    pub fn row(&self, r: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    /// Reshape in place (same element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len(), "reshape to {shape:?}");
+        self.shape = shape;
+        self
+    }
+
+    /// Dense matmul: (m,k) x (k,n) -> (m,n). Reference implementation for
+    /// the native fallback path; the serving hot path uses the blocked
+    /// kernels in `quant::matmul`.
+    pub fn matmul(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        assert_eq!(rhs.shape.len(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (rhs.shape[0], rhs.shape[1]);
+        assert_eq!(k, k2, "matmul inner dim: {k} vs {k2}");
+        let mut out = Tensor::zeros(vec![m, n]);
+        for i in 0..m {
+            let a_row = self.row(i);
+            let o_row = &mut out.data[i * n..(i + 1) * n];
+            for (p, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = &rhs.data[p * n..(p + 1) * n];
+                for (o, &b) in o_row.iter_mut().zip(b_row) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Transpose a 2-D tensor.
+    pub fn transpose(&self) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(vec![n, m]);
+        for i in 0..m {
+            for j in 0..n {
+                out.data[j * m + i] = self.data[i * n + j];
+            }
+        }
+        out
+    }
+
+    /// Elementwise map.
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Tensor {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+        self
+    }
+}
+
+/// y += W x for row-major `W: (out, inp)`, the matvec orientation used by
+/// the decode (B=1) path.
+pub fn matvec_accum(w: &Tensor, x: &[f32], y: &mut [f32]) {
+    let (out_dim, in_dim) = (w.rows(), w.cols());
+    assert_eq!(x.len(), in_dim);
+    assert_eq!(y.len(), out_dim);
+    for (o, yo) in y.iter_mut().enumerate() {
+        let row = w.row(o);
+        let mut acc = 0.0f32;
+        for (a, b) in row.iter().zip(x) {
+            acc += a * b;
+        }
+        *yo += acc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(vec![2, 2], vec![1., 1., 1., 1.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = crate::util::XorShift::new(5);
+        let a = Tensor::randn(vec![4, 4], 1.0, &mut rng);
+        let mut eye = Tensor::zeros(vec![4, 4]);
+        for i in 0..4 {
+            eye.data_mut()[i * 4 + i] = 1.0;
+        }
+        let b = a.matmul(&eye);
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = crate::util::XorShift::new(6);
+        let a = Tensor::randn(vec![3, 5], 1.0, &mut rng);
+        let b = a.transpose().transpose();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = crate::util::XorShift::new(7);
+        let w = Tensor::randn(vec![6, 4], 1.0, &mut rng);
+        let x: Vec<f32> = (0..4).map(|i| i as f32 + 0.5).collect();
+        let mut y = vec![0.0f32; 6];
+        matvec_accum(&w, &x, &mut y);
+        let xm = Tensor::new(vec![4, 1], x.clone());
+        let ym = w.matmul(&xm);
+        for (a, b) in y.iter().zip(ym.data()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let r = t.clone().reshape(vec![3, 2]);
+        assert_eq!(r.shape(), &[3, 2]);
+        assert_eq!(r.data(), t.data());
+    }
+}

@@ -1,0 +1,55 @@
+//! Small self-contained utilities shared across the crate.
+//!
+//! The offline vendor set for this build contains only `xla` and `anyhow`,
+//! so everything that would normally come from `rand`, `serde_json`,
+//! `half`, `criterion`, or `proptest` is implemented here from scratch
+//! (see DESIGN.md §6 "Substitutions").
+
+pub mod json;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+
+pub use prng::XorShift;
+
+/// Round `x` to `digits` decimal digits (for stable table output).
+pub fn round_to(x: f64, digits: u32) -> f64 {
+    let p = 10f64.powi(digits as i32);
+    (x * p).round() / p
+}
+
+/// Human-readable byte size (GiB/MiB/KiB).
+pub fn human_bytes(bytes: u64) -> String {
+    const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+    const MIB: f64 = 1024.0 * 1024.0;
+    const KIB: f64 = 1024.0;
+    let b = bytes as f64;
+    if b >= GIB {
+        format!("{:.2} GiB", b / GIB)
+    } else if b >= MIB {
+        format!("{:.2} MiB", b / MIB)
+    } else if b >= KIB {
+        format!("{:.2} KiB", b / KIB)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_to_works() {
+        assert_eq!(round_to(3.14159, 2), 3.14);
+        assert_eq!(round_to(6.515, 2), 6.52);
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+        assert!(human_bytes(29_305_000_000).starts_with("27.2"));
+    }
+}

@@ -1,0 +1,220 @@
+//! Deterministic xorshift128+ PRNG.
+//!
+//! Replaces the `rand` crate (unavailable in the offline vendor set) for
+//! every randomized component: synthetic weight generation, corpus
+//! sampling, property-test case generation, and the QuIP#-sim random sign
+//! diagonal. Deterministic seeding keeps all experiments reproducible.
+
+/// xorshift128+ generator (Vigna, 2017). Not cryptographic; plenty for
+/// simulation and test-case generation.
+#[derive(Clone, Debug)]
+pub struct XorShift {
+    s0: u64,
+    s1: u64,
+}
+
+impl XorShift {
+    /// Create a generator from a seed. Seeds are mixed through
+    /// splitmix64 so that small consecutive seeds give uncorrelated
+    /// streams.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        let s0 = next();
+        let mut s1 = next();
+        if s0 == 0 && s1 == 0 {
+            s1 = 1;
+        }
+        XorShift { s0, s1 }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.s0;
+        let y = self.s1;
+        self.s0 = y;
+        x ^= x << 23;
+        self.s1 = x ^ y ^ (x >> 17) ^ (y >> 26);
+        self.s1.wrapping_add(y)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        // Lemire-style bounded rejection to avoid modulo bias.
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn next_gaussian(&mut self) -> f64 {
+        // Draw until u1 is nonzero (probability ~2^-53 of retry).
+        let mut u1 = self.next_f64();
+        while u1 <= f64::MIN_POSITIVE {
+            u1 = self.next_f64();
+        }
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Student-t with `dof` degrees of freedom — the heavy-tailed
+    /// distribution used to synthesize outlier-rich weight blocks
+    /// (transformer weights are empirically t-distributed with dof 3..6).
+    pub fn next_student_t(&mut self, dof: f64) -> f64 {
+        // t = Z / sqrt(ChiSq(k)/k); ChiSq(k) as sum of k squared normals
+        // is slow for fractional dof, so use the Bailey polar method.
+        loop {
+            let u = 2.0 * self.next_f64() - 1.0;
+            let v = 2.0 * self.next_f64() - 1.0;
+            let w = u * u + v * v;
+            if w > 0.0 && w < 1.0 {
+                let c = u / w.sqrt().max(f64::MIN_POSITIVE);
+                let r = (dof * (w.powf(-2.0 / dof) - 1.0)).sqrt();
+                return c * r;
+            }
+        }
+    }
+
+    /// Fill a slice with i.i.d. N(0, sigma^2) values.
+    pub fn fill_gaussian(&mut self, out: &mut [f32], sigma: f32) {
+        for x in out.iter_mut() {
+            *x = (self.next_gaussian() as f32) * sigma;
+        }
+    }
+
+    /// Random sign in {-1.0, +1.0}.
+    pub fn next_sign(&mut self) -> f32 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.next_below((i + 1) as u64) as usize;
+            v.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = XorShift::new(42);
+        let mut b = XorShift::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = XorShift::new(1);
+        let mut b = XorShift::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = XorShift::new(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn bounded_no_bias_smoke() {
+        let mut r = XorShift::new(3);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[r.next_below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            // expected 10_000 each; allow 6% deviation
+            assert!((9_400..10_600).contains(&c), "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = XorShift::new(11);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = r.next_gaussian();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn student_t_is_heavier_tailed_than_gaussian() {
+        let mut r = XorShift::new(13);
+        let n = 100_000;
+        let mut kurt_num = 0.0f64;
+        let mut var = 0.0f64;
+        for _ in 0..n {
+            let x = r.next_student_t(5.0);
+            var += x * x;
+            kurt_num += x * x * x * x;
+        }
+        var /= n as f64;
+        let kurtosis = kurt_num / n as f64 / (var * var);
+        // t(5) has excess kurtosis 6 (kurtosis 9); Gaussian has 3.
+        assert!(kurtosis > 4.0, "kurtosis={kurtosis}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = XorShift::new(17);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+}

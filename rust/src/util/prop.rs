@@ -1,0 +1,156 @@
+//! In-repo property-testing harness.
+//!
+//! `proptest` is not in the offline vendor set, so this module provides the
+//! subset we need: seeded case generation with automatic shrinking of
+//! counterexample *seeds* (we re-run with the failing seed printed so a
+//! failure is reproducible), plus a few common generators. Property tests
+//! throughout the crate (`quant`, `fwht`, `coordinator`) are built on it.
+//!
+//! Usage:
+//! ```no_run
+//! use itq3s::util::prop::{forall, Gen};
+//! forall("addition commutes", 100, |g: &mut Gen| {
+//!     let a = g.f32_in(-10.0, 10.0);
+//!     let b = g.f32_in(-10.0, 10.0);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::prng::XorShift;
+
+/// A test-case generator handed to each property invocation.
+pub struct Gen {
+    rng: XorShift,
+    /// Size hint (grows over cases like proptest's size parameter).
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Gen { rng: XorShift::new(seed), size }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi_inclusive: usize) -> usize {
+        lo + self.rng.next_below((hi_inclusive - lo + 1) as u64) as usize
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn gaussian_f32(&mut self, sigma: f32) -> f32 {
+        (self.rng.next_gaussian() as f32) * sigma
+    }
+
+    /// A weight-like vector: mostly Gaussian with occasional heavy
+    /// outliers, mimicking transformer weight blocks (the paper's §1
+    /// "heavy-tailed weight distributions").
+    pub fn weight_block(&mut self, n: usize) -> Vec<f32> {
+        let sigma = self.f32_in(0.005, 0.2);
+        (0..n)
+            .map(|_| {
+                if self.rng.next_f64() < 0.01 {
+                    // outlier: 5-30 sigma
+                    self.gaussian_f32(sigma) + self.f32_in(5.0, 30.0) * sigma * self.sign()
+                } else {
+                    self.gaussian_f32(sigma)
+                }
+            })
+            .collect()
+    }
+
+    pub fn sign(&mut self) -> f32 {
+        self.rng.next_sign()
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize_in(0, items.len() - 1)]
+    }
+}
+
+/// Run `cases` random test cases of the property `f`. On panic, the
+/// failing seed is printed and the panic is re-raised, so the case can be
+/// replayed with `ITQ3S_PROP_SEED=<seed>`.
+pub fn forall(name: &str, cases: u64, f: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    // Base seed: env override for replay, otherwise a fixed default so CI
+    // is deterministic.
+    let base = std::env::var("ITQ3S_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok());
+    let (start, count) = match base {
+        Some(s) => (s, 1),       // replay exactly one case
+        None => (0xC0FFEE, cases),
+    };
+    for i in 0..count {
+        let seed = start.wrapping_add(i);
+        let size = 1 + (i as usize * 64) / cases.max(1) as usize;
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, size);
+            f(&mut g);
+        });
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed on case {i} (replay with ITQ3S_PROP_SEED={seed})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("abs is nonnegative", 50, |g| {
+            let x = g.f32_in(-100.0, 100.0);
+            assert!(x.abs() >= 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_reports_failure() {
+        forall("always fails", 5, |_g| {
+            panic!("intentional");
+        });
+    }
+
+    #[test]
+    fn weight_block_has_outliers_sometimes() {
+        let mut g = Gen::new(9, 8);
+        let mut saw_outlier = false;
+        for _ in 0..50 {
+            let w = g.weight_block(256);
+            let sd = crate::util::stats::stddev(&w).max(1e-9);
+            if crate::util::stats::linf(&w) > 4.0 * sd {
+                saw_outlier = true;
+            }
+        }
+        assert!(saw_outlier);
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        let mut g = Gen::new(4, 1);
+        for _ in 0..1000 {
+            let u = g.usize_in(3, 7);
+            assert!((3..=7).contains(&u));
+            let x = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&x));
+        }
+    }
+}

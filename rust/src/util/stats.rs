@@ -1,0 +1,209 @@
+//! Streaming and batch statistics used by the quantizers (block scale
+//! estimation), the distribution-smoothing analysis (Theorem 1 / Cor 1
+//! reproduction), and the benchmark harness (latency percentiles).
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f32]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Mean absolute value — used for the closed-form ternary scale
+/// `d* = 2/3 E|x|` mentioned in Remark 1 of the paper.
+pub fn mean_abs(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| (x as f64).abs()).sum::<f64>() / xs.len() as f64
+}
+
+/// ℓ∞ norm.
+pub fn linf(xs: &[f32]) -> f64 {
+    xs.iter().fold(0.0f64, |m, &x| m.max((x as f64).abs()))
+}
+
+/// ℓ2 norm.
+pub fn l2(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// Kurtosis (4th standardized moment; Gaussian = 3). The paper's Theorem 1
+/// claim is that FWHT drives block kurtosis toward 3.
+pub fn kurtosis(xs: &[f32]) -> f64 {
+    let m = mean(xs);
+    let v = variance(xs);
+    if v == 0.0 || xs.is_empty() {
+        return 0.0;
+    }
+    let m4 = xs.iter().map(|&x| (x as f64 - m).powi(4)).sum::<f64>() / xs.len() as f64;
+    m4 / (v * v)
+}
+
+/// Mean squared error between two equal-length slices.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "mse: length mismatch");
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Relative ℓ2 reconstruction error ‖a−b‖₂ / ‖a‖₂.
+pub fn rel_l2_err(reference: &[f32], approx: &[f32]) -> f64 {
+    let denom = l2(reference).max(1e-30);
+    let num = reference
+        .iter()
+        .zip(approx)
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt();
+    num / denom
+}
+
+/// Percentile over a pre-sorted-or-not sample (nearest-rank, p in [0,100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).floor() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Online Welford accumulator, used by the serving metrics and the
+/// benchmark harness so per-request latencies need not all be retained.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+        assert!((stddev(&xs) - 1.25f64.sqrt()).abs() < 1e-12);
+        assert!((mean_abs(&[-1.0f32, 3.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn norms() {
+        let xs = [3.0f32, -4.0];
+        assert_eq!(linf(&xs), 4.0);
+        assert!((l2(&xs) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kurtosis_gaussian_near_3() {
+        let mut r = crate::util::XorShift::new(5);
+        let xs: Vec<f32> = (0..100_000).map(|_| r.next_gaussian() as f32).collect();
+        let k = kurtosis(&xs);
+        assert!((k - 3.0).abs() < 0.15, "k={k}");
+    }
+
+    #[test]
+    fn mse_and_rel_err() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [1.0f32, 2.0, 3.0];
+        assert_eq!(mse(&a, &b), 0.0);
+        assert_eq!(rel_l2_err(&a, &b), 0.0);
+        let c = [1.0f32, 2.0, 4.0];
+        assert!((mse(&a, &c) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert_eq!(percentile(&xs, 99.0), 99.0);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let mut w = Welford::new();
+        let xs = [2.0f64, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        for &x in &xs {
+            w.push(x);
+        }
+        assert_eq!(w.count(), 8);
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        assert_eq!(w.min(), 2.0);
+        assert_eq!(w.max(), 9.0);
+        // sample variance of xs is 32/7
+        assert!((w.variance() - 32.0 / 7.0).abs() < 1e-12);
+    }
+}

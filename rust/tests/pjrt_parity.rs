@@ -1,0 +1,80 @@
+//! Cross-layer integration: the PJRT engine (AOT-lowered JAX graph, with
+//! the fused Pallas dequant kernel in-graph for the quantized artifact)
+//! must agree with the native Rust engine on the same checkpoint.
+//!
+//! These tests need `make artifacts` to have run; they self-skip when the
+//! artifacts directory is absent so `cargo test` works on a fresh clone.
+
+use itq3s::model::native::Engine;
+use itq3s::model::{KvCache, NativeEngine, QuantizedModel};
+use std::path::Path;
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() && p.join("model_fp32.iguf").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn fp32_artifact_matches_native_logits() {
+    let Some(art) = artifacts() else { return };
+    let ckpt = art.join("model_fp32.iguf");
+    let dense = itq3s::gguf::load_dense(&ckpt).unwrap();
+    let native = NativeEngine::dense(dense);
+    let pjrt = itq3s::runtime::PjrtEngine::load(&ckpt, art).unwrap();
+
+    let toks: Vec<u32> = itq3s::model::tokenizer::encode("the archive of the glass city");
+    let mut c1 = KvCache::new(native.config());
+    let mut c2 = KvCache::new(pjrt.config());
+    let l1 = native.prefill(&mut c1, &toks);
+    let l2 = pjrt.prefill(&mut c2, &toks);
+    assert_eq!(l1.shape(), l2.shape());
+    let rel = itq3s::util::stats::rel_l2_err(l1.data(), l2.data());
+    assert!(rel < 1e-4, "fp32 parity rel={rel}");
+}
+
+#[test]
+fn quantized_artifact_matches_native_quantized_engine() {
+    let Some(art) = artifacts() else { return };
+    // Quantize in-process with the Rust encoder; the PJRT path re-packs
+    // the same bytes into plane arrays for the Pallas kernel.
+    let dense = itq3s::gguf::load_dense(&art.join("model_fp32.iguf")).unwrap();
+    let fmt = itq3s::quant::format_by_name("itq3_s").unwrap();
+    let qm = QuantizedModel::quantize(&dense, fmt);
+    let qpath = std::env::temp_dir().join("itq3s-parity.iguf");
+    itq3s::gguf::save_quantized(&qm, &qpath).unwrap();
+
+    let native = NativeEngine::quantized(qm);
+    let pjrt = itq3s::runtime::PjrtEngine::load(&qpath, art).unwrap();
+
+    let toks: Vec<u32> = itq3s::model::tokenizer::encode("quick update: rowan fixed the kiln");
+    let mut c1 = KvCache::new(native.config());
+    let mut c2 = KvCache::new(pjrt.config());
+    let l1 = native.prefill(&mut c1, &toks);
+    let l2 = pjrt.prefill(&mut c2, &toks);
+    let rel = itq3s::util::stats::rel_l2_err(l1.data(), l2.data());
+    // Same packed bytes, two independent decode+IFWHT+matmul
+    // implementations (Rust scalar vs Pallas interpret): tight tolerance.
+    assert!(rel < 1e-3, "itq3s parity rel={rel}");
+}
+
+#[test]
+fn pjrt_decode_step_matches_prefill_row() {
+    let Some(art) = artifacts() else { return };
+    let ckpt = art.join("model_fp32.iguf");
+    let pjrt = itq3s::runtime::PjrtEngine::load(&ckpt, art).unwrap();
+    let toks: Vec<u32> = itq3s::model::tokenizer::encode("in the year");
+    let mut c1 = KvCache::new(pjrt.config());
+    let all = pjrt.prefill(&mut c1, &toks);
+    let mut c2 = KvCache::new(pjrt.config());
+    let mut last = Vec::new();
+    for &t in &toks {
+        last = pjrt.decode_step(&mut c2, t);
+    }
+    let rel = itq3s::util::stats::rel_l2_err(all.row(toks.len() - 1), &last);
+    assert!(rel < 1e-5, "decode/prefill consistency rel={rel}");
+}
