@@ -1,12 +1,19 @@
 //! Microbenchmarks of the hot-path kernels (§Perf evidence):
-//! FWHT radix-2 vs radix-4, block dequant, fused vs naive matvec.
+//! FWHT radix-2 vs radix-4, fused-f32 vs naive vs W3A8-integer matvec,
+//! and the row-sharded thread sweep. Writes `BENCH_matvec.json` next to
+//! the working directory so EXPERIMENTS.md §Perf has a machine-readable
+//! trajectory across PRs.
 use itq3s::bench::harness::bench;
-use itq3s::quant::{format_by_name, matmul::QuantizedLinear};
+use itq3s::quant::format_by_name;
+use itq3s::quant::matmul::{MatvecScratch, QuantizedLinear};
 use itq3s::tensor::Tensor;
+use itq3s::util::json::Json;
 use itq3s::util::XorShift;
+use std::collections::BTreeMap;
 
 fn main() {
     let mut rng = XorShift::new(1);
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
 
     // --- FWHT variants ----------------------------------------------
     let mut block = [0.0f32; 256];
@@ -33,30 +40,57 @@ fn main() {
         r2.mean_s / r4.mean_s
     );
 
-    // --- fused vs naive quantized matvec ------------------------------
-    let w = Tensor::randn(vec![256, 1024], 0.02, &mut rng);
-    let x: Vec<f32> = (0..1024).map(|_| rng.next_f32() - 0.5).collect();
+    // --- fused f32 vs naive vs W3A8 integer matvec --------------------
+    let rows = 256usize;
+    let cols = 1024usize;
+    let w = Tensor::randn(vec![rows, cols], 0.02, &mut rng);
+    let x: Vec<f32> = (0..cols).map(|_| rng.next_f32() - 0.5).collect();
+    let macs = (rows * cols) as f64;
+    let mut formats_json: BTreeMap<String, Json> = BTreeMap::new();
     for name in ["itq3_s", "iq3_s", "q4_k_m", "q8_0"] {
         let lin = QuantizedLinear::new(format_by_name(name).unwrap(), &w);
-        let mut y = vec![0.0f32; 256];
+        let mut y = vec![0.0f32; rows];
+        let mut scratch = MatvecScratch::new();
         let rf = bench("fused", 3, 10, || {
             lin.matvec(std::hint::black_box(&x), &mut y);
+        });
+        let rq = bench("q8", 3, 10, || {
+            lin.matvec_q8(std::hint::black_box(&x), &mut y, &mut scratch, 1);
         });
         let rn = bench("naive", 3, 10, || {
             lin.matvec_naive(std::hint::black_box(&x), &mut y);
         });
-        let macs = 256.0 * 1024.0;
         println!(
-            "matvec {name:<8} fused {:>7.1} us ({:>6.2} GMAC/s)   naive {:>7.1} us   speedup {:.2}x",
+            "matvec {name:<8} f32 {:>7.1} us ({:>6.2} GMAC/s)   q8 {:>7.1} us ({:>6.2} GMAC/s)   naive {:>7.1} us   q8-vs-f32 {:.2}x",
             rf.mean_s * 1e6,
             macs / rf.mean_s / 1e9,
+            rq.mean_s * 1e6,
+            macs / rq.mean_s / 1e9,
             rn.mean_s * 1e6,
-            rn.mean_s / rf.mean_s
+            rf.mean_s / rq.mean_s
+        );
+        formats_json.insert(
+            name.to_string(),
+            Json::obj(vec![
+                ("fused_f32_us", Json::num(rf.mean_s * 1e6)),
+                ("q8_us", Json::num(rq.mean_s * 1e6)),
+                ("naive_us", Json::num(rn.mean_s * 1e6)),
+                ("q8_speedup_vs_f32", Json::num(rf.mean_s / rq.mean_s)),
+                ("fused_speedup_vs_naive", Json::num(rn.mean_s / rf.mean_s)),
+            ]),
         );
     }
+    report.insert(
+        "small_layer".to_string(),
+        Json::obj(vec![
+            ("rows", Json::num(rows as f64)),
+            ("cols", Json::num(cols as f64)),
+            ("formats", Json::Obj(formats_json)),
+        ]),
+    );
 
     // --- dense reference ------------------------------------------------
-    let mut y = vec![0.0f32; 256];
+    let mut y = vec![0.0f32; rows];
     let rd = bench("dense", 3, 10, || {
         y.fill(0.0);
         itq3s::tensor::matvec_accum(std::hint::black_box(&w), &x, &mut y);
@@ -64,6 +98,76 @@ fn main() {
     println!(
         "matvec dense-f32 {:>7.1} us ({:>6.2} GMAC/s)",
         rd.mean_s * 1e6,
-        256.0 * 1024.0 / rd.mean_s / 1e9
+        macs / rd.mean_s / 1e9
     );
+
+    // --- row-sharded thread sweep (serving-size itq3_s layer) -----------
+    // 2048 x 4096 ≈ a LLaMA-class attention projection; one matvec per
+    // decoded token, so 1/mean_s is a tokens/sec proxy for this layer.
+    let srows = 2048usize;
+    let scols = 4096usize;
+    let wide = Tensor::randn(vec![srows, scols], 0.02, &mut rng);
+    let lin = QuantizedLinear::new(format_by_name("itq3_s").unwrap(), &wide);
+    let xw: Vec<f32> = (0..scols).map(|_| rng.next_f32() - 0.5).collect();
+    let mut yw = vec![0.0f32; srows];
+    let mut scratch = MatvecScratch::new();
+    let smacs = (srows * scols) as f64;
+    let mut sweep_json: BTreeMap<String, Json> = BTreeMap::new();
+    let mut t1_mean = 0.0f64;
+    let mut t4_speedup = 0.0f64;
+    for &threads in &[1usize, 2, 4, 8] {
+        let r = bench("q8 sweep", 2, 8, || {
+            lin.matvec_q8(std::hint::black_box(&xw), &mut yw, &mut scratch, threads);
+        });
+        if threads == 1 {
+            t1_mean = r.mean_s;
+        }
+        if threads == 4 {
+            t4_speedup = t1_mean / r.mean_s;
+        }
+        println!(
+            "matvec itq3_s q8 {srows}x{scols} {threads}t: {:>8.1} us ({:>6.2} GMAC/s, {:>7.1} matvec/s, {:.2}x vs 1t)",
+            r.mean_s * 1e6,
+            smacs / r.mean_s / 1e9,
+            1.0 / r.mean_s,
+            t1_mean / r.mean_s
+        );
+        sweep_json.insert(
+            threads.to_string(),
+            Json::obj(vec![
+                ("q8_us", Json::num(r.mean_s * 1e6)),
+                ("tokens_per_s_proxy", Json::num(1.0 / r.mean_s)),
+                ("speedup_vs_1t", Json::num(t1_mean / r.mean_s)),
+            ]),
+        );
+    }
+    // f32 fused single-thread baseline on the same layer, for the
+    // q8-vs-f32 acceptance ratio at serving size.
+    let rf_wide = bench("f32 wide", 2, 8, || {
+        lin.matvec(std::hint::black_box(&xw), &mut yw);
+    });
+    println!(
+        "matvec itq3_s f32 {srows}x{scols} 1t: {:>8.1} us   q8-vs-f32 {:.2}x   4t-vs-1t {:.2}x",
+        rf_wide.mean_s * 1e6,
+        rf_wide.mean_s / t1_mean,
+        t4_speedup
+    );
+    report.insert(
+        "thread_sweep".to_string(),
+        Json::obj(vec![
+            ("rows", Json::num(srows as f64)),
+            ("cols", Json::num(scols as f64)),
+            ("format", Json::str("itq3_s")),
+            ("fused_f32_1t_us", Json::num(rf_wide.mean_s * 1e6)),
+            ("q8_speedup_vs_f32_1t", Json::num(rf_wide.mean_s / t1_mean)),
+            ("q8_speedup_4t_vs_1t", Json::num(t4_speedup)),
+            ("threads", Json::Obj(sweep_json)),
+        ]),
+    );
+
+    let out = Json::Obj(report).to_string();
+    match std::fs::write("BENCH_matvec.json", &out) {
+        Ok(()) => println!("wrote BENCH_matvec.json"),
+        Err(e) => eprintln!("could not write BENCH_matvec.json: {e}"),
+    }
 }

@@ -13,9 +13,12 @@
 //! - **Layer 3** (this crate): the serving coordinator — request router,
 //!   continuous batcher, KV-cache manager — plus every substrate the
 //!   paper depends on: the FWHT, the full quantization format zoo
-//!   (ITQ3_S and all evaluated baselines), a GGUF-like model container,
-//!   a perplexity evaluator, and the PJRT runtime that executes the AOT
-//!   artifacts. Python never runs on the request path.
+//!   (ITQ3_S and all evaluated baselines), the W3A8 integer serving
+//!   kernels (`quant::act` + `Format::dot_block_q8`, the CPU analog of
+//!   the paper's DP4A MMQ/MMVQ pipeline) with row-sharded parallelism
+//!   (`util::threadpool`), a GGUF-like model container, a perplexity
+//!   evaluator, and the PJRT runtime that executes the AOT artifacts.
+//!   Python never runs on the request path.
 //!
 //! See `DESIGN.md` for the paper → module map and `EXPERIMENTS.md` for
 //! the reproduced tables.

@@ -17,7 +17,9 @@
 //! integration tests in `rust/tests/pjrt_parity.rs`.
 
 use super::{weights::PaddedLinear, DenseModel, KvCache, ModelConfig, QuantizedModel};
+use crate::quant::matmul::MatvecScratch;
 use crate::tensor::{matvec_accum, Tensor};
+use std::sync::Mutex;
 
 /// Engine abstraction shared by the native and PJRT backends.
 pub trait Engine: Send + Sync {
@@ -38,6 +40,14 @@ pub enum Weights {
 
 pub struct NativeEngine {
     pub weights: Weights,
+    /// Run quantized decode matvecs on the W3A8 integer path (default).
+    /// Disabled only for f32-path comparison baselines.
+    act_quant: bool,
+    /// Per-worker matvec scratch, reused across decode steps so the
+    /// MMVQ loop stops allocating (`x.to_vec()` + per-call Vecs) — the
+    /// coordinator drives one engine from one worker thread, so this
+    /// lock is uncontended.
+    scratch: Mutex<MatvecScratch>,
 }
 
 /// `x * w / rms(x)` into `out`.
@@ -91,13 +101,25 @@ enum Lin<'a> {
 }
 
 impl<'a> Lin<'a> {
-    fn matvec(&self, x: &[f32], y: &mut [f32]) {
+    /// Decode-path matvec. Quantized layers run the W3A8 integer kernels
+    /// when the format has a specialized `dot_block_q8` (the generic
+    /// fallback would be slower *and* noisier than f32) and `act_quant`
+    /// is on; otherwise the row-sharded fused f32 path — so every format
+    /// still gets the parallelism win, and `act_quant = false` gives the
+    /// numeric comparison baseline.
+    fn matvec(&self, x: &[f32], y: &mut [f32], scratch: &mut MatvecScratch, act_quant: bool) {
         match self {
             Lin::Dense(t) => {
                 y.fill(0.0);
                 matvec_accum(t, x, y);
             }
-            Lin::Quant(q) => q.matvec(x, y),
+            Lin::Quant(q) => {
+                if act_quant && q.has_q8_kernel() {
+                    q.matvec_q8(x, y, scratch);
+                } else {
+                    q.matvec_par(x, y, scratch);
+                }
+            }
         }
     }
 
@@ -124,11 +146,26 @@ struct LayerView<'a> {
 
 impl NativeEngine {
     pub fn dense(m: DenseModel) -> Self {
-        NativeEngine { weights: Weights::Dense(m) }
+        NativeEngine {
+            weights: Weights::Dense(m),
+            act_quant: true,
+            scratch: Mutex::new(MatvecScratch::new()),
+        }
     }
 
     pub fn quantized(m: QuantizedModel) -> Self {
-        NativeEngine { weights: Weights::Quant(m) }
+        NativeEngine {
+            weights: Weights::Quant(m),
+            act_quant: true,
+            scratch: Mutex::new(MatvecScratch::new()),
+        }
+    }
+
+    /// Toggle the W3A8 integer decode path (on by default). The f32 path
+    /// is kept as the numeric baseline for parity tests and ablations.
+    pub fn with_act_quant(mut self, on: bool) -> Self {
+        self.act_quant = on;
+        self
     }
 
     fn cfg(&self) -> &ModelConfig {
@@ -218,14 +255,19 @@ impl Engine for NativeEngine {
         let mut g3 = vec![0.0f32; cfg.ffn];
         let mut ff = vec![0.0f32; dim];
         let mut scores = vec![0.0f32; pos + 1];
+        // Engine-held matvec scratch: rotation copy, Q8 activation codes,
+        // padding buffer — warm after the first step, so the per-token
+        // MMVQ loop allocates nothing.
+        let mut mv = self.scratch.lock().expect("matvec scratch poisoned");
+        let aq = self.act_quant;
 
         for li in 0..cfg.n_layers {
             let l = self.layer(li);
             // --- attention ---
             rmsnorm(&x, l.attn_norm, cfg.eps, &mut h);
-            l.wq.matvec(&h, &mut q);
-            l.wk.matvec(&h, &mut k);
-            l.wv.matvec(&h, &mut v);
+            l.wq.matvec(&h, &mut q, &mut mv, aq);
+            l.wk.matvec(&h, &mut k, &mut mv, aq);
+            l.wv.matvec(&h, &mut v, &mut mv, aq);
             rope(&mut q, pos, nh, hd, cfg.rope_theta);
             rope(&mut k, pos, nh, hd, cfg.rope_theta);
             cache.write_kv(li, pos, &k, &v);
@@ -246,22 +288,23 @@ impl Engine for NativeEngine {
                     }
                 }
             }
-            l.wo.matvec(&attn, &mut o);
+            l.wo.matvec(&attn, &mut o, &mut mv, aq);
             for (xi, oi) in x.iter_mut().zip(&o) {
                 *xi += oi;
             }
             // --- SwiGLU FFN ---
             rmsnorm(&x, l.ffn_norm, cfg.eps, &mut h);
-            l.w1.matvec(&h, &mut g1);
-            l.w3.matvec(&h, &mut g3);
+            l.w1.matvec(&h, &mut g1, &mut mv, aq);
+            l.w3.matvec(&h, &mut g3, &mut mv, aq);
             for (a, &b) in g1.iter_mut().zip(&g3) {
                 *a = silu(*a) * b;
             }
-            l.w2.matvec(&g1, &mut ff);
+            l.w2.matvec(&g1, &mut ff, &mut mv, aq);
             for (xi, fi) in x.iter_mut().zip(&ff) {
                 *xi += fi;
             }
         }
+        drop(mv);
         cache.tokens.push(token);
         self.logits_for(&x)
     }
@@ -446,6 +489,51 @@ mod tests {
         let lq = quant.prefill(&mut cq, &tokens);
         let rel = crate::util::stats::rel_l2_err(ld.data(), lq.data());
         assert!(rel < 0.04, "rel={rel}");
+    }
+
+    #[test]
+    fn w3a8_decode_tracks_f32_decode() {
+        // The integer decode path must shift logits by well under the
+        // 1e-2 rel-L2 acceptance budget vs the fused f32 path on the
+        // same quantized weights.
+        let cfg = ModelConfig::test();
+        let dense = DenseModel::random(&cfg, 77, Some(5.0));
+        let fmt = format_by_name("itq3_s").unwrap();
+        let e_int = NativeEngine::quantized(QuantizedModel::quantize(&dense, fmt.clone()));
+        let e_f32 =
+            NativeEngine::quantized(QuantizedModel::quantize(&dense, fmt)).with_act_quant(false);
+        let toks = [0u32, 104, 101, 108, 108, 111, 32, 119];
+        let mut c1 = KvCache::new(e_int.config());
+        let mut c2 = KvCache::new(e_f32.config());
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for &t in &toks {
+            a = e_int.decode_step(&mut c1, t);
+            b = e_f32.decode_step(&mut c2, t);
+        }
+        let rel = crate::util::stats::rel_l2_err(&b, &a);
+        assert!(rel < 1e-2, "W3A8 decode rel-L2 {rel}");
+        // And the KV state they build must stay equally close.
+        let relk = crate::util::stats::rel_l2_err(c2.k_at(1, 3), c1.k_at(1, 3));
+        assert!(relk < 1e-2, "W3A8 KV rel-L2 {relk}");
+    }
+
+    #[test]
+    fn w3a8_decode_is_deterministic() {
+        // The integer path (with its row sharding and scratch reuse)
+        // must stay bit-deterministic across engines and repeated runs.
+        let cfg = ModelConfig::test();
+        let dense = DenseModel::random(&cfg, 78, Some(5.0));
+        let fmt = format_by_name("itq3_s").unwrap();
+        let e1 = NativeEngine::quantized(QuantizedModel::quantize(&dense, fmt.clone()));
+        let e2 = NativeEngine::quantized(QuantizedModel::quantize(&dense, fmt));
+        let mut c1 = KvCache::new(e1.config());
+        let mut c2 = KvCache::new(e2.config());
+        for &t in &[7u32, 7, 9] {
+            let a = e1.decode_step(&mut c1, t);
+            let b = e2.decode_step(&mut c2, t);
+            assert_eq!(a, b);
+        }
     }
 
     #[test]

@@ -4,9 +4,12 @@
 //! linears per layer (`wq wk wv wo w1 w2 w3`) are quantized; embeddings
 //! (tied with the LM head) and RMSNorm gains stay in high precision.
 
-use crate::quant::{matmul::QuantizedLinear, pad_cols, Format};
+use crate::quant::{
+    matmul::{MatvecScratch, QuantizedLinear},
+    pad_cols, Format,
+};
 use crate::tensor::Tensor;
-use crate::util::XorShift;
+use crate::util::{threadpool, XorShift};
 use std::sync::Arc;
 
 use super::ModelConfig;
@@ -112,6 +115,56 @@ impl PaddedLinear {
             let mut xp = vec![0.0f32; self.lin.in_dim()];
             xp[..self.logical_in].copy_from_slice(x);
             self.lin.matvec(&xp, y);
+        }
+    }
+
+    /// Whether this linear's format has a hand-specialized W3A8 kernel
+    /// (the engine only routes decode through the integer path if so).
+    pub fn has_q8_kernel(&self) -> bool {
+        self.lin.w.fmt.has_q8_kernel()
+    }
+
+    fn shards(&self) -> usize {
+        threadpool::suggested_shards(
+            self.lin.out_dim(),
+            self.lin.out_dim() * self.lin.in_dim(),
+        )
+    }
+
+    /// W3A8 integer matvec (the serving decode path): pads through the
+    /// caller's scratch, picks a row-shard count from the layer size, and
+    /// runs the fused integer kernels. Allocation-free once `scratch` is
+    /// warm.
+    pub fn matvec_q8(&self, x: &[f32], y: &mut [f32], scratch: &mut MatvecScratch) {
+        assert_eq!(x.len(), self.logical_in);
+        let shards = self.shards();
+        if self.lin.in_dim() == self.logical_in {
+            self.lin.matvec_q8(x, y, scratch, shards);
+        } else {
+            let mut xp = std::mem::take(&mut scratch.x_pad);
+            xp.clear();
+            xp.resize(self.lin.in_dim(), 0.0);
+            xp[..self.logical_in].copy_from_slice(x);
+            self.lin.matvec_q8(&xp, y, scratch, shards);
+            scratch.x_pad = xp;
+        }
+    }
+
+    /// Row-sharded fused f32 matvec — the decode path for formats
+    /// without a specialized integer kernel, and the `act_quant = false`
+    /// comparison baseline. Bit-identical to [`Self::matvec`].
+    pub fn matvec_par(&self, x: &[f32], y: &mut [f32], scratch: &mut MatvecScratch) {
+        assert_eq!(x.len(), self.logical_in);
+        let shards = self.shards();
+        if self.lin.in_dim() == self.logical_in {
+            self.lin.matvec_par(x, y, shards);
+        } else {
+            let mut xp = std::mem::take(&mut scratch.x_pad);
+            xp.clear();
+            xp.resize(self.lin.in_dim(), 0.0);
+            xp[..self.logical_in].copy_from_slice(x);
+            self.lin.matvec_par(&xp, y, shards);
+            scratch.x_pad = xp;
         }
     }
 
@@ -259,5 +312,20 @@ mod tests {
         for (a, b) in ym.row(0).iter().zip(&y) {
             assert!((a - b).abs() < 1e-4);
         }
+        // W3A8 path handles the same padding and tracks the f32 path.
+        let mut yq = vec![0.0f32; 8];
+        let mut scratch = MatvecScratch::new();
+        pl.matvec_q8(&x, &mut yq, &mut scratch);
+        let relq = crate::util::stats::rel_l2_err(&y, &yq);
+        assert!(relq < 0.05, "padded q8 rel={relq}");
+        // Scratch is reusable across differently-shaped linears.
+        let w2 = Tensor::randn(vec![4, 260], 0.05, &mut rng);
+        let pl2 = PaddedLinear::new(format_by_name("q8_0").unwrap(), &w2);
+        let x2: Vec<f32> = (0..260).map(|_| rng.next_f32() - 0.5).collect();
+        let mut y2 = vec![0.0f32; 4];
+        let mut y2q = vec![0.0f32; 4];
+        pl2.matvec(&x2, &mut y2);
+        pl2.matvec_q8(&x2, &mut y2q, &mut scratch);
+        assert!(crate::util::stats::rel_l2_err(&y2, &y2q) < 0.03);
     }
 }

@@ -1,0 +1,253 @@
+//! Activation quantization for the W3A8 integer serving path.
+//!
+//! The paper's fused MMQ/MMVQ kernels (§5.2/§5.4) run the hot dot
+//! products in *integer* arithmetic via DP4A: activations are quantized
+//! to int8 once per matvec, and each packed weight block is decoded
+//! straight into integer multiply-accumulates, with all scales folded
+//! into a single float multiply at the end. This module is the CPU
+//! analog's activation side (TWLA-style W3A8 post-training pairing):
+//!
+//! - [`QuantizedActs::quantize`] turns one (already rotated) activation
+//!   vector into per-block `{scale, i8 codes, code sum}` — the scale is
+//!   `amax/127` per *weight-format* block so it pairs one-to-one with
+//!   each weight block's own scale;
+//! - the precomputed per-block code sums make every zero-point term O(1)
+//!   per block (the same trick the f32 fused path uses with `x_sum`);
+//! - [`dot_i8`] is the shared i8·i8→i32 inner kernel, written with four
+//!   independent accumulators so the autovectorizer can emit the
+//!   SIMD widening-multiply-add pattern (the scalar analog of one DP4A
+//!   per 4 lanes).
+//!
+//! Quantizing each rotated block with its own scale is what makes W3A8
+//! benign here: the FWHT Gaussianizes the block (paper Thm 1), so
+//! `amax/rms` is small and int8 resolution loses well under 1% relative
+//! accuracy per dot product — see the parity tests in `quant::matmul`
+//! and `EXPERIMENTS.md §Perf`.
+
+/// One activation block in Q8 form, borrowed from a [`QuantizedActs`].
+#[derive(Clone, Copy)]
+pub struct ActBlock<'a> {
+    /// i8 codes, `block` of them; value ≈ `code * scale`.
+    pub codes: &'a [i8],
+    /// Dequantization scale (`amax / 127`; 0.0 for an all-zero block).
+    pub scale: f32,
+    /// Precomputed `Σ codes` (so zero-point terms cost O(1)).
+    pub sum: i32,
+}
+
+/// A full activation vector quantized to Q8 in per-block form. The
+/// buffers are reusable: [`QuantizedActs::quantize`] overwrites in place
+/// without reallocating once warmed up (decode-path scratch reuse).
+#[derive(Default)]
+pub struct QuantizedActs {
+    block: usize,
+    codes: Vec<i8>,
+    scales: Vec<f32>,
+    sums: Vec<i32>,
+}
+
+impl QuantizedActs {
+    pub fn new() -> Self {
+        QuantizedActs::default()
+    }
+
+    /// Total quantized elements.
+    pub fn len(&self) -> usize {
+        self.codes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
+    }
+
+    /// Elements per block (matches the paired weight format).
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.scales.len()
+    }
+
+    /// Quantize `x` (rotated domain) into per-`block` Q8 codes. `x.len()`
+    /// must be a multiple of `block` (guaranteed by `QuantizedMatrix`'s
+    /// column-alignment invariant).
+    pub fn quantize(&mut self, x: &[f32], block: usize) {
+        assert!(block > 0, "block must be positive");
+        assert_eq!(x.len() % block, 0, "len {} not a multiple of block {block}", x.len());
+        let nb = x.len() / block;
+        self.block = block;
+        self.codes.clear();
+        self.codes.resize(x.len(), 0);
+        self.scales.clear();
+        self.scales.resize(nb, 0.0);
+        self.sums.clear();
+        self.sums.resize(nb, 0);
+        for (b, chunk) in x.chunks_exact(block).enumerate() {
+            let dst = &mut self.codes[b * block..(b + 1) * block];
+            let (scale, sum) = quantize_block_q8(chunk, dst);
+            self.scales[b] = scale;
+            self.sums[b] = sum;
+        }
+    }
+
+    /// Borrow block `b`.
+    #[inline]
+    pub fn block_at(&self, b: usize) -> ActBlock<'_> {
+        ActBlock {
+            codes: &self.codes[b * self.block..(b + 1) * self.block],
+            scale: self.scales[b],
+            sum: self.sums[b],
+        }
+    }
+}
+
+/// Quantize one activation block to i8 codes with an `amax/127` scale.
+/// Returns `(scale, Σ codes)`.
+pub fn quantize_block_q8(x: &[f32], codes: &mut [i8]) -> (f32, i32) {
+    debug_assert_eq!(x.len(), codes.len());
+    let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if amax <= 0.0 {
+        codes.fill(0);
+        return (0.0, 0);
+    }
+    let scale = amax / 127.0;
+    let inv = 127.0 / amax;
+    let mut sum = 0i32;
+    for (c, &v) in codes.iter_mut().zip(x) {
+        let q = (v * inv).round().clamp(-127.0, 127.0) as i32;
+        *c = q as i8;
+        sum += q;
+    }
+    (scale, sum)
+}
+
+/// i8·i8 → i32 dot product, 4-way split accumulators (autovectorizes to
+/// the widening multiply-add SIMD pattern — the DP4A analog).
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0i32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = 4 * i;
+        acc[0] += a[j] as i32 * b[j] as i32;
+        acc[1] += a[j + 1] as i32 * b[j + 1] as i32;
+        acc[2] += a[j + 2] as i32 * b[j + 2] as i32;
+        acc[3] += a[j + 3] as i32 * b[j + 3] as i32;
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for j in chunks * 4..a.len() {
+        s += a[j] as i32 * b[j] as i32;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::{stats, XorShift};
+
+    #[test]
+    fn roundtrip_error_is_subpercent_on_gaussian() {
+        let mut rng = XorShift::new(1);
+        let x: Vec<f32> = (0..256).map(|_| rng.next_gaussian() as f32 * 0.3).collect();
+        let mut codes = vec![0i8; 256];
+        let (scale, sum) = quantize_block_q8(&x, &mut codes);
+        let recon: Vec<f32> = codes.iter().map(|&c| c as f32 * scale).collect();
+        let rel = stats::rel_l2_err(&x, &recon);
+        assert!(rel < 0.01, "rel={rel}");
+        assert_eq!(sum, codes.iter().map(|&c| c as i32).sum::<i32>());
+    }
+
+    #[test]
+    fn zero_block_is_exact() {
+        let x = vec![0.0f32; 64];
+        let mut codes = vec![7i8; 64];
+        let (scale, sum) = quantize_block_q8(&x, &mut codes);
+        assert_eq!(scale, 0.0);
+        assert_eq!(sum, 0);
+        assert!(codes.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn codes_saturate_at_127() {
+        let x = [1.0f32, -1.0, 0.5, 0.0];
+        let mut codes = [0i8; 4];
+        quantize_block_q8(&x, &mut codes);
+        assert_eq!(codes[0], 127);
+        assert_eq!(codes[1], -127);
+        assert_eq!(codes[2], 64); // 0.5 * 127 = 63.5 rounds to 64
+        assert_eq!(codes[3], 0);
+    }
+
+    #[test]
+    fn quantized_acts_blocks_are_independent() {
+        let mut rng = XorShift::new(2);
+        // Two blocks with wildly different magnitudes: per-block scales
+        // must keep both accurate.
+        let mut x: Vec<f32> = (0..64).map(|_| rng.next_gaussian() as f32 * 10.0).collect();
+        x.extend((0..64).map(|_| rng.next_gaussian() as f32 * 0.001));
+        let mut acts = QuantizedActs::new();
+        acts.quantize(&x, 64);
+        assert_eq!(acts.n_blocks(), 2);
+        assert_eq!(acts.len(), 128);
+        for b in 0..2 {
+            let blk = acts.block_at(b);
+            let recon: Vec<f32> =
+                blk.codes.iter().map(|&c| c as f32 * blk.scale).collect();
+            let rel = stats::rel_l2_err(&x[b * 64..(b + 1) * 64], &recon);
+            assert!(rel < 0.01, "block {b}: rel={rel}");
+        }
+        assert!(acts.block_at(0).scale > 100.0 * acts.block_at(1).scale);
+    }
+
+    #[test]
+    fn quantize_reuses_buffers() {
+        let mut acts = QuantizedActs::new();
+        acts.quantize(&[1.0f32; 512], 256);
+        let cap = (acts.codes.capacity(), acts.scales.capacity());
+        acts.quantize(&[-2.0f32; 512], 256);
+        assert_eq!((acts.codes.capacity(), acts.scales.capacity()), cap);
+        assert_eq!(acts.block_at(1).sum, 256 * -127);
+    }
+
+    #[test]
+    fn dot_i8_matches_reference() {
+        let mut rng = XorShift::new(3);
+        for n in [0usize, 1, 3, 4, 31, 32, 256] {
+            let a: Vec<i8> = (0..n).map(|_| (rng.next_below(255) as i32 - 127) as i8).collect();
+            let b: Vec<i8> = (0..n).map(|_| (rng.next_below(255) as i32 - 127) as i8).collect();
+            let want: i32 = a.iter().zip(&b).map(|(&x, &y)| x as i32 * y as i32).sum();
+            assert_eq!(dot_i8(&a, &b), want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn prop_quantized_dot_tracks_f32_dot() {
+        // The W3A8 premise: Q8 activations preserve dot products to well
+        // under 1% relative error on Gaussian-ish blocks.
+        forall("q8 activation dot fidelity", 80, |g| {
+            let n = 8 * g.usize_in(4, 64);
+            let x: Vec<f32> = (0..n).map(|_| g.gaussian_f32(0.5)).collect();
+            let w: Vec<f32> = (0..n).map(|_| g.gaussian_f32(0.1)).collect();
+            let mut codes = vec![0i8; n];
+            let (scale, _) = quantize_block_q8(&x, &mut codes);
+            let exact: f64 = w.iter().zip(&x).map(|(&a, &b)| (a * b) as f64).sum();
+            let approx: f64 = w
+                .iter()
+                .zip(&codes)
+                .map(|(&a, &c)| (a * c as f32 * scale) as f64)
+                .sum();
+            let wn = stats::l2(&w);
+            let xn = stats::l2(&x);
+            // |err| <= ||w|| * ||x_err||, with ||x_err|| <= scale/2 * sqrt(n).
+            let bound = wn * (scale as f64) * 0.5 * (n as f64).sqrt() + 1e-6;
+            assert!(
+                (exact - approx).abs() <= bound.max(1e-4 * wn * xn),
+                "n={n} exact={exact} approx={approx} bound={bound}"
+            );
+        });
+    }
+}

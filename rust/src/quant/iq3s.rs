@@ -117,6 +117,50 @@ impl Format for Iq3S {
         }
         acc[0] + acc[1] + z * x_sum
     }
+
+    fn has_q8_kernel(&self) -> bool {
+        true
+    }
+
+    /// W3A8 integer fused dot: same ternary-level unpack as ITQ3_S but
+    /// with the per-sub-block scale applied at the i32→f32 boundary of
+    /// each 32-element sub-block; the global zero-point term reuses the
+    /// precomputed activation code sum. |acc| ≤ 32·3·127 ≈ 1.2e4 per
+    /// sub-block: no overflow.
+    fn dot_block_q8(
+        &self,
+        _idx: u64,
+        bytes: &[u8],
+        act: super::act::ActBlock<'_>,
+        _scratch: &mut Vec<f32>,
+    ) -> f32 {
+        let n = self.n;
+        debug_assert_eq!(bytes.len(), self.block_bytes());
+        debug_assert_eq!(act.codes.len(), n);
+        let planes = n * 3 / 8;
+        let z = read_f16(bytes, planes);
+        let base = &bytes[..n / 4];
+        let sel = &bytes[n / 4..planes];
+        const LUT: [i8; 8] = [-1, 0, 1, 0, -3, 0, 3, 0];
+        let gsub = self.sub / 8;
+        let mut total = 0.0f32;
+        for s in 0..self.nsub() {
+            let ds = read_f16(bytes, planes + 2 + 2 * s);
+            let mut acc = 0i32;
+            for g in 0..gsub {
+                let gi = s * gsub + g;
+                let codes = u16::from_le_bytes([base[2 * gi], base[2 * gi + 1]]) as usize;
+                let sb = sel[gi] as usize;
+                let xs = &act.codes[gi * 8..gi * 8 + 8];
+                for (j, &xj) in xs.iter().enumerate() {
+                    let idx = ((codes >> (2 * j)) & 3) | (((sb >> j) & 1) << 2);
+                    acc += LUT[idx] as i32 * xj as i32;
+                }
+            }
+            total += ds * acc as f32;
+        }
+        (total + z * act.sum as f32) * act.scale
+    }
 }
 
 #[cfg(test)]

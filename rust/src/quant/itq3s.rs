@@ -180,6 +180,47 @@ impl Format for Itq3S {
         // Zero-point term via the precomputed activation sum (O(1)).
         acc[0] + acc[1] + z * x_sum
     }
+
+    fn has_q8_kernel(&self) -> bool {
+        true
+    }
+
+    /// W3A8 integer fused dot (the DP4A analog, §5.4): the 2-bit ternary
+    /// digits + selector bits decode to i8 levels `{0,±1,±3}` which
+    /// multiply-accumulate in i32 against the i8 activation codes; the
+    /// grid step `d` and activation scale fold into one final f32
+    /// multiply, and the zero-point term reuses the precomputed code
+    /// sum. Two phases — scalar unpack into an i8 register block, then
+    /// [`super::act::dot_i8`] — so the MAC loop autovectorizes.
+    /// Worst-case |acc| = n·3·127·127 ≈ 2.5e7 at n=512: no i32 overflow.
+    fn dot_block_q8(
+        &self,
+        _idx: u64,
+        bytes: &[u8],
+        act: super::act::ActBlock<'_>,
+        _scratch: &mut Vec<f32>,
+    ) -> f32 {
+        let n = self.n;
+        debug_assert_eq!(bytes.len(), self.block_bytes());
+        debug_assert_eq!(act.codes.len(), n);
+        let d = read_f16(bytes, n * 3 / 8);
+        let z = read_f16(bytes, n * 3 / 8 + 2);
+        let base = &bytes[..n / 4];
+        let sel = &bytes[n / 4..n * 3 / 8];
+        const LUT: [i8; 8] = [-1, 0, 1, 0, -3, 0, 3, 0];
+        let mut lv = [0i8; 512];
+        let lv = &mut lv[..n];
+        for g in 0..n / 8 {
+            let codes = u16::from_le_bytes([base[2 * g], base[2 * g + 1]]) as usize;
+            let s = sel[g] as usize;
+            let o = &mut lv[g * 8..g * 8 + 8];
+            for (j, oj) in o.iter_mut().enumerate() {
+                *oj = LUT[((codes >> (2 * j)) & 3) | (((s >> j) & 1) << 2)];
+            }
+        }
+        let acc = super::act::dot_i8(lv, act.codes);
+        acc as f32 * (d * act.scale) + z * (act.scale * act.sum as f32)
+    }
 }
 
 /// ITQ3_S sub-scale variant (paper §4.1 "Sub-block scales"): adds eight

@@ -1,27 +1,61 @@
 //! Quantized linear algebra — the serving hot path (L3's analog of the
 //! paper's fused MMQ/MMVQ CUDA kernels, §5.2/§5.4).
 //!
-//! Two evaluation strategies:
+//! Three evaluation strategies:
 //!
 //! - **naive**: dequantize every weight block to the original domain
 //!   (inverse FWHT per block per use) and dot with raw activations — the
 //!   paper's Alg 2 executed literally. O(rows·blocks·(n + n·log n)).
-//! - **fused** (default): exploit `dot(Hw, Hx) = dot(w, x)` — rotate each
-//!   *activation* block once per matvec, then dot raw (still-rotated)
-//!   weight grids against rotated activations. The inverse transform
-//!   disappears from the per-row loop entirely: O(cols·log n) once plus
-//!   O(rows·cols) of pure dot products. This is the CPU realization of
-//!   "fusing the IFWHT into the load stage" and is benchmarked against
-//!   naive in `benches/micro_kernels.rs` and EXPERIMENTS.md §Perf.
+//! - **fused f32** ([`QuantizedLinear::matvec`]): exploit
+//!   `dot(Hw, Hx) = dot(w, x)` — rotate each *activation* block once per
+//!   matvec, then dot raw (still-rotated) weight grids against rotated
+//!   activations. The inverse transform disappears from the per-row loop
+//!   entirely: O(cols·log n) once plus O(rows·cols) of pure dot products.
+//! - **fused W3A8 integer** ([`QuantizedLinear::matvec_q8`], default on
+//!   the decode path): additionally quantize the rotated activations to
+//!   int8 once per matvec ([`super::act`]) and run every per-block dot in
+//!   i32 via [`super::Format::dot_block_q8`] — the CPU realization of the
+//!   paper's DP4A pipeline, with all scales folded into one final f32
+//!   multiply per block.
+//!
+//! Both fused paths row-shard across cores via [`crate::util::threadpool`]
+//! (bit-identical to single-threaded — see
+//! `tests::parallel_matvec_bit_identical`). Before/after numbers live in
+//! `benches/micro_kernels.rs` and EXPERIMENTS.md §Perf.
+//!
+//! All variants walk packed blocks through one shared helper
+//! (`for_each_row_block`), so block-indexing logic cannot drift between
+//! them.
 
+use super::act::QuantizedActs;
 use super::{Format, QuantizedMatrix};
 use crate::tensor::Tensor;
+use crate::util::threadpool;
 use std::sync::Arc;
 
 /// A quantized weight matrix `(out_dim, in_dim)` with the scratch needed
 /// to apply it. Cloneable view — scratch is allocated per call site.
 pub struct QuantizedLinear {
     pub w: QuantizedMatrix,
+}
+
+/// Reusable per-caller scratch for the fused matvec paths: the rotated
+/// activation copy, its Q8 form, a padding staging buffer, and the
+/// fallback-format dequant buffer. Carrying one of these across calls
+/// (the engine holds one per worker) removes every per-matvec allocation
+/// from the decode loop.
+#[derive(Default)]
+pub struct MatvecScratch {
+    pub(crate) x_rot: Vec<f32>,
+    pub(crate) x_pad: Vec<f32>,
+    pub(crate) acts: QuantizedActs,
+    pub(crate) tmp: Vec<f32>,
+}
+
+impl MatvecScratch {
+    pub fn new() -> Self {
+        MatvecScratch::default()
+    }
 }
 
 /// Dot product with 4-way accumulator splitting (helps the autovectorizer
@@ -58,6 +92,47 @@ impl QuantizedLinear {
         self.w.cols
     }
 
+    /// Walk the packed blocks of row `r`: `f(block_in_row, rotation_idx,
+    /// block_bytes)`. The single place that maps (row, block) to packed
+    /// bytes and rotation index — every matvec/matmul variant iterates
+    /// through here, so their block-indexing logic cannot drift.
+    #[inline]
+    fn for_each_row_block(&self, r: usize, mut f: impl FnMut(usize, u64, &[u8])) {
+        let bb = self.w.fmt.block_bytes();
+        let bpr = self.w.blocks_per_row();
+        let row = &self.w.data[r * bpr * bb..(r + 1) * bpr * bb];
+        for b in 0..bpr {
+            f(b, self.w.block_idx(r, b), &row[b * bb..(b + 1) * bb]);
+        }
+    }
+
+    /// One output row of the fused f32 path (the per-row MMVQ loop).
+    #[inline]
+    fn fused_row(&self, r: usize, x_rot: &[f32], xsums: &[f32], tmp: &mut Vec<f32>) -> f32 {
+        let be = self.w.fmt.block_elems();
+        let mut acc = 0.0f32;
+        self.for_each_row_block(r, |b, idx, bytes| {
+            acc += self.w.fmt.dot_block_raw(
+                idx,
+                bytes,
+                &x_rot[b * be..(b + 1) * be],
+                xsums[b],
+                tmp,
+            );
+        });
+        acc
+    }
+
+    /// One output row of the W3A8 integer path.
+    #[inline]
+    fn q8_row(&self, r: usize, acts: &QuantizedActs, tmp: &mut Vec<f32>) -> f32 {
+        let mut acc = 0.0f32;
+        self.for_each_row_block(r, |b, idx, bytes| {
+            acc += self.w.fmt.dot_block_q8(idx, bytes, acts.block_at(b), tmp);
+        });
+        acc
+    }
+
     /// Rotate a full activation vector into the storage domain, block by
     /// block (no-op for unrotated formats). The block ordinal passed to
     /// the format is the *column* block index: every weight row uses the
@@ -75,44 +150,101 @@ impl QuantizedLinear {
         }
     }
 
-    /// Fused matvec: `y = W x`. `x` is consumed in the *rotated* domain —
-    /// call [`Self::rotate_activations`] first (or use [`Self::matvec`]).
+    /// Per-block activation sums, shared by every weight row (the
+    /// zero-point contribution of a block is `z * sum(x_block)`).
+    fn block_sums(&self, x_rot: &[f32]) -> Vec<f32> {
+        let be = self.w.fmt.block_elems();
+        x_rot.chunks_exact(be).map(|c| c.iter().sum::<f32>()).collect()
+    }
+
+    /// Fused f32 matvec: `y = W x`. `x` is consumed in the *rotated*
+    /// domain — call [`Self::rotate_activations`] first (or use
+    /// [`Self::matvec`]). Single-threaded; `scratch` backs the generic
+    /// per-block fallback for formats without a specialized kernel.
     pub fn matvec_rotated(&self, x_rot: &[f32], y: &mut [f32], scratch: &mut Vec<f32>) {
         assert_eq!(x_rot.len(), self.in_dim());
         assert_eq!(y.len(), self.out_dim());
-        let be = self.w.fmt.block_elems();
-        let bb = self.w.fmt.block_bytes();
-        let bpr = self.w.blocks_per_row();
-        // Per-block activation sums, shared by every weight row (the
-        // zero-point contribution of a block is z * sum(x_block)).
-        let xsums: Vec<f32> = x_rot
-            .chunks_exact(be)
-            .map(|c| c.iter().sum::<f32>())
-            .collect();
+        let xsums = self.block_sums(x_rot);
         for (r, yo) in y.iter_mut().enumerate() {
-            let row_bytes = &self.w.data[r * bpr * bb..(r + 1) * bpr * bb];
-            let mut acc = 0.0f32;
-            for b in 0..bpr {
-                // Fused unpack+dot per block (formats specialize this —
-                // the MMVQ hot loop; see §Perf).
-                acc += self.w.fmt.dot_block_raw(
-                    b as u64,
-                    &row_bytes[b * bb..(b + 1) * bb],
-                    &x_rot[b * be..(b + 1) * be],
-                    xsums[b],
-                    scratch,
-                );
-            }
-            *yo = acc;
+            *yo = self.fused_row(r, x_rot, &xsums, scratch);
         }
     }
 
-    /// Convenience fused matvec on raw activations.
+    /// Convenience fused f32 matvec on raw activations (single-threaded,
+    /// allocating — kept for tests and cold paths; the serving path is
+    /// [`Self::matvec_q8`]).
     pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
         let mut xr = x.to_vec();
         self.rotate_activations(&mut xr);
         let mut scratch = Vec::new();
         self.matvec_rotated(&xr, y, &mut scratch);
+    }
+
+    /// Row-sharded fused f32 matvec: output rows are partitioned into
+    /// `shards` contiguous ranges run on the shared scoped-thread pool.
+    /// Bit-identical to [`Self::matvec`] for any shard count.
+    pub fn matvec_par(&self, x: &[f32], y: &mut [f32], shards: usize) {
+        assert_eq!(x.len(), self.in_dim());
+        assert_eq!(y.len(), self.out_dim());
+        let mut xr = x.to_vec();
+        self.rotate_activations(&mut xr);
+        let xsums = self.block_sums(&xr);
+        threadpool::parallel_rows(y, shards, |row0, ys| {
+            let mut tmp = Vec::new();
+            for (dr, yo) in ys.iter_mut().enumerate() {
+                *yo = self.fused_row(row0 + dr, &xr, &xsums, &mut tmp);
+            }
+        });
+    }
+
+    /// W3A8 integer fused matvec (the serving decode path): rotate the
+    /// activations once, quantize them to per-block Q8 once, then run
+    /// every per-block dot in integer domain via
+    /// [`Format::dot_block_q8`], row-sharded across `shards` threads.
+    /// All buffers live in `scratch` — zero allocation once warm.
+    pub fn matvec_q8(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        scratch: &mut MatvecScratch,
+        shards: usize,
+    ) {
+        assert_eq!(x.len(), self.in_dim());
+        assert_eq!(y.len(), self.out_dim());
+        scratch.x_rot.clear();
+        scratch.x_rot.extend_from_slice(x);
+        self.rotate_activations(&mut scratch.x_rot);
+        let be = self.w.fmt.block_elems();
+        scratch.acts.quantize(&scratch.x_rot, be);
+        self.matvec_q8_acts(&scratch.acts, y, &mut scratch.tmp, shards);
+    }
+
+    /// Integer matvec core against pre-quantized activations (shared by
+    /// the decode path and the batched prefill path, which quantizes each
+    /// batch row's activations once and reuses them across weight rows).
+    pub fn matvec_q8_acts(
+        &self,
+        acts: &QuantizedActs,
+        y: &mut [f32],
+        tmp: &mut Vec<f32>,
+        shards: usize,
+    ) {
+        assert_eq!(acts.len(), self.in_dim());
+        assert_eq!(acts.block(), self.w.fmt.block_elems());
+        assert_eq!(y.len(), self.out_dim());
+        if shards <= 1 {
+            for (r, yo) in y.iter_mut().enumerate() {
+                *yo = self.q8_row(r, acts, tmp);
+            }
+            return;
+        }
+        threadpool::parallel_rows(y, shards, |row0, ys| {
+            // Per-shard fallback buffer (only generic formats touch it).
+            let mut tmp = Vec::new();
+            for (dr, yo) in ys.iter_mut().enumerate() {
+                *yo = self.q8_row(row0 + dr, acts, &mut tmp);
+            }
+        });
     }
 
     /// Naive matvec: dequantize each block to the original domain
@@ -123,47 +255,63 @@ impl QuantizedLinear {
         assert_eq!(y.len(), self.out_dim());
         let be = self.w.fmt.block_elems();
         let mut buf = vec![0.0f32; be];
-        let bpr = self.w.blocks_per_row();
         for (r, yo) in y.iter_mut().enumerate() {
             let mut acc = 0.0f32;
-            for b in 0..bpr {
-                let idx = self.w.block_idx(r, b);
-                self.w.fmt.dequantize_block(idx, self.w.block_bytes(r, b), &mut buf);
+            self.for_each_row_block(r, |b, idx, bytes| {
+                self.w.fmt.dequantize_block(idx, bytes, &mut buf);
                 acc += dot(&buf, &x[b * be..(b + 1) * be]);
-            }
+            });
             *yo = acc;
         }
     }
 
     /// Fused batched matmul: `Y = X Wᵀ` for `X: (batch, in)`, returning
     /// `(batch, out)`. Each weight block is dequantized **once** and
-    /// reused across the whole batch — the prefill-path optimization that
-    /// Table 2 attributes to the interleaved layout.
+    /// reused across the whole batch — the prefill-path (MMQ)
+    /// optimization that Table 2 attributes to the interleaved layout —
+    /// with weight rows sharded across the thread pool.
     pub fn matmul(&self, x: &Tensor) -> Tensor {
+        let shards = threadpool::suggested_shards(
+            self.w.rows,
+            self.w.rows * self.w.cols * x.rows().max(1),
+        );
+        self.matmul_sharded(x, shards)
+    }
+
+    /// [`Self::matmul`] with an explicit shard count (benches, tests).
+    /// Bit-identical to the single-shard result for any `shards`.
+    pub fn matmul_sharded(&self, x: &Tensor, shards: usize) -> Tensor {
         assert_eq!(x.cols(), self.in_dim());
         let batch = x.rows();
+        let rows = self.w.rows;
+        if batch == 0 {
+            return Tensor::zeros(vec![0, self.out_dim()]);
+        }
         let be = self.w.fmt.block_elems();
-        let bpr = self.w.blocks_per_row();
         // Rotate all activation rows once.
         let mut xr = x.clone();
         for t in 0..batch {
             self.rotate_activations(xr.row_mut(t));
         }
-        let mut out = Tensor::zeros(vec![batch, self.out_dim()]);
-        let mut buf = vec![0.0f32; be];
-        let bb = self.w.fmt.block_bytes();
-        for r in 0..self.w.rows {
-            for b in 0..bpr {
-                let idx = b as u64;
-                self.w.fmt.dequantize_block_raw(
-                    idx,
-                    &self.w.data[(r * bpr + b) * bb..(r * bpr + b + 1) * bb],
-                    &mut buf,
-                );
-                for t in 0..batch {
-                    let xa = &xr.row(t)[b * be..(b + 1) * be];
-                    out.row_mut(t)[r] += dot(&buf, xa);
-                }
+        // Accumulate transposed — (rows, batch) — so each weight-row
+        // shard owns a contiguous slab; transpose once at the end.
+        let mut yt = vec![0.0f32; rows * batch];
+        threadpool::parallel_chunks(&mut yt, batch, shards, |r0, slab| {
+            let mut buf = vec![0.0f32; be];
+            for (dr, yrow) in slab.chunks_exact_mut(batch).enumerate() {
+                self.for_each_row_block(r0 + dr, |b, idx, bytes| {
+                    self.w.fmt.dequantize_block_raw(idx, bytes, &mut buf);
+                    for (t, yo) in yrow.iter_mut().enumerate() {
+                        let xa = &xr.row(t)[b * be..(b + 1) * be];
+                        *yo += dot(&buf, xa);
+                    }
+                });
+            }
+        });
+        let mut out = Tensor::zeros(vec![batch, rows]);
+        for (r, yrow) in yt.chunks_exact(batch).enumerate() {
+            for (t, &v) in yrow.iter().enumerate() {
+                out.row_mut(t)[r] = v;
             }
         }
         out
@@ -174,6 +322,7 @@ impl QuantizedLinear {
 mod tests {
     use super::*;
     use crate::quant::format_by_name;
+    use crate::util::prop::forall;
     use crate::util::{stats, XorShift};
 
     fn test_weight(rows: usize, cols: usize, seed: u64) -> Tensor {
@@ -183,6 +332,17 @@ mod tests {
             *x = (rng.next_student_t(5.0) as f32) * 0.02;
         }
         t
+    }
+
+    /// Tolerance of the W3A8 path vs the fused f32 path, per format.
+    /// The only error source is int8 activation resolution (~0.5% per
+    /// dot on rotated/Gaussianized blocks), so these are generous.
+    fn w3a8_tol(name: &str) -> f64 {
+        match name {
+            "fp16" | "q8_0" => 0.02,
+            "q4_k_m" | "iq4_xs" => 0.03,
+            _ => 0.05, // 3-bit formats
+        }
     }
 
     #[test]
@@ -214,6 +374,99 @@ mod tests {
     }
 
     #[test]
+    fn w3a8_matches_f32_fused_all_formats() {
+        // The acceptance parity check: the integer path tracks the f32
+        // fused path within the activation-quantization tolerance on
+        // every Table-1 format.
+        let w = test_weight(16, 512, 12);
+        let mut rng = XorShift::new(13);
+        let x: Vec<f32> = (0..512).map(|_| rng.next_f32() - 0.5).collect();
+        for name in crate::quant::TABLE1_FORMATS {
+            let lin = QuantizedLinear::new(format_by_name(name).unwrap(), &w);
+            let mut y_f32 = vec![0.0f32; 16];
+            let mut y_q8 = vec![0.0f32; 16];
+            lin.matvec(&x, &mut y_f32);
+            let mut scratch = MatvecScratch::new();
+            lin.matvec_q8(&x, &mut y_q8, &mut scratch, 1);
+            let rel = stats::rel_l2_err(&y_f32, &y_q8);
+            assert!(rel < w3a8_tol(name), "{name}: rel={rel}");
+        }
+    }
+
+    #[test]
+    fn prop_w3a8_tracks_f32_on_heavy_tails() {
+        // Property form of the parity check: heavy-tailed weights and
+        // varied activations, all Table-1 formats, shared scratch.
+        forall("W3A8 matches fused f32 per format", 12, |g| {
+            let rows = 4;
+            let cols = 512;
+            let mut w = Tensor::zeros(vec![rows, cols]);
+            for v in w.data_mut() {
+                *v = g.gaussian_f32(0.02)
+                    + if g.f32_in(0.0, 1.0) < 0.01 {
+                        g.f32_in(5.0, 20.0) * 0.02 * g.sign()
+                    } else {
+                        0.0
+                    };
+            }
+            let x = g.vec_f32(cols, -1.0, 1.0);
+            let mut scratch = MatvecScratch::new();
+            for name in crate::quant::TABLE1_FORMATS {
+                let lin = QuantizedLinear::new(format_by_name(name).unwrap(), &w);
+                let mut y_f32 = vec![0.0f32; rows];
+                let mut y_q8 = vec![0.0f32; rows];
+                lin.matvec(&x, &mut y_f32);
+                lin.matvec_q8(&x, &mut y_q8, &mut scratch, 1);
+                let rel = stats::rel_l2_err(&y_f32, &y_q8);
+                assert!(rel < w3a8_tol(name), "{name}: rel={rel}");
+            }
+        });
+    }
+
+    #[test]
+    fn parallel_matvec_bit_identical() {
+        // Row sharding must not change a single bit of the output, for
+        // both the f32 and the W3A8 integer paths.
+        let w = test_weight(37, 1024, 21); // odd row count: uneven shards
+        let mut rng = XorShift::new(22);
+        let x: Vec<f32> = (0..1024).map(|_| rng.next_f32() - 0.5).collect();
+        for name in ["itq3_s", "q8_0", "q4_k_m"] {
+            let lin = QuantizedLinear::new(format_by_name(name).unwrap(), &w);
+            let mut y1 = vec![0.0f32; 37];
+            lin.matvec_par(&x, &mut y1, 1);
+            for shards in [2usize, 3, 8] {
+                let mut yn = vec![0.0f32; 37];
+                lin.matvec_par(&x, &mut yn, shards);
+                assert_eq!(y1, yn, "{name} f32 path, shards={shards}");
+            }
+            let mut scratch = MatvecScratch::new();
+            let mut q1 = vec![0.0f32; 37];
+            lin.matvec_q8(&x, &mut q1, &mut scratch, 1);
+            for shards in [2usize, 5, 8] {
+                let mut qn = vec![0.0f32; 37];
+                lin.matvec_q8(&x, &mut qn, &mut scratch, shards);
+                assert_eq!(q1, qn, "{name} q8 path, shards={shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_sharded_bit_identical() {
+        let w = test_weight(24, 512, 31);
+        let lin = QuantizedLinear::new(format_by_name("itq3_s").unwrap(), &w);
+        let mut rng = XorShift::new(32);
+        let mut x = Tensor::zeros(vec![3, 512]);
+        for v in x.data_mut() {
+            *v = rng.next_f32() - 0.5;
+        }
+        let y1 = lin.matmul_sharded(&x, 1);
+        for shards in [2usize, 4, 7] {
+            let yn = lin.matmul_sharded(&x, shards);
+            assert_eq!(y1.data(), yn.data(), "shards={shards}");
+        }
+    }
+
+    #[test]
     fn quantized_matvec_approximates_dense() {
         let w = test_weight(32, 512, 4);
         let mut rng = XorShift::new(5);
@@ -229,6 +482,12 @@ mod tests {
             lin.matvec(&x, &mut y);
             let rel = stats::rel_l2_err(&y_ref, &y);
             assert!(rel < tol, "{name}: rel={rel}");
+            // The W3A8 path must stay within the same budget.
+            let mut yq = vec![0.0f32; 32];
+            let mut scratch = MatvecScratch::new();
+            lin.matvec_q8(&x, &mut yq, &mut scratch, 1);
+            let relq = stats::rel_l2_err(&y_ref, &yq);
+            assert!(relq < tol + 0.02, "{name} q8: rel={relq}");
         }
     }
 
@@ -250,6 +509,14 @@ mod tests {
                 assert!((a - b).abs() < 1e-3, "row {t}");
             }
         }
+    }
+
+    #[test]
+    fn empty_batch_matmul() {
+        let w = test_weight(8, 256, 8);
+        let lin = QuantizedLinear::new(format_by_name("itq3_s").unwrap(), &w);
+        let y = lin.matmul(&Tensor::zeros(vec![0, 256]));
+        assert_eq!(y.shape(), &[0, 8]);
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! be a multiple of the block size; §8 "non-power-of-two layers" is
 //! handled by [`pad_cols`]).
 
+pub mod act;
 pub mod error;
 pub mod fp16q;
 pub mod iq3s;
@@ -96,6 +97,44 @@ pub trait Format: Send + Sync {
         scratch.resize(self.block_elems(), 0.0);
         self.dequantize_block_raw(idx, bytes, scratch);
         matmul::dot(scratch, x)
+    }
+
+    /// Whether [`Format::dot_block_q8`] is a hand-specialized integer
+    /// kernel (true for the hot serving formats). The engine's decode
+    /// path only routes through W3A8 when this is set — the generic
+    /// fallback below is *slower* than the fused f32 path (it
+    /// reconstructs the activation block per weight row) and would add
+    /// activation-quantization error for no benefit.
+    fn has_q8_kernel(&self) -> bool {
+        false
+    }
+
+    /// Integer-domain fused dot of one packed weight block against one
+    /// Q8-quantized activation block — the CPU analog of the paper's
+    /// DP4A MMVQ inner loop (§5.4): weight codes are decoded straight
+    /// into i32 multiply-accumulates against the i8 activation codes,
+    /// and the weight scale `d` and activation scale `act.scale` fold
+    /// into a single f32 multiply at the end. `act.sum` (Σ codes,
+    /// precomputed once per matvec) keeps zero-point terms O(1). Hot
+    /// formats override with hand-specialized kernels; this default
+    /// reconstructs the activations into `scratch` and falls back to the
+    /// f32 path, so every format is W3A8-callable.
+    fn dot_block_q8(
+        &self,
+        idx: u64,
+        bytes: &[u8],
+        act: act::ActBlock<'_>,
+        scratch: &mut Vec<f32>,
+    ) -> f32 {
+        let be = self.block_elems();
+        debug_assert_eq!(act.codes.len(), be);
+        scratch.resize(2 * be, 0.0);
+        let (xf, wf) = scratch.split_at_mut(be);
+        for (o, &c) in xf.iter_mut().zip(act.codes) {
+            *o = c as f32 * act.scale;
+        }
+        self.dequantize_block_raw(idx, bytes, wf);
+        matmul::dot(wf, xf)
     }
 
     /// Effective bits per weight, including metadata.
@@ -248,6 +287,25 @@ mod tests {
         assert!(format_by_name("nope").is_none());
         assert!(format_by_name("itq3_s@64").is_some());
         assert!(format_by_name("itq3_s@100").is_none());
+    }
+
+    #[test]
+    fn q8_kernels_cover_exactly_the_hot_formats() {
+        // The engine gates W3A8 decode on this capability; the generic
+        // fallback must stay off the serving path.
+        for (name, want) in [
+            ("itq3_s", true),
+            ("iq3_s", true),
+            ("q4_k_m", true),
+            ("q8_0", true),
+            ("fp16", false),
+            ("iq4_xs", false),
+            ("quip3", false),
+            ("itq3_s_sub", false),
+        ] {
+            let f = format_by_name(name).unwrap();
+            assert_eq!(f.has_q8_kernel(), want, "{name}");
+        }
     }
 
     #[test]

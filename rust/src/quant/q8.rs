@@ -5,6 +5,7 @@
 use super::packing::*;
 use super::Format;
 
+#[allow(non_camel_case_types)]
 pub struct Q8_0 {
     n: usize,
 }
@@ -72,6 +73,35 @@ impl Format for Q8_0 {
             acc[3] += (q[3] as i8) as f32 * chunk[3];
         }
         d * (acc[0] + acc[1] + acc[2] + acc[3])
+    }
+
+    fn has_q8_kernel(&self) -> bool {
+        true
+    }
+
+    /// W8A8 integer fused dot: the packed bytes *are* the i8 weight
+    /// codes, so this is a direct i8·i8→i32 dot with `d·s_act` folded
+    /// into one final multiply. |acc| ≤ 32·127² ≈ 5.2e5: no overflow.
+    fn dot_block_q8(
+        &self,
+        _idx: u64,
+        bytes: &[u8],
+        act: super::act::ActBlock<'_>,
+        _scratch: &mut Vec<f32>,
+    ) -> f32 {
+        debug_assert_eq!(bytes.len(), self.block_bytes());
+        debug_assert_eq!(act.codes.len(), self.n);
+        let d = read_f16(bytes, 0);
+        let wq = &bytes[2..2 + self.n];
+        let mut acc = [0i32; 4];
+        for i in 0..self.n / 4 {
+            let j = 4 * i;
+            acc[0] += (wq[j] as i8 as i32) * act.codes[j] as i32;
+            acc[1] += (wq[j + 1] as i8 as i32) * act.codes[j + 1] as i32;
+            acc[2] += (wq[j + 2] as i8 as i32) * act.codes[j + 2] as i32;
+            acc[3] += (wq[j + 3] as i8 as i32) * act.codes[j + 3] as i32;
+        }
+        (acc[0] + acc[1] + acc[2] + acc[3]) as f32 * (d * act.scale)
     }
 }
 

@@ -9,6 +9,7 @@ pub mod json;
 pub mod prng;
 pub mod prop;
 pub mod stats;
+pub mod threadpool;
 
 pub use prng::XorShift;
 

@@ -1,0 +1,209 @@
+//! Row-sharded parallel execution for the quantized matvec/matmul hot
+//! paths (the CPU stand-in for the paper's SM-level row parallelism).
+//!
+//! Deliberately **work-stealing-free**: the output rows of a matvec are
+//! split into `shards` contiguous ranges, one per thread, decided up
+//! front. Because every row is computed by exactly the same code in the
+//! same order regardless of which shard owns it, the parallel result is
+//! bit-identical to the single-threaded one — the property the
+//! `parallel_matvec_bit_identical` test pins down, and what keeps greedy
+//! decoding reproducible across thread counts.
+//!
+//! Execution uses `std::thread::scope` (no persistent pool, no unsafe):
+//! shards 1..N are spawned, shard 0 runs on the calling thread. The
+//! ~tens-of-microseconds spawn cost is why callers gate parallelism on
+//! [`suggested_shards`] — a shard must carry at least
+//! [`MIN_MACS_PER_SHARD`] multiply-accumulates before forking pays, so
+//! small layers (e.g. the 256-wide unit-test model) stay on the fast
+//! single-threaded path automatically.
+
+use std::ops::Range;
+use std::sync::OnceLock;
+
+/// Upper bound on worker threads: `ITQ3S_THREADS` env override, else the
+/// machine's available parallelism, capped at 16 (beyond that the
+/// decode-path matvecs are memory-bound and extra threads only contend).
+pub fn default_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(s) = std::env::var("ITQ3S_THREADS") {
+            if let Ok(n) = s.parse::<usize>() {
+                if n >= 1 {
+                    return n.min(64);
+                }
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(16)
+    })
+}
+
+/// Minimum multiply-accumulates per shard before forking is a net win
+/// (thread spawn ≈ tens of µs; a shard this size runs for hundreds).
+pub const MIN_MACS_PER_SHARD: usize = 1 << 19;
+
+/// Shard count for a `(rows x cols)` matvec: enough shards to keep every
+/// shard above [`MIN_MACS_PER_SHARD`], never more than [`default_threads`]
+/// or `rows`. Returns 1 for small layers — the caller then runs inline.
+pub fn suggested_shards(rows: usize, total_macs: usize) -> usize {
+    if rows == 0 {
+        return 1;
+    }
+    let by_work = total_macs / MIN_MACS_PER_SHARD;
+    by_work.clamp(1, default_threads()).min(rows)
+}
+
+/// The contiguous sub-range of `0..n` owned by shard `s` of `shards`
+/// (near-equal split; the first `n % shards` shards get one extra).
+pub fn shard_range(n: usize, s: usize, shards: usize) -> Range<usize> {
+    debug_assert!(s < shards);
+    let base = n / shards;
+    let rem = n % shards;
+    let start = s * base + s.min(rem);
+    let len = base + usize::from(s < rem);
+    start..start + len
+}
+
+/// Run `f(first_chunk_index, chunk_slice)` over `data` split into
+/// contiguous shards aligned to `chunk_len` elements. `data.len()` must
+/// be a multiple of `chunk_len`. With `shards <= 1` (or a single chunk)
+/// this degenerates to one inline call — zero threading overhead.
+pub fn parallel_chunks<T: Send>(
+    data: &mut [T],
+    chunk_len: usize,
+    shards: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    let n_chunks = data.len() / chunk_len;
+    assert_eq!(data.len(), n_chunks * chunk_len, "data not chunk-aligned");
+    let shards = shards.max(1).min(n_chunks.max(1));
+    if shards <= 1 {
+        f(0, data);
+        return;
+    }
+    let first_chunks = shard_range(n_chunks, 0, shards).len();
+    let (first, tail) = data.split_at_mut(first_chunks * chunk_len);
+    let mut rest = tail;
+    std::thread::scope(|scope| {
+        let fref = &f;
+        let mut start_chunk = first_chunks;
+        for s in 1..shards {
+            let len_chunks = shard_range(n_chunks, s, shards).len();
+            let (head, tail) =
+                std::mem::take(&mut rest).split_at_mut(len_chunks * chunk_len);
+            rest = tail;
+            let c0 = start_chunk;
+            scope.spawn(move || fref(c0, head));
+            start_chunk += len_chunks;
+        }
+        debug_assert!(rest.is_empty());
+        // Shard 0 runs on the calling thread, concurrently with the rest.
+        fref(0, first);
+    });
+}
+
+/// [`parallel_chunks`] with one element per chunk: `f(first_row, rows)`.
+pub fn parallel_rows<T: Send>(
+    data: &mut [T],
+    shards: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    parallel_chunks(data, 1, shards, f);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_partition_exactly() {
+        crate::util::prop::forall("shard ranges partition 0..n", 200, |g| {
+            let n = g.usize_in(0, 500);
+            let shards = g.usize_in(1, 16);
+            let mut next = 0usize;
+            for s in 0..shards {
+                let r = shard_range(n, s, shards);
+                assert_eq!(r.start, next, "gap at shard {s}");
+                next = r.end;
+            }
+            assert_eq!(next, n, "ranges must cover 0..{n}");
+        });
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut serial = vec![0u64; 1000];
+        for (i, v) in serial.iter_mut().enumerate() {
+            *v = (i as u64).wrapping_mul(0x9E37_79B9);
+        }
+        for shards in [1, 2, 3, 7, 16] {
+            let mut par = vec![0u64; 1000];
+            parallel_rows(&mut par, shards, |row0, out| {
+                for (d, v) in out.iter_mut().enumerate() {
+                    *v = ((row0 + d) as u64).wrapping_mul(0x9E37_79B9);
+                }
+            });
+            assert_eq!(par, serial, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn chunked_sharding_keeps_chunks_whole() {
+        // 30 chunks of 4; every shard must receive whole chunks.
+        let mut data = vec![0usize; 120];
+        parallel_chunks(&mut data, 4, 4, |c0, slab| {
+            assert_eq!(slab.len() % 4, 0);
+            for (i, chunk) in slab.chunks_exact_mut(4).enumerate() {
+                for v in chunk.iter_mut() {
+                    *v = c0 + i;
+                }
+            }
+        });
+        for (i, chunk) in data.chunks_exact(4).enumerate() {
+            assert!(chunk.iter().all(|&v| v == i), "chunk {i}: {chunk:?}");
+        }
+    }
+
+    #[test]
+    fn oversubscription_is_clamped() {
+        // More shards than rows: must not panic, must still be correct.
+        let mut data = vec![0u8; 3];
+        parallel_rows(&mut data, 64, |row0, out| {
+            for (d, v) in out.iter_mut().enumerate() {
+                *v = (row0 + d) as u8 + 1;
+            }
+        });
+        assert_eq!(data, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn empty_input_is_a_noop() {
+        let mut data: Vec<u32> = Vec::new();
+        parallel_rows(&mut data, 4, |_, out| {
+            assert!(out.is_empty());
+        });
+    }
+
+    #[test]
+    fn suggested_shards_gates_small_work() {
+        // Tiny decode layers must stay single-threaded...
+        assert_eq!(suggested_shards(256, 256 * 256), 1);
+        // ...while serving-size layers fan out (bounded by threads/rows).
+        let s = suggested_shards(4096, 4096 * 4096);
+        assert!(s >= 1 && s <= default_threads().min(4096));
+        if default_threads() > 1 {
+            assert!(s > 1, "16.7M MACs should shard on a multicore host");
+        }
+        assert_eq!(suggested_shards(0, 0), 1);
+    }
+
+    #[test]
+    fn default_threads_is_stable_and_positive() {
+        let a = default_threads();
+        assert!(a >= 1);
+        assert_eq!(a, default_threads());
+    }
+}

@@ -1,0 +1,65 @@
+//! End-to-end W3A8 acceptance tests: the integer (DP4A-analog) decode
+//! path must track the f32 fused path through the whole transformer, on
+//! the real trained checkpoint when `make artifacts` has run (the same
+//! fixture `pjrt_parity.rs` uses) and on a random heavy-tailed model
+//! otherwise.
+
+use itq3s::model::native::Engine;
+use itq3s::model::{DenseModel, KvCache, ModelConfig, NativeEngine, QuantizedModel};
+use itq3s::quant::format_by_name;
+use std::path::Path;
+
+fn dense_fixture() -> DenseModel {
+    let art = Path::new("artifacts/model_fp32.iguf");
+    if art.exists() {
+        itq3s::gguf::load_dense(art).unwrap()
+    } else {
+        eprintln!("artifacts/ not built; using a random heavy-tailed model");
+        DenseModel::random(&ModelConfig::test(), 23, Some(5.0))
+    }
+}
+
+#[test]
+fn decode_logits_shift_under_budget_all_hot_formats() {
+    let dense = dense_fixture();
+    for name in ["itq3_s", "iq3_s", "q4_k_m", "q8_0"] {
+        let fmt = format_by_name(name).unwrap();
+        let e_int = NativeEngine::quantized(QuantizedModel::quantize(&dense, fmt.clone()));
+        let e_f32 =
+            NativeEngine::quantized(QuantizedModel::quantize(&dense, fmt)).with_act_quant(false);
+        let toks: Vec<u32> = itq3s::model::tokenizer::encode("the glass city");
+        let mut c1 = KvCache::new(e_int.config());
+        let mut c2 = KvCache::new(e_f32.config());
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for &t in &toks {
+            a = e_int.decode_step(&mut c1, t);
+            b = e_f32.decode_step(&mut c2, t);
+        }
+        let rel = itq3s::util::stats::rel_l2_err(&b, &a);
+        assert!(rel < 1e-2, "{name}: W3A8 decode logits rel-L2 {rel}");
+    }
+}
+
+#[test]
+fn w3a8_decode_consistent_with_f32_prefill() {
+    // Prefill runs the batched f32 MMQ path; decode runs the W3A8 MMVQ
+    // path. Scoring the same tokens both ways must agree to within the
+    // activation-quantization budget — the cross-path invariant the
+    // coordinator relies on when it mixes chunked prefill with decode.
+    let dense = dense_fixture();
+    let fmt = format_by_name("itq3_s").unwrap();
+    let eng = NativeEngine::quantized(QuantizedModel::quantize(&dense, fmt));
+    let toks: Vec<u32> = itq3s::model::tokenizer::encode("rowan fixed the kiln");
+
+    let mut c1 = KvCache::new(eng.config());
+    let prefill_logits = eng.prefill(&mut c1, &toks);
+
+    let mut c2 = KvCache::new(eng.config());
+    let mut last = Vec::new();
+    for &t in &toks {
+        last = eng.decode_step(&mut c2, t);
+    }
+    let rel = itq3s::util::stats::rel_l2_err(prefill_logits.row(toks.len() - 1), &last);
+    assert!(rel < 2e-2, "prefill/decode cross-path rel-L2 {rel}");
+}

@@ -1,0 +1,166 @@
+//! Minimal in-tree stand-in for the `anyhow` crate.
+//!
+//! The offline build environment carries no registry, so the subset of
+//! `anyhow` this codebase actually uses is reimplemented here and wired
+//! in as a path dependency (`rust/Cargo.toml`): the [`Error`] type, the
+//! [`Result`] alias, the [`Context`] extension trait (on both `Result`
+//! and `Option`), and the [`anyhow!`]/[`bail!`] macros. Error state is a
+//! single pre-rendered message string — no backtraces, no downcasting —
+//! which is all the callers in this repository rely on.
+//!
+//! Deliberate compatibility choices mirrored from the real crate:
+//! - `Error` does **not** implement `std::error::Error`, so the blanket
+//!   `From<E: std::error::Error>` impl coexists with the reflexive
+//!   `From<Error>` (this is what makes `?` work for both concrete errors
+//!   and `anyhow::Result` chains).
+//! - `{e}` and `{e:#}` both render the full context chain (the real
+//!   crate renders only the outermost context for `{}`; everything here
+//!   treats the message as opaque text, so the difference is harmless).
+
+use std::fmt;
+
+/// A type-erased error: a rendered message with accumulated context.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer (outermost first, like anyhow's chain).
+    fn wrap<C: fmt::Display>(self, ctx: C) -> Self {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        // Flatten the source chain into the rendered message so nothing
+        // is lost by dropping the structured chain.
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `anyhow`-style result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or a displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// `return Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_on_std_error() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading file").unwrap_err();
+        assert!(e.to_string().starts_with("reading file: "));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "x")).unwrap_err();
+        assert_eq!(e.to_string(), "missing x");
+    }
+
+    #[test]
+    fn context_chains_on_anyhow_result() {
+        fn inner() -> Result<()> {
+            bail!("deep failure {}", 7)
+        }
+        let e = inner().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: deep failure 7");
+        // Alternate formatting renders the same chain.
+        assert_eq!(format!("{e:#}"), "outer: deep failure 7");
+    }
+
+    #[test]
+    fn macros_accept_captures_and_args() {
+        let x = 3;
+        assert_eq!(anyhow!("v={x}").to_string(), "v=3");
+        assert_eq!(anyhow!("v={}", x + 1).to_string(), "v=4");
+    }
+}
