@@ -27,7 +27,12 @@ fn main() -> anyhow::Result<()> {
                 itq3s::util::human_bytes(qm.linear_nbytes() as u64));
             let (a, h) = server::spawn_ephemeral(
                 Box::new(NativeEngine::quantized(qm)),
-                CoordinatorConfig { max_batch: 4, kv_budget_bytes: 128 << 20, prefill_chunk: 32 },
+                CoordinatorConfig {
+                    max_batch: 4,
+                    kv_budget_bytes: 128 << 20,
+                    prefill_chunk: 32,
+                    ..Default::default()
+                },
             )?;
             (a.to_string(), Some(h))
         }

@@ -1,0 +1,107 @@
+//! Paged-KV decode-step microbench: dense `KvCache` vs paged f32 vs
+//! paged Q8 stores at a serving-ish context depth, across block sizes,
+//! plus the capacity side of the trade (tokens per byte budget). Writes
+//! `BENCH_kv.json` so EXPERIMENTS.md §KV has a machine-readable
+//! trajectory across PRs.
+
+use itq3s::bench::harness::bench;
+use itq3s::kvpaged::{BlockPool, KvQuant, PagedKvPool};
+use itq3s::model::native::Engine;
+use itq3s::model::{DenseModel, KvCache, ModelConfig, NativeEngine};
+use itq3s::util::json::Json;
+use itq3s::util::XorShift;
+use std::collections::BTreeMap;
+
+fn main() {
+    let cfg = ModelConfig::tiny(); // max_seq 256: room for a deep context
+    let eng = NativeEngine::dense(DenseModel::random(&cfg, 42, Some(5.0)));
+    let mut rng = XorShift::new(7);
+    let prompt: Vec<u32> = (0..128).map(|_| rng.next_below(256) as u32).collect();
+    let decode_tokens: Vec<u32> = (0..16).map(|_| rng.next_below(256) as u32).collect();
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
+
+    // --- decode-step latency at context ~128 -------------------------
+    // Each measured iteration replays 16 decode steps on a prefilled
+    // store (fresh store per iteration so depth stays comparable).
+    let steps = decode_tokens.len() as f64;
+    let r_dense = bench("dense", 1, 5, || {
+        let mut c = KvCache::new(&cfg);
+        eng.prefill(&mut c, &prompt);
+        for &t in &decode_tokens {
+            let _ = eng.decode_step(&mut c, t);
+        }
+    });
+    println!(
+        "decode ctx=128 dense-f32        {:>8.1} us/step",
+        r_dense.mean_s / steps * 1e6
+    );
+
+    let mut variants: BTreeMap<String, Json> = BTreeMap::new();
+    for &bt in &[4usize, 16, 64] {
+        for &quant in &[KvQuant::F32, KvQuant::Q8] {
+            let label = format!("paged_{}_bt{}", quant.as_str(), bt);
+            let r = bench(&label, 1, 5, || {
+                let mut pool = PagedKvPool::new(&cfg, bt, quant, 64 << 20);
+                let id = pool.create_seq();
+                eng.prefill(&mut pool.seq_view(id), &prompt);
+                for &t in &decode_tokens {
+                    let _ = eng.decode_step(&mut pool.seq_view(id), t);
+                }
+                pool.release_seq(id);
+            });
+            println!(
+                "decode ctx=128 paged-{:<3} bt={bt:<2} {:>8.1} us/step  ({:.2}x vs dense)",
+                quant.as_str(),
+                r.mean_s / steps * 1e6,
+                r.mean_s / r_dense.mean_s
+            );
+            variants.insert(
+                label,
+                Json::obj(vec![
+                    ("us_per_step", Json::num(r.mean_s / steps * 1e6)),
+                    ("slowdown_vs_dense", Json::num(r.mean_s / r_dense.mean_s)),
+                ]),
+            );
+        }
+    }
+    report.insert(
+        "decode_step".to_string(),
+        Json::obj(vec![
+            ("context", Json::num(128.0)),
+            ("decode_steps", Json::num(steps)),
+            ("dense_us_per_step", Json::num(r_dense.mean_s / steps * 1e6)),
+            ("variants", Json::Obj(variants)),
+        ]),
+    );
+
+    // --- capacity: tokens per 64 MiB budget --------------------------
+    let budget = 64usize << 20;
+    let mut cap: BTreeMap<String, Json> = BTreeMap::new();
+    for &quant in &[KvQuant::F32, KvQuant::Q8] {
+        let pool = BlockPool::new(&cfg, 16, quant, budget);
+        let tokens = pool.capacity_blocks() * pool.block_tokens();
+        println!(
+            "capacity 64MiB {}: {} blocks = {} tokens",
+            quant.as_str(),
+            pool.capacity_blocks(),
+            tokens
+        );
+        cap.insert(
+            quant.as_str().to_string(),
+            Json::obj(vec![
+                ("blocks", Json::num(pool.capacity_blocks() as f64)),
+                ("tokens", Json::num(tokens as f64)),
+            ]),
+        );
+    }
+    report.insert(
+        "capacity_64mib".to_string(),
+        Json::obj(vec![("block_tokens", Json::num(16.0)), ("by_quant", Json::Obj(cap))]),
+    );
+
+    let out = Json::Obj(report).to_string();
+    match std::fs::write("BENCH_kv.json", &out) {
+        Ok(()) => println!("wrote BENCH_kv.json"),
+        Err(e) => eprintln!("could not write BENCH_kv.json: {e}"),
+    }
+}

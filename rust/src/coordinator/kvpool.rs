@@ -1,68 +1,122 @@
-//! KV-cache pool: budget accounting, admission control, and cache reuse.
+//! KV admission policy over the paged block pool.
 //!
-//! The paper's §7.3 economics (quantized weights leave VRAM headroom for
-//! KV state) become an explicit admission policy here: a sequence is
-//! admitted only if its worst-case KV footprint (prompt + max new
-//! tokens) fits the configured budget. Finished sequences return their
-//! `KvCache` allocation to a free list so steady-state serving does no
-//! large allocations (see EXPERIMENTS.md §Perf).
+//! The seed policy reserved each request's **worst-case** dense-f32 KV
+//! footprint (prompt + max new tokens) at admission, so a 256 MiB budget
+//! serialized long requests even when their prompts overlapped and most
+//! reserved bytes were never written. This wrapper drives
+//! [`crate::kvpaged::PagedKvPool`] instead:
+//!
+//! - admission maps any cached prompt prefix (shared physical blocks,
+//!   re-prefill skipped) and only requires blocks for the *uncached*
+//!   prompt span plus one decode token;
+//! - decode/prefill growth asks for blocks on demand, evicting
+//!   prefix-cache LRU entries under pressure;
+//! - when the pool still runs dry the coordinator preempts the
+//!   lowest-priority running sequence back to the waiting queue, with
+//!   its prefix retained in the cache so re-admission skips the
+//!   re-prefill.
+//!
+//! [`seq_bytes`] (the old worst-case formula) is kept as the reference
+//! bound: `rust/tests/kv_paged.rs` demonstrates paged admission exceeds
+//! it on shared-prefix workloads under the same byte budget.
 
-use crate::model::{KvCache, ModelConfig};
+use crate::kvpaged::{KvQuant, PagedKvPool, PagedSeq, SeqId};
+use crate::model::ModelConfig;
+use crate::util::json::Json;
 
-pub struct KvPool {
-    cfg: ModelConfig,
-    budget_bytes: usize,
-    reserved_bytes: usize,
-    free_list: Vec<KvCache>,
-    /// High-water mark of reserved bytes (for metrics).
-    pub peak_bytes: usize,
-}
-
-/// Worst-case KV bytes for a sequence of `tokens` (f32 native cache).
+/// Worst-case dense-f32 KV bytes for a sequence of `tokens` — the seed
+/// admission formula, kept as the comparison baseline.
 pub fn seq_bytes(cfg: &ModelConfig, tokens: usize) -> usize {
     2 * cfg.n_layers * tokens.min(cfg.max_seq) * cfg.dim * 4
 }
 
-impl KvPool {
-    pub fn new(cfg: ModelConfig, budget_bytes: usize) -> Self {
-        KvPool { cfg, budget_bytes, reserved_bytes: 0, free_list: Vec::new(), peak_bytes: 0 }
-    }
+/// How many sequences the *old* worst-case policy would admit.
+pub fn worst_case_bound(cfg: &ModelConfig, budget_bytes: usize, worst_tokens: usize) -> usize {
+    budget_bytes / seq_bytes(cfg, worst_tokens).max(1)
+}
 
-    pub fn reserved(&self) -> usize {
-        self.reserved_bytes
+pub struct KvPool {
+    pool: PagedKvPool,
+    budget_bytes: usize,
+}
+
+impl KvPool {
+    pub fn new(
+        cfg: &ModelConfig,
+        budget_bytes: usize,
+        block_tokens: usize,
+        quant: KvQuant,
+    ) -> Self {
+        KvPool { pool: PagedKvPool::new(cfg, block_tokens, quant, budget_bytes), budget_bytes }
     }
 
     pub fn budget(&self) -> usize {
         self.budget_bytes
     }
 
-    /// Can a sequence with this worst-case length be admitted now?
-    pub fn can_admit(&self, max_tokens: usize) -> bool {
-        self.reserved_bytes + seq_bytes(&self.cfg, max_tokens) <= self.budget_bytes
+    pub fn peak_bytes(&self) -> usize {
+        self.pool.peak_bytes
     }
 
-    /// Reserve budget and hand out a (recycled) cache. Returns `None`
-    /// when over budget — the caller keeps the request queued.
-    pub fn admit(&mut self, max_tokens: usize) -> Option<(KvCache, usize)> {
-        let bytes = seq_bytes(&self.cfg, max_tokens);
-        if self.reserved_bytes + bytes > self.budget_bytes {
-            return None;
-        }
-        self.reserved_bytes += bytes;
-        self.peak_bytes = self.peak_bytes.max(self.reserved_bytes);
-        let cache = self.free_list.pop().unwrap_or_else(|| KvCache::new(&self.cfg));
-        Some((cache, bytes))
+    /// Could a sequence of `tokens` prompt tokens (plus one decode
+    /// token) *ever* fit this pool, even with every other block free?
+    /// `false` means the request must be rejected, not queued — waiting
+    /// would spin forever.
+    pub fn fits_ever(&self, tokens: usize) -> bool {
+        let bt = self.pool.block_tokens();
+        // ceil((tokens + 1) / bt) blocks for the whole sequence.
+        (tokens + bt) / bt <= self.pool.capacity_blocks()
     }
 
-    /// Return a finished sequence's cache and release its reservation.
-    pub fn release(&mut self, mut cache: KvCache, bytes: usize) {
-        debug_assert!(bytes <= self.reserved_bytes);
-        self.reserved_bytes = self.reserved_bytes.saturating_sub(bytes);
-        cache.reset();
-        // Cap the free list so a burst doesn't pin memory forever.
-        if self.free_list.len() < 16 {
-            self.free_list.push(cache);
+    /// Admit a sequence that will prefill `prefill` tokens: maps the
+    /// cached prefix and checks block capacity for the uncached span
+    /// plus one decode token. Returns the sequence and how many tokens
+    /// are already resident (skip their prefill). `None` = keep queued.
+    pub fn admit(&mut self, prefill: &[u32]) -> Option<(SeqId, usize)> {
+        let id = self.pool.create_seq();
+        let mapped = self.pool.map_cached_prefix(id, prefill);
+        let rest = prefill.len() - mapped + 1;
+        if self.pool.ensure_append(id, rest) {
+            Some((id, mapped))
+        } else {
+            self.pool.release_seq(id);
+            None
         }
+    }
+
+    /// Fresh blocks appending `n` tokens to `id` would allocate.
+    pub fn blocks_needed(&self, id: SeqId, n: usize) -> usize {
+        self.pool.blocks_needed(id, n)
+    }
+
+    /// Make `total` blocks available (evicting cached prefixes LRU-first
+    /// if needed). `false` = the coordinator must preempt.
+    pub fn reclaim(&mut self, total: usize) -> bool {
+        self.pool.reclaim(total)
+    }
+
+    /// Register the sequence's whole-block prefix for reuse (after its
+    /// prefill completes, or right before preemption/retirement).
+    pub fn cache_prefix(&mut self, id: SeqId) {
+        self.pool.cache_prefix(id)
+    }
+
+    /// Retire a sequence, first caching its prefix for future requests.
+    pub fn release(&mut self, id: SeqId) {
+        self.pool.cache_prefix(id);
+        self.pool.release_seq(id);
+    }
+
+    pub fn seq_len(&self, id: SeqId) -> usize {
+        self.pool.seq_len(id)
+    }
+
+    pub fn seq_view(&mut self, id: SeqId) -> PagedSeq<'_> {
+        self.pool.seq_view(id)
+    }
+
+    pub fn stats_json(&self) -> Json {
+        self.pool.stats_json()
     }
 }
 
@@ -71,68 +125,101 @@ mod tests {
     use super::*;
     use crate::util::prop::forall;
 
-    fn pool(budget_seqs: usize, max_tokens: usize) -> KvPool {
+    fn pool_with_blocks(blocks: usize, bt: usize) -> (KvPool, ModelConfig) {
         let cfg = ModelConfig::test();
-        let budget = budget_seqs * seq_bytes(&cfg, max_tokens);
-        KvPool::new(cfg, budget)
+        let unit =
+            crate::kvpaged::BlockPool::new(&cfg, bt, KvQuant::F32, 1).block_bytes();
+        (KvPool::new(&cfg, blocks * unit, bt, KvQuant::F32), cfg)
+    }
+
+    fn fill(pool: &mut KvPool, id: SeqId, cfg: &ModelConfig, tokens: &[u32]) {
+        use crate::model::KvStore;
+        let row = vec![0.5f32; cfg.dim];
+        let mut view = pool.seq_view(id);
+        for &t in tokens {
+            let pos = view.len();
+            for l in 0..cfg.n_layers {
+                view.write_kv(l, pos, &row, &row);
+            }
+            view.push_token(t);
+        }
     }
 
     #[test]
-    fn admission_respects_budget() {
-        let mut p = pool(2, 64);
-        let a = p.admit(64).expect("first fits");
-        let b = p.admit(64).expect("second fits");
-        assert!(p.admit(64).is_none(), "third must not fit");
-        p.release(a.0, a.1);
-        assert!(p.admit(64).is_some(), "released budget is reusable");
-        drop(b);
+    fn admission_is_on_demand_not_worst_case() {
+        // 3 blocks of 4 tokens each. A request with a huge max_new would
+        // have been rejected by worst-case reservation; paged admission
+        // only needs the prompt span + 1.
+        let (mut p, _cfg) = pool_with_blocks(3, 4);
+        let prompt: Vec<u32> = (0..7).collect();
+        let (a, mapped) = p.admit(&prompt).expect("prompt span fits");
+        assert_eq!(mapped, 0, "cold cache");
+        // A second identical prompt still fits block-wise (7+1 tokens = 2
+        // blocks each would not, but admission only checks capacity —
+        // 1 block is still free).
+        assert!(p.admit(&prompt[..3]).is_some());
+        p.release(a);
     }
 
     #[test]
-    fn release_recycles_allocation() {
-        let mut p = pool(1, 64);
-        let (c, b) = p.admit(64).unwrap();
-        p.release(c, b);
-        assert_eq!(p.reserved(), 0);
-        let (c2, _) = p.admit(64).unwrap();
-        assert!(c2.is_empty(), "recycled cache must be reset");
+    fn admit_fails_when_blocks_run_out() {
+        let (mut p, cfg) = pool_with_blocks(3, 4);
+        let prompt: Vec<u32> = (0..8).collect();
+        let (a, _) = p.admit(&prompt).unwrap();
+        fill(&mut p, a, &cfg, &prompt);
+        // `a` holds 2 of 3 blocks; another 8-token prompt needs 3
+        // (prompt span + decode token) and must be rejected.
+        assert!(p.admit(&prompt).is_none());
+        p.release(a);
+        // `a`'s blocks went to the prefix cache; an identical prompt is
+        // admitted *through* the cache: one whole block is shared (the
+        // last-token cap keeps one to re-prefill) and LRU eviction
+        // reclaims the other for fresh writes.
+        let (b, mapped) = p.admit(&prompt).expect("cache-backed admission");
+        assert_eq!(mapped, 4, "one whole block reused (cap leaves last token)");
+        p.release(b);
     }
 
     #[test]
-    fn peak_tracks_high_water() {
-        let mut p = pool(3, 32);
-        let a = p.admit(32).unwrap();
-        let b = p.admit(32).unwrap();
-        let peak = p.peak_bytes;
-        p.release(a.0, a.1);
-        p.release(b.0, b.1);
-        assert_eq!(p.peak_bytes, peak);
-        assert_eq!(p.reserved(), 0);
+    fn release_caches_prefix_for_reuse() {
+        let (mut p, cfg) = pool_with_blocks(8, 4);
+        let prompt: Vec<u32> = (0..12).collect();
+        let (a, _) = p.admit(&prompt).unwrap();
+        fill(&mut p, a, &cfg, &prompt);
+        p.release(a);
+        let (b, mapped) = p.admit(&prompt).unwrap();
+        // 12 tokens, cap 11 -> 2 whole blocks (8 tokens) reused.
+        assert_eq!(mapped, 8);
+        assert_eq!(p.seq_len(b), 8);
+        p.release(b);
     }
 
     #[test]
-    fn prop_reserved_never_exceeds_budget_and_never_leaks() {
-        // Invariant under random admit/release interleavings.
-        forall("kv pool accounting", 60, |g| {
-            let cfg = ModelConfig::test();
-            let budget = seq_bytes(&cfg, 64) * g.usize_in(1, 5);
-            let mut p = KvPool::new(cfg, budget);
-            let mut live: Vec<(KvCache, usize)> = Vec::new();
-            for _ in 0..40 {
+    fn prop_blocks_never_leak_across_admit_release() {
+        forall("paged pool accounting", 40, |g| {
+            let (mut p, cfg) = pool_with_blocks(g.usize_in(2, 6), 4);
+            let mut live: Vec<SeqId> = Vec::new();
+            for _ in 0..30 {
                 if g.bool() || live.is_empty() {
-                    let want = g.usize_in(1, 64);
-                    if let Some(pair) = p.admit(want) {
-                        live.push(pair);
+                    let n = g.usize_in(1, 10);
+                    let prompt: Vec<u32> = (0..n as u32).map(|i| i % 7).collect();
+                    if let Some((id, mapped)) = p.admit(&prompt) {
+                        fill(&mut p, id, &cfg, &prompt[mapped..]);
+                        live.push(id);
                     }
                 } else {
                     let i = g.usize_in(0, live.len() - 1);
-                    let (c, b) = live.swap_remove(i);
-                    p.release(c, b);
+                    let id = live.swap_remove(i);
+                    p.release(id);
                 }
-                assert!(p.reserved() <= p.budget());
-                let live_sum: usize = live.iter().map(|(_, b)| *b).sum();
-                assert_eq!(p.reserved(), live_sum, "reservation leak");
             }
+            for id in live {
+                p.release(id);
+            }
+            // All remaining references belong to the prefix cache, so
+            // clearing it must drain the pool completely.
+            p.pool.clear_prefix_cache();
+            assert_eq!(p.pool.in_use_blocks(), 0, "block leak");
         });
     }
 }

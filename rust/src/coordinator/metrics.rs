@@ -1,8 +1,15 @@
 //! Serving metrics: request counters, latency distributions, throughput.
+//!
+//! Distributions use [`RingStats`] — exact streaming mean/max plus
+//! p50/p99 over a fixed-capacity recent window — so memory stays flat
+//! under sustained load (no unbounded per-request vectors).
 
 use crate::util::json::Json;
-use crate::util::stats::Welford;
+use crate::util::stats::RingStats;
 use std::time::Instant;
+
+/// Retained samples per distribution (percentile window).
+const WINDOW: usize = 1024;
 
 #[derive(Debug)]
 pub struct Metrics {
@@ -10,13 +17,21 @@ pub struct Metrics {
     pub requests_submitted: u64,
     pub requests_finished: u64,
     pub requests_rejected: u64,
+    pub requests_cancelled: u64,
     pub prompt_tokens: u64,
     pub gen_tokens: u64,
-    pub ttft_ms: Welford,
-    pub decode_step_ms: Welford,
-    pub prefill_tokens_per_round: Welford,
-    pub batch_occupancy: Welford,
+    /// Prompt tokens skipped because the prefix cache already held them.
+    pub prefix_reused_tokens: u64,
+    /// Sequences preempted back to the waiting queue under KV pressure.
+    pub preemptions: u64,
+    pub ttft_ms: RingStats,
+    pub decode_step_ms: RingStats,
+    pub prefill_tokens_per_round: RingStats,
+    pub batch_occupancy: RingStats,
     pub kv_peak_bytes: usize,
+    /// Paged-pool snapshot fragment (block/prefix stats), refreshed on
+    /// each stats request.
+    pub kv_pool: Json,
 }
 
 impl Default for Metrics {
@@ -32,13 +47,17 @@ impl Metrics {
             requests_submitted: 0,
             requests_finished: 0,
             requests_rejected: 0,
+            requests_cancelled: 0,
             prompt_tokens: 0,
             gen_tokens: 0,
-            ttft_ms: Welford::new(),
-            decode_step_ms: Welford::new(),
-            prefill_tokens_per_round: Welford::new(),
-            batch_occupancy: Welford::new(),
+            prefix_reused_tokens: 0,
+            preemptions: 0,
+            ttft_ms: RingStats::new(WINDOW),
+            decode_step_ms: RingStats::new(WINDOW),
+            prefill_tokens_per_round: RingStats::new(WINDOW),
+            batch_occupancy: RingStats::new(WINDOW),
             kv_peak_bytes: 0,
+            kv_pool: Json::Null,
         }
     }
 
@@ -53,20 +72,35 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("uptime_s", Json::num(self.started.elapsed().as_secs_f64())),
             ("requests_submitted", Json::num(self.requests_submitted as f64)),
             ("requests_finished", Json::num(self.requests_finished as f64)),
             ("requests_rejected", Json::num(self.requests_rejected as f64)),
+            ("requests_cancelled", Json::num(self.requests_cancelled as f64)),
             ("prompt_tokens", Json::num(self.prompt_tokens as f64)),
             ("gen_tokens", Json::num(self.gen_tokens as f64)),
+            ("prefix_reused_tokens", Json::num(self.prefix_reused_tokens as f64)),
+            ("preemptions", Json::num(self.preemptions as f64)),
             ("decode_tps", Json::num(self.decode_tps())),
             ("ttft_ms_mean", Json::num(self.ttft_ms.mean())),
+            ("ttft_ms_p50", Json::num(self.ttft_ms.p50())),
+            ("ttft_ms_p99", Json::num(self.ttft_ms.p99())),
             ("ttft_ms_max", Json::num(self.ttft_ms.max())),
             ("decode_step_ms_mean", Json::num(self.decode_step_ms.mean())),
+            ("decode_step_ms_p50", Json::num(self.decode_step_ms.p50())),
+            ("decode_step_ms_p99", Json::num(self.decode_step_ms.p99())),
             ("batch_occupancy_mean", Json::num(self.batch_occupancy.mean())),
+            ("batch_occupancy_max", Json::num(self.batch_occupancy.max())),
             ("kv_peak_bytes", Json::num(self.kv_peak_bytes as f64)),
-        ])
+        ];
+        // Splice in the paged-pool fragment (flat keys, stable shape).
+        if let Json::Obj(pool) = &self.kv_pool {
+            for (k, v) in pool {
+                fields.push((k.as_str(), v.clone()));
+            }
+        }
+        Json::obj(fields)
     }
 }
 
@@ -84,5 +118,27 @@ mod tests {
         assert_eq!(s.get("requests_submitted").unwrap().as_u64(), Some(3));
         assert_eq!(s.get("gen_tokens").unwrap().as_u64(), Some(42));
         assert!(s.get("ttft_ms_mean").unwrap().as_f64().unwrap() > 12.0);
+        assert!(s.get("ttft_ms_p99").unwrap().as_f64().unwrap() > 12.0);
+    }
+
+    #[test]
+    fn distributions_stay_bounded_under_load() {
+        let mut m = Metrics::new();
+        for i in 0..100_000 {
+            m.decode_step_ms.push(i as f64 % 17.0);
+            m.batch_occupancy.push((i % 8) as f64);
+        }
+        assert_eq!(m.decode_step_ms.count(), 100_000);
+        let s = m.snapshot();
+        assert_eq!(s.get("batch_occupancy_max").unwrap().as_f64(), Some(7.0));
+        assert!(s.get("decode_step_ms_p50").unwrap().as_f64().unwrap() <= 17.0);
+    }
+
+    #[test]
+    fn pool_fragment_is_spliced_flat() {
+        let mut m = Metrics::new();
+        m.kv_pool = Json::obj(vec![("kv_blocks_in_use", Json::num(5.0))]);
+        let s = m.snapshot();
+        assert_eq!(s.get("kv_blocks_in_use").unwrap().as_u64(), Some(5));
     }
 }

@@ -5,15 +5,23 @@
 //! runs the scheduling loop:
 //!
 //! 1. **Admission** — waiting requests are admitted while the batch has
-//!    room *and* the [`kvpool::KvPool`] can reserve their worst-case KV
-//!    footprint (the §7.3 memory economics as policy).
-//! 2. **Chunked prefill** — admitted prompts are ingested
+//!    room *and* the paged [`kvpool::KvPool`] has blocks for their
+//!    *uncached* prompt span (cached prefixes map shared physical
+//!    blocks and skip re-prefill — the §7.3 memory economics as policy).
+//! 2. **Capacity / preemption** — each runnable sequence's next chunk is
+//!    guaranteed blocks up front; when the pool runs dry (after prefix-
+//!    cache LRU eviction) the lowest-priority running sequence is
+//!    preempted back to the waiting queue, its prefix retained in the
+//!    cache so re-admission skips the re-prefill.
+//! 3. **Chunked prefill** — admitted prompts are ingested
 //!    `prefill_chunk` tokens per round, interleaved with decode so a
-//!    long prompt cannot starve running generations (continuous
-//!    batching).
-//! 3. **Decode round** — every running sequence advances one token
+//!    long prompt cannot starve running generations. A heartbeat probes
+//!    the client first, so a dropped receiver cancels *before* the next
+//!    prefill round is burned.
+//! 4. **Decode round** — every running sequence advances one token
 //!    (the MMVQ path), streams it to its client, and is retired on its
-//!    stop condition, releasing budget immediately.
+//!    stop condition, releasing blocks immediately (whole-block
+//!    prefixes stay cached for reuse).
 //!
 //! Clients talk to the worker over channels; each request gets an
 //! unbounded event stream so a slow client never blocks the batch.
@@ -24,8 +32,9 @@ pub mod request;
 pub mod sampler;
 
 use crate::eval::{perplexity, PplReport};
+use crate::kvpaged::{KvQuant, SeqId};
 use crate::model::native::Engine;
-use crate::model::{tokenizer, KvCache};
+use crate::model::tokenizer;
 use crate::util::json::Json;
 use anyhow::Result;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -37,10 +46,15 @@ pub use request::{Event, FinishReason, GenRequest};
 pub struct CoordinatorConfig {
     /// Max concurrently decoding sequences.
     pub max_batch: usize,
-    /// KV budget in bytes (admission control).
+    /// KV budget in bytes (sized in blocks; admission + growth control).
     pub kv_budget_bytes: usize,
     /// Prompt tokens ingested per scheduling round per sequence.
     pub prefill_chunk: usize,
+    /// Tokens per paged KV block.
+    pub kv_block_tokens: usize,
+    /// KV block precision (f32 = bit-identical to dense; q8 = ~3.9x
+    /// denser).
+    pub kv_quant: KvQuant,
 }
 
 impl Default for CoordinatorConfig {
@@ -49,6 +63,8 @@ impl Default for CoordinatorConfig {
             max_batch: 8,
             kv_budget_bytes: 256 << 20,
             prefill_chunk: 32,
+            kv_block_tokens: 16,
+            kv_quant: KvQuant::F32,
         }
     }
 }
@@ -66,19 +82,85 @@ pub struct Coordinator {
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
+/// Per-sequence scheduling state, built once at the first admission
+/// attempt and carried back to the queue on requeue or preemption so
+/// the sequence *resumes* rather than restarts: everything already
+/// streamed stays streamed, the sampler RNG keeps its position, and the
+/// consumed token history re-prefills (mostly from the prefix cache).
+struct SeqState {
+    /// Tokens to ingest before decoding (prompt, plus the consumed
+    /// history when resuming after preemption).
+    prefill: Vec<u32>,
+    /// Original prompt token count (for client-facing accounting).
+    prompt_tokens: usize,
+    generated: Vec<u32>,
+    /// Next token to feed to decode (sampled but not yet consumed).
+    pending: Option<u32>,
+    sampler: sampler::Sampler,
+    submitted: Instant,
+    ttft_ms: Option<f64>,
+    /// High-water mark of prompt tokens counted into
+    /// `metrics.prompt_tokens`, so post-preemption re-prefill of the
+    /// same tokens (and of regenerated decode history) is not
+    /// double-counted as client prompt input.
+    counted_prompt: usize,
+}
+
+struct WaitingReq {
+    req: GenRequest,
+    events: Sender<Event>,
+    /// `None` until the first admission attempt tokenizes the prompt.
+    state: Option<SeqState>,
+}
+
 struct ActiveSeq {
     req: GenRequest,
     events: Sender<Event>,
-    cache: KvCache,
-    kv_bytes: usize,
-    sampler: sampler::Sampler,
-    prompt: Vec<u32>,
+    seq: SeqId,
+    state: SeqState,
+    /// Prefill tokens already resident (mapped from cache or ingested).
     prefilled: usize,
-    /// Next token to feed to decode (sampled but not yet consumed).
-    pending: Option<u32>,
-    generated: Vec<u32>,
-    submitted: Instant,
-    ttft_ms: Option<f64>,
+    /// Monotone admission stamp; preemption evicts the lowest priority,
+    /// breaking ties toward the most recently admitted.
+    admitted_order: u64,
+}
+
+impl ActiveSeq {
+    fn send_done(&self, reason: FinishReason) {
+        let s = &self.state;
+        let _ = self.events.send(Event::Done {
+            reason,
+            text: tokenizer::decode(&s.generated),
+            prompt_tokens: s.prompt_tokens,
+            gen_tokens: s.generated.len(),
+            ttft_ms: s.ttft_ms.unwrap_or(0.0),
+            total_ms: s.submitted.elapsed().as_secs_f64() * 1000.0,
+        });
+    }
+
+    /// Tokens this sequence wants to append in the coming round. A
+    /// pending token whose delivery finishes the request (max tokens
+    /// reached) is never fed to decode, so it claims no block — else a
+    /// dry pool would spuriously ContextFull/preempt for storage the
+    /// round will not use.
+    fn round_demand(&self, prefill_chunk: usize) -> usize {
+        let s = &self.state;
+        let decode_writes = if s.generated.len() + 1 >= self.req.max_new_tokens { 0 } else { 1 };
+        if self.prefilled < s.prefill.len() {
+            let chunk = (s.prefill.len() - self.prefilled).min(prefill_chunk);
+            // A chunk that completes the prompt also feeds the first
+            // sampled token to decode within this same round.
+            if self.prefilled + chunk == s.prefill.len() {
+                chunk + decode_writes
+            } else {
+                chunk
+            }
+        } else if s.pending.is_some() {
+            decode_writes
+        } else {
+            0
+        }
+    }
 }
 
 impl Coordinator {
@@ -105,6 +187,7 @@ impl Coordinator {
         let mut done = None;
         for ev in rx.iter() {
             match ev {
+                Event::Heartbeat => {}
                 Event::Token { text: ref t, .. } => text.push_str(t),
                 Event::Done { .. } => {
                     done = Some(ev);
@@ -147,12 +230,17 @@ impl Drop for Coordinator {
 
 fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
     let model_cfg = engine.config().clone();
-    let mut pool = kvpool::KvPool::new(model_cfg.clone(), cfg.kv_budget_bytes);
+    let mut pool = kvpool::KvPool::new(
+        &model_cfg,
+        cfg.kv_budget_bytes,
+        cfg.kv_block_tokens,
+        cfg.kv_quant,
+    );
     let mut metrics = metrics::Metrics::new();
-    let mut waiting: std::collections::VecDeque<(GenRequest, Sender<Event>)> =
-        std::collections::VecDeque::new();
+    let mut waiting: std::collections::VecDeque<WaitingReq> = std::collections::VecDeque::new();
     let mut active: Vec<ActiveSeq> = Vec::new();
     let mut shutdown = false;
+    let mut admit_counter: u64 = 0;
 
     while !shutdown {
         // ---- 0. intake ----------------------------------------------
@@ -180,13 +268,14 @@ fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
             match cmd {
                 Cmd::Generate(req, tx) => {
                     metrics.requests_submitted += 1;
-                    waiting.push_back((req, tx));
+                    waiting.push_back(WaitingReq { req, events: tx, state: None });
                 }
                 Cmd::Score(text, tx) => {
                     let _ = tx.send(perplexity(engine.as_ref(), &text));
                 }
                 Cmd::Stats(tx) => {
-                    metrics.kv_peak_bytes = pool.peak_bytes;
+                    metrics.kv_peak_bytes = pool.peak_bytes();
+                    metrics.kv_pool = pool.stats_json();
                     let _ = tx.send(metrics.snapshot());
                 }
                 Cmd::Shutdown => {
@@ -200,36 +289,80 @@ fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
 
         // ---- 1. admission -------------------------------------------
         while active.len() < cfg.max_batch {
-            let Some((req, tx)) = waiting.pop_front() else { break };
-            let mut prompt = tokenizer::encode(&req.prompt);
-            // Truncate over-long prompts from the front, keeping BOS.
-            let ctx_cap = model_cfg.max_seq.saturating_sub(2);
-            if prompt.len() > ctx_cap {
-                let keep = ctx_cap - 1;
-                let tail = prompt.split_off(prompt.len() - keep);
-                prompt = std::iter::once(tokenizer::BOS).chain(tail).collect();
+            let Some(w) = waiting.pop_front() else { break };
+            // Probe the client before paying for tokenize/map/prefill.
+            if w.events.send(Event::Heartbeat).is_err() {
+                metrics.requests_cancelled += 1;
+                metrics.requests_finished += 1;
+                continue;
             }
-            let worst = (prompt.len() + req.max_new_tokens).min(model_cfg.max_seq);
-            match pool.admit(worst) {
-                Some((cache, kv_bytes)) => {
-                    let sampler = sampler::Sampler::new(req.temperature, req.seed);
-                    active.push(ActiveSeq {
-                        req,
-                        events: tx,
-                        cache,
-                        kv_bytes,
-                        sampler,
-                        prompt,
-                        prefilled: 0,
-                        pending: None,
+            // First attempt tokenizes; requeues and preemptions carry
+            // their state back so nothing is recomputed or restarted.
+            let state = match w.state {
+                Some(s) => s,
+                None => {
+                    let mut prompt = tokenizer::encode(&w.req.prompt);
+                    // Truncate over-long prompts from the front, keeping BOS.
+                    let ctx_cap = model_cfg.max_seq.saturating_sub(2);
+                    if prompt.len() > ctx_cap {
+                        let keep = ctx_cap - 1;
+                        let tail = prompt.split_off(prompt.len() - keep);
+                        prompt = std::iter::once(tokenizer::BOS).chain(tail).collect();
+                    }
+                    SeqState {
+                        prompt_tokens: prompt.len(),
+                        prefill: prompt,
                         generated: Vec::new(),
+                        pending: None,
+                        sampler: sampler::Sampler::new(w.req.temperature, w.req.seed)
+                            .with_top_k(w.req.top_k),
                         submitted: Instant::now(),
                         ttft_ms: None,
+                        counted_prompt: 0,
+                    }
+                }
+            };
+            // A prompt whose span exceeds the whole pool can never be
+            // admitted; queueing it would head-of-line-block and spin
+            // forever. Reject it outright.
+            if !pool.fits_ever(state.prefill.len()) {
+                metrics.requests_rejected += 1;
+                let _ = w.events.send(Event::Done {
+                    reason: FinishReason::ContextFull,
+                    text: tokenizer::decode(&state.generated),
+                    prompt_tokens: state.prompt_tokens,
+                    gen_tokens: state.generated.len(),
+                    ttft_ms: state.ttft_ms.unwrap_or(0.0),
+                    total_ms: state.submitted.elapsed().as_secs_f64() * 1000.0,
+                });
+                continue;
+            }
+            match pool.admit(&state.prefill) {
+                Some((seq, mapped)) => {
+                    metrics.prefix_reused_tokens += mapped as u64;
+                    admit_counter += 1;
+                    let mut state = state;
+                    // Cache-mapped prompt tokens are accounted as prefix
+                    // reuse, not as ingested prompt input.
+                    state.counted_prompt =
+                        state.counted_prompt.max(mapped.min(state.prompt_tokens));
+                    active.push(ActiveSeq {
+                        req: w.req,
+                        events: w.events,
+                        seq,
+                        state,
+                        prefilled: mapped,
+                        admitted_order: admit_counter,
                     });
                 }
                 None => {
-                    // No budget: requeue and stop admitting this round.
-                    waiting.push_front((req, tx));
+                    // No blocks free right now: requeue and stop
+                    // admitting this round.
+                    waiting.push_front(WaitingReq {
+                        req: w.req,
+                        events: w.events,
+                        state: Some(state),
+                    });
                     break;
                 }
             }
@@ -237,34 +370,140 @@ fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
         if active.is_empty() {
             continue;
         }
+
+        // ---- 1.5 dead-client probe ----------------------------------
+        // A dropped receiver used to be noticed only when delivering a
+        // decode token, so a cancelled long-prompt request burned whole
+        // prefill rounds first. Probe before spending the round.
+        let mut i = 0;
+        while i < active.len() {
+            let mid_prefill = active[i].prefilled < active[i].state.prefill.len();
+            if mid_prefill && active[i].events.send(Event::Heartbeat).is_err() {
+                let seq = active.swap_remove(i);
+                pool.release(seq.seq);
+                metrics.requests_cancelled += 1;
+                metrics.requests_finished += 1;
+            } else {
+                i += 1;
+            }
+        }
+        if active.is_empty() {
+            continue;
+        }
+
+        // ---- 2. capacity & preemption -------------------------------
+        // Sum the whole round's block demand into one reclaim target so
+        // engine calls later this round cannot fail mid-forward (the
+        // pool takes no reservations; the worker is the only writer).
+        // When the pool stays dry after prefix-cache eviction, preempt-
+        // and-requeue the lowest-priority sequence (ties: most recently
+        // admitted first) and replan from scratch.
+        'capacity: loop {
+            let mut planned = 0usize;
+            let mut satisfied = true;
+            for i in 0..active.len() {
+                let demand = active[i].round_demand(cfg.prefill_chunk);
+                if demand == 0 {
+                    continue;
+                }
+                let need = pool.blocks_needed(active[i].seq, demand);
+                if pool.reclaim(planned + need) {
+                    planned += need;
+                    continue;
+                }
+                satisfied = false;
+                if active.len() == 1 {
+                    // Nothing to preempt and the pool cannot hold this
+                    // sequence's next step: finish it, not livelock.
+                    let seq = active.swap_remove(0);
+                    seq.send_done(FinishReason::ContextFull);
+                    pool.release(seq.seq);
+                    metrics.requests_finished += 1;
+                    break;
+                }
+                // Choose the victim across the whole batch.
+                let mut victim = 0;
+                for j in 1..active.len() {
+                    let a =
+                        (active[j].req.priority, std::cmp::Reverse(active[j].admitted_order));
+                    let b = (
+                        active[victim].req.priority,
+                        std::cmp::Reverse(active[victim].admitted_order),
+                    );
+                    if a < b {
+                        victim = j;
+                    }
+                }
+                // Retain the victim's prefix in the cache (inside
+                // `release`), free its blocks, and send it back to the
+                // front of the queue with its scheduling state so it
+                // resumes rather than restarts. The resumed prefill is
+                // rebuilt as prompt + all generated tokens (truncate
+                // first — repeated preemptions must not re-append).
+                let v = active.swap_remove(victim);
+                pool.release(v.seq);
+                metrics.preemptions += 1;
+                let mut state = v.state;
+                state.prefill.truncate(state.prompt_tokens);
+                state.prefill.extend_from_slice(&state.generated);
+                waiting.push_front(WaitingReq {
+                    req: v.req,
+                    events: v.events,
+                    state: Some(state),
+                });
+                break; // replan with the survivor set
+            }
+            if satisfied || active.is_empty() {
+                break 'capacity;
+            }
+        }
+        if active.is_empty() {
+            continue;
+        }
+        // Occupancy counts sequences that actually compute this round
+        // (post-preemption), so the §7.3 acceptance comparison is honest.
         metrics.batch_occupancy.push(active.len() as f64);
 
-        // ---- 2. chunked prefill --------------------------------------
+        // ---- 3. chunked prefill -------------------------------------
         for seq in active.iter_mut() {
-            if seq.prefilled < seq.prompt.len() {
-                let end = (seq.prefilled + cfg.prefill_chunk).min(seq.prompt.len());
-                let chunk = &seq.prompt[seq.prefilled..end];
-                let logits = engine.prefill(&mut seq.cache, chunk);
-                metrics.prompt_tokens += chunk.len() as u64;
+            if seq.prefilled < seq.state.prefill.len() {
+                let end = (seq.prefilled + cfg.prefill_chunk).min(seq.state.prefill.len());
+                let chunk = &seq.state.prefill[seq.prefilled..end];
+                let logits = engine.prefill(&mut pool.seq_view(seq.seq), chunk);
+                // Count only first-time ingestion of *client prompt*
+                // tokens — re-prefill after preemption (including the
+                // regenerated decode history) is work, not prompt input.
+                let fresh = end
+                    .min(seq.state.prompt_tokens)
+                    .saturating_sub(seq.state.counted_prompt);
+                metrics.prompt_tokens += fresh as u64;
+                seq.state.counted_prompt += fresh;
                 metrics.prefill_tokens_per_round.push(chunk.len() as f64);
                 seq.prefilled = end;
-                if seq.prefilled == seq.prompt.len() {
-                    // Prompt complete: sample the first token.
-                    let tok = seq.sampler.sample(logits.row(chunk.len() - 1));
-                    seq.ttft_ms =
-                        Some(seq.submitted.elapsed().as_secs_f64() * 1000.0);
-                    metrics.ttft_ms.push(seq.ttft_ms.unwrap());
-                    seq.pending = Some(tok);
+                if seq.prefilled == seq.state.prefill.len() {
+                    // Prompt resident and final: publish its whole-block
+                    // prefix for sharing, then sample the first token
+                    // (unless resuming with one already sampled).
+                    pool.cache_prefix(seq.seq);
+                    if seq.state.pending.is_none() {
+                        let tok = seq.state.sampler.sample(logits.row(chunk.len() - 1));
+                        seq.state.pending = Some(tok);
+                    }
+                    if seq.state.ttft_ms.is_none() {
+                        let ttft = seq.state.submitted.elapsed().as_secs_f64() * 1000.0;
+                        seq.state.ttft_ms = Some(ttft);
+                        metrics.ttft_ms.push(ttft);
+                    }
                 }
             }
         }
 
-        // ---- 3. decode round -----------------------------------------
+        // ---- 4. decode round ----------------------------------------
         let mut finished: Vec<usize> = Vec::new();
         for (i, seq) in active.iter_mut().enumerate() {
-            let Some(tok) = seq.pending else { continue };
+            let Some(tok) = seq.state.pending else { continue };
             // Deliver the sampled token.
-            seq.generated.push(tok);
+            seq.state.generated.push(tok);
             metrics.gen_tokens += 1;
             let frag = tokenizer::decode(&[tok]);
             let delivered =
@@ -273,9 +512,9 @@ fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
             let stop_hit = seq.req.stop_at_sentence && frag == ".";
             let reason = if !delivered {
                 Some(FinishReason::Cancelled)
-            } else if seq.generated.len() >= seq.req.max_new_tokens {
+            } else if seq.state.generated.len() >= seq.req.max_new_tokens {
                 Some(FinishReason::MaxTokens)
-            } else if seq.cache.len() + 1 >= seq.cache.max_seq {
+            } else if pool.seq_len(seq.seq) + 1 >= model_cfg.max_seq {
                 Some(FinishReason::ContextFull)
             } else if stop_hit {
                 Some(FinishReason::StopCondition)
@@ -283,46 +522,34 @@ fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
                 None
             };
             if let Some(reason) = reason {
-                let text = tokenizer::decode(&seq.generated);
-                let _ = seq.events.send(Event::Done {
-                    reason,
-                    text,
-                    prompt_tokens: seq.prompt.len(),
-                    gen_tokens: seq.generated.len(),
-                    ttft_ms: seq.ttft_ms.unwrap_or(0.0),
-                    total_ms: seq.submitted.elapsed().as_secs_f64() * 1000.0,
-                });
+                seq.send_done(reason);
                 metrics.requests_finished += 1;
+                if reason == FinishReason::Cancelled {
+                    metrics.requests_cancelled += 1;
+                }
                 finished.push(i);
                 continue;
             }
             // Advance one decode step.
             let t0 = Instant::now();
-            let logits = engine.decode_step(&mut seq.cache, tok);
+            let logits = engine.decode_step(&mut pool.seq_view(seq.seq), tok);
             metrics.decode_step_ms.push(t0.elapsed().as_secs_f64() * 1000.0);
-            seq.pending = Some(seq.sampler.sample(&logits));
+            seq.state.pending = Some(seq.state.sampler.sample(&logits));
         }
 
-        // ---- 4. retire finished --------------------------------------
+        // ---- 5. retire finished -------------------------------------
         for &i in finished.iter().rev() {
             let seq = active.swap_remove(i);
-            pool.release(seq.cache, seq.kv_bytes);
+            pool.release(seq.seq);
         }
     }
 
     // Drain: cancel anything still queued or running.
     for seq in active {
-        let _ = seq.events.send(Event::Done {
-            reason: FinishReason::Cancelled,
-            text: tokenizer::decode(&seq.generated),
-            prompt_tokens: seq.prompt.len(),
-            gen_tokens: seq.generated.len(),
-            ttft_ms: seq.ttft_ms.unwrap_or(0.0),
-            total_ms: seq.submitted.elapsed().as_secs_f64() * 1000.0,
-        });
+        seq.send_done(FinishReason::Cancelled);
     }
-    for (_, tx) in waiting {
-        let _ = tx.send(Event::Done {
+    for w in waiting {
+        let _ = w.events.send(Event::Done {
             reason: FinishReason::Cancelled,
             text: String::new(),
             prompt_tokens: 0,
@@ -347,6 +574,7 @@ mod tests {
                 max_batch,
                 kv_budget_bytes: kv_budget,
                 prefill_chunk: 8,
+                ..Default::default()
             },
         )
     }
@@ -425,7 +653,7 @@ mod tests {
 
     #[test]
     fn tiny_kv_budget_serializes_but_completes() {
-        // Budget for ~1 sequence: requests queue and run one at a time.
+        // Budget for ~2 blocks: requests queue and run a few at a time.
         let cfg = ModelConfig::test();
         let one_seq = kvpool::seq_bytes(&cfg, 64);
         let c = coordinator(8, one_seq + 1024);
@@ -466,7 +694,56 @@ mod tests {
             ..Default::default()
         });
         assert!(matches!(done, Some(Event::Done { .. })));
+        let stats = c.stats().unwrap();
+        assert!(stats.get("requests_cancelled").unwrap().as_u64().unwrap() >= 1);
         c.shutdown();
+    }
+
+    #[test]
+    fn dead_client_cancels_before_prefill_completes() {
+        // A long prompt with a dropped receiver must be cancelled by the
+        // heartbeat probe without ingesting the whole prompt.
+        let c = coordinator(2, 64 << 20);
+        {
+            let _rx = c.generate(GenRequest {
+                prompt: "y".repeat(400), // truncated to ~62 tokens, 8/round
+                max_new_tokens: 500,
+                ..Default::default()
+            });
+        }
+        let (_, done) = c.generate_collect(GenRequest {
+            prompt: "ok".into(),
+            max_new_tokens: 2,
+            ..Default::default()
+        });
+        assert!(matches!(done, Some(Event::Done { .. })));
+        let stats = c.stats().unwrap();
+        assert!(stats.get("requests_cancelled").unwrap().as_u64().unwrap() >= 1);
+        // The probe kills it at admission or after at most a chunk or
+        // two — never the full 62-token prompt (plus 3 for "ok").
+        assert!(
+            stats.get("prompt_tokens").unwrap().as_u64().unwrap() <= 27,
+            "cancelled prompt must not be fully prefilled"
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn top_k_sampling_is_deterministic_under_seed() {
+        let run = || {
+            let c = coordinator(2, 64 << 20);
+            let (text, _) = c.generate_collect(GenRequest {
+                prompt: "sample me".into(),
+                max_new_tokens: 12,
+                temperature: 0.9,
+                top_k: Some(8),
+                seed: 1234,
+                ..Default::default()
+            });
+            c.shutdown();
+            text
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]
@@ -488,6 +765,120 @@ mod tests {
         });
         let Some(Event::Done { reason, .. }) = done else { panic!() };
         assert_eq!(reason, FinishReason::ContextFull);
+        c.shutdown();
+    }
+
+    #[test]
+    fn oversized_prompt_is_rejected_not_queued() {
+        // A prompt span larger than the whole pool can never be
+        // admitted; it must get a ContextFull Done immediately instead
+        // of head-of-line blocking the queue forever.
+        let cfg = ModelConfig::test();
+        let engine = NativeEngine::dense(DenseModel::random(&cfg, 3, None));
+        let unit = crate::kvpaged::BlockPool::new(&cfg, 4, KvQuant::F32, 1).block_bytes();
+        let c = Coordinator::new(
+            Box::new(engine),
+            CoordinatorConfig {
+                max_batch: 2,
+                kv_budget_bytes: unit, // one 4-token block total
+                prefill_chunk: 8,
+                kv_block_tokens: 4,
+                kv_quant: KvQuant::F32,
+            },
+        );
+        let (_, done) = c.generate_collect(GenRequest {
+            prompt: "this prompt cannot fit".into(),
+            max_new_tokens: 4,
+            ..Default::default()
+        });
+        let Some(Event::Done { reason, .. }) = done else { panic!("no done") };
+        assert_eq!(reason, FinishReason::ContextFull);
+        // The pool still serves requests that do fit.
+        let (_, done) = c.generate_collect(GenRequest {
+            prompt: "ab".into(),
+            max_new_tokens: 1,
+            ..Default::default()
+        });
+        assert!(matches!(
+            done,
+            Some(Event::Done { reason: FinishReason::MaxTokens, .. })
+        ));
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.get("requests_rejected").unwrap().as_u64(), Some(1));
+        c.shutdown();
+    }
+
+    #[test]
+    fn final_token_needs_no_block_headroom() {
+        // Pool sized to exactly the tokens the engine will write: the
+        // last generated token is delivered but never fed to decode, so
+        // it must not claim a block (a spurious claim would turn this
+        // into ContextFull and drop the already-sampled token).
+        let cfg = ModelConfig::test();
+        let engine = NativeEngine::dense(DenseModel::random(&cfg, 3, None));
+        let unit = crate::kvpaged::BlockPool::new(&cfg, 4, KvQuant::F32, 1).block_bytes();
+        let c = Coordinator::new(
+            Box::new(engine),
+            CoordinatorConfig {
+                max_batch: 1,
+                kv_budget_bytes: 2 * unit, // 8 token slots = BOS+2 prompt + 5 fed
+                prefill_chunk: 8,
+                kv_block_tokens: 4,
+                kv_quant: KvQuant::F32,
+            },
+        );
+        let (_, done) = c.generate_collect(GenRequest {
+            prompt: "xy".into(),
+            max_new_tokens: 6,
+            ..Default::default()
+        });
+        let Some(Event::Done { reason, gen_tokens, .. }) = done else { panic!("no done") };
+        assert_eq!(reason, FinishReason::MaxTokens);
+        assert_eq!(gen_tokens, 6);
+        c.shutdown();
+    }
+
+    #[test]
+    fn preemption_requeues_and_completes() {
+        // Two long sequences into a pool that holds only one: the
+        // low-priority one is preempted, requeued, and still finishes
+        // with its full token count.
+        let cfg = ModelConfig::test();
+        let engine = NativeEngine::dense(DenseModel::random(&cfg, 3, None));
+        let unit = crate::kvpaged::BlockPool::new(&cfg, 4, KvQuant::F32, 1).block_bytes();
+        let c = Coordinator::new(
+            Box::new(engine),
+            CoordinatorConfig {
+                max_batch: 2,
+                kv_budget_bytes: 14 * unit, // < 2 full sequences
+                prefill_chunk: 8,
+                kv_block_tokens: 4,
+                kv_quant: KvQuant::F32,
+            },
+        );
+        let hi = c.generate(GenRequest {
+            prompt: "a".repeat(30),
+            max_new_tokens: 20,
+            priority: 1,
+            ..Default::default()
+        });
+        let lo = c.generate(GenRequest {
+            prompt: "b".repeat(30),
+            max_new_tokens: 20,
+            priority: 0,
+            ..Default::default()
+        });
+        for rx in [hi, lo] {
+            let done = rx.iter().find(|e| matches!(e, Event::Done { .. }));
+            let Some(Event::Done { reason, gen_tokens, .. }) = done else { panic!() };
+            assert_eq!(reason, FinishReason::MaxTokens);
+            assert_eq!(gen_tokens, 20);
+        }
+        let stats = c.stats().unwrap();
+        assert!(
+            stats.get("preemptions").unwrap().as_u64().unwrap() >= 1,
+            "pool pressure must have preempted"
+        );
         c.shutdown();
     }
 }

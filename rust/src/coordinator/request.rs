@@ -9,9 +9,16 @@ pub struct GenRequest {
     pub max_new_tokens: usize,
     /// 0.0 = greedy; > 0 = temperature sampling (seeded, reproducible).
     pub temperature: f32,
+    /// Restrict temperature sampling to the k highest-logit tokens
+    /// (`None` = full softmax; ignored when greedy).
+    pub top_k: Option<usize>,
     pub seed: u64,
     /// Stop generation at the first '.' after this many tokens (0 = off).
     pub stop_at_sentence: bool,
+    /// Scheduling priority: when the KV pool runs dry the
+    /// lowest-priority running sequence is preempted first (ties break
+    /// toward the most recently admitted). Default 0.
+    pub priority: i32,
 }
 
 impl Default for GenRequest {
@@ -20,8 +27,10 @@ impl Default for GenRequest {
             prompt: String::new(),
             max_new_tokens: 32,
             temperature: 0.0,
+            top_k: None,
             seed: 0,
             stop_at_sentence: false,
+            priority: 0,
         }
     }
 }
@@ -38,11 +47,19 @@ impl GenRequest {
         if let Some(t) = j.get("temperature").and_then(|v| v.as_f64()) {
             r.temperature = t as f32;
         }
+        if let Some(k) = j.get("top_k").and_then(|v| v.as_u64()) {
+            if k > 0 {
+                r.top_k = Some(k as usize);
+            }
+        }
         if let Some(s) = j.get("seed").and_then(|v| v.as_u64()) {
             r.seed = s;
         }
         if let Some(s) = j.get("stop_at_sentence").and_then(|v| v.as_bool()) {
             r.stop_at_sentence = s;
+        }
+        if let Some(p) = j.get("priority").and_then(|v| v.as_f64()) {
+            r.priority = p as i32;
         }
         r
     }
@@ -71,6 +88,11 @@ impl FinishReason {
 /// Streamed events for one request.
 #[derive(Clone, Debug)]
 pub enum Event {
+    /// Liveness probe: carries no data and is never serialized to the
+    /// wire. The coordinator sends one before burning a prefill round on
+    /// a sequence, so a dropped receiver cancels the request *before*
+    /// its prompt is (re)ingested rather than at first decode token.
+    Heartbeat,
     /// One generated token (id + decoded text fragment).
     Token { token: u32, text: String },
     /// Generation finished.
@@ -90,13 +112,17 @@ mod tests {
 
     #[test]
     fn request_from_json() {
-        let j = Json::parse(r#"{"prompt":"hi","max_tokens":5,"temperature":0.7,"seed":9}"#)
-            .unwrap();
+        let j = Json::parse(
+            r#"{"prompt":"hi","max_tokens":5,"temperature":0.7,"top_k":40,"seed":9,"priority":2}"#,
+        )
+        .unwrap();
         let r = GenRequest::from_json(&j);
         assert_eq!(r.prompt, "hi");
         assert_eq!(r.max_new_tokens, 5);
         assert!((r.temperature - 0.7).abs() < 1e-6);
+        assert_eq!(r.top_k, Some(40));
         assert_eq!(r.seed, 9);
+        assert_eq!(r.priority, 2);
     }
 
     #[test]
@@ -104,5 +130,13 @@ mod tests {
         let r = GenRequest::from_json(&Json::parse("{}").unwrap());
         assert_eq!(r.max_new_tokens, 32);
         assert_eq!(r.temperature, 0.0);
+        assert_eq!(r.top_k, None);
+        assert_eq!(r.priority, 0);
+    }
+
+    #[test]
+    fn top_k_zero_means_unrestricted() {
+        let r = GenRequest::from_json(&Json::parse(r#"{"top_k":0}"#).unwrap());
+        assert_eq!(r.top_k, None);
     }
 }

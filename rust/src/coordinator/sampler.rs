@@ -1,15 +1,25 @@
-//! Token sampling: greedy argmax or seeded temperature sampling.
+//! Token sampling: greedy argmax or seeded temperature sampling, with
+//! optional top-k truncation of the candidate set.
 
 use crate::util::XorShift;
 
 pub struct Sampler {
     temperature: f32,
+    top_k: Option<usize>,
     rng: XorShift,
 }
 
 impl Sampler {
     pub fn new(temperature: f32, seed: u64) -> Self {
-        Sampler { temperature, rng: XorShift::new(seed) }
+        Sampler { temperature, top_k: None, rng: XorShift::new(seed) }
+    }
+
+    /// Restrict temperature sampling to the `k` highest logits. `None`
+    /// (the default) samples the full distribution; greedy decoding is
+    /// unaffected.
+    pub fn with_top_k(mut self, k: Option<usize>) -> Self {
+        self.top_k = k;
+        self
     }
 
     /// Pick the next token from logits.
@@ -17,7 +27,14 @@ impl Sampler {
         if self.temperature <= 0.0 {
             return argmax(logits);
         }
-        // Softmax with temperature, inverse-CDF draw.
+        match self.top_k {
+            Some(k) if k < logits.len() => self.sample_top_k(logits, k.max(1)),
+            _ => self.sample_full(logits),
+        }
+    }
+
+    /// Softmax with temperature over all logits, inverse-CDF draw.
+    fn sample_full(&mut self, logits: &[f32]) -> u32 {
         let inv_t = 1.0 / self.temperature;
         let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let mut probs: Vec<f64> = logits
@@ -36,6 +53,37 @@ impl Sampler {
             u -= p;
         }
         (probs.len() - 1) as u32
+    }
+
+    /// Temperature draw over the `k` highest logits only. Candidates are
+    /// ordered by (logit desc, index asc) so ties break deterministically;
+    /// the top set is found by partitioning (O(V + k log k), not a full
+    /// vocabulary sort — this runs once per sampled token).
+    fn sample_top_k(&mut self, logits: &[f32], k: usize) -> u32 {
+        let desc = |a: &(f32, u32), b: &(f32, u32)| {
+            b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+        };
+        let mut cand: Vec<(f32, u32)> =
+            logits.iter().enumerate().map(|(i, &x)| (x, i as u32)).collect();
+        cand.select_nth_unstable_by(k - 1, desc);
+        cand.truncate(k);
+        cand.sort_by(desc);
+        let inv_t = 1.0 / self.temperature;
+        let m = cand[0].0;
+        let mut probs: Vec<f64> =
+            cand.iter().map(|&(x, _)| (((x - m) * inv_t) as f64).exp()).collect();
+        let sum: f64 = probs.iter().sum();
+        for p in probs.iter_mut() {
+            *p /= sum;
+        }
+        let mut u = self.rng.next_f64();
+        for (i, &p) in probs.iter().enumerate() {
+            if u < p {
+                return cand[i].1;
+            }
+            u -= p;
+        }
+        cand[cand.len() - 1].1
     }
 }
 
@@ -86,6 +134,51 @@ mod tests {
             seen.insert(s.sample(&logits));
         }
         assert!(seen.len() >= 3, "high temperature should visit most tokens");
+    }
+
+    #[test]
+    fn top_k_is_seeded_deterministic() {
+        let logits: Vec<f32> = (0..32).map(|i| (i as f32 * 0.61).cos()).collect();
+        let draw = || -> Vec<u32> {
+            let mut s = Sampler::new(0.9, 13).with_top_k(Some(5));
+            (0..30).map(|_| s.sample(&logits)).collect()
+        };
+        assert_eq!(draw(), draw());
+    }
+
+    #[test]
+    fn top_k_never_leaves_the_top_set() {
+        let logits: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut top: Vec<(f32, usize)> =
+            logits.iter().enumerate().map(|(i, &x)| (x, i)).collect();
+        top.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let allowed: std::collections::HashSet<u32> =
+            top[..4].iter().map(|&(_, i)| i as u32).collect();
+        let mut s = Sampler::new(1.5, 21).with_top_k(Some(4));
+        for _ in 0..300 {
+            assert!(allowed.contains(&s.sample(&logits)));
+        }
+    }
+
+    #[test]
+    fn top_k_one_is_greedy() {
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32 * 1.3).sin()).collect();
+        let mut s = Sampler::new(1.0, 5).with_top_k(Some(1));
+        for _ in 0..20 {
+            assert_eq!(s.sample(&logits), argmax(&logits));
+        }
+    }
+
+    #[test]
+    fn top_k_at_vocab_matches_full_sampling() {
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32 * 0.7).sin()).collect();
+        let a: Vec<u32> = (0..20)
+            .scan(Sampler::new(0.8, 7), |s, _| Some(s.sample(&logits)))
+            .collect();
+        let b: Vec<u32> = (0..20)
+            .scan(Sampler::new(0.8, 7).with_top_k(Some(16)), |s, _| Some(s.sample(&logits)))
+            .collect();
+        assert_eq!(a, b, "k >= vocab must take the full-softmax path");
     }
 
     #[test]

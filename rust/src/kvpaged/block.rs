@@ -1,0 +1,370 @@
+//! Fixed-size token-block pool: the physical storage layer of the paged
+//! KV cache.
+//!
+//! A *block* holds `block_tokens` consecutive positions of one sequence,
+//! across **all** layers and both K/V planes, so that mapping a block
+//! into a sequence's table shares the complete KV state of that token
+//! span. Blocks are refcounted: the free list hands a block out at
+//! refcount 1; prefix-cache entries and copy-on-write forks retain extra
+//! references, and a block returns to the free list when the count hits
+//! zero.
+//!
+//! Storage is either plain `f32` (bit-identical to the dense
+//! [`crate::model::KvCache`], used for parity) or per-row Q8 — int8
+//! payload plus one `f32` scale per stored vector, reusing the
+//! `quant::act` machinery from the W3A8 activation path. Q8 cuts the
+//! per-token footprint ~3.9x, which is the §7.3 argument: VRAM freed by
+//! 3-bit weights (and here by 8-bit KV) converts into batch occupancy.
+
+use crate::model::ModelConfig;
+use crate::quant::act::quantize_block_q8;
+
+/// Physical block handle (index into the pool's storage arrays).
+pub type BlockId = u32;
+
+/// K or V plane selector inside a block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Plane {
+    K = 0,
+    V = 1,
+}
+
+/// Storage precision for KV blocks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvQuant {
+    /// Plain f32 rows — bit-identical to the dense cache.
+    F32,
+    /// Int8 rows with one f32 scale per stored vector (amax/127, the
+    /// same `quantize_block_q8` used by the W3A8 activation path).
+    Q8,
+}
+
+impl KvQuant {
+    pub fn parse(s: &str) -> Option<KvQuant> {
+        match s {
+            "f32" => Some(KvQuant::F32),
+            "q8" => Some(KvQuant::Q8),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KvQuant::F32 => "f32",
+            KvQuant::Q8 => "q8",
+        }
+    }
+}
+
+/// Refcounted pool of fixed-size KV blocks with free-list allocation.
+///
+/// Capacity is derived from a byte budget; backing storage grows lazily
+/// one block at a time up to that cap, so tiny test budgets and the
+/// 256 MiB serving default both work without up-front allocation.
+pub struct BlockPool {
+    n_layers: usize,
+    dim: usize,
+    block_tokens: usize,
+    quant: KvQuant,
+    cap_blocks: usize,
+    refcounts: Vec<u32>,
+    free: Vec<BlockId>,
+    in_use: usize,
+    data_f32: Vec<f32>,
+    data_i8: Vec<i8>,
+    scales: Vec<f32>,
+    /// Copy-on-write forks performed (served via `fork_into`).
+    pub cow_forks: u64,
+}
+
+impl BlockPool {
+    pub fn new(
+        cfg: &ModelConfig,
+        block_tokens: usize,
+        quant: KvQuant,
+        budget_bytes: usize,
+    ) -> Self {
+        assert!(block_tokens > 0, "block_tokens must be positive");
+        let mut pool = BlockPool {
+            n_layers: cfg.n_layers,
+            dim: cfg.dim,
+            block_tokens,
+            quant,
+            cap_blocks: 0,
+            refcounts: Vec::new(),
+            free: Vec::new(),
+            in_use: 0,
+            data_f32: Vec::new(),
+            data_i8: Vec::new(),
+            scales: Vec::new(),
+            cow_forks: 0,
+        };
+        pool.cap_blocks = (budget_bytes / pool.block_bytes()).max(1);
+        pool
+    }
+
+    /// Rows (stored vectors) per block: both planes, all layers, all
+    /// token slots.
+    fn rows_per_block(&self) -> usize {
+        2 * self.n_layers * self.block_tokens
+    }
+
+    /// Bytes of physical storage per block in the configured precision.
+    pub fn block_bytes(&self) -> usize {
+        let rows = self.rows_per_block();
+        match self.quant {
+            KvQuant::F32 => rows * self.dim * 4,
+            KvQuant::Q8 => rows * self.dim + rows * 4,
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn quant(&self) -> KvQuant {
+        self.quant
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.cap_blocks
+    }
+
+    pub fn in_use_blocks(&self) -> usize {
+        self.in_use
+    }
+
+    /// Blocks that `try_alloc` could hand out right now.
+    pub fn available_blocks(&self) -> usize {
+        self.free.len() + (self.cap_blocks - self.refcounts.len())
+    }
+
+    pub fn refcount(&self, b: BlockId) -> u32 {
+        self.refcounts[b as usize]
+    }
+
+    /// Flat row index of (`block`, `plane`, `layer`, `slot`).
+    #[inline]
+    fn row_index(&self, b: BlockId, plane: Plane, layer: usize, slot: usize) -> usize {
+        debug_assert!(layer < self.n_layers && slot < self.block_tokens);
+        ((b as usize * 2 + plane as usize) * self.n_layers + layer) * self.block_tokens + slot
+    }
+
+    /// Allocate one block at refcount 1, or `None` when the pool is dry.
+    pub fn try_alloc(&mut self) -> Option<BlockId> {
+        let b = if let Some(b) = self.free.pop() {
+            b
+        } else if self.refcounts.len() < self.cap_blocks {
+            let b = self.refcounts.len() as BlockId;
+            self.refcounts.push(0);
+            let rows = self.rows_per_block();
+            match self.quant {
+                KvQuant::F32 => self.data_f32.resize(self.refcounts.len() * rows * self.dim, 0.0),
+                KvQuant::Q8 => {
+                    self.data_i8.resize(self.refcounts.len() * rows * self.dim, 0);
+                    self.scales.resize(self.refcounts.len() * rows, 0.0);
+                }
+            }
+            b
+        } else {
+            return None;
+        };
+        debug_assert_eq!(self.refcounts[b as usize], 0);
+        self.refcounts[b as usize] = 1;
+        self.in_use += 1;
+        Some(b)
+    }
+
+    /// Add a reference (prefix-cache entry, forked table, shared map).
+    pub fn retain(&mut self, b: BlockId) {
+        debug_assert!(self.refcounts[b as usize] > 0, "retain of a free block");
+        self.refcounts[b as usize] += 1;
+    }
+
+    /// Drop a reference; the block returns to the free list at zero.
+    pub fn release(&mut self, b: BlockId) {
+        let rc = &mut self.refcounts[b as usize];
+        debug_assert!(*rc > 0, "release of a free block");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(b);
+            self.in_use -= 1;
+        }
+    }
+
+    /// Copy-on-write fork: allocate a private copy of `src`'s payload
+    /// (all planes/layers/slots — correct regardless of fill level) and
+    /// drop one reference on `src`. `None` when the pool is dry.
+    pub fn fork_into(&mut self, src: BlockId) -> Option<BlockId> {
+        let dst = self.try_alloc()?;
+        let rows = self.rows_per_block();
+        match self.quant {
+            KvQuant::F32 => {
+                let n = rows * self.dim;
+                let (s, d) = (src as usize * n, dst as usize * n);
+                self.data_f32.copy_within(s..s + n, d);
+            }
+            KvQuant::Q8 => {
+                let n = rows * self.dim;
+                let (s, d) = (src as usize * n, dst as usize * n);
+                self.data_i8.copy_within(s..s + n, d);
+                let (s, d) = (src as usize * rows, dst as usize * rows);
+                self.scales.copy_within(s..s + rows, d);
+            }
+        }
+        self.release(src);
+        self.cow_forks += 1;
+        Some(dst)
+    }
+
+    /// Store one `dim`-length vector at (`b`, `plane`, `layer`, `slot`).
+    /// The caller must hold the only reference (COW is the table's job).
+    pub fn write_row(&mut self, b: BlockId, plane: Plane, layer: usize, slot: usize, x: &[f32]) {
+        debug_assert_eq!(x.len(), self.dim);
+        debug_assert_eq!(self.refcounts[b as usize], 1, "write into a shared block");
+        let r = self.row_index(b, plane, layer, slot);
+        match self.quant {
+            KvQuant::F32 => {
+                self.data_f32[r * self.dim..(r + 1) * self.dim].copy_from_slice(x);
+            }
+            KvQuant::Q8 => {
+                let codes = &mut self.data_i8[r * self.dim..(r + 1) * self.dim];
+                let (scale, _) = quantize_block_q8(x, codes);
+                self.scales[r] = scale;
+            }
+        }
+    }
+
+    /// Borrow a stored f32 row directly (F32 pools only).
+    pub fn row_f32(&self, b: BlockId, plane: Plane, layer: usize, slot: usize) -> &[f32] {
+        assert_eq!(self.quant, KvQuant::F32, "row_f32 on a Q8 pool");
+        let r = self.row_index(b, plane, layer, slot);
+        &self.data_f32[r * self.dim..(r + 1) * self.dim]
+    }
+
+    /// Dequantize all `block_tokens` slots of (`b`, `plane`, `layer`)
+    /// into `out` (`block_tokens * dim` floats). F32 pools copy.
+    pub fn read_rows_into(&self, b: BlockId, plane: Plane, layer: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.block_tokens * self.dim);
+        let r0 = self.row_index(b, plane, layer, 0);
+        match self.quant {
+            KvQuant::F32 => {
+                out.copy_from_slice(&self.data_f32[r0 * self.dim..(r0 + self.block_tokens) * self.dim]);
+            }
+            KvQuant::Q8 => {
+                for slot in 0..self.block_tokens {
+                    let r = r0 + slot;
+                    let scale = self.scales[r];
+                    let codes = &self.data_i8[r * self.dim..(r + 1) * self.dim];
+                    for (o, &c) in out[slot * self.dim..(slot + 1) * self.dim]
+                        .iter_mut()
+                        .zip(codes)
+                    {
+                        *o = c as f32 * scale;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{stats, XorShift};
+
+    fn pool(bt: usize, quant: KvQuant, blocks: usize) -> BlockPool {
+        let cfg = ModelConfig::test();
+        let mut p = BlockPool::new(&cfg, bt, quant, 1);
+        // Size the budget in whole blocks for test readability.
+        p = BlockPool::new(&cfg, bt, quant, blocks * p.block_bytes());
+        p
+    }
+
+    #[test]
+    fn alloc_release_cycles_through_free_list() {
+        let mut p = pool(16, KvQuant::F32, 2);
+        assert_eq!(p.capacity_blocks(), 2);
+        let a = p.try_alloc().unwrap();
+        let b = p.try_alloc().unwrap();
+        assert!(p.try_alloc().is_none(), "pool must be dry");
+        assert_eq!(p.in_use_blocks(), 2);
+        p.release(a);
+        assert_eq!(p.available_blocks(), 1);
+        let c = p.try_alloc().unwrap();
+        assert_eq!(c, a, "free list must recycle");
+        p.release(b);
+        p.release(c);
+        assert_eq!(p.in_use_blocks(), 0);
+    }
+
+    #[test]
+    fn refcounts_gate_the_free_list() {
+        let mut p = pool(8, KvQuant::F32, 1);
+        let a = p.try_alloc().unwrap();
+        p.retain(a);
+        p.release(a);
+        assert_eq!(p.available_blocks(), 0, "still referenced");
+        p.release(a);
+        assert_eq!(p.available_blocks(), 1);
+    }
+
+    #[test]
+    fn f32_rows_roundtrip_exactly() {
+        let cfg = ModelConfig::test();
+        let mut p = pool(4, KvQuant::F32, 2);
+        let b = p.try_alloc().unwrap();
+        let x: Vec<f32> = (0..cfg.dim).map(|i| (i as f32).sin()).collect();
+        p.write_row(b, Plane::K, 1, 3, &x);
+        assert_eq!(p.row_f32(b, Plane::K, 1, 3), &x[..]);
+        // Other plane/slot untouched (zero-initialized storage).
+        assert!(p.row_f32(b, Plane::V, 1, 3).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn q8_rows_roundtrip_within_bound() {
+        let cfg = ModelConfig::test();
+        let mut p = pool(4, KvQuant::Q8, 2);
+        let b = p.try_alloc().unwrap();
+        let mut rng = XorShift::new(9);
+        let x: Vec<f32> = (0..cfg.dim).map(|_| rng.next_gaussian() as f32).collect();
+        p.write_row(b, Plane::V, 0, 2, &x);
+        let mut out = vec![0.0f32; p.block_tokens() * cfg.dim];
+        p.read_rows_into(b, Plane::V, 0, &mut out);
+        let rel = stats::rel_l2_err(&x, &out[2 * cfg.dim..3 * cfg.dim]);
+        assert!(rel < 0.02, "q8 KV row rel err {rel}");
+    }
+
+    #[test]
+    fn q8_block_bytes_are_about_4x_smaller() {
+        let cfg = ModelConfig::test();
+        let f = BlockPool::new(&cfg, 16, KvQuant::F32, 1 << 20).block_bytes();
+        let q = BlockPool::new(&cfg, 16, KvQuant::Q8, 1 << 20).block_bytes();
+        let ratio = f as f64 / q as f64;
+        assert!(ratio > 3.5 && ratio <= 4.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn cow_fork_copies_payload_and_moves_ref() {
+        let cfg = ModelConfig::test();
+        let mut p = pool(4, KvQuant::F32, 3);
+        let a = p.try_alloc().unwrap();
+        let x = vec![1.5f32; cfg.dim];
+        p.write_row(a, Plane::K, 0, 0, &x);
+        p.retain(a); // shared (e.g. two tables map it)
+        let b = p.fork_into(a).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.refcount(a), 1);
+        assert_eq!(p.refcount(b), 1);
+        assert_eq!(p.cow_forks, 1);
+        assert_eq!(p.row_f32(b, Plane::K, 0, 0), &x[..]);
+        // Writing the fork must not touch the original.
+        let y = vec![-2.0f32; cfg.dim];
+        p.write_row(b, Plane::K, 0, 0, &y);
+        assert_eq!(p.row_f32(a, Plane::K, 0, 0), &x[..]);
+    }
+}

@@ -1,0 +1,442 @@
+//! Paged KV-cache subsystem: refcounted token-block storage,
+//! copy-on-write prefix sharing, and optional Q8 block compression.
+//!
+//! The paper's §7.3 memory economics argue that 3-bit weights pay off at
+//! serving scale only if the freed VRAM converts into concurrent
+//! sequences. The dense [`crate::model::KvCache`] frustrates that: the
+//! coordinator had to reserve each request's **worst-case** f32
+//! footprint at admission, so a modest budget serialized long requests
+//! even when their prompts overlapped. This module replaces that with
+//! the vLLM-style design:
+//!
+//! - [`block::BlockPool`] — fixed-size token blocks (`block_tokens`
+//!   positions x all layers x K/V), refcounted, free-list allocated,
+//!   stored as f32 or per-row Q8 (int8 + scale, ~3.9x denser);
+//! - [`table::BlockTable`] — per-sequence logical→physical maps with
+//!   copy-on-write: writing a block whose refcount exceeds one forks it;
+//! - [`prefix::PrefixCache`] — a radix tree over token-block hashes, so
+//!   requests sharing a prompt prefix map the same physical blocks and
+//!   skip re-prefill of the cached span;
+//! - [`PagedKvPool`] — the facade the coordinator drives: sequence
+//!   creation, cached-prefix mapping, capacity checks (with cache
+//!   eviction under pressure), and per-sequence [`PagedSeq`] views that
+//!   implement [`KvStore`] so the engines are oblivious to paging.
+//!
+//! Parity: with `KvQuant::F32`, greedy decode through a paged view is
+//! **bit-identical** to the dense cache (`rust/tests/kv_paged.rs`); Q8
+//! stays within a tested relative-error bound.
+
+pub mod block;
+pub mod prefix;
+pub mod table;
+
+pub use block::{BlockId, BlockPool, KvQuant, Plane};
+pub use prefix::PrefixCache;
+pub use table::BlockTable;
+
+use crate::model::{KvStore, ModelConfig};
+use crate::util::json::Json;
+
+/// Handle to one sequence inside a [`PagedKvPool`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SeqId(usize);
+
+struct Seq {
+    tokens: Vec<u32>,
+    table: BlockTable,
+}
+
+/// The paged KV pool: block storage + prefix cache + sequence registry.
+pub struct PagedKvPool {
+    pool: BlockPool,
+    prefix: PrefixCache,
+    seqs: Vec<Option<Seq>>,
+    free_slots: Vec<usize>,
+    max_seq: usize,
+    /// Dequant scratch for Q8 reads: every resident K *and* V row of
+    /// one (sequence, layer) — both planes, because the engine's
+    /// heads-outer attention sweep alternates K and V reads per head —
+    /// so each block dequantizes twice per layer per decode step
+    /// instead of twice per head.
+    dq_buf: Vec<f32>,
+    dq_key: Option<(usize, usize)>,
+    /// High-water mark of in-use blocks, in bytes (metrics).
+    pub peak_bytes: usize,
+}
+
+impl PagedKvPool {
+    pub fn new(cfg: &ModelConfig, block_tokens: usize, quant: KvQuant, budget_bytes: usize) -> Self {
+        PagedKvPool {
+            pool: BlockPool::new(cfg, block_tokens, quant, budget_bytes),
+            prefix: PrefixCache::new(),
+            seqs: Vec::new(),
+            free_slots: Vec::new(),
+            max_seq: cfg.max_seq,
+            dq_buf: Vec::new(),
+            dq_key: None,
+            peak_bytes: 0,
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.pool.block_tokens()
+    }
+
+    pub fn quant(&self) -> KvQuant {
+        self.pool.quant()
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.pool.capacity_blocks()
+    }
+
+    pub fn in_use_blocks(&self) -> usize {
+        self.pool.in_use_blocks()
+    }
+
+    /// Blocks obtainable right now without evicting the prefix cache.
+    pub fn available_blocks(&self) -> usize {
+        self.pool.available_blocks()
+    }
+
+    pub fn cow_forks(&self) -> u64 {
+        self.pool.cow_forks
+    }
+
+    pub fn prefix_stats(&self) -> (u64, u64, u64) {
+        (self.prefix.lookups, self.prefix.hit_tokens, self.prefix.evictions)
+    }
+
+    pub fn create_seq(&mut self) -> SeqId {
+        let seq = Seq { tokens: Vec::new(), table: BlockTable::new() };
+        match self.free_slots.pop() {
+            Some(i) => {
+                self.seqs[i] = Some(seq);
+                SeqId(i)
+            }
+            None => {
+                self.seqs.push(Some(seq));
+                SeqId(self.seqs.len() - 1)
+            }
+        }
+    }
+
+    fn seq(&self, id: SeqId) -> &Seq {
+        self.seqs[id.0].as_ref().expect("released SeqId")
+    }
+
+    fn seq_mut(&mut self, id: SeqId) -> &mut Seq {
+        self.seqs[id.0].as_mut().expect("released SeqId")
+    }
+
+    pub fn seq_len(&self, id: SeqId) -> usize {
+        self.seq(id).tokens.len()
+    }
+
+    /// Map the longest cached whole-block prefix of `prompt` into a
+    /// fresh sequence, leaving at least the final prompt token to
+    /// re-prefill (its logits are needed to sample). Returns the number
+    /// of tokens now resident (a multiple of `block_tokens`).
+    pub fn map_cached_prefix(&mut self, id: SeqId, prompt: &[u32]) -> usize {
+        debug_assert_eq!(self.seq(id).tokens.len(), 0, "map into a fresh sequence");
+        let bt = self.pool.block_tokens();
+        let cap = prompt.len().saturating_sub(1);
+        let hits = self.prefix.lookup(prompt, bt, cap);
+        let seq = self.seqs[id.0].as_mut().expect("released SeqId");
+        for &b in &hits {
+            self.pool.retain(b);
+            seq.table.push_mapped(b);
+        }
+        let mapped = hits.len() * bt;
+        seq.tokens.extend_from_slice(&prompt[..mapped]);
+        mapped
+    }
+
+    /// Fresh blocks required to append `n` tokens to `id` (new logical
+    /// blocks plus a COW fork of a shared tail).
+    pub fn blocks_needed(&self, id: SeqId, n: usize) -> usize {
+        let seq = self.seqs[id.0].as_ref().expect("released SeqId");
+        seq.table.blocks_needed_for_append(&self.pool, seq.tokens.len(), n)
+    }
+
+    /// Make at least `total` blocks available, evicting prefix-cache
+    /// entries (LRU) as needed. Returns whether the target was met. No
+    /// reservation is taken: the scheduler sums its demands into one
+    /// `reclaim` target per round, then writes within the same round.
+    pub fn reclaim(&mut self, total: usize) -> bool {
+        let avail = self.pool.available_blocks();
+        if avail < total {
+            self.prefix.evict_for(&mut self.pool, total - avail);
+        }
+        self.pool.available_blocks() >= total
+    }
+
+    /// Can `n` more tokens be appended to `id` right now (evicting
+    /// cached prefixes if needed)?
+    pub fn ensure_append(&mut self, id: SeqId, n: usize) -> bool {
+        let need = self.blocks_needed(id, n);
+        self.reclaim(need)
+    }
+
+    /// Drop every prefix-cache entry, releasing the cache's block
+    /// references (admin/testing hook; live sequences are unaffected).
+    pub fn clear_prefix_cache(&mut self) {
+        self.prefix.clear(&mut self.pool);
+    }
+
+    /// Register `id`'s current whole-block token prefix in the prefix
+    /// cache (call once its KV state is final, i.e. after prefill).
+    pub fn cache_prefix(&mut self, id: SeqId) {
+        let seq = self.seqs[id.0].as_ref().expect("released SeqId");
+        let bt = self.pool.block_tokens();
+        // Cap at the blocks actually written: a recompute engine (PJRT)
+        // grows the token history without ever writing KV, leaving the
+        // table shorter than the token count — nothing to cache then.
+        let full = (seq.tokens.len() / bt).min(seq.table.n_blocks()) * bt;
+        if full == 0 {
+            return;
+        }
+        let blocks: Vec<BlockId> = (0..full / bt).map(|i| seq.table.physical(i)).collect();
+        let tokens = seq.tokens[..full].to_vec();
+        self.prefix.insert(&mut self.pool, &tokens, bt, &blocks);
+    }
+
+    /// Fork a sequence: shared block table (refcounted), copied token
+    /// history. Continuations diverge via copy-on-write.
+    pub fn fork_seq(&mut self, id: SeqId) -> SeqId {
+        let new = self.create_seq();
+        let src = self.seqs[id.0].as_ref().expect("released SeqId");
+        let tokens = src.tokens.clone();
+        let table = src.table.fork(&mut self.pool);
+        let dst = self.seqs[new.0].as_mut().expect("fresh SeqId");
+        dst.tokens = tokens;
+        dst.table = table;
+        new
+    }
+
+    /// Release a sequence's blocks and retire its id.
+    pub fn release_seq(&mut self, id: SeqId) {
+        let mut seq = self.seqs[id.0].take().expect("double release");
+        seq.table.release_all(&mut self.pool);
+        self.free_slots.push(id.0);
+        // The slot (and so the memo key) can be reused by a new sequence.
+        self.dq_key = None;
+    }
+
+    /// Borrow a [`KvStore`] view of one sequence for an engine call.
+    pub fn seq_view(&mut self, id: SeqId) -> PagedSeq<'_> {
+        PagedSeq { pool: self, id }
+    }
+
+    fn kv_at(&mut self, id: SeqId, plane: Plane, layer: usize, pos: usize) -> &[f32] {
+        let bt = self.pool.block_tokens();
+        let dim = self.pool.dim();
+        let seq = self.seqs[id.0].as_ref().expect("released SeqId");
+        debug_assert!(pos / bt < seq.table.n_blocks());
+        match self.pool.quant() {
+            KvQuant::F32 => {
+                let b = seq.table.physical(pos / bt);
+                self.pool.row_f32(b, plane, layer, pos % bt)
+            }
+            KvQuant::Q8 => {
+                let nb = seq.table.n_blocks();
+                let plane_span = nb * bt * dim;
+                let key = (id.0, layer);
+                if self.dq_key != Some(key) || self.dq_buf.len() != 2 * plane_span {
+                    self.dq_buf.resize(2 * plane_span, 0.0);
+                    for (p, pl) in [Plane::K, Plane::V].into_iter().enumerate() {
+                        for lb in 0..nb {
+                            let o = p * plane_span + lb * bt * dim;
+                            self.pool.read_rows_into(
+                                seq.table.physical(lb),
+                                pl,
+                                layer,
+                                &mut self.dq_buf[o..o + bt * dim],
+                            );
+                        }
+                    }
+                    self.dq_key = Some(key);
+                }
+                let o = plane as usize * plane_span + pos * dim;
+                &self.dq_buf[o..o + dim]
+            }
+        }
+    }
+
+    fn write_kv(&mut self, id: SeqId, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        assert!(pos < self.max_seq, "paged kv overflow at pos {pos}");
+        let seq = self.seqs[id.0].as_mut().expect("released SeqId");
+        let b = seq
+            .table
+            .block_for_write(&mut self.pool, pos)
+            .expect("block pool exhausted — scheduler must ensure_append first");
+        // Any write invalidates the dequant memo conservatively: the
+        // memoized physical block may have been COW-swapped or recycled.
+        self.dq_key = None;
+        let slot = pos % self.pool.block_tokens();
+        self.pool.write_row(b, Plane::K, layer, slot, k);
+        self.pool.write_row(b, Plane::V, layer, slot, v);
+        let bytes = self.pool.in_use_blocks() * self.pool.block_bytes();
+        self.peak_bytes = self.peak_bytes.max(bytes);
+    }
+
+    /// Metrics snapshot fragment for the serving `stats` endpoint.
+    pub fn stats_json(&self) -> Json {
+        let (lookups, hit_tokens, evictions) = self.prefix_stats();
+        let lookup_tokens = self.prefix.lookup_tokens.max(1);
+        Json::obj(vec![
+            ("kv_block_tokens", Json::num(self.pool.block_tokens() as f64)),
+            ("kv_quant", Json::str(self.pool.quant().as_str())),
+            ("kv_blocks_capacity", Json::num(self.pool.capacity_blocks() as f64)),
+            ("kv_blocks_in_use", Json::num(self.pool.in_use_blocks() as f64)),
+            ("kv_block_bytes", Json::num(self.pool.block_bytes() as f64)),
+            ("kv_cow_forks", Json::num(self.pool.cow_forks as f64)),
+            ("prefix_lookups", Json::num(lookups as f64)),
+            ("prefix_hit_tokens", Json::num(hit_tokens as f64)),
+            ("prefix_hit_ratio", Json::num(hit_tokens as f64 / lookup_tokens as f64)),
+            ("prefix_evictions", Json::num(evictions as f64)),
+        ])
+    }
+}
+
+/// Borrowed [`KvStore`] view of one sequence in a [`PagedKvPool`].
+pub struct PagedSeq<'a> {
+    pool: &'a mut PagedKvPool,
+    id: SeqId,
+}
+
+impl KvStore for PagedSeq<'_> {
+    fn len(&self) -> usize {
+        self.pool.seq_len(self.id)
+    }
+
+    fn capacity(&self) -> usize {
+        self.pool.max_seq
+    }
+
+    fn tokens(&self) -> &[u32] {
+        &self.pool.seq(self.id).tokens
+    }
+
+    fn push_token(&mut self, t: u32) {
+        self.pool.seq_mut(self.id).tokens.push(t);
+    }
+
+    fn k_at(&mut self, layer: usize, pos: usize) -> &[f32] {
+        self.pool.kv_at(self.id, Plane::K, layer, pos)
+    }
+
+    fn v_at(&mut self, layer: usize, pos: usize) -> &[f32] {
+        self.pool.kv_at(self.id, Plane::V, layer, pos)
+    }
+
+    fn write_kv(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        self.pool.write_kv(self.id, layer, pos, k, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_pool(bt: usize, blocks: usize, quant: KvQuant) -> PagedKvPool {
+        let cfg = ModelConfig::test();
+        let unit = BlockPool::new(&cfg, bt, quant, 1).block_bytes();
+        PagedKvPool::new(&cfg, bt, quant, blocks * unit)
+    }
+
+    #[test]
+    fn store_roundtrip_through_view() {
+        let cfg = ModelConfig::test();
+        let mut p = tiny_pool(4, 8, KvQuant::F32);
+        let id = p.create_seq();
+        let k: Vec<f32> = (0..cfg.dim).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..cfg.dim).map(|i| -(i as f32)).collect();
+        {
+            let mut view = p.seq_view(id);
+            // Writes are append-only by position (the engine invariant).
+            for pos in 0..6 {
+                view.write_kv(1, pos, &k, &v);
+                view.push_token(pos as u32);
+            }
+            assert_eq!(view.k_at(1, 5), &k[..]);
+            assert_eq!(view.v_at(1, 5), &v[..]);
+            assert_eq!(view.len(), 6);
+        }
+        // Position 5 lives in logical block 1; both blocks allocated.
+        assert_eq!(p.in_use_blocks(), 2);
+        p.release_seq(id);
+        assert_eq!(p.in_use_blocks(), 0);
+    }
+
+    #[test]
+    fn map_cached_prefix_skips_resident_tokens() {
+        let cfg = ModelConfig::test();
+        let mut p = tiny_pool(4, 8, KvQuant::F32);
+        let prompt: Vec<u32> = (0..10).collect();
+        let a = p.create_seq();
+        assert_eq!(p.map_cached_prefix(a, &prompt), 0, "cold cache");
+        let row = vec![0.25f32; cfg.dim];
+        for pos in 0..prompt.len() {
+            for l in 0..cfg.n_layers {
+                p.write_kv(a, l, pos, &row, &row);
+            }
+            p.seq_mut(a).tokens.push(prompt[pos]);
+        }
+        p.cache_prefix(a);
+        let b = p.create_seq();
+        // 10 tokens -> 2 full blocks (8 tokens) cached and shareable.
+        assert_eq!(p.map_cached_prefix(b, &prompt), 8);
+        assert_eq!(p.seq_len(b), 8);
+        // Shared blocks, not copies: only a's 3 blocks exist.
+        assert_eq!(p.in_use_blocks(), 3);
+        // The last-token cap: a fully cached prompt still re-prefills >= 1.
+        let c = p.create_seq();
+        let exact: Vec<u32> = (0..8).collect();
+        assert_eq!(p.map_cached_prefix(c, &exact), 4);
+        p.release_seq(a);
+        p.release_seq(b);
+        p.release_seq(c);
+    }
+
+    #[test]
+    fn ensure_append_evicts_cache_under_pressure() {
+        let cfg = ModelConfig::test();
+        let mut p = tiny_pool(4, 2, KvQuant::F32);
+        let a = p.create_seq();
+        let row = vec![1.0f32; cfg.dim];
+        for pos in 0..8 {
+            for l in 0..cfg.n_layers {
+                p.write_kv(a, l, pos, &row, &row);
+            }
+            p.seq_mut(a).tokens.push(pos as u32);
+        }
+        p.cache_prefix(a);
+        p.release_seq(a); // cache now sole owner of both blocks
+        assert_eq!(p.available_blocks(), 0);
+        let b = p.create_seq();
+        assert!(p.ensure_append(b, 4), "eviction must reclaim a block");
+        assert!(p.available_blocks() >= 1);
+        p.release_seq(b);
+    }
+
+    #[test]
+    fn release_returns_all_blocks() {
+        let cfg = ModelConfig::test();
+        let mut p = tiny_pool(4, 8, KvQuant::Q8);
+        let a = p.create_seq();
+        let row = vec![0.5f32; cfg.dim];
+        for pos in 0..6 {
+            for l in 0..cfg.n_layers {
+                p.write_kv(a, l, pos, &row, &row);
+            }
+            p.seq_mut(a).tokens.push(1);
+        }
+        let b = p.fork_seq(a);
+        assert_eq!(p.seq_len(b), 6);
+        p.release_seq(a);
+        assert!(p.in_use_blocks() > 0, "fork keeps blocks alive");
+        p.release_seq(b);
+        assert_eq!(p.in_use_blocks(), 0);
+    }
+}

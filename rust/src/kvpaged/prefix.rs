@@ -1,0 +1,267 @@
+//! Prompt-prefix cache: a radix tree over token blocks, flattened into a
+//! hash map keyed on *chained* block hashes (the vLLM trick — a node's
+//! key hashes its own tokens together with its parent's key, so one map
+//! lookup per block walks the trie).
+//!
+//! Entries hold one pool reference on their physical block, so cached
+//! blocks survive the sequence that produced them; concurrent requests
+//! with a shared prompt prefix map the same physical blocks and skip
+//! re-prefill of the cached span. Under pool pressure the cache evicts
+//! least-recently-used entries (preferring those only it references),
+//! which is also how a preempted sequence's prefix ages out.
+
+use super::block::{BlockId, BlockPool};
+use std::collections::HashMap;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x1000_0000_01b3;
+
+/// Chained FNV-1a over the parent key and one block's tokens.
+fn chain_hash(parent: u64, tokens: &[u32]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for byte in parent.to_le_bytes() {
+        h = (h ^ byte as u64).wrapping_mul(FNV_PRIME);
+    }
+    for &t in tokens {
+        for byte in t.to_le_bytes() {
+            h = (h ^ byte as u64).wrapping_mul(FNV_PRIME);
+        }
+    }
+    // Never collide with the root sentinel.
+    if h == 0 {
+        1
+    } else {
+        h
+    }
+}
+
+struct Entry {
+    block: BlockId,
+    parent: u64,
+    /// This block's tokens, kept to verify exactness under hash
+    /// collisions (the parent chain is verified recursively by lookup).
+    tokens: Vec<u32>,
+    last_used: u64,
+}
+
+/// Block-granular prefix cache with LRU eviction.
+#[derive(Default)]
+pub struct PrefixCache {
+    entries: HashMap<u64, Entry>,
+    tick: u64,
+    pub lookups: u64,
+    pub lookup_tokens: u64,
+    pub hit_tokens: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+}
+
+impl PrefixCache {
+    pub fn new() -> Self {
+        PrefixCache::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Longest cached run of whole blocks prefixing `tokens`, capped at
+    /// `max_tokens`. Returns the physical blocks in order; the caller
+    /// must `retain` each before mapping it into a table.
+    pub fn lookup(&mut self, tokens: &[u32], block_tokens: usize, max_tokens: usize) -> Vec<BlockId> {
+        self.lookups += 1;
+        self.lookup_tokens += tokens.len() as u64;
+        self.tick += 1;
+        let mut parent = 0u64;
+        let mut out = Vec::new();
+        for chunk in tokens.chunks_exact(block_tokens) {
+            if (out.len() + 1) * block_tokens > max_tokens {
+                break;
+            }
+            let key = chain_hash(parent, chunk);
+            match self.entries.get_mut(&key) {
+                Some(e) if e.parent == parent && e.tokens == chunk => {
+                    e.last_used = self.tick;
+                    out.push(e.block);
+                    parent = key;
+                }
+                _ => break,
+            }
+        }
+        self.hit_tokens += (out.len() * block_tokens) as u64;
+        out
+    }
+
+    /// Register the whole-block prefix of `tokens` backed by `blocks`
+    /// (one physical block per logical block, `blocks.len() >=
+    /// tokens.len() / block_tokens`). Existing entries are kept (their
+    /// payload is equivalent by construction); new entries retain one
+    /// pool reference on their block.
+    pub fn insert(
+        &mut self,
+        pool: &mut BlockPool,
+        tokens: &[u32],
+        block_tokens: usize,
+        blocks: &[BlockId],
+    ) {
+        self.tick += 1;
+        let mut parent = 0u64;
+        for (i, chunk) in tokens.chunks_exact(block_tokens).enumerate() {
+            let key = chain_hash(parent, chunk);
+            match self.entries.get_mut(&key) {
+                Some(e) if e.parent == parent && e.tokens == chunk => {
+                    e.last_used = self.tick;
+                }
+                Some(_) => break, // hash collision: stop extending this chain
+                None => {
+                    pool.retain(blocks[i]);
+                    self.entries.insert(
+                        key,
+                        Entry {
+                            block: blocks[i],
+                            parent,
+                            tokens: chunk.to_vec(),
+                            last_used: self.tick,
+                        },
+                    );
+                    self.insertions += 1;
+                }
+            }
+            parent = key;
+        }
+    }
+
+    /// Evict LRU entries until at least `need` blocks have been freed
+    /// (refcount hit zero) or no freeable entry remains. Returns the
+    /// number freed. Entries whose block is still shared with a live
+    /// sequence are never evicted — releasing them frees nothing now
+    /// and would only destroy reuse; they become freeable (and LRU-old)
+    /// once their sequences retire.
+    pub fn evict_for(&mut self, pool: &mut BlockPool, need: usize) -> usize {
+        if need == 0 {
+            return 0;
+        }
+        // One pass: collect freeable entries, oldest first. Releasing an
+        // entry only ever drops its own block's count, so the freeable
+        // set cannot grow mid-eviction.
+        let mut victims: Vec<(u64, u64)> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| pool.refcount(e.block) == 1)
+            .map(|(&k, e)| (e.last_used, k))
+            .collect();
+        victims.sort_unstable();
+        let mut freed = 0usize;
+        for (_, key) in victims.into_iter().take(need) {
+            let e = self.entries.remove(&key).expect("victim exists");
+            pool.release(e.block);
+            self.evictions += 1;
+            freed += 1;
+        }
+        freed
+    }
+
+    /// Drop every entry, releasing the cache's block references.
+    pub fn clear(&mut self, pool: &mut BlockPool) {
+        for (_, e) in self.entries.drain() {
+            pool.release(e.block);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::block::KvQuant;
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn pool(bt: usize, blocks: usize) -> BlockPool {
+        let cfg = ModelConfig::test();
+        let unit = BlockPool::new(&cfg, bt, KvQuant::F32, 1).block_bytes();
+        BlockPool::new(&cfg, bt, KvQuant::F32, blocks * unit)
+    }
+
+    fn alloc_n(p: &mut BlockPool, n: usize) -> Vec<BlockId> {
+        (0..n).map(|_| p.try_alloc().unwrap()).collect()
+    }
+
+    #[test]
+    fn lookup_walks_the_chain_and_stops_at_divergence() {
+        let mut p = pool(4, 8);
+        let mut c = PrefixCache::new();
+        let toks: Vec<u32> = (0..12).collect();
+        let blocks = alloc_n(&mut p, 3);
+        c.insert(&mut p, &toks, 4, &blocks);
+        assert_eq!(c.len(), 3);
+
+        // Full hit.
+        assert_eq!(c.lookup(&toks, 4, usize::MAX), blocks);
+        // Diverging third block: only two hit.
+        let mut other = toks.clone();
+        other[9] = 99;
+        assert_eq!(c.lookup(&other, 4, usize::MAX), blocks[..2]);
+        // Diverging first block: no hit.
+        other[0] = 99;
+        assert!(c.lookup(&other, 4, usize::MAX).is_empty());
+        // max_tokens caps the run to whole blocks.
+        assert_eq!(c.lookup(&toks, 4, 11), blocks[..2]);
+        assert_eq!(c.hit_tokens, 12 + 8 + 0 + 8);
+    }
+
+    #[test]
+    fn insert_holds_references_and_evict_frees() {
+        let mut p = pool(4, 4);
+        let mut c = PrefixCache::new();
+        let toks: Vec<u32> = (0..8).collect();
+        let blocks = alloc_n(&mut p, 2);
+        c.insert(&mut p, &toks, 4, &blocks);
+        // Sequence done: release its own references; cache keeps blocks alive.
+        for &b in &blocks {
+            p.release(b);
+        }
+        assert_eq!(p.in_use_blocks(), 2);
+        assert_eq!(p.available_blocks(), 2);
+        let freed = c.evict_for(&mut p, 1);
+        assert_eq!(freed, 1);
+        assert_eq!(p.available_blocks(), 3);
+        c.clear(&mut p);
+        assert_eq!(p.in_use_blocks(), 0);
+    }
+
+    #[test]
+    fn shared_entries_are_not_evicted() {
+        let mut p = pool(4, 4);
+        let mut c = PrefixCache::new();
+        let a: Vec<u32> = (0..4).collect();
+        let b: Vec<u32> = (100..104).collect();
+        let ba = alloc_n(&mut p, 1);
+        let bb = alloc_n(&mut p, 1);
+        c.insert(&mut p, &a, 4, &ba); // older
+        c.insert(&mut p, &b, 4, &bb);
+        p.retain(ba[0]); // a's block also mapped by a live sequence
+        p.release(bb[0]); // b's block is cache-only
+        p.release(ba[0]); // drop the allocator ref; live seq + cache remain
+        let freed = c.evict_for(&mut p, 1);
+        assert_eq!(freed, 1, "must free the cache-only block first");
+        // The shared entry survives, and further eviction cannot free it.
+        assert_eq!(c.lookup(&a, 4, usize::MAX).len(), 1);
+        assert!(c.lookup(&b, 4, usize::MAX).is_empty());
+        assert_eq!(c.evict_for(&mut p, 1), 0, "shared block is pinned");
+    }
+
+    #[test]
+    fn reinsert_does_not_double_retain() {
+        let mut p = pool(4, 4);
+        let mut c = PrefixCache::new();
+        let toks: Vec<u32> = (0..4).collect();
+        let blocks = alloc_n(&mut p, 1);
+        c.insert(&mut p, &toks, 4, &blocks);
+        c.insert(&mut p, &toks, 4, &blocks);
+        assert_eq!(p.refcount(blocks[0]), 2); // allocator + one cache ref
+        assert_eq!(c.insertions, 1);
+    }
+}

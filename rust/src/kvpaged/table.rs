@@ -1,0 +1,167 @@
+//! Per-sequence block tables: the logical→physical mapping with
+//! copy-on-write semantics.
+//!
+//! A table is a vector of physical [`BlockId`]s; logical block `i` holds
+//! token positions `i*block_tokens .. (i+1)*block_tokens`. Tables from
+//! different sequences may map the same physical blocks (prefix-cache
+//! hits, forks); a write into a block whose refcount exceeds one first
+//! forks it via [`BlockPool::fork_into`], so divergence after a shared
+//! prefix never corrupts a sibling.
+
+use super::block::{BlockId, BlockPool};
+
+/// Logical→physical block mapping for one sequence.
+#[derive(Default)]
+pub struct BlockTable {
+    blocks: Vec<BlockId>,
+}
+
+impl BlockTable {
+    pub fn new() -> Self {
+        BlockTable { blocks: Vec::new() }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn physical(&self, logical: usize) -> BlockId {
+        self.blocks[logical]
+    }
+
+    /// Map an already-referenced physical block as the next logical
+    /// block (prefix-cache hit path; the caller has done the `retain`).
+    pub fn push_mapped(&mut self, b: BlockId) {
+        self.blocks.push(b);
+    }
+
+    /// Clone this table for a forked sequence: every mapped block gains
+    /// a reference; later writes on either side trigger COW.
+    pub fn fork(&self, pool: &mut BlockPool) -> BlockTable {
+        for &b in &self.blocks {
+            pool.retain(b);
+        }
+        BlockTable { blocks: self.blocks.clone() }
+    }
+
+    /// Release every mapped block and clear the table.
+    pub fn release_all(&mut self, pool: &mut BlockPool) {
+        for &b in &self.blocks {
+            pool.release(b);
+        }
+        self.blocks.clear();
+    }
+
+    /// Physical block for writing position `pos`, allocating the next
+    /// logical block or COW-forking a shared one as needed. `None` when
+    /// the pool is dry — callers prevent this by checking
+    /// [`BlockTable::blocks_needed_for_append`] first.
+    pub fn block_for_write(&mut self, pool: &mut BlockPool, pos: usize) -> Option<BlockId> {
+        let lb = pos / pool.block_tokens();
+        if lb == self.blocks.len() {
+            let b = pool.try_alloc()?;
+            self.blocks.push(b);
+            return Some(b);
+        }
+        assert!(lb < self.blocks.len(), "non-append write at block {lb}");
+        let b = self.blocks[lb];
+        if pool.refcount(b) > 1 {
+            let forked = pool.fork_into(b)?;
+            self.blocks[lb] = forked;
+            return Some(forked);
+        }
+        Some(b)
+    }
+
+    /// Fresh physical blocks required to write positions
+    /// `len .. len + n`: new logical blocks, plus one COW fork if the
+    /// tail block is shared and will be written into.
+    pub fn blocks_needed_for_append(&self, pool: &BlockPool, len: usize, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        let bt = pool.block_tokens();
+        let target_blocks = (len + n + bt - 1) / bt;
+        let mut need = target_blocks.saturating_sub(self.blocks.len());
+        if len % bt != 0 {
+            let tail = len / bt;
+            if tail < self.blocks.len() && pool.refcount(self.blocks[tail]) > 1 {
+                need += 1;
+            }
+        }
+        need
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::block::{KvQuant, Plane};
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn pool(bt: usize, blocks: usize) -> BlockPool {
+        let cfg = ModelConfig::test();
+        let unit = BlockPool::new(&cfg, bt, KvQuant::F32, 1).block_bytes();
+        BlockPool::new(&cfg, bt, KvQuant::F32, blocks * unit)
+    }
+
+    #[test]
+    fn append_allocates_one_block_per_span() {
+        let mut p = pool(4, 8);
+        let mut t = BlockTable::new();
+        let x = vec![0.0f32; p.dim()];
+        for pos in 0..10 {
+            let b = t.block_for_write(&mut p, pos).unwrap();
+            p.write_row(b, Plane::K, 0, pos % 4, &x);
+        }
+        assert_eq!(t.n_blocks(), 3); // ceil(10/4)
+        assert_eq!(p.in_use_blocks(), 3);
+        t.release_all(&mut p);
+        assert_eq!(p.in_use_blocks(), 0);
+    }
+
+    #[test]
+    fn shared_tail_write_forks() {
+        let mut p = pool(4, 8);
+        let mut a = BlockTable::new();
+        let x = vec![1.0f32; p.dim()];
+        for pos in 0..6 {
+            let b = a.block_for_write(&mut p, pos).unwrap();
+            p.write_row(b, Plane::K, 0, pos % 4, &x);
+        }
+        let mut b = a.fork(&mut p);
+        assert_eq!(p.refcount(a.physical(1)), 2);
+        // b appends into the shared partial tail block -> COW.
+        let y = vec![-1.0f32; p.dim()];
+        let blk = b.block_for_write(&mut p, 6).unwrap();
+        p.write_row(blk, Plane::K, 0, 2, &y);
+        assert_eq!(p.cow_forks, 1);
+        assert_ne!(a.physical(1), b.physical(1));
+        // a's copy of position 5 is untouched.
+        assert_eq!(p.row_f32(a.physical(1), Plane::K, 0, 1), &x[..]);
+        assert_eq!(p.row_f32(b.physical(1), Plane::K, 0, 2), &y[..]);
+        a.release_all(&mut p);
+        b.release_all(&mut p);
+        assert_eq!(p.in_use_blocks(), 0);
+    }
+
+    #[test]
+    fn blocks_needed_accounts_for_cow() {
+        let mut p = pool(4, 8);
+        let mut a = BlockTable::new();
+        let x = vec![0.5f32; p.dim()];
+        for pos in 0..6 {
+            let b = a.block_for_write(&mut p, pos).unwrap();
+            p.write_row(b, Plane::K, 0, pos % 4, &x);
+        }
+        // Private tail: appending 1 token needs nothing new.
+        assert_eq!(a.blocks_needed_for_append(&p, 6, 1), 0);
+        // Crossing into a new logical block needs one.
+        assert_eq!(a.blocks_needed_for_append(&p, 6, 3), 1);
+        let b = a.fork(&mut p);
+        // Shared tail: first append must also fork.
+        assert_eq!(a.blocks_needed_for_append(&p, 6, 1), 1);
+        assert_eq!(a.blocks_needed_for_append(&p, 6, 3), 2);
+        drop(b);
+    }
+}

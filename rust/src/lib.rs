@@ -29,6 +29,7 @@ pub mod eval;
 pub mod f16;
 pub mod fwht;
 pub mod gguf;
+pub mod kvpaged;
 pub mod model;
 pub mod quant;
 pub mod runtime;

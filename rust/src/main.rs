@@ -9,6 +9,7 @@
 //! itq3s inspect     --model M.iguf                 distribution + Thm1/2 stats
 //! itq3s eval-ppl    --model M.iguf [--split valid|web] [--engine native|pjrt]
 //! itq3s serve       --model M.iguf [--addr A] [--engine native|pjrt]
+//!                   [--kv-budget BYTES] [--kv-block-tokens N] [--kv-quant f32|q8]
 //! itq3s table1|table2|table3                       paper-table harnesses
 //! itq3s e2e                                        end-to-end pipeline check
 //! ```
@@ -157,12 +158,27 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
     let engine = flag_or(flags, "engine", "native");
     let artifacts = flag_or(flags, "artifacts", "artifacts");
     let eng = load_engine(&model, &engine, &artifacts)?;
+    let kv_quant_name = flag_or(flags, "kv-quant", "f32");
+    let kv_quant = itq3s::kvpaged::KvQuant::parse(&kv_quant_name)
+        .with_context(|| format!("unknown --kv-quant '{kv_quant_name}' (f32|q8)"))?;
+    let kv_block_tokens: usize = flag_or(flags, "kv-block-tokens", "16").parse()?;
+    if kv_block_tokens == 0 {
+        bail!("--kv-block-tokens must be positive");
+    }
     let cfg = itq3s::coordinator::CoordinatorConfig {
         max_batch: flag_or(flags, "max-batch", "8").parse()?,
         kv_budget_bytes: flag_or(flags, "kv-budget", "268435456").parse()?,
+        kv_block_tokens,
+        kv_quant,
         ..Default::default()
     };
-    println!("serving {} on {addr} [{engine}]", model.display());
+    println!(
+        "serving {} on {addr} [{engine}] (kv: {} budget, {}-token blocks, {})",
+        model.display(),
+        itq3s::util::human_bytes(cfg.kv_budget_bytes as u64),
+        cfg.kv_block_tokens,
+        kv_quant_name,
+    );
     itq3s::server::run(&addr, eng, cfg)
 }
 

@@ -7,6 +7,37 @@
 
 use super::ModelConfig;
 
+/// Storage abstraction the engines read/write KV state through.
+///
+/// Two implementations exist: the dense per-sequence [`KvCache`] below
+/// (contiguous `f32`, worst-case capacity up front) and the paged,
+/// refcounted, prefix-shared store in [`crate::kvpaged`]. The engine is
+/// written against this trait so the two can be swapped per sequence and
+/// cross-checked bit-for-bit (`rust/tests/kv_paged.rs`).
+///
+/// Read methods take `&mut self` so a quantized (Q8-block) store can
+/// dequantize into an internal scratch buffer and hand out a borrow; the
+/// dense store ignores the mutability and returns its slice directly.
+pub trait KvStore {
+    /// Tokens currently stored; also the next write position.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Maximum tokens this store can hold for the sequence.
+    fn capacity(&self) -> usize;
+    /// Raw token history (the PJRT recompute engine re-scores from it).
+    fn tokens(&self) -> &[u32];
+    /// Record `t` as consumed (`len()` grows by one).
+    fn push_token(&mut self, t: u32);
+    /// Key vector written at (`layer`, `pos`).
+    fn k_at(&mut self, layer: usize, pos: usize) -> &[f32];
+    /// Value vector written at (`layer`, `pos`).
+    fn v_at(&mut self, layer: usize, pos: usize) -> &[f32];
+    /// Store the K/V vectors for (`layer`, `pos`).
+    fn write_kv(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]);
+}
+
 /// Dense KV storage for a single sequence: `k[layer][pos][dim]`.
 pub struct KvCache {
     pub cfg_layers: usize,
@@ -73,6 +104,36 @@ impl KvCache {
     /// Drop all state (sequence finished); capacity is retained for reuse.
     pub fn reset(&mut self) {
         self.tokens.clear();
+    }
+}
+
+impl KvStore for KvCache {
+    fn len(&self) -> usize {
+        KvCache::len(self)
+    }
+
+    fn capacity(&self) -> usize {
+        self.max_seq
+    }
+
+    fn tokens(&self) -> &[u32] {
+        &self.tokens
+    }
+
+    fn push_token(&mut self, t: u32) {
+        self.tokens.push(t);
+    }
+
+    fn k_at(&mut self, layer: usize, pos: usize) -> &[f32] {
+        KvCache::k_at(self, layer, pos)
+    }
+
+    fn v_at(&mut self, layer: usize, pos: usize) -> &[f32] {
+        KvCache::v_at(self, layer, pos)
+    }
+
+    fn write_kv(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        KvCache::write_kv(self, layer, pos, k, v)
     }
 }
 

@@ -16,20 +16,24 @@
 //! RMSNorm → SwiGLU → residual; tied-embedding LM head), verified by the
 //! integration tests in `rust/tests/pjrt_parity.rs`.
 
-use super::{weights::PaddedLinear, DenseModel, KvCache, ModelConfig, QuantizedModel};
+use super::{weights::PaddedLinear, DenseModel, KvStore, ModelConfig, QuantizedModel};
 use crate::quant::matmul::MatvecScratch;
 use crate::tensor::{matvec_accum, Tensor};
 use std::sync::Mutex;
 
 /// Engine abstraction shared by the native and PJRT backends.
+///
+/// KV state goes through the [`KvStore`] trait so the same forward pass
+/// runs against the dense per-sequence cache or a paged/quantized view
+/// from [`crate::kvpaged`] — `&mut KvCache` coerces at every call site.
 pub trait Engine: Send + Sync {
     fn config(&self) -> &ModelConfig;
     /// Append `token` at position `cache.len()`, returning next-token
     /// logits.
-    fn decode_step(&self, cache: &mut KvCache, token: u32) -> Vec<f32>;
+    fn decode_step(&self, cache: &mut dyn KvStore, token: u32) -> Vec<f32>;
     /// Ingest a whole prompt, returning logits at every position
     /// (`(len, vocab)`).
-    fn prefill(&self, cache: &mut KvCache, tokens: &[u32]) -> Tensor;
+    fn prefill(&self, cache: &mut dyn KvStore, tokens: &[u32]) -> Tensor;
 }
 
 /// Weight storage variants the native engine can run.
@@ -238,10 +242,10 @@ impl Engine for NativeEngine {
         self.cfg()
     }
 
-    fn decode_step(&self, cache: &mut KvCache, token: u32) -> Vec<f32> {
+    fn decode_step(&self, cache: &mut dyn KvStore, token: u32) -> Vec<f32> {
         let cfg = self.cfg().clone();
         let pos = cache.len();
-        assert!(pos < cfg.max_seq, "sequence overflows max_seq");
+        assert!(pos < cfg.max_seq.min(cache.capacity()), "sequence overflows max_seq");
         let (dim, hd, nh) = (cfg.dim, cfg.head_dim(), cfg.n_heads);
 
         let mut x = self.embed().row(token as usize).to_vec();
@@ -305,15 +309,15 @@ impl Engine for NativeEngine {
             }
         }
         drop(mv);
-        cache.tokens.push(token);
+        cache.push_token(token);
         self.logits_for(&x)
     }
 
-    fn prefill(&self, cache: &mut KvCache, tokens: &[u32]) -> Tensor {
+    fn prefill(&self, cache: &mut dyn KvStore, tokens: &[u32]) -> Tensor {
         let cfg = self.cfg().clone();
         let seq = tokens.len();
         let pos0 = cache.len();
-        assert!(pos0 + seq <= cfg.max_seq, "prefill overflows max_seq");
+        assert!(pos0 + seq <= cfg.max_seq.min(cache.capacity()), "prefill overflows max_seq");
         let (dim, hd, nh) = (cfg.dim, cfg.head_dim(), cfg.n_heads);
 
         // X: (seq, dim) residual stream.
@@ -384,7 +388,9 @@ impl Engine for NativeEngine {
                 }
             }
         }
-        cache.tokens.extend_from_slice(tokens);
+        for &t in tokens {
+            cache.push_token(t);
+        }
         // Logits at every position.
         let mut logits = Tensor::zeros(vec![seq, cfg.vocab]);
         for t in 0..seq {
@@ -397,6 +403,7 @@ impl Engine for NativeEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::KvCache;
     use crate::quant::format_by_name;
 
     fn engine_pair() -> (NativeEngine, NativeEngine) {

@@ -17,7 +17,7 @@ pub mod pack;
 
 use crate::gguf;
 use crate::model::native::Engine;
-use crate::model::{KvCache, ModelConfig};
+use crate::model::{KvStore, ModelConfig};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -165,20 +165,22 @@ impl Engine for PjrtEngine {
         &self.cfg
     }
 
-    fn decode_step(&self, cache: &mut KvCache, token: u32) -> Vec<f32> {
-        cache.tokens.push(token);
-        let n = cache.tokens.len();
+    fn decode_step(&self, cache: &mut dyn KvStore, token: u32) -> Vec<f32> {
+        cache.push_token(token);
+        let n = cache.len();
         assert!(n <= self.seq, "PJRT window ({}) exceeded", self.seq);
-        let logits = self.score(&cache.tokens).expect("pjrt score");
+        let logits = self.score(cache.tokens()).expect("pjrt score");
         logits.row(n - 1).to_vec()
     }
 
-    fn prefill(&self, cache: &mut KvCache, tokens: &[u32]) -> Tensor {
-        let start = cache.tokens.len();
-        cache.tokens.extend_from_slice(tokens);
-        let n = cache.tokens.len();
+    fn prefill(&self, cache: &mut dyn KvStore, tokens: &[u32]) -> Tensor {
+        let start = cache.len();
+        for &t in tokens {
+            cache.push_token(t);
+        }
+        let n = cache.len();
         assert!(n <= self.seq, "PJRT window ({}) exceeded", self.seq);
-        let logits = self.score(&cache.tokens).expect("pjrt score");
+        let logits = self.score(cache.tokens()).expect("pjrt score");
         let mut out = Tensor::zeros(vec![tokens.len(), self.vocab]);
         for (i, r) in (start..n).enumerate() {
             out.row_mut(i).copy_from_slice(logits.row(r));

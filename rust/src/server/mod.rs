@@ -103,6 +103,8 @@ fn handle_conn(
                 let rx = coord.generate(req);
                 for ev in rx.iter() {
                     match ev {
+                        // Liveness probe — internal only, nothing on the wire.
+                        Event::Heartbeat => {}
                         Event::Token { text, .. } => {
                             send(&mut stream, &Json::obj(vec![("token", Json::str(text))]))?;
                         }
@@ -227,7 +229,12 @@ mod tests {
         let engine = NativeEngine::dense(DenseModel::random(&cfg, 5, None));
         spawn_ephemeral(
             Box::new(engine),
-            CoordinatorConfig { max_batch: 4, kv_budget_bytes: 64 << 20, prefill_chunk: 16 },
+            CoordinatorConfig {
+                max_batch: 4,
+                kv_budget_bytes: 64 << 20,
+                prefill_chunk: 16,
+                ..Default::default()
+            },
         )
         .unwrap()
     }
@@ -253,6 +260,11 @@ mod tests {
         c.send(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
         let stats = c.recv().unwrap();
         assert_eq!(stats.get("requests_finished").unwrap().as_u64(), Some(1));
+        // Paged-KV stats are part of the snapshot.
+        assert_eq!(stats.get("kv_block_tokens").unwrap().as_u64(), Some(16));
+        assert!(stats.get("kv_blocks_capacity").unwrap().as_u64().unwrap() > 0);
+        assert!(stats.get("prefix_lookups").unwrap().as_u64().unwrap() >= 1);
+        assert_eq!(stats.get("kv_quant").unwrap().as_str(), Some("f32"));
 
         c.send(&Json::obj(vec![("op", Json::str("shutdown"))])).unwrap();
         let ok = c.recv().unwrap();

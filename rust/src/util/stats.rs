@@ -145,6 +145,65 @@ impl Welford {
     }
 }
 
+/// Bounded latency-distribution accumulator: a [`Welford`] for exact
+/// streaming mean/min/max/count plus a fixed-capacity ring of recent
+/// samples for p50/p99. Memory is O(capacity) regardless of how many
+/// samples flow through — serving metrics stay flat under sustained
+/// load (the percentiles are over the most recent window, which is the
+/// operationally useful view anyway).
+#[derive(Clone, Debug)]
+pub struct RingStats {
+    w: Welford,
+    ring: Vec<f64>,
+    cap: usize,
+    next: usize,
+}
+
+impl RingStats {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        RingStats { w: Welford::new(), ring: Vec::new(), cap: capacity, next: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.w.push(x);
+        if self.ring.len() < self.cap {
+            self.ring.push(x);
+        } else {
+            self.ring[self.next] = x;
+        }
+        self.next = (self.next + 1) % self.cap;
+    }
+
+    /// Total samples ever pushed (not just the retained window).
+    pub fn count(&self) -> u64 {
+        self.w.count()
+    }
+
+    /// Exact mean over all samples ever pushed.
+    pub fn mean(&self) -> f64 {
+        self.w.mean()
+    }
+
+    /// Exact max over all samples ever pushed.
+    pub fn max(&self) -> f64 {
+        self.w.max()
+    }
+
+    /// Percentile over the retained window (nearest-rank).
+    pub fn window_percentile(&self, p: f64) -> f64 {
+        percentile(&self.ring, p)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.window_percentile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.window_percentile(99.0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -190,6 +249,21 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 100.0);
         assert_eq!(percentile(&xs, 99.0), 99.0);
+    }
+
+    #[test]
+    fn ring_stats_stay_bounded_and_percentiles_track_window() {
+        let mut r = RingStats::new(64);
+        for i in 0..10_000 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.count(), 10_000);
+        assert_eq!(r.ring.len(), 64, "ring must not grow past capacity");
+        // Window holds the last 64 samples: 9936..9999.
+        assert!(r.p50() >= 9936.0 && r.p50() <= 9999.0);
+        assert!(r.p99() >= r.p50());
+        assert_eq!(r.max(), 9999.0);
+        assert!((r.mean() - 4999.5).abs() < 1e-6);
     }
 
     #[test]

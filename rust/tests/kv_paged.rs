@@ -1,0 +1,253 @@
+//! Paged KV-cache integration: bit-identity against the dense cache,
+//! copy-on-write divergence, prefix-cache reuse, Q8 error bounds, and
+//! the §7.3 acceptance claim — under the same byte budget, paged
+//! admission beats the old worst-case reservation bound on a
+//! shared-prefix workload.
+
+use itq3s::coordinator::sampler::argmax;
+use itq3s::coordinator::{kvpool, Coordinator, CoordinatorConfig, Event, FinishReason, GenRequest};
+use itq3s::kvpaged::{BlockPool, KvQuant, PagedKvPool};
+use itq3s::model::native::Engine;
+use itq3s::model::{DenseModel, KvCache, ModelConfig, NativeEngine};
+
+fn engine(seed: u64) -> NativeEngine {
+    NativeEngine::dense(DenseModel::random(&ModelConfig::test(), seed, Some(5.0)))
+}
+
+/// Greedy prefill + decode through any KvStore; returns per-step logits.
+fn greedy_run(
+    eng: &NativeEngine,
+    store: &mut dyn itq3s::model::KvStore,
+    prompt: &[u32],
+    steps: usize,
+) -> Vec<Vec<f32>> {
+    let prefill_logits = eng.prefill(store, prompt);
+    let mut out = Vec::with_capacity(steps + 1);
+    out.push(prefill_logits.row(prompt.len() - 1).to_vec());
+    let mut tok = argmax(out.last().unwrap());
+    for _ in 0..steps {
+        let logits = eng.decode_step(store, tok);
+        tok = argmax(&logits);
+        out.push(logits);
+    }
+    out
+}
+
+#[test]
+fn paged_f32_greedy_decode_is_bit_identical_to_dense() {
+    // Acceptance: across block sizes, every logit of a greedy run
+    // through the paged f32 store equals the dense-cache run exactly.
+    let cfg = ModelConfig::test();
+    for &bt in &[4usize, 16, 64] {
+        for seed in [7u64, 8] {
+            let eng = engine(seed);
+            let prompt: Vec<u32> = (0..13).map(|i| (i * 19 + seed as u32) % 256).collect();
+
+            let mut dense = KvCache::new(&cfg);
+            let want = greedy_run(&eng, &mut dense, &prompt, 10);
+
+            let mut pool = PagedKvPool::new(&cfg, bt, KvQuant::F32, 64 << 20);
+            let id = pool.create_seq();
+            let got = greedy_run(&eng, &mut pool.seq_view(id), &prompt, 10);
+
+            assert_eq!(want.len(), got.len());
+            for (step, (w, g)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(w, g, "bt={bt} seed={seed} step={step} diverged");
+            }
+            pool.release_seq(id);
+            assert_eq!(pool.in_use_blocks(), 0);
+        }
+    }
+}
+
+#[test]
+fn cow_fork_divergence_matches_unshared_runs() {
+    // Two sequences fork from a shared prefix, then continue with
+    // different tokens. Each continuation must be bit-identical to a
+    // fresh, unshared sequence fed the same tokens — proving the fork
+    // isolates writes (COW) without disturbing shared state.
+    let cfg = ModelConfig::test();
+    let eng = engine(3);
+    let prompt: Vec<u32> = (0..10).map(|i| i * 11 % 256).collect(); // 10 % 4 != 0: shared tail
+    let cont_a = [50u32, 51, 52];
+    let cont_b = [120u32, 121, 122];
+
+    let mut pool = PagedKvPool::new(&cfg, 4, KvQuant::F32, 64 << 20);
+    let a = pool.create_seq();
+    eng.prefill(&mut pool.seq_view(a), &prompt);
+    let b = pool.fork_seq(a);
+
+    // Interleave the two continuations to stress isolation.
+    let mut la = Vec::new();
+    let mut lb = Vec::new();
+    for i in 0..cont_a.len() {
+        la.push(eng.decode_step(&mut pool.seq_view(a), cont_a[i]));
+        lb.push(eng.decode_step(&mut pool.seq_view(b), cont_b[i]));
+    }
+    assert!(pool.cow_forks() >= 1, "appending into the shared tail must fork");
+
+    // References: unshared sequences on fresh pools.
+    for (cont, got) in [(&cont_a, &la), (&cont_b, &lb)] {
+        let mut refpool = PagedKvPool::new(&cfg, 4, KvQuant::F32, 64 << 20);
+        let r = refpool.create_seq();
+        eng.prefill(&mut refpool.seq_view(r), &prompt);
+        for (i, &t) in cont.iter().enumerate() {
+            let want = eng.decode_step(&mut refpool.seq_view(r), t);
+            assert_eq!(&want, &got[i], "continuation diverged at step {i}");
+        }
+    }
+    pool.release_seq(a);
+    pool.release_seq(b);
+    assert_eq!(pool.in_use_blocks(), 0);
+}
+
+#[test]
+fn q8_kv_decode_stays_within_error_bound() {
+    // Teacher-forced run: identical token stream through a dense f32
+    // cache and a paged Q8 store; final logits must stay within a tight
+    // relative-L2 bound (per-row Q8 KV error is sub-1%; attention mixes
+    // it down further).
+    let cfg = ModelConfig::test();
+    let eng = engine(11);
+    let prompt: Vec<u32> = (0..12).map(|i| (i * 7 + 3) % 256).collect();
+    let forced = [9u32, 200, 33, 71, 154, 18];
+
+    let mut dense = KvCache::new(&cfg);
+    eng.prefill(&mut dense, &prompt);
+    let mut pool = PagedKvPool::new(&cfg, 16, KvQuant::Q8, 64 << 20);
+    let id = pool.create_seq();
+    eng.prefill(&mut pool.seq_view(id), &prompt);
+
+    let mut want = Vec::new();
+    let mut got = Vec::new();
+    for &t in &forced {
+        want = eng.decode_step(&mut dense, t);
+        got = eng.decode_step(&mut pool.seq_view(id), t);
+    }
+    let rel = itq3s::util::stats::rel_l2_err(&want, &got);
+    assert!(rel < 0.05, "q8 KV logits rel-L2 {rel}");
+}
+
+#[test]
+fn q8_pool_holds_about_4x_more_tokens_per_byte() {
+    let cfg = ModelConfig::test();
+    let budget = 1 << 20;
+    let f = BlockPool::new(&cfg, 16, KvQuant::F32, budget);
+    let q = BlockPool::new(&cfg, 16, KvQuant::Q8, budget);
+    let ratio = q.capacity_blocks() as f64 / f.capacity_blocks() as f64;
+    assert!(ratio > 3.5, "q8 capacity ratio {ratio}");
+}
+
+fn collect_done(rx: &std::sync::mpsc::Receiver<Event>) -> (usize, FinishReason) {
+    for ev in rx.iter() {
+        if let Event::Done { reason, gen_tokens, .. } = ev {
+            return (gen_tokens, reason);
+        }
+    }
+    panic!("stream ended without Done");
+}
+
+#[test]
+fn prefix_cache_skips_reprefill_for_repeated_prompts() {
+    // N identical prompts run one after another: every run after the
+    // first must map the cached whole-block prefix instead of
+    // re-prefilling it.
+    let cfg = ModelConfig::test();
+    let eng = NativeEngine::dense(DenseModel::random(&cfg, 5, None));
+    let c = Coordinator::new(
+        Box::new(eng),
+        CoordinatorConfig {
+            max_batch: 2,
+            kv_budget_bytes: 64 << 20,
+            prefill_chunk: 8,
+            kv_block_tokens: 4,
+            kv_quant: KvQuant::F32,
+        },
+    );
+    let prompt = "the shared prefix of every request".to_string(); // 35 tokens with BOS
+    let n = 4;
+    for _ in 0..n {
+        let rx = c.generate(GenRequest {
+            prompt: prompt.clone(),
+            max_new_tokens: 4,
+            ..Default::default()
+        });
+        let (gen_tokens, reason) = collect_done(&rx);
+        assert_eq!((gen_tokens, reason), (4, FinishReason::MaxTokens));
+    }
+    let stats = c.stats().unwrap();
+    // 35 prompt tokens -> 8 whole blocks of 4 cached; runs 2..n map them.
+    let reused = stats.get("prefix_reused_tokens").unwrap().as_u64().unwrap();
+    assert!(reused >= ((n - 1) * 32) as u64, "reused={reused}");
+    let ratio = stats.get("prefix_hit_ratio").unwrap().as_f64().unwrap();
+    assert!(ratio > 0.3, "hit ratio {ratio}");
+    c.shutdown();
+}
+
+#[test]
+fn shared_prefix_batch_beats_worst_case_admission_bound() {
+    // The §7.3 acceptance claim: same kv_budget_bytes, strictly more
+    // concurrent sequences than the old worst-case byte reservation
+    // would ever admit.
+    let cfg = ModelConfig::test();
+    let bt = 4usize;
+    let unit = BlockPool::new(&cfg, bt, KvQuant::F32, 1).block_bytes();
+    let budget = 18 * unit;
+    let prompt = "a".repeat(40); // 41 tokens with BOS
+    let worst = 41 + 16; // prompt + max_new of the long request
+    let old_bound = kvpool::worst_case_bound(&cfg, budget, worst);
+    assert_eq!(old_bound, 2, "test geometry: old policy admits only 2");
+
+    let eng = NativeEngine::dense(DenseModel::random(&cfg, 5, None));
+    let c = Coordinator::new(
+        Box::new(eng),
+        CoordinatorConfig {
+            max_batch: 8,
+            kv_budget_bytes: budget,
+            prefill_chunk: 8,
+            kv_block_tokens: bt,
+            kv_quant: KvQuant::F32,
+        },
+    );
+    // Long request first; wait for its first token so its prefix is
+    // cached and it is still decoding (15 rounds left).
+    let rx_long = c.generate(GenRequest {
+        prompt: prompt.clone(),
+        max_new_tokens: 16,
+        ..Default::default()
+    });
+    let mut first_token_seen = false;
+    for ev in rx_long.iter() {
+        if matches!(ev, Event::Token { .. }) {
+            first_token_seen = true;
+            break;
+        }
+    }
+    assert!(first_token_seen);
+    // Three sharers: map 10 cached blocks each, then need ~1 fresh block.
+    let followers: Vec<_> = (0..3)
+        .map(|_| {
+            c.generate(GenRequest {
+                prompt: prompt.clone(),
+                max_new_tokens: 4,
+                ..Default::default()
+            })
+        })
+        .collect();
+    for rx in &followers {
+        let (gen_tokens, reason) = collect_done(rx);
+        assert_eq!((gen_tokens, reason), (4, FinishReason::MaxTokens));
+    }
+    let (gen_tokens, reason) = collect_done(&rx_long);
+    assert_eq!((gen_tokens, reason), (16, FinishReason::MaxTokens));
+
+    let stats = c.stats().unwrap();
+    let occupancy = stats.get("batch_occupancy_max").unwrap().as_f64().unwrap();
+    assert!(
+        occupancy > old_bound as f64,
+        "paged occupancy {occupancy} must exceed the worst-case bound {old_bound}"
+    );
+    let reused = stats.get("prefix_reused_tokens").unwrap().as_u64().unwrap();
+    assert!(reused >= 3 * 40, "followers must share the cached prefix, reused={reused}");
+    c.shutdown();
+}

@@ -25,7 +25,12 @@ fn quantized_model_serves_coherent_text() {
     let trained = Path::new("artifacts/model_fp32.iguf").exists();
     let coord = itq3s::coordinator::Coordinator::new(
         Box::new(engine),
-        CoordinatorConfig { max_batch: 2, kv_budget_bytes: 64 << 20, prefill_chunk: 16 },
+        CoordinatorConfig {
+            max_batch: 2,
+            kv_budget_bytes: 64 << 20,
+            prefill_chunk: 16,
+            ..Default::default()
+        },
     );
     let (text, done) = coord.generate_collect(GenRequest {
         prompt: "the archive of ".into(),
@@ -52,7 +57,12 @@ fn tcp_serving_full_stack() {
     let engine = test_engine();
     let (addr, handle) = server::spawn_ephemeral(
         Box::new(engine),
-        CoordinatorConfig { max_batch: 4, kv_budget_bytes: 64 << 20, prefill_chunk: 16 },
+        CoordinatorConfig {
+            max_batch: 4,
+            kv_budget_bytes: 64 << 20,
+            prefill_chunk: 16,
+            ..Default::default()
+        },
     )
     .unwrap();
     let addrs = addr.to_string();
