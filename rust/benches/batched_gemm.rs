@@ -1,0 +1,154 @@
+//! Batched-GEMM B-sweep: how much per-token latency the fused
+//! multi-sequence decode path buys as the batch grows. Two levels:
+//!
+//! 1. **kernel** — `QuantizedLinear::gemm_q8` vs B independent
+//!    `matvec_q8` calls on a serving-ish layer, per hot format;
+//! 2. **engine** — `NativeEngine::decode_batch` vs B sequential
+//!    `decode_step`s on the tiny model at a real context depth
+//!    (tokens/s at B ∈ {1, 4, 8, 16} — the acceptance number).
+//!
+//! Writes `BENCH_gemm.json`; the expected-shape table lives in
+//! EXPERIMENTS.md §Batched.
+
+use itq3s::bench::harness::bench;
+use itq3s::model::native::Engine;
+use itq3s::model::{
+    DenseModel, KvCache, KvStore, ModelConfig, NativeEngine, QuantizedModel, StoreBatch,
+};
+use itq3s::quant::format_by_name;
+use itq3s::quant::matmul::{MatvecScratch, QuantizedLinear};
+use itq3s::tensor::Tensor;
+use itq3s::util::json::Json;
+use itq3s::util::XorShift;
+use std::collections::BTreeMap;
+
+const BATCHES: [usize; 4] = [1, 4, 8, 16];
+
+fn main() {
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
+
+    // --- 1. kernel level: fused GEMM vs per-row matvec loop ----------
+    let (rows, cols) = (1024usize, 2048usize);
+    let mut rng = XorShift::new(5);
+    let mut w = Tensor::zeros(vec![rows, cols]);
+    for v in w.data_mut() {
+        *v = (rng.next_student_t(5.0) as f32) * 0.02;
+    }
+    let mut kernel: BTreeMap<String, Json> = BTreeMap::new();
+    for fmt_name in ["itq3_s", "q8_0"] {
+        let lin = QuantizedLinear::new(format_by_name(fmt_name).unwrap(), &w);
+        let mut per_fmt: BTreeMap<String, Json> = BTreeMap::new();
+        let mut base_tps = 0.0f64;
+        for &b in &BATCHES {
+            let x: Vec<f32> = (0..b * cols).map(|_| rng.next_f32() - 0.5).collect();
+            let mut y = vec![0.0f32; b * rows];
+            let mut scratch = MatvecScratch::new();
+            let r_loop = bench("matvec-loop", 1, 5, || {
+                for t in 0..b {
+                    lin.matvec_q8(
+                        &x[t * cols..(t + 1) * cols],
+                        &mut y[t * rows..(t + 1) * rows],
+                        &mut scratch,
+                        1,
+                    );
+                }
+            });
+            let r_gemm = bench("gemm", 1, 5, || {
+                lin.gemm_q8(&x, b, &mut y, &mut scratch, 1);
+            });
+            let tps = b as f64 / r_gemm.mean_s;
+            if b == 1 {
+                base_tps = tps;
+            }
+            let speedup = r_loop.mean_s / r_gemm.mean_s;
+            println!(
+                "kernel {fmt_name:<7} {rows}x{cols} B={b:<2} {:>9.1} matvec-eq/s  \
+                 ({speedup:.2}x vs per-row matvec loop)",
+                tps
+            );
+            per_fmt.insert(
+                format!("b{b}"),
+                Json::obj(vec![
+                    ("matvecs_per_s", Json::num(tps)),
+                    ("speedup_vs_matvec_loop", Json::num(speedup)),
+                    ("scaling_vs_b1", Json::num(if base_tps > 0.0 { tps / base_tps } else { 0.0 })),
+                ]),
+            );
+        }
+        kernel.insert(fmt_name.to_string(), Json::Obj(per_fmt));
+    }
+    report.insert(
+        "gemm_kernel".to_string(),
+        Json::obj(vec![
+            ("rows", Json::num(rows as f64)),
+            ("cols", Json::num(cols as f64)),
+            ("threads", Json::num(1.0)),
+            ("by_format", Json::Obj(kernel)),
+        ]),
+    );
+
+    // --- 2. engine level: fused decode rounds, tokens/s --------------
+    let cfg = ModelConfig::tiny();
+    let dense = DenseModel::random(&cfg, 42, Some(5.0));
+    let eng =
+        NativeEngine::quantized(QuantizedModel::quantize(&dense, format_by_name("itq3_s").unwrap()));
+    let context = 64usize;
+    let steps = 6usize;
+    let mut engine_rep: BTreeMap<String, Json> = BTreeMap::new();
+    let mut b1_tps = 0.0f64;
+    for &b in &BATCHES {
+        let prompts: Vec<Vec<u32>> = (0..b)
+            .map(|s| (0..context as u32).map(|i| (i * 31 + s as u32 * 13) % 256).collect())
+            .collect();
+        let mut caches: Vec<KvCache> = prompts
+            .iter()
+            .map(|p| {
+                let mut c = KvCache::new(&cfg);
+                eng.prefill(&mut c, p);
+                c
+            })
+            .collect();
+        let toks: Vec<u32> = (0..b as u32).map(|s| (s * 5 + 1) % 256).collect();
+        // Each measured iteration: `steps` fused rounds (context creeps
+        // by a few tokens across iterations; depth stays comparable).
+        let r = bench("decode_batch", 1, 5, || {
+            for _ in 0..steps {
+                let stores: Vec<&mut dyn KvStore> =
+                    caches.iter_mut().map(|c| c as &mut dyn KvStore).collect();
+                let mut kv = StoreBatch { stores };
+                let _ = eng.decode_batch(&mut kv, &toks);
+            }
+        });
+        let tps = (b * steps) as f64 / r.mean_s;
+        if b == 1 {
+            b1_tps = tps;
+        }
+        println!(
+            "engine itq3_s ctx~{context} B={b:<2} {:>9.1} tokens/s  ({:.2}x vs B=1)",
+            tps,
+            if b1_tps > 0.0 { tps / b1_tps } else { 0.0 }
+        );
+        engine_rep.insert(
+            format!("b{b}"),
+            Json::obj(vec![
+                ("tokens_per_s", Json::num(tps)),
+                ("scaling_vs_b1", Json::num(if b1_tps > 0.0 { tps / b1_tps } else { 0.0 })),
+            ]),
+        );
+    }
+    report.insert(
+        "engine_decode".to_string(),
+        Json::obj(vec![
+            ("model", Json::str("tiny/itq3_s")),
+            ("context", Json::num(context as f64)),
+            ("steps_per_iter", Json::num(steps as f64)),
+            ("by_batch", Json::Obj(engine_rep)),
+        ]),
+    );
+
+    let out = Json::Obj(report).to_string();
+    match std::fs::write("BENCH_gemm.json", &out) {
+        Ok(()) => println!("wrote BENCH_gemm.json"),
+        Err(e) => eprintln!("could not write BENCH_gemm.json: {e}"),
+    }
+}

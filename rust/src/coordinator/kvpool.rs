@@ -20,7 +20,7 @@
 //! bound: `rust/tests/kv_paged.rs` demonstrates paged admission exceeds
 //! it on shared-prefix workloads under the same byte budget.
 
-use crate::kvpaged::{KvQuant, PagedKvPool, PagedSeq, SeqId};
+use crate::kvpaged::{KvQuant, PagedBatch, PagedKvPool, PagedSeq, SeqId};
 use crate::model::ModelConfig;
 use crate::util::json::Json;
 
@@ -113,6 +113,12 @@ impl KvPool {
 
     pub fn seq_view(&mut self, id: SeqId) -> PagedSeq<'_> {
         self.pool.seq_view(id)
+    }
+
+    /// Batched view of one decode round's sequences (see
+    /// [`PagedKvPool::batch_view`]).
+    pub fn batch_view<'a>(&'a mut self, ids: &'a [SeqId]) -> PagedBatch<'a> {
+        self.pool.batch_view(ids)
     }
 
     pub fn stats_json(&self) -> Json {

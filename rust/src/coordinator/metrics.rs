@@ -25,9 +25,20 @@ pub struct Metrics {
     /// Sequences preempted back to the waiting queue under KV pressure.
     pub preemptions: u64,
     pub ttft_ms: RingStats,
+    /// Per-token decode latency. Since the fused batched decode round
+    /// (PR 3) this is the round's wall time divided by its batch size,
+    /// pushed once per sequence — amortized-per-token, so within one
+    /// round all samples are equal and p50/p99 reflect across-round
+    /// variance only (per-sequence variance inside a fused call is not
+    /// attributable). Keys are unchanged; semantics shifted from
+    /// measured-per-step.
     pub decode_step_ms: RingStats,
     pub prefill_tokens_per_round: RingStats,
     pub batch_occupancy: RingStats,
+    /// Sequences per fused `decode_batch` call (how much GEMM batching
+    /// each decode round actually got, vs `batch_occupancy` which also
+    /// counts prefill-only sequences).
+    pub decode_batch_size: RingStats,
     pub kv_peak_bytes: usize,
     /// Paged-pool snapshot fragment (block/prefix stats), refreshed on
     /// each stats request.
@@ -56,6 +67,7 @@ impl Metrics {
             decode_step_ms: RingStats::new(WINDOW),
             prefill_tokens_per_round: RingStats::new(WINDOW),
             batch_occupancy: RingStats::new(WINDOW),
+            decode_batch_size: RingStats::new(WINDOW),
             kv_peak_bytes: 0,
             kv_pool: Json::Null,
         }
@@ -92,6 +104,8 @@ impl Metrics {
             ("decode_step_ms_p99", Json::num(self.decode_step_ms.p99())),
             ("batch_occupancy_mean", Json::num(self.batch_occupancy.mean())),
             ("batch_occupancy_max", Json::num(self.batch_occupancy.max())),
+            ("decode_batch_size_mean", Json::num(self.decode_batch_size.mean())),
+            ("decode_batch_size_max", Json::num(self.decode_batch_size.max())),
             ("kv_peak_bytes", Json::num(self.kv_peak_bytes as f64)),
         ];
         // Splice in the paged-pool fragment (flat keys, stable shape).

@@ -18,10 +18,12 @@
 //!    long prompt cannot starve running generations. A heartbeat probes
 //!    the client first, so a dropped receiver cancels *before* the next
 //!    prefill round is burned.
-//! 4. **Decode round** — every running sequence advances one token
-//!    (the MMVQ path), streams it to its client, and is retired on its
-//!    stop condition, releasing blocks immediately (whole-block
-//!    prefixes stay cached for reuse).
+//! 4. **Decode round** — all running sequences advance one token in a
+//!    single fused [`Engine::decode_batch`] pass (each weight block
+//!    unpacked once for the whole batch — the batched-MMQ scheduling
+//!    that turns occupancy into per-token latency), stream to their
+//!    clients, and are retired on their stop conditions, releasing
+//!    blocks immediately (whole-block prefixes stay cached for reuse).
 //!
 //! Clients talk to the worker over channels; each request gets an
 //! unbounded event stream so a slow client never blocks the batch.
@@ -498,8 +500,15 @@ fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
             }
         }
 
-        // ---- 4. decode round ----------------------------------------
+        // ---- 4. decode round (one fused multi-sequence step) --------
+        // Token delivery and stop conditions are resolved per sequence
+        // first; every survivor then advances through a single
+        // `decode_batch` call, so each weight block is unpacked once for
+        // the whole batch instead of once per sequence — this is where
+        // the paged cache's occupancy turns into per-token latency.
         let mut finished: Vec<usize> = Vec::new();
+        let mut step_idx: Vec<usize> = Vec::new();
+        let mut step_toks: Vec<u32> = Vec::new();
         for (i, seq) in active.iter_mut().enumerate() {
             let Some(tok) = seq.state.pending else { continue };
             // Deliver the sampled token.
@@ -530,11 +539,21 @@ fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
                 finished.push(i);
                 continue;
             }
-            // Advance one decode step.
+            step_idx.push(i);
+            step_toks.push(tok);
+        }
+        if !step_idx.is_empty() {
+            let ids: Vec<SeqId> = step_idx.iter().map(|&i| active[i].seq).collect();
             let t0 = Instant::now();
-            let logits = engine.decode_step(&mut pool.seq_view(seq.seq), tok);
-            metrics.decode_step_ms.push(t0.elapsed().as_secs_f64() * 1000.0);
-            seq.state.pending = Some(seq.state.sampler.sample(&logits));
+            let logits = engine.decode_batch(&mut pool.batch_view(&ids), &step_toks);
+            let per_tok_ms =
+                t0.elapsed().as_secs_f64() * 1000.0 / step_idx.len() as f64;
+            metrics.decode_batch_size.push(step_idx.len() as f64);
+            for (j, &i) in step_idx.iter().enumerate() {
+                metrics.decode_step_ms.push(per_tok_ms);
+                let seq = &mut active[i];
+                seq.state.pending = Some(seq.state.sampler.sample(&logits[j]));
+            }
         }
 
         // ---- 5. retire finished -------------------------------------
@@ -593,9 +612,14 @@ mod tests {
         assert_eq!(reason, FinishReason::MaxTokens);
         assert_eq!(gen_tokens, 6);
         assert_eq!(prompt_tokens, 6); // BOS + 5 bytes
-        // A random model emits arbitrary bytes; decode is lossy, so only
-        // the token count is meaningful here.
-        assert_eq!(text.chars().count(), 6);
+        // A random model emits arbitrary bytes; decode is lossy (invalid
+        // UTF-8 merges into replacement chars, a generated 0x00 is
+        // dropped as BOS/pad), so the char count is only bounded by the
+        // token count — `gen_tokens` above is the exact invariant.
+        // (Triage: the seed `== 6` form was coupled to one seed's greedy
+        // output surviving decode byte-for-byte; even emptiness is not
+        // an invariant — all six tokens could decode to dropped bytes.)
+        assert!(text.chars().count() <= 6, "text: {text:?}");
         c.shutdown();
     }
 

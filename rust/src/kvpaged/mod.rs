@@ -228,6 +228,15 @@ impl PagedKvPool {
         PagedSeq { pool: self, id }
     }
 
+    /// Borrow a [`KvBatchStore`] view of several sequences for one fused
+    /// decode round. All sequences live behind this pool's single
+    /// `&mut`, so concurrent [`PagedSeq`] views are impossible; the
+    /// batch adapter instead routes every per-index call back through
+    /// the pool (the engine touches one sequence's KV at a time anyway).
+    pub fn batch_view<'a>(&'a mut self, ids: &'a [SeqId]) -> PagedBatch<'a> {
+        PagedBatch { pool: self, ids }
+    }
+
     fn kv_at(&mut self, id: SeqId, plane: Plane, layer: usize, pos: usize) -> &[f32] {
         let bt = self.pool.block_tokens();
         let dim = self.pool.dim();
@@ -335,6 +344,48 @@ impl KvStore for PagedSeq<'_> {
     }
 }
 
+/// Borrowed [`KvBatchStore`] view of several sequences of one
+/// [`PagedKvPool`] — the coordinator hands this to
+/// [`crate::model::native::Engine::decode_batch`] each decode round.
+pub struct PagedBatch<'a> {
+    pool: &'a mut PagedKvPool,
+    ids: &'a [SeqId],
+}
+
+impl crate::model::KvBatchStore for PagedBatch<'_> {
+    fn n_seqs(&self) -> usize {
+        self.ids.len()
+    }
+
+    fn seq_len(&self, i: usize) -> usize {
+        self.pool.seq_len(self.ids[i])
+    }
+
+    fn capacity(&self, _i: usize) -> usize {
+        self.pool.max_seq
+    }
+
+    fn tokens(&self, i: usize) -> &[u32] {
+        &self.pool.seq(self.ids[i]).tokens
+    }
+
+    fn push_token(&mut self, i: usize, t: u32) {
+        self.pool.seq_mut(self.ids[i]).tokens.push(t);
+    }
+
+    fn k_at(&mut self, i: usize, layer: usize, pos: usize) -> &[f32] {
+        self.pool.kv_at(self.ids[i], Plane::K, layer, pos)
+    }
+
+    fn v_at(&mut self, i: usize, layer: usize, pos: usize) -> &[f32] {
+        self.pool.kv_at(self.ids[i], Plane::V, layer, pos)
+    }
+
+    fn write_kv(&mut self, i: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        self.pool.write_kv(self.ids[i], layer, pos, k, v)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -418,6 +469,36 @@ mod tests {
         assert!(p.ensure_append(b, 4), "eviction must reclaim a block");
         assert!(p.available_blocks() >= 1);
         p.release_seq(b);
+    }
+
+    #[test]
+    fn batch_view_routes_per_index_to_the_right_sequence() {
+        use crate::model::KvBatchStore;
+        let cfg = ModelConfig::test();
+        let mut p = tiny_pool(4, 8, KvQuant::F32);
+        let a = p.create_seq();
+        let b = p.create_seq();
+        let ka: Vec<f32> = (0..cfg.dim).map(|i| i as f32).collect();
+        let kb: Vec<f32> = (0..cfg.dim).map(|i| -(i as f32)).collect();
+        let ids = [a, b];
+        {
+            let mut batch = p.batch_view(&ids);
+            assert_eq!(batch.n_seqs(), 2);
+            batch.write_kv(0, 0, 0, &ka, &ka);
+            batch.write_kv(1, 0, 0, &kb, &kb);
+            batch.push_token(0, 3);
+            batch.push_token(1, 5);
+            assert_eq!(batch.k_at(0, 0, 0), &ka[..]);
+            assert_eq!(batch.v_at(1, 0, 0), &kb[..]);
+            assert_eq!(batch.seq_len(0), 1);
+            assert_eq!(batch.tokens(1), &[5]);
+        }
+        // The same state is visible through the single-sequence views.
+        assert_eq!(p.seq_view(a).k_at(0, 0), &ka[..]);
+        assert_eq!(p.seq_view(b).k_at(0, 0), &kb[..]);
+        p.release_seq(a);
+        p.release_seq(b);
+        assert_eq!(p.in_use_blocks(), 0);
     }
 
     #[test]

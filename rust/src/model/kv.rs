@@ -38,6 +38,116 @@ pub trait KvStore {
     fn write_kv(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]);
 }
 
+/// Batched KV access for the fused multi-sequence decode pass.
+///
+/// The engine steps every sequence of a decode round through each layer
+/// at once, but KV traffic stays per-sequence: the batched pass reads
+/// and writes one sequence's state at a time through this trait. Every
+/// method takes the sequence's batch index `i` (`0..n_seqs()`) and has
+/// [`KvStore`] semantics per index.
+///
+/// Why not `&mut [&mut dyn KvStore]`? The paged pool
+/// ([`crate::kvpaged::PagedKvPool`]) owns all sequences behind one
+/// `&mut` and cannot hand out several live views at once; routing each
+/// call through a batch adapter ([`crate::kvpaged::PagedBatch`]) keeps
+/// the borrow single. Independent stores (dense caches in tests and
+/// benches) batch through [`StoreBatch`], and [`BatchSlot`] adapts one
+/// slot back into a plain [`KvStore`] so per-sequence code (including
+/// the default sequential `decode_batch`) runs unchanged.
+pub trait KvBatchStore {
+    /// Number of sequences in the batch.
+    fn n_seqs(&self) -> usize;
+    /// Tokens stored for sequence `i` (its next write position).
+    fn seq_len(&self, i: usize) -> usize;
+    /// Maximum tokens sequence `i` can hold.
+    fn capacity(&self, i: usize) -> usize;
+    /// Raw token history of sequence `i`.
+    fn tokens(&self, i: usize) -> &[u32];
+    /// Record `t` as consumed by sequence `i`.
+    fn push_token(&mut self, i: usize, t: u32);
+    /// Key vector of sequence `i` at (`layer`, `pos`).
+    fn k_at(&mut self, i: usize, layer: usize, pos: usize) -> &[f32];
+    /// Value vector of sequence `i` at (`layer`, `pos`).
+    fn v_at(&mut self, i: usize, layer: usize, pos: usize) -> &[f32];
+    /// Store sequence `i`'s K/V vectors for (`layer`, `pos`).
+    fn write_kv(&mut self, i: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]);
+}
+
+/// A decode batch over independent per-sequence stores.
+pub struct StoreBatch<'a> {
+    pub stores: Vec<&'a mut dyn KvStore>,
+}
+
+impl KvBatchStore for StoreBatch<'_> {
+    fn n_seqs(&self) -> usize {
+        self.stores.len()
+    }
+
+    fn seq_len(&self, i: usize) -> usize {
+        self.stores[i].len()
+    }
+
+    fn capacity(&self, i: usize) -> usize {
+        self.stores[i].capacity()
+    }
+
+    fn tokens(&self, i: usize) -> &[u32] {
+        self.stores[i].tokens()
+    }
+
+    fn push_token(&mut self, i: usize, t: u32) {
+        self.stores[i].push_token(t)
+    }
+
+    fn k_at(&mut self, i: usize, layer: usize, pos: usize) -> &[f32] {
+        self.stores[i].k_at(layer, pos)
+    }
+
+    fn v_at(&mut self, i: usize, layer: usize, pos: usize) -> &[f32] {
+        self.stores[i].v_at(layer, pos)
+    }
+
+    fn write_kv(&mut self, i: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        self.stores[i].write_kv(layer, pos, k, v)
+    }
+}
+
+/// One slot of a [`KvBatchStore`] viewed as a plain [`KvStore`].
+pub struct BatchSlot<'a> {
+    pub batch: &'a mut dyn KvBatchStore,
+    pub i: usize,
+}
+
+impl KvStore for BatchSlot<'_> {
+    fn len(&self) -> usize {
+        self.batch.seq_len(self.i)
+    }
+
+    fn capacity(&self) -> usize {
+        self.batch.capacity(self.i)
+    }
+
+    fn tokens(&self) -> &[u32] {
+        self.batch.tokens(self.i)
+    }
+
+    fn push_token(&mut self, t: u32) {
+        self.batch.push_token(self.i, t)
+    }
+
+    fn k_at(&mut self, layer: usize, pos: usize) -> &[f32] {
+        self.batch.k_at(self.i, layer, pos)
+    }
+
+    fn v_at(&mut self, layer: usize, pos: usize) -> &[f32] {
+        self.batch.v_at(self.i, layer, pos)
+    }
+
+    fn write_kv(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        self.batch.write_kv(self.i, layer, pos, k, v)
+    }
+}
+
 /// Dense KV storage for a single sequence: `k[layer][pos][dim]`.
 pub struct KvCache {
     pub cfg_layers: usize,
@@ -165,6 +275,34 @@ mod tests {
         assert_eq!(c.live_bytes(), 2 * cfg.n_layers * 2 * cfg.dim * 4);
         c.reset();
         assert!(c.is_empty());
+    }
+
+    #[test]
+    fn store_batch_and_slot_delegate_per_index() {
+        let cfg = ModelConfig::test();
+        let mut a = KvCache::new(&cfg);
+        let mut b = KvCache::new(&cfg);
+        let k: Vec<f32> = (0..cfg.dim).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..cfg.dim).map(|i| 2.0 * i as f32).collect();
+        let mut batch = StoreBatch { stores: vec![&mut a, &mut b] };
+        assert_eq!(batch.n_seqs(), 2);
+        batch.write_kv(1, 0, 0, &k, &v);
+        batch.push_token(1, 42);
+        assert_eq!(batch.seq_len(0), 0, "slot 0 untouched");
+        assert_eq!(batch.seq_len(1), 1);
+        assert_eq!(batch.k_at(1, 0, 0), &k[..]);
+        // A slot view behaves exactly like the underlying store.
+        let mut slot = BatchSlot { batch: &mut batch, i: 1 };
+        assert_eq!(slot.len(), 1);
+        assert_eq!(slot.tokens(), &[42]);
+        slot.write_kv(1, 1, &v, &k);
+        slot.push_token(7);
+        assert_eq!(slot.v_at(1, 1), &k[..]);
+        drop(slot);
+        drop(batch);
+        assert_eq!(b.tokens, vec![42, 7]);
+        assert_eq!(b.k_at(0, 0), &k[..]);
+        assert!(a.is_empty());
     }
 
     #[test]

@@ -6,6 +6,14 @@
 //!
 //! - [`NativeEngine::decode_step`] — the MMVQ path (§5.4): one token,
 //!   fused dequant matvecs, per-sequence KV cache.
+//! - [`Engine::decode_batch`] — the fused multi-sequence MMVQ/MMQ
+//!   hybrid: all sequences of a decode round advance one token through
+//!   each layer together, so every linear runs one batched Q8 GEMM
+//!   ([`crate::quant::matmul::QuantizedLinear::gemm_q8`]) that unpacks
+//!   each weight block once for the whole batch. KV traffic stays
+//!   per-sequence (ragged positions, ragged contexts) through
+//!   [`KvBatchStore`]. Test-enforced bit-identical to stepping each
+//!   sequence alone.
 //! - [`NativeEngine::prefill`] — the MMQ path (§5.2): all prompt
 //!   positions batched through each linear so every weight block is
 //!   dequantized once per *tile* rather than once per token (the
@@ -16,7 +24,10 @@
 //! RMSNorm → SwiGLU → residual; tied-embedding LM head), verified by the
 //! integration tests in `rust/tests/pjrt_parity.rs`.
 
-use super::{weights::PaddedLinear, DenseModel, KvStore, ModelConfig, QuantizedModel};
+use super::{
+    weights::PaddedLinear, BatchSlot, DenseModel, KvBatchStore, KvStore, ModelConfig,
+    QuantizedModel,
+};
 use crate::quant::matmul::MatvecScratch;
 use crate::tensor::{matvec_accum, Tensor};
 use std::sync::Mutex;
@@ -31,6 +42,25 @@ pub trait Engine: Send + Sync {
     /// Append `token` at position `cache.len()`, returning next-token
     /// logits.
     fn decode_step(&self, cache: &mut dyn KvStore, token: u32) -> Vec<f32>;
+    /// Advance every sequence of `batch` by one token (`tokens[i]` feeds
+    /// sequence `i`), returning next-token logits per sequence.
+    ///
+    /// Contract (test-enforced in `rust/tests/batched_decode.rs`): the
+    /// results are **bit-identical** to calling [`Engine::decode_step`]
+    /// on each sequence independently, for any batch size or
+    /// composition — batching is a throughput optimization, never a
+    /// numerics change. The default is that sequential loop; the native
+    /// engine overrides it with a fused pass that runs each linear as
+    /// one batched Q8 GEMM over all sequences.
+    fn decode_batch(&self, batch: &mut dyn KvBatchStore, tokens: &[u32]) -> Vec<Vec<f32>> {
+        assert_eq!(batch.n_seqs(), tokens.len());
+        let mut out = Vec::with_capacity(tokens.len());
+        for (i, &t) in tokens.iter().enumerate() {
+            let mut slot = BatchSlot { batch: &mut *batch, i };
+            out.push(self.decode_step(&mut slot, t));
+        }
+        out
+    }
     /// Ingest a whole prompt, returning logits at every position
     /// (`(len, vocab)`).
     fn prefill(&self, cache: &mut dyn KvStore, tokens: &[u32]) -> Tensor;
@@ -52,6 +82,29 @@ pub struct NativeEngine {
     /// coordinator drives one engine from one worker thread, so this
     /// lock is uncontended.
     scratch: Mutex<MatvecScratch>,
+    /// Staging buffers of the fused batched decode pass (`B·dim` /
+    /// `B·ffn` activations), warm after the first round. Same
+    /// single-worker story as `scratch`; when both are taken the batch
+    /// scratch is locked first (the only multi-lock site is
+    /// `decode_batch`, so the order cannot invert).
+    batch_scratch: Mutex<BatchScratch>,
+}
+
+/// Residual/activation staging for [`Engine::decode_batch`], row-major
+/// `(batch, width)` per buffer.
+#[derive(Default)]
+struct BatchScratch {
+    x: Vec<f32>,
+    h: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    attn: Vec<f32>,
+    o: Vec<f32>,
+    g1: Vec<f32>,
+    g3: Vec<f32>,
+    ff: Vec<f32>,
+    scores: Vec<f32>,
 }
 
 /// `x * w / rms(x)` into `out`.
@@ -133,6 +186,37 @@ impl<'a> Lin<'a> {
             Lin::Quant(q) => q.matmul(x),
         }
     }
+
+    /// Batched decode-path apply: `x` row-major `(batch, in)`, `y`
+    /// row-major `(batch, out)`. Routing mirrors [`Lin::matvec`] per
+    /// row: the fused Q8 GEMM runs only where the sequential path would
+    /// run the integer matvec (specialized kernel + `act_quant`), and
+    /// every other configuration replays the sequential path per row —
+    /// so batched and sequential decode stay bit-identical in *every*
+    /// configuration, not just the hot one.
+    fn matmul_batch(
+        &self,
+        x: &[f32],
+        batch: usize,
+        y: &mut [f32],
+        scratch: &mut MatvecScratch,
+        act_quant: bool,
+    ) {
+        if let Lin::Quant(q) = self {
+            if act_quant && q.has_q8_kernel() {
+                q.matmul_q8(x, batch, y, scratch);
+                return;
+            }
+        }
+        // Everything the GEMM doesn't cover replays [`Lin::matvec`] per
+        // row — one routing function, so batched and sequential decode
+        // cannot drift apart in the non-hot configurations.
+        let in_dim = x.len() / batch;
+        let out_dim = y.len() / batch;
+        for (xr, yr) in x.chunks_exact(in_dim).zip(y.chunks_exact_mut(out_dim)) {
+            self.matvec(xr, yr, scratch, act_quant);
+        }
+    }
 }
 
 /// Uniform view over one layer's seven linears.
@@ -154,6 +238,7 @@ impl NativeEngine {
             weights: Weights::Dense(m),
             act_quant: true,
             scratch: Mutex::new(MatvecScratch::new()),
+            batch_scratch: Mutex::new(BatchScratch::default()),
         }
     }
 
@@ -162,6 +247,7 @@ impl NativeEngine {
             weights: Weights::Quant(m),
             act_quant: true,
             scratch: Mutex::new(MatvecScratch::new()),
+            batch_scratch: Mutex::new(BatchScratch::default()),
         }
     }
 
@@ -311,6 +397,113 @@ impl Engine for NativeEngine {
         drop(mv);
         cache.push_token(token);
         self.logits_for(&x)
+    }
+
+    /// Fused multi-sequence decode: one forward pass advances every
+    /// sequence by one token, with each linear applied as a single
+    /// batched Q8 GEMM over all sequences (each packed weight block
+    /// unpacked once per output row for the whole batch). Positions and
+    /// attention contexts are ragged — per-sequence — and all KV reads
+    /// and writes go through the per-index [`KvBatchStore`] methods, so
+    /// paged, quantized and dense stores all work unchanged. Per
+    /// sequence, every operation replays [`NativeEngine::decode_step`]'s
+    /// math exactly (the GEMM's per-column bit-identity contract plus
+    /// shared scalar kernels), which is what keeps batched decode
+    /// bit-identical to sequential decode.
+    fn decode_batch(&self, batch: &mut dyn KvBatchStore, tokens: &[u32]) -> Vec<Vec<f32>> {
+        let nb = tokens.len();
+        assert_eq!(batch.n_seqs(), nb);
+        if nb == 0 {
+            return Vec::new();
+        }
+        let cfg = self.cfg().clone();
+        let (dim, hd, nh) = (cfg.dim, cfg.head_dim(), cfg.n_heads);
+        let pos: Vec<usize> = (0..nb).map(|i| batch.seq_len(i)).collect();
+        for (i, &p) in pos.iter().enumerate() {
+            assert!(
+                p < cfg.max_seq.min(batch.capacity(i)),
+                "sequence {i} overflows max_seq"
+            );
+        }
+
+        let mut bs = self.batch_scratch.lock().expect("batch scratch poisoned");
+        let BatchScratch { x, h, q, k, v, attn, o, g1, g3, ff, scores } = &mut *bs;
+        let dim_bufs =
+            [&mut *x, &mut *h, &mut *q, &mut *k, &mut *v, &mut *attn, &mut *o, &mut *ff];
+        for buf in dim_bufs {
+            buf.clear();
+            buf.resize(nb * dim, 0.0);
+        }
+        for buf in [&mut *g1, &mut *g3] {
+            buf.clear();
+            buf.resize(nb * cfg.ffn, 0.0);
+        }
+        for (i, &t) in tokens.iter().enumerate() {
+            x[i * dim..(i + 1) * dim].copy_from_slice(self.embed().row(t as usize));
+        }
+        let mut mv = self.scratch.lock().expect("matvec scratch poisoned");
+        let aq = self.act_quant;
+
+        for li in 0..cfg.n_layers {
+            let l = self.layer(li);
+            // --- attention ---
+            for s in 0..nb {
+                let xs = &x[s * dim..(s + 1) * dim];
+                rmsnorm(xs, l.attn_norm, cfg.eps, &mut h[s * dim..(s + 1) * dim]);
+            }
+            l.wq.matmul_batch(&h[..], nb, &mut q[..], &mut mv, aq);
+            l.wk.matmul_batch(&h[..], nb, &mut k[..], &mut mv, aq);
+            l.wv.matmul_batch(&h[..], nb, &mut v[..], &mut mv, aq);
+            for s in 0..nb {
+                rope(&mut q[s * dim..(s + 1) * dim], pos[s], nh, hd, cfg.rope_theta);
+                rope(&mut k[s * dim..(s + 1) * dim], pos[s], nh, hd, cfg.rope_theta);
+                let (ks, vs) = (&k[s * dim..(s + 1) * dim], &v[s * dim..(s + 1) * dim]);
+                batch.write_kv(s, li, pos[s], ks, vs);
+            }
+            let scale = 1.0 / (hd as f32).sqrt();
+            for s in 0..nb {
+                scores.resize(pos[s] + 1, 0.0);
+                for hh in 0..nh {
+                    let qh = &q[s * dim + hh * hd..s * dim + (hh + 1) * hd];
+                    for (t, sc) in scores.iter_mut().enumerate() {
+                        let kh = &batch.k_at(s, li, t)[hh * hd..(hh + 1) * hd];
+                        *sc = crate::quant::matmul::dot(qh, kh) * scale;
+                    }
+                    softmax(&mut scores[..]);
+                    let out = &mut attn[s * dim + hh * hd..s * dim + (hh + 1) * hd];
+                    out.fill(0.0);
+                    for (t, &p) in scores.iter().enumerate() {
+                        let vh = &batch.v_at(s, li, t)[hh * hd..(hh + 1) * hd];
+                        for (oj, &vj) in out.iter_mut().zip(vh) {
+                            *oj += p * vj;
+                        }
+                    }
+                }
+            }
+            l.wo.matmul_batch(&attn[..], nb, &mut o[..], &mut mv, aq);
+            for (xi, oi) in x.iter_mut().zip(o.iter()) {
+                *xi += oi;
+            }
+            // --- SwiGLU FFN ---
+            for s in 0..nb {
+                let xs = &x[s * dim..(s + 1) * dim];
+                rmsnorm(xs, l.ffn_norm, cfg.eps, &mut h[s * dim..(s + 1) * dim]);
+            }
+            l.w1.matmul_batch(&h[..], nb, &mut g1[..], &mut mv, aq);
+            l.w3.matmul_batch(&h[..], nb, &mut g3[..], &mut mv, aq);
+            for (a, &b) in g1.iter_mut().zip(g3.iter()) {
+                *a = silu(*a) * b;
+            }
+            l.w2.matmul_batch(&g1[..], nb, &mut ff[..], &mut mv, aq);
+            for (xi, fi) in x.iter_mut().zip(ff.iter()) {
+                *xi += fi;
+            }
+        }
+        drop(mv);
+        for (i, &t) in tokens.iter().enumerate() {
+            batch.push_token(i, t);
+        }
+        (0..nb).map(|s| self.logits_for(&x[s * dim..(s + 1) * dim])).collect()
     }
 
     fn prefill(&self, cache: &mut dyn KvStore, tokens: &[u32]) -> Tensor {
@@ -540,6 +733,54 @@ mod tests {
             let a = e1.decode_step(&mut c1, t);
             let b = e2.decode_step(&mut c2, t);
             assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn decode_batch_matches_decode_step_bitwise() {
+        // Engine-level spot check of the batched-decode contract (the
+        // full cross-format/ragged harness is tests/batched_decode.rs):
+        // a fused 3-sequence round equals three sequential steps, bit
+        // for bit, on ragged prompts.
+        use crate::model::StoreBatch;
+        let cfg = ModelConfig::test();
+        let dense = DenseModel::random(&cfg, 91, Some(5.0));
+        let fmt = format_by_name("itq3_s").unwrap();
+        let eng = NativeEngine::quantized(QuantizedModel::quantize(&dense, fmt));
+        let prompts: [&[u32]; 3] = [&[1, 2, 3], &[9, 8], &[40, 41, 42, 43, 44]];
+        let forced: [[u32; 2]; 3] = [[7, 11], [200, 201], [5, 6]];
+
+        // Sequential reference runs.
+        let mut want: Vec<Vec<Vec<f32>>> = Vec::new();
+        for (p, f) in prompts.iter().zip(&forced) {
+            let mut c = KvCache::new(&cfg);
+            eng.prefill(&mut c, p);
+            want.push(f.iter().map(|&t| eng.decode_step(&mut c, t)).collect());
+        }
+
+        // Batched run over the same prompts.
+        let mut caches: Vec<KvCache> = prompts
+            .iter()
+            .map(|p| {
+                let mut c = KvCache::new(&cfg);
+                eng.prefill(&mut c, p);
+                c
+            })
+            .collect();
+        for r in 0..2 {
+            let toks: Vec<u32> = forced.iter().map(|f| f[r]).collect();
+            let mut stores: Vec<&mut dyn crate::model::KvStore> = Vec::new();
+            for c in caches.iter_mut() {
+                stores.push(c);
+            }
+            let mut batch = StoreBatch { stores };
+            let got = eng.decode_batch(&mut batch, &toks);
+            for (s, g) in got.iter().enumerate() {
+                assert_eq!(g, &want[s][r], "seq {s} round {r} diverged");
+            }
+        }
+        for (c, p) in caches.iter().zip(&prompts) {
+            assert_eq!(c.len(), p.len() + 2, "token history must advance");
         }
     }
 

@@ -168,6 +168,35 @@ impl PaddedLinear {
         }
     }
 
+    /// Fused batched W3A8 GEMM over `batch` activation rows (the
+    /// multi-sequence decode path): `x` is `(batch, logical_in)`
+    /// row-major, `y` is `(batch, out)` row-major. Rows are zero-padded
+    /// exactly as [`Self::matvec_q8`] pads a single vector, so every
+    /// output row is bit-identical to the sequential matvec on that row.
+    /// Allocation-free once `scratch` is warm.
+    pub fn matmul_q8(&self, x: &[f32], batch: usize, y: &mut [f32], scratch: &mut MatvecScratch) {
+        assert_eq!(x.len(), batch * self.logical_in);
+        let shards = threadpool::suggested_shards(
+            self.lin.out_dim(),
+            self.lin.out_dim() * self.lin.in_dim() * batch,
+        );
+        if self.lin.in_dim() == self.logical_in {
+            self.lin.gemm_q8(x, batch, y, scratch, shards);
+        } else {
+            let mut xp = std::mem::take(&mut scratch.x_pad);
+            xp.clear();
+            xp.resize(batch * self.lin.in_dim(), 0.0);
+            for (src, dst) in x
+                .chunks_exact(self.logical_in)
+                .zip(xp.chunks_exact_mut(self.lin.in_dim()))
+            {
+                dst[..self.logical_in].copy_from_slice(src);
+            }
+            self.lin.gemm_q8(&xp, batch, y, scratch, shards);
+            scratch.x_pad = xp;
+        }
+    }
+
     /// Batched apply: `X (batch, logical_in)` -> `(batch, out)`.
     pub fn matmul(&self, x: &Tensor) -> Tensor {
         assert_eq!(x.cols(), self.logical_in);
@@ -327,5 +356,33 @@ mod tests {
         pl2.matvec(&x2, &mut y2);
         pl2.matvec_q8(&x2, &mut y2q, &mut scratch);
         assert!(crate::util::stats::rel_l2_err(&y2, &y2q) < 0.03);
+    }
+
+    #[test]
+    fn padded_matmul_q8_matches_matvec_q8_bitwise() {
+        // The batched GEMM must pad each activation row exactly as the
+        // sequential path pads one vector — every output row identical,
+        // bit for bit, including the padded-columns case.
+        let mut rng = XorShift::new(14);
+        for cols in [300usize, 512] {
+            let w = Tensor::randn(vec![9, cols], 0.05, &mut rng);
+            let pl = PaddedLinear::new(format_by_name("itq3_s").unwrap(), &w);
+            let mut scratch = MatvecScratch::new();
+            for batch in [1usize, 2, 5, 8] {
+                let x: Vec<f32> =
+                    (0..batch * cols).map(|_| rng.next_f32() - 0.5).collect();
+                let mut y = vec![0.0f32; batch * 9];
+                pl.matmul_q8(&x, batch, &mut y, &mut scratch);
+                for t in 0..batch {
+                    let mut yt = vec![0.0f32; 9];
+                    pl.matvec_q8(&x[t * cols..(t + 1) * cols], &mut yt, &mut scratch);
+                    assert_eq!(
+                        &y[t * 9..(t + 1) * 9],
+                        &yt[..],
+                        "cols={cols} batch={batch} row {t}"
+                    );
+                }
+            }
+        }
     }
 }

@@ -102,6 +102,137 @@ impl QuantizedActs {
     }
 }
 
+/// One activation block of a whole batch, borrowed from a
+/// [`QuantizedBatch`]: the same *column* block of all `cols` sequences,
+/// stored block-major (each sequence's `block` codes contiguous), so a
+/// weight block unpacked once can be dotted against every column without
+/// re-walking the packed bytes.
+#[derive(Clone, Copy)]
+pub struct BatchBlock<'a> {
+    /// i8 codes, `cols * block` of them; column `t` occupies
+    /// `codes[t*block..(t+1)*block]`.
+    pub codes: &'a [i8],
+    /// Per-column dequantization scales (`amax / 127`).
+    pub scales: &'a [f32],
+    /// Per-column precomputed `Σ codes`.
+    pub sums: &'a [i32],
+    /// Elements per column.
+    pub block: usize,
+}
+
+impl<'a> BatchBlock<'a> {
+    /// Number of activation columns (sequences) in the batch.
+    pub fn cols(&self) -> usize {
+        self.scales.len()
+    }
+
+    /// Column `t` viewed as a single-sequence [`ActBlock`] — byte-for-byte
+    /// the input [`super::Format::dot_block_q8`] receives on the
+    /// sequential path, which is what makes the batched/sequential
+    /// bit-identity contract checkable column by column.
+    #[inline]
+    pub fn col(&self, t: usize) -> ActBlock<'a> {
+        ActBlock {
+            codes: &self.codes[t * self.block..(t + 1) * self.block],
+            scale: self.scales[t],
+            sum: self.sums[t],
+        }
+    }
+}
+
+/// A batch of `cols` activation vectors quantized to per-block Q8, laid
+/// out **block-major**: all columns' codes for column block 0, then all
+/// columns' codes for block 1, ... Within one block the `cols` code
+/// vectors are contiguous ([`BatchBlock`]). This is the activation side
+/// of the fused batched GEMM ([`super::Format::gemm_block_q8`]): the
+/// GEMM walks weight blocks outermost, so everything it needs for one
+/// weight block — every sequence's codes, scales and sums — is one
+/// contiguous slab.
+///
+/// Per-column codes/scales/sums are produced by the same
+/// [`quantize_block_q8`] calls the single-sequence [`QuantizedActs`]
+/// makes, so column `t` of a batch is bit-identical to quantizing row
+/// `t` alone. Buffers are reused across calls (decode-round scratch).
+#[derive(Default)]
+pub struct QuantizedBatch {
+    block: usize,
+    cols: usize,
+    codes: Vec<i8>,
+    scales: Vec<f32>,
+    sums: Vec<i32>,
+}
+
+impl QuantizedBatch {
+    pub fn new() -> Self {
+        QuantizedBatch::default()
+    }
+
+    /// Number of activation columns (sequences).
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Elements per block (matches the paired weight format).
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        if self.cols == 0 {
+            0
+        } else {
+            self.scales.len() / self.cols
+        }
+    }
+
+    /// Quantized elements per column (the activation vector length).
+    pub fn seq_len(&self) -> usize {
+        self.n_blocks() * self.block
+    }
+
+    /// Quantize `cols` row-major activation vectors (`x` is
+    /// `(cols, n)` flattened, already rotated) into per-`block` Q8 codes
+    /// in block-major order. `n` must be a multiple of `block`.
+    pub fn quantize(&mut self, x: &[f32], cols: usize, block: usize) {
+        assert!(cols > 0, "cols must be positive");
+        assert!(block > 0, "block must be positive");
+        assert_eq!(x.len() % cols, 0, "len {} not a multiple of cols {cols}", x.len());
+        let n = x.len() / cols;
+        assert_eq!(n % block, 0, "row len {n} not a multiple of block {block}");
+        let nb = n / block;
+        self.block = block;
+        self.cols = cols;
+        self.codes.clear();
+        self.codes.resize(x.len(), 0);
+        self.scales.clear();
+        self.scales.resize(nb * cols, 0.0);
+        self.sums.clear();
+        self.sums.resize(nb * cols, 0);
+        for b in 0..nb {
+            for t in 0..cols {
+                let src = &x[t * n + b * block..t * n + (b + 1) * block];
+                let o = (b * cols + t) * block;
+                let dst = &mut self.codes[o..o + block];
+                let (scale, sum) = quantize_block_q8(src, dst);
+                self.scales[b * cols + t] = scale;
+                self.sums[b * cols + t] = sum;
+            }
+        }
+    }
+
+    /// Borrow column block `b` of all columns.
+    #[inline]
+    pub fn block_at(&self, b: usize) -> BatchBlock<'_> {
+        let (cols, block) = (self.cols, self.block);
+        BatchBlock {
+            codes: &self.codes[b * cols * block..(b + 1) * cols * block],
+            scales: &self.scales[b * cols..(b + 1) * cols],
+            sums: &self.sums[b * cols..(b + 1) * cols],
+            block,
+        }
+    }
+}
+
 /// Quantize one activation block to i8 codes with an `amax/127` scale.
 /// Returns `(scale, Σ codes)`.
 pub fn quantize_block_q8(x: &[f32], codes: &mut [i8]) -> (f32, i32) {
@@ -211,6 +342,43 @@ mod tests {
         acts.quantize(&[-2.0f32; 512], 256);
         assert_eq!((acts.codes.capacity(), acts.scales.capacity()), cap);
         assert_eq!(acts.block_at(1).sum, 256 * -127);
+    }
+
+    #[test]
+    fn quantized_batch_columns_match_quantized_acts_bitwise() {
+        // The batched-layout invariant: column t of a QuantizedBatch is
+        // exactly what QuantizedActs produces for row t alone (codes,
+        // scale and sum all bit-identical) — the foundation of the
+        // batched-GEMM == sequential-matvec equivalence.
+        let mut rng = XorShift::new(11);
+        let (cols, n, block) = (5usize, 256usize, 64usize);
+        let x: Vec<f32> = (0..cols * n).map(|_| rng.next_gaussian() as f32).collect();
+        let mut batch = QuantizedBatch::new();
+        batch.quantize(&x, cols, block);
+        assert_eq!(batch.cols(), cols);
+        assert_eq!(batch.n_blocks(), n / block);
+        assert_eq!(batch.seq_len(), n);
+        let mut acts = QuantizedActs::new();
+        for t in 0..cols {
+            acts.quantize(&x[t * n..(t + 1) * n], block);
+            for b in 0..n / block {
+                let want = acts.block_at(b);
+                let got = batch.block_at(b).col(t);
+                assert_eq!(want.codes, got.codes, "t={t} b={b}");
+                assert_eq!(want.scale, got.scale, "t={t} b={b}");
+                assert_eq!(want.sum, got.sum, "t={t} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_batch_reuses_buffers() {
+        let mut batch = QuantizedBatch::new();
+        batch.quantize(&[1.0f32; 1024], 4, 128);
+        let cap = (batch.codes.capacity(), batch.scales.capacity());
+        batch.quantize(&[-1.0f32; 1024], 4, 128);
+        assert_eq!((batch.codes.capacity(), batch.scales.capacity()), cap);
+        assert_eq!(batch.block_at(1).col(3).sum, 128 * -127);
     }
 
     #[test]

@@ -54,6 +54,19 @@ pub fn thm2_bound_unclamped(w: &[f32], d: f64, n: usize) -> Option<f64> {
     Some(n as f64 * d * d)
 }
 
+/// Worst-case ℓ2 error of one per-row Q8 quantization — the `amax/127`
+/// scale with round-to-nearest that [`crate::quant::act::quantize_block_q8`]
+/// uses for both W3A8 activations and Q8 KV-cache rows
+/// ([`crate::kvpaged`]): every element errs by at most half a step
+/// (`amax/254`; clamping never binds because `|x| ≤ amax` maps inside
+/// `±127`), so `‖x − x̂‖₂ ≤ (amax/254)·√n`. Deterministic, not
+/// probabilistic — the Q8 KV accuracy test asserts it on every stored
+/// row.
+pub fn q8_row_l2_bound(row: &[f32]) -> f64 {
+    let amax = row.iter().fold(0.0f32, |m, &v| m.max(v.abs())) as f64;
+    amax / 254.0 * (row.len() as f64).sqrt()
+}
+
 /// Empirical MSE improvement factor of rotating before quantization,
 /// reported by the `quantize_inspect` example (reproduces the paper's §3
 /// motivation numbers).
@@ -108,6 +121,38 @@ mod tests {
         // with zero mean, far beyond 3d for small d.
         w[1] = 100.0;
         assert!(thm2_bound_unclamped(&w, 0.01, 256).is_none());
+    }
+
+    #[test]
+    fn q8_row_bound_holds_on_roundtrip() {
+        // The bound is worst-case, so it must hold deterministically for
+        // any row — Gaussian, heavy-tailed, spiky, or zero.
+        let mut rng = crate::util::XorShift::new(3);
+        let mut rows: Vec<Vec<f32>> = vec![
+            vec![0.0; 64],
+            (0..256).map(|i| if i == 7 { 100.0 } else { 0.001 }).collect(),
+        ];
+        rows.push((0..256).map(|_| rng.next_gaussian() as f32).collect());
+        rows.push((0..128).map(|_| rng.next_student_t(3.0) as f32).collect());
+        for row in rows {
+            let mut codes = vec![0i8; row.len()];
+            let (scale, _) = crate::quant::act::quantize_block_q8(&row, &mut codes);
+            let err_sq: f64 = row
+                .iter()
+                .zip(&codes)
+                .map(|(&x, &c)| ((x - c as f32 * scale) as f64).powi(2))
+                .sum();
+            // Tiny multiplicative slack: scale/inv are f32-rounded, so a
+            // code's reconstruction can sit a few ulps past the exact
+            // half-step bound.
+            let bound = q8_row_l2_bound(&row) * (1.0 + 1e-5) + 1e-9;
+            assert!(
+                err_sq.sqrt() <= bound,
+                "err {} > bound {bound} (n={})",
+                err_sq.sqrt(),
+                row.len()
+            );
+        }
     }
 
     #[test]

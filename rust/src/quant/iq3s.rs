@@ -161,6 +161,48 @@ impl Format for Iq3S {
         }
         (total + z * act.sum as f32) * act.scale
     }
+
+    /// Batched W3A8 fused dot: ternary levels unpacked to i8 once,
+    /// sub-scales read once, then one integer inner loop per (column,
+    /// sub-block). Per column the float combination replays
+    /// [`Format::dot_block_q8`] exactly (same sub-block order, same
+    /// expressions), so each `y[t]` increment is bit-identical to the
+    /// sequential path.
+    fn gemm_block_q8(
+        &self,
+        _idx: u64,
+        bytes: &[u8],
+        acts: super::act::BatchBlock<'_>,
+        y: &mut [f32],
+        _scratch: &mut Vec<f32>,
+    ) {
+        let n = self.n;
+        debug_assert_eq!(bytes.len(), self.block_bytes());
+        debug_assert_eq!(acts.block, n);
+        debug_assert_eq!(y.len(), acts.cols());
+        let planes = n * 3 / 8;
+        let z = read_f16(bytes, planes);
+        let mut lv = [0i8; 512];
+        let lv = &mut lv[..n];
+        ternary::unpack_dual_ternary_levels(&bytes[..n / 4], &bytes[n / 4..planes], lv);
+        let mut ds = [0.0f32; 16];
+        let nsub = self.nsub();
+        for (s, d) in ds[..nsub].iter_mut().enumerate() {
+            *d = read_f16(bytes, planes + 2 + 2 * s);
+        }
+        for (t, yo) in y.iter_mut().enumerate() {
+            let ab = acts.col(t);
+            let mut total = 0.0f32;
+            for s in 0..nsub {
+                let acc = super::act::dot_i8(
+                    &lv[s * self.sub..(s + 1) * self.sub],
+                    &ab.codes[s * self.sub..(s + 1) * self.sub],
+                );
+                total += ds[s] * acc as f32;
+            }
+            *yo += (total + z * ab.sum as f32) * ab.scale;
+        }
+    }
 }
 
 #[cfg(test)]

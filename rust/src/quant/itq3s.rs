@@ -205,21 +205,41 @@ impl Format for Itq3S {
         debug_assert_eq!(act.codes.len(), n);
         let d = read_f16(bytes, n * 3 / 8);
         let z = read_f16(bytes, n * 3 / 8 + 2);
-        let base = &bytes[..n / 4];
-        let sel = &bytes[n / 4..n * 3 / 8];
-        const LUT: [i8; 8] = [-1, 0, 1, 0, -3, 0, 3, 0];
         let mut lv = [0i8; 512];
         let lv = &mut lv[..n];
-        for g in 0..n / 8 {
-            let codes = u16::from_le_bytes([base[2 * g], base[2 * g + 1]]) as usize;
-            let s = sel[g] as usize;
-            let o = &mut lv[g * 8..g * 8 + 8];
-            for (j, oj) in o.iter_mut().enumerate() {
-                *oj = LUT[((codes >> (2 * j)) & 3) | (((s >> j) & 1) << 2)];
-            }
-        }
+        ternary::unpack_dual_ternary_levels(&bytes[..n / 4], &bytes[n / 4..n * 3 / 8], lv);
         let acc = super::act::dot_i8(lv, act.codes);
         acc as f32 * (d * act.scale) + z * (act.scale * act.sum as f32)
+    }
+
+    /// Batched W3A8 fused dot: the 3-bit planes are unpacked to i8
+    /// levels **once**, then dotted against every activation column —
+    /// the weights-stationary amortization the batched decode path is
+    /// built on. Per column the final expression is literally
+    /// [`Format::dot_block_q8`]'s, so each `y[t]` increment is
+    /// bit-identical to the sequential path.
+    fn gemm_block_q8(
+        &self,
+        _idx: u64,
+        bytes: &[u8],
+        acts: super::act::BatchBlock<'_>,
+        y: &mut [f32],
+        _scratch: &mut Vec<f32>,
+    ) {
+        let n = self.n;
+        debug_assert_eq!(bytes.len(), self.block_bytes());
+        debug_assert_eq!(acts.block, n);
+        debug_assert_eq!(y.len(), acts.cols());
+        let d = read_f16(bytes, n * 3 / 8);
+        let z = read_f16(bytes, n * 3 / 8 + 2);
+        let mut lv = [0i8; 512];
+        let lv = &mut lv[..n];
+        ternary::unpack_dual_ternary_levels(&bytes[..n / 4], &bytes[n / 4..n * 3 / 8], lv);
+        for (t, yo) in y.iter_mut().enumerate() {
+            let ab = acts.col(t);
+            let acc = super::act::dot_i8(lv, ab.codes);
+            *yo += acc as f32 * (d * ab.scale) + z * (ab.scale * ab.sum as f32);
+        }
     }
 }
 

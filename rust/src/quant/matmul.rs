@@ -17,17 +17,32 @@
 //!   i32 via [`super::Format::dot_block_q8`] — the CPU realization of the
 //!   paper's DP4A pipeline, with all scales folded into one final f32
 //!   multiply per block.
+//! - **fused batched W3A8 GEMM** ([`QuantizedLinear::gemm_q8`], the
+//!   decode path when several sequences step together): the B
+//!   sequences' activations are rotated and Q8-quantized once into a
+//!   **block-major** batch ([`super::act::QuantizedBatch`]) — for each
+//!   column block, the B code vectors (plus their scales and code sums)
+//!   sit in one contiguous slab. The per-row loop then walks the packed
+//!   weight blocks exactly once, unpacking each block once and dotting
+//!   it against all B columns ([`super::Format::gemm_block_q8`]): the
+//!   weights-stationary MMQ scheduling of the paper's §5.2 (the same
+//!   trick TWLA/CAT-Q use to make ternary-weight inference pay off),
+//!   which turns PR 2's batch occupancy into per-token latency wins.
+//!   Contract: every `(row, column)` output is **bit-identical** to
+//!   [`QuantizedLinear::matvec_q8`] on that column alone — batching is
+//!   never a numerics change (see `gemm_q8_matches_matvec_q8_bitwise`).
 //!
-//! Both fused paths row-shard across cores via [`crate::util::threadpool`]
+//! All fused paths row-shard across cores via [`crate::util::threadpool`]
 //! (bit-identical to single-threaded — see
 //! `tests::parallel_matvec_bit_identical`). Before/after numbers live in
-//! `benches/micro_kernels.rs` and EXPERIMENTS.md §Perf.
+//! `benches/micro_kernels.rs`, `benches/batched_gemm.rs` and
+//! EXPERIMENTS.md §Perf / §Batched.
 //!
 //! All variants walk packed blocks through one shared helper
 //! (`for_each_row_block`), so block-indexing logic cannot drift between
 //! them.
 
-use super::act::QuantizedActs;
+use super::act::{QuantizedActs, QuantizedBatch};
 use super::{Format, QuantizedMatrix};
 use crate::tensor::Tensor;
 use crate::util::threadpool;
@@ -49,6 +64,8 @@ pub struct MatvecScratch {
     pub(crate) x_rot: Vec<f32>,
     pub(crate) x_pad: Vec<f32>,
     pub(crate) acts: QuantizedActs,
+    pub(crate) bacts: QuantizedBatch,
+    pub(crate) yt: Vec<f32>,
     pub(crate) tmp: Vec<f32>,
 }
 
@@ -245,6 +262,103 @@ impl QuantizedLinear {
                 *yo = self.q8_row(row0 + dr, acts, &mut tmp);
             }
         });
+    }
+
+    /// Fused batched W3A8 GEMM (the multi-sequence decode path):
+    /// `Y = X Wᵀ` for `X: (batch, in)` row-major, into `Y: (batch, out)`
+    /// row-major. Activations are rotated and Q8-quantized once
+    /// (block-major — see the module docs), then each packed weight
+    /// block is unpacked **once** and dotted against all `batch` columns
+    /// via [`Format::gemm_block_q8`], with weight rows sharded across
+    /// `shards` threads.
+    ///
+    /// Every output row is bit-identical to [`Self::matvec_q8`] on the
+    /// corresponding activation row, for any `batch` or `shards`:
+    ///
+    /// ```
+    /// use itq3s::quant::format_by_name;
+    /// use itq3s::quant::matmul::{MatvecScratch, QuantizedLinear};
+    /// use itq3s::tensor::Tensor;
+    /// let w = Tensor::new(vec![2, 256], (0..512).map(|i| (i % 7) as f32 * 0.01).collect());
+    /// let lin = QuantizedLinear::new(format_by_name("itq3_s").unwrap(), &w);
+    /// let x: Vec<f32> = (0..512).map(|i| (i as f32 * 0.01).sin()).collect(); // 2 rows
+    /// let mut y = vec![0.0f32; 2 * 2];
+    /// let mut scratch = MatvecScratch::new();
+    /// lin.gemm_q8(&x, 2, &mut y, &mut scratch, 1);
+    /// // Row 0 of the batch equals the sequential matvec, bit for bit.
+    /// let mut y0 = vec![0.0f32; 2];
+    /// lin.matvec_q8(&x[..256], &mut y0, &mut scratch, 1);
+    /// assert_eq!(&y[..2], &y0[..]);
+    /// ```
+    pub fn gemm_q8(
+        &self,
+        x: &[f32],
+        batch: usize,
+        y: &mut [f32],
+        scratch: &mut MatvecScratch,
+        shards: usize,
+    ) {
+        assert!(batch > 0, "batch must be positive");
+        assert_eq!(x.len(), batch * self.in_dim());
+        assert_eq!(y.len(), batch * self.out_dim());
+        scratch.x_rot.clear();
+        scratch.x_rot.extend_from_slice(x);
+        for row in scratch.x_rot.chunks_exact_mut(self.in_dim()) {
+            self.rotate_activations(row);
+        }
+        let be = self.w.fmt.block_elems();
+        scratch.bacts.quantize(&scratch.x_rot, batch, be);
+        let mut yt = std::mem::take(&mut scratch.yt);
+        let mut tmp = std::mem::take(&mut scratch.tmp);
+        self.gemm_q8_acts(&scratch.bacts, y, &mut yt, &mut tmp, shards);
+        scratch.yt = yt;
+        scratch.tmp = tmp;
+    }
+
+    /// Batched-GEMM core against a pre-quantized activation batch. `yt`
+    /// is the `(rows, batch)` transposed accumulator (reused across
+    /// calls so each weight-row shard owns a contiguous slab); the
+    /// result is scattered into row-major `y: (batch, out)` at the end.
+    pub fn gemm_q8_acts(
+        &self,
+        acts: &QuantizedBatch,
+        y: &mut [f32],
+        yt: &mut Vec<f32>,
+        tmp: &mut Vec<f32>,
+        shards: usize,
+    ) {
+        let batch = acts.cols();
+        assert_eq!(acts.seq_len(), self.in_dim());
+        assert_eq!(acts.block(), self.w.fmt.block_elems());
+        assert_eq!(y.len(), batch * self.out_dim());
+        let rows = self.w.rows;
+        yt.clear();
+        yt.resize(rows * batch, 0.0);
+        // Per row, blocks advance in the same order as `q8_row`, and each
+        // `gemm_block_q8` increment is bit-identical to `dot_block_q8` on
+        // that column (the Format contract), so y[t] reproduces the
+        // sequential accumulation exactly.
+        let run_rows = |r0: usize, slab: &mut [f32], tmp: &mut Vec<f32>| {
+            for (dr, yrow) in slab.chunks_exact_mut(batch).enumerate() {
+                self.for_each_row_block(r0 + dr, |b, idx, bytes| {
+                    self.w.fmt.gemm_block_q8(idx, bytes, acts.block_at(b), yrow, tmp);
+                });
+            }
+        };
+        if shards <= 1 {
+            run_rows(0, &mut yt[..], tmp);
+        } else {
+            threadpool::parallel_chunks(&mut yt[..], batch, shards, |r0, slab| {
+                // Per-shard fallback buffer (only generic formats use it).
+                let mut tmp = Vec::new();
+                run_rows(r0, slab, &mut tmp);
+            });
+        }
+        for (r, yrow) in yt.chunks_exact(batch).enumerate() {
+            for (t, &v) in yrow.iter().enumerate() {
+                y[t * rows + r] = v;
+            }
+        }
     }
 
     /// Naive matvec: dequantize each block to the original domain
@@ -446,6 +560,194 @@ mod tests {
                 let mut qn = vec![0.0f32; 37];
                 lin.matvec_q8(&x, &mut qn, &mut scratch, shards);
                 assert_eq!(q1, qn, "{name} q8 path, shards={shards}");
+            }
+        }
+    }
+
+    /// Forwards a format's storage methods but **not** its specialized
+    /// dot/gemm kernels, so the `Format` trait defaults run on the same
+    /// packed bytes — the reference the hand-specialized kernels are
+    /// differential-tested against.
+    struct GenericOnly(std::sync::Arc<dyn Format>);
+
+    impl Format for GenericOnly {
+        fn name(&self) -> &'static str {
+            "generic-only"
+        }
+        fn block_elems(&self) -> usize {
+            self.0.block_elems()
+        }
+        fn block_bytes(&self) -> usize {
+            self.0.block_bytes()
+        }
+        fn quantize_block(&self, idx: u64, w: &[f32], out: &mut Vec<u8>) {
+            self.0.quantize_block(idx, w, out)
+        }
+        fn dequantize_block(&self, idx: u64, bytes: &[u8], out: &mut [f32]) {
+            self.0.dequantize_block(idx, bytes, out)
+        }
+        fn dequantize_block_raw(&self, idx: u64, bytes: &[u8], out: &mut [f32]) {
+            self.0.dequantize_block_raw(idx, bytes, out)
+        }
+        fn rotate_activation_block(&self, idx: u64, x: &mut [f32]) {
+            self.0.rotate_activation_block(idx, x)
+        }
+        fn is_rotated(&self) -> bool {
+            self.0.is_rotated()
+        }
+    }
+
+    /// Weight blocks that historically break packed kernels: zeros,
+    /// saturating magnitudes, and sign-alternation (maximum cancellation).
+    fn adversarial_weight_blocks(n: usize, rng: &mut XorShift) -> Vec<Vec<f32>> {
+        vec![
+            vec![0.0f32; n],
+            (0..n).map(|i| if i % 2 == 0 { 1.0e3 } else { -1.0e3 }).collect(),
+            (0..n).map(|i| if i % 2 == 0 { 0.05 } else { -0.05 }).collect(),
+            (0..n).map(|_| rng.next_student_t(4.0) as f32 * 0.02).collect(),
+            (0..n).map(|_| rng.next_f32() - 0.5).collect(),
+        ]
+    }
+
+    /// Activation batches with the same adversarial shapes plus randoms.
+    fn adversarial_act_rows(n: usize, rng: &mut XorShift) -> Vec<Vec<f32>> {
+        vec![
+            vec![0.0f32; n],
+            (0..n).map(|i| if i % 2 == 0 { 8.0 } else { -8.0 }).collect(),
+            (0..n).map(|_| rng.next_gaussian() as f32).collect(),
+            (0..n).map(|_| rng.next_f32() - 0.5).collect(),
+            (0..n).map(|_| rng.next_gaussian() as f32 * 1e-3).collect(),
+        ]
+    }
+
+    #[test]
+    fn gemm_block_q8_increments_match_dot_block_q8_all_formats() {
+        // The batched-kernel contract, column by column: for EVERY
+        // format (specialized or defaulted), gemm_block_q8's y[t]
+        // increment is bit-identical to dot_block_q8 on that column —
+        // on random AND adversarial weight/activation blocks.
+        let mut rng = XorShift::new(51);
+        let mut formats: Vec<&str> = crate::quant::TABLE1_FORMATS.to_vec();
+        formats.push("itq3_s_sub");
+        for name in formats {
+            let fmt = format_by_name(name).unwrap();
+            let be = fmt.block_elems();
+            for (wi, w) in adversarial_weight_blocks(be, &mut rng).iter().enumerate() {
+                let idx = wi as u64;
+                let mut bytes = Vec::new();
+                fmt.quantize_block(idx, w, &mut bytes);
+                let rows = adversarial_act_rows(be, &mut rng);
+                let cols = rows.len();
+                let flat: Vec<f32> = rows.concat();
+                let mut batch = crate::quant::act::QuantizedBatch::new();
+                batch.quantize(&flat, cols, be);
+                let bb = batch.block_at(0);
+                let mut y = vec![0.0f32; cols];
+                let mut tmp = Vec::new();
+                fmt.gemm_block_q8(idx, &bytes, bb, &mut y, &mut tmp);
+                for t in 0..cols {
+                    let mut tmp2 = Vec::new();
+                    let want = fmt.dot_block_q8(idx, &bytes, bb.col(t), &mut tmp2);
+                    assert_eq!(
+                        y[t].to_bits(),
+                        want.to_bits(),
+                        "{name} w-case {wi} col {t}: {} vs {want}",
+                        y[t]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn specialized_q8_kernels_track_generic_fallback() {
+        // Differential test: the hand-specialized integer kernels vs the
+        // trait-default f32 reconstruction path, on the same packed
+        // bytes — random and adversarial blocks. They compute the same
+        // mathematical value along different float paths, so agreement
+        // is bounded by accumulation error (scaled to the block's
+        // absolute term mass), not bitwise.
+        let mut rng = XorShift::new(52);
+        for name in ["itq3_s", "iq3_s", "q4_k_m", "q8_0"] {
+            let fmt = format_by_name(name).unwrap();
+            assert!(fmt.has_q8_kernel(), "{name} must be specialized");
+            let generic = GenericOnly(fmt.clone());
+            let be = fmt.block_elems();
+            for (wi, w) in adversarial_weight_blocks(be, &mut rng).iter().enumerate() {
+                let idx = wi as u64;
+                let mut bytes = Vec::new();
+                fmt.quantize_block(idx, w, &mut bytes);
+                let rows = adversarial_act_rows(be, &mut rng);
+                let cols = rows.len();
+                let flat: Vec<f32> = rows.concat();
+                let mut batch = crate::quant::act::QuantizedBatch::new();
+                batch.quantize(&flat, cols, be);
+                let bb = batch.block_at(0);
+                // Absolute term mass |ŵ|·|x̂| per column bounds the
+                // accumulation-order error of either path.
+                let mut wbuf = vec![0.0f32; be];
+                fmt.dequantize_block_raw(idx, &bytes, &mut wbuf);
+                let mut y_spec = vec![0.0f32; cols];
+                let mut y_gen = vec![0.0f32; cols];
+                let mut tmp = Vec::new();
+                fmt.gemm_block_q8(idx, &bytes, bb, &mut y_spec, &mut tmp);
+                generic.gemm_block_q8(idx, &bytes, bb, &mut y_gen, &mut tmp);
+                for t in 0..cols {
+                    let ab = bb.col(t);
+                    let mass: f64 = wbuf
+                        .iter()
+                        .zip(ab.codes)
+                        .map(|(&wv, &c)| (wv as f64 * (c as f64 * ab.scale as f64)).abs())
+                        .sum();
+                    let tol = 1e-4 * mass + 1e-5;
+                    let (a, b) = (y_spec[t] as f64, y_gen[t] as f64);
+                    assert!(
+                        (a - b).abs() <= tol,
+                        "{name} w-case {wi} col {t}: {a} vs {b} (tol {tol})"
+                    );
+                    // And the single-column kernels agree the same way.
+                    let mut tmp2 = Vec::new();
+                    let ds = fmt.dot_block_q8(idx, &bytes, ab, &mut tmp2) as f64;
+                    let dg = generic.dot_block_q8(idx, &bytes, ab, &mut tmp2) as f64;
+                    assert!(
+                        (ds - dg).abs() <= tol,
+                        "{name} w-case {wi} col {t} dot: {ds} vs {dg} (tol {tol})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_q8_matches_matvec_q8_bitwise() {
+        // Linear-level acceptance: the batched GEMM reproduces the
+        // sequential integer matvec bit-for-bit for every row of every
+        // batch size, specialized and generic formats alike, and row
+        // sharding changes nothing.
+        let w = test_weight(37, 512, 41); // odd row count: uneven shards
+        let mut rng = XorShift::new(42);
+        for name in ["itq3_s", "iq3_s", "q4_k_m", "q8_0", "fp16", "quip3"] {
+            let lin = QuantizedLinear::new(format_by_name(name).unwrap(), &w);
+            let mut scratch = MatvecScratch::new();
+            for batch in [1usize, 2, 5, 8] {
+                let x: Vec<f32> =
+                    (0..batch * 512).map(|_| rng.next_f32() - 0.5).collect();
+                let mut y = vec![0.0f32; batch * 37];
+                lin.gemm_q8(&x, batch, &mut y, &mut scratch, 1);
+                for t in 0..batch {
+                    let mut yt = vec![0.0f32; 37];
+                    lin.matvec_q8(&x[t * 512..(t + 1) * 512], &mut yt, &mut scratch, 1);
+                    assert_eq!(
+                        &y[t * 37..(t + 1) * 37],
+                        &yt[..],
+                        "{name} batch={batch} row {t}"
+                    );
+                }
+                for shards in [2usize, 3, 8] {
+                    let mut ys = vec![0.0f32; batch * 37];
+                    lin.gemm_q8(&x, batch, &mut ys, &mut scratch, shards);
+                    assert_eq!(y, ys, "{name} batch={batch} shards={shards}");
+                }
             }
         }
     }

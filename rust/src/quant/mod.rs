@@ -137,6 +137,43 @@ pub trait Format: Send + Sync {
         matmul::dot(wf, xf)
     }
 
+    /// Batched integer-domain fused dot — the per-block core of the
+    /// fused multi-sequence GEMM (`QuantizedLinear::gemm_q8`): one
+    /// packed weight block against `acts.cols()` Q8 activation columns
+    /// at once, accumulating `y[t] += <block, column t>`.
+    ///
+    /// **Contract (test-enforced in `quant::matmul`):** for every column
+    /// `t`, the value added to `y[t]` is bit-identical to what
+    /// [`Format::dot_block_q8`] returns for `acts.col(t)` — batching
+    /// amortizes the unpack, it never changes the numerics. The batched
+    /// decode path's equivalence to the sequential matvec path rests on
+    /// this. Hot formats override to unpack the block once and run one
+    /// integer inner loop per column; this default replays the generic
+    /// fallback's exact f32 math with the weight reconstruction hoisted
+    /// out of the column loop.
+    fn gemm_block_q8(
+        &self,
+        idx: u64,
+        bytes: &[u8],
+        acts: act::BatchBlock<'_>,
+        y: &mut [f32],
+        scratch: &mut Vec<f32>,
+    ) {
+        let be = self.block_elems();
+        debug_assert_eq!(acts.block, be);
+        debug_assert_eq!(y.len(), acts.cols());
+        scratch.resize(2 * be, 0.0);
+        let (xf, wf) = scratch.split_at_mut(be);
+        self.dequantize_block_raw(idx, bytes, wf);
+        for (t, yo) in y.iter_mut().enumerate() {
+            let ab = acts.col(t);
+            for (o, &c) in xf.iter_mut().zip(ab.codes) {
+                *o = c as f32 * ab.scale;
+            }
+            *yo += matmul::dot(wf, xf);
+        }
+    }
+
     /// Effective bits per weight, including metadata.
     fn bits_per_weight(&self) -> f64 {
         self.block_bytes() as f64 * 8.0 / self.block_elems() as f64

@@ -173,6 +173,54 @@ impl Format for Q4KM {
         }
         total * act.scale
     }
+
+    /// Batched W4A8 fused dot: nibbles unpacked to i8 and the per-sub
+    /// effective scales (`d·sc_s`, `dmin·mc_s`) computed once, then one
+    /// integer inner loop per (column, sub-block). Per column the
+    /// sub-block combination replays [`Format::dot_block_q8`] exactly,
+    /// so each `y[t]` increment is bit-identical to the sequential path.
+    fn gemm_block_q8(
+        &self,
+        _idx: u64,
+        bytes: &[u8],
+        acts: super::act::BatchBlock<'_>,
+        y: &mut [f32],
+        _scratch: &mut Vec<f32>,
+    ) {
+        let n = self.n;
+        debug_assert_eq!(bytes.len(), self.block_bytes());
+        debug_assert_eq!(acts.block, n);
+        debug_assert_eq!(y.len(), acts.cols());
+        let d = read_f16(bytes, 0);
+        let dmin = read_f16(bytes, 2);
+        let six = &bytes[4..16];
+        let codes = &bytes[16..];
+        let mut wv = [0i8; 512];
+        let wv = &mut wv[..n];
+        for i in (0..n).step_by(2) {
+            let byte = codes[i / 2];
+            wv[i] = (byte & 0xF) as i8;
+            wv[i + 1] = (byte >> 4) as i8;
+        }
+        let nsub = self.nsub();
+        let mut dsc = [0.0f32; 16];
+        let mut dmm = [0.0f32; 16];
+        for s in 0..nsub {
+            dsc[s] = d * get_6bit(six, s) as f32;
+            dmm[s] = dmin * get_6bit(six, 8 + s) as f32;
+        }
+        for (t, yo) in y.iter_mut().enumerate() {
+            let ab = acts.col(t);
+            let mut total = 0.0f32;
+            for s in 0..nsub {
+                let xs = &ab.codes[s * self.sub..(s + 1) * self.sub];
+                let dotc = super::act::dot_i8(&wv[s * self.sub..(s + 1) * self.sub], xs);
+                let xsum: i32 = xs.iter().map(|&x| x as i32).sum();
+                total += dsc[s] * dotc as f32 - dmm[s] * xsum as f32;
+            }
+            *yo += total * ab.scale;
+        }
+    }
 }
 
 #[cfg(test)]

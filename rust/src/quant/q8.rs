@@ -103,6 +103,35 @@ impl Format for Q8_0 {
         }
         (acc[0] + acc[1] + acc[2] + acc[3]) as f32 * (d * act.scale)
     }
+
+    /// Batched W8A8 fused dot: the packed weight codes are reinterpreted
+    /// as i8 once, then one i8·i8→i32 dot per column with `d·s_t` folded
+    /// in at the end. The i32 accumulation is exact, so regrouping it
+    /// through [`super::act::dot_i8`] leaves each `y[t]` increment
+    /// bit-identical to [`Format::dot_block_q8`].
+    fn gemm_block_q8(
+        &self,
+        _idx: u64,
+        bytes: &[u8],
+        acts: super::act::BatchBlock<'_>,
+        y: &mut [f32],
+        _scratch: &mut Vec<f32>,
+    ) {
+        debug_assert_eq!(bytes.len(), self.block_bytes());
+        debug_assert_eq!(acts.block, self.n);
+        debug_assert_eq!(y.len(), acts.cols());
+        let d = read_f16(bytes, 0);
+        let mut wv = [0i8; 64];
+        let wv = &mut wv[..self.n];
+        for (o, &b) in wv.iter_mut().zip(&bytes[2..2 + self.n]) {
+            *o = b as i8;
+        }
+        for (t, yo) in y.iter_mut().enumerate() {
+            let ab = acts.col(t);
+            let acc = super::act::dot_i8(wv, ab.codes);
+            *yo += acc as f32 * (d * ab.scale);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -66,6 +66,27 @@ pub fn dual_ternary_value(digit: i8, coarse: bool, d: f32) -> f32 {
     digit as f32 * mag
 }
 
+/// Decode one interleaved-ternary plane pair — 2-bit digit words plus
+/// coarse-selector bits, 8 elements per `(u16 codes, u8 sel)` group —
+/// into i8 grid levels `{0, ±1, ±3}`. The single unpack shared by the
+/// W3A8 integer kernels (`itq3s`/`iq3s` `dot_block_q8`/`gemm_block_q8`),
+/// so the plane layout cannot drift between them. `lv.len()` must be a
+/// multiple of 8 with `base`/`sel` sized to match.
+#[inline]
+pub fn unpack_dual_ternary_levels(base: &[u8], sel: &[u8], lv: &mut [i8]) {
+    const LUT: [i8; 8] = [-1, 0, 1, 0, -3, 0, 3, 0];
+    debug_assert_eq!(base.len(), lv.len() / 4);
+    debug_assert_eq!(sel.len(), lv.len() / 8);
+    for g in 0..lv.len() / 8 {
+        let codes = u16::from_le_bytes([base[2 * g], base[2 * g + 1]]) as usize;
+        let s = sel[g] as usize;
+        let o = &mut lv[g * 8..g * 8 + 8];
+        for (j, oj) in o.iter_mut().enumerate() {
+            *oj = LUT[((codes >> (2 * j)) & 3) | (((s >> j) & 1) << 2)];
+        }
+    }
+}
+
 /// Monte-Carlo MSE of plain ternary quantization at scale `alpha` on
 /// N(0,1) samples (used by tests and the solver below).
 pub fn ternary_mse_gaussian(alpha: f64, samples: &[f64]) -> f64 {

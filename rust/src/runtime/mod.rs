@@ -173,6 +173,12 @@ impl Engine for PjrtEngine {
         logits.row(n - 1).to_vec()
     }
 
+    // `Engine::decode_batch` is deliberately NOT overridden: the AOT
+    // graph scores one fixed-length window per execute (batch dim 1),
+    // so a decode round can only ever be one independent re-score per
+    // sequence — exactly the trait's default sequential fallback, which
+    // is trivially bit-identical to per-sequence `decode_step`.
+
     fn prefill(&self, cache: &mut dyn KvStore, tokens: &[u32]) -> Tensor {
         let start = cache.len();
         for &t in tokens {

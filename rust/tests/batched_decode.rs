@@ -1,0 +1,298 @@
+//! Differential harness for the fused batched decode path: for every
+//! format with a Q8 kernel (plus the dense, f32-baseline and
+//! generic-fallback configurations), stepping B sequences through
+//! `Engine::decode_batch` must be **bit-identical** to stepping each
+//! sequence alone through `decode_step` — across batch sizes
+//! {1, 2, 5, 8}, through dense and paged KV stores, and for ragged
+//! batches whose sequences join and leave mid-decode.
+
+mod common;
+
+use common::{dense_engine, hot_formats, prompt_tokens, quant_engine, sequential_decode};
+use itq3s::kvpaged::{KvQuant, PagedKvPool};
+use itq3s::model::native::Engine;
+use itq3s::model::{KvCache, KvStore, ModelConfig, NativeEngine, QuantizedModel, StoreBatch};
+
+/// Forced decode streams keep the comparison teacher-forced (sampling
+/// would hide a divergence behind identical argmaxes).
+fn forced_tokens(rounds: usize, salt: u32) -> Vec<u32> {
+    (0..rounds as u32).map(|i| (i * 53 + salt * 7 + 11) % 256).collect()
+}
+
+/// Run `rounds` fused decode rounds over freshly prefilled dense caches
+/// and compare every step of every sequence against the sequential
+/// reference, bit for bit.
+fn assert_batched_matches_sequential(eng: &NativeEngine, label: &str, batch: usize) {
+    let cfg = ModelConfig::test();
+    let rounds = 4;
+    // Ragged prompts: lengths vary per sequence.
+    let prompts: Vec<Vec<u32>> =
+        (0..batch).map(|s| prompt_tokens(2 + (s * 3) % 7, s as u32)).collect();
+    let forced: Vec<Vec<u32>> =
+        (0..batch).map(|s| forced_tokens(rounds, s as u32)).collect();
+
+    // Sequential reference, one isolated run per sequence.
+    let mut want: Vec<Vec<Vec<f32>>> = Vec::new();
+    for s in 0..batch {
+        let mut c = KvCache::new(&cfg);
+        want.push(sequential_decode(eng, &mut c, &prompts[s], &forced[s]));
+    }
+
+    // Batched run: same prefills, then fused rounds.
+    let mut caches: Vec<KvCache> = prompts
+        .iter()
+        .map(|p| {
+            let mut c = KvCache::new(&cfg);
+            eng.prefill(&mut c, p);
+            c
+        })
+        .collect();
+    for r in 0..rounds {
+        let toks: Vec<u32> = (0..batch).map(|s| forced[s][r]).collect();
+        let stores: Vec<&mut dyn KvStore> =
+            caches.iter_mut().map(|c| c as &mut dyn KvStore).collect();
+        let mut kv = StoreBatch { stores };
+        let got = eng.decode_batch(&mut kv, &toks);
+        assert_eq!(got.len(), batch);
+        for (s, g) in got.iter().enumerate() {
+            assert_eq!(
+                g, &want[s][r],
+                "{label}: batch={batch} seq={s} round={r} diverged from sequential"
+            );
+        }
+    }
+    // KV state advanced identically (token history check).
+    for (s, c) in caches.iter().enumerate() {
+        assert_eq!(c.len(), prompts[s].len() + rounds, "{label}: seq {s} history");
+    }
+}
+
+#[test]
+fn batched_decode_bit_identical_all_hot_formats() {
+    let hot = hot_formats();
+    assert!(hot.len() >= 4, "expected the four specialized formats, got {hot:?}");
+    for fmt in hot {
+        let eng = quant_engine(fmt, 23);
+        for batch in [1usize, 2, 5, 8] {
+            assert_batched_matches_sequential(&eng, fmt, batch);
+        }
+    }
+}
+
+#[test]
+fn batched_decode_bit_identical_dense_and_fallback_configs() {
+    // Dense weights (no quantization at all)...
+    let dense = dense_engine(29);
+    // ...the f32 comparison baseline (integer path disabled)...
+    let f32_path = NativeEngine::quantized(QuantizedModel::quantize(
+        &common::dense_model(29),
+        itq3s::quant::format_by_name("itq3_s").unwrap(),
+    ))
+    .with_act_quant(false);
+    // ...and a format without a specialized Q8 kernel (routes down the
+    // row-sharded f32 path even with act_quant on).
+    let no_kernel = quant_engine("iq4_xs", 29);
+    for (label, eng) in
+        [("dense", &dense), ("act_quant_off", &f32_path), ("iq4_xs", &no_kernel)]
+    {
+        for batch in [1usize, 2, 5] {
+            assert_batched_matches_sequential(eng, label, batch);
+        }
+    }
+}
+
+#[test]
+fn ragged_batches_join_and_leave_mid_decode() {
+    // Sequences enter the batch at different rounds (fresh prefill) and
+    // retire at different rounds — the shape a continuous-batching
+    // coordinator actually produces. Every step of every sequence must
+    // still equal its isolated sequential run, bit for bit.
+    let cfg = ModelConfig::test();
+    let eng = quant_engine("itq3_s", 31);
+    let prompts: Vec<Vec<u32>> = [3usize, 5, 2, 7, 4]
+        .iter()
+        .enumerate()
+        .map(|(s, &len)| prompt_tokens(len, s as u32))
+        .collect();
+    // Round membership (ascending indices). Batch sizes sweep 1→2→5→4→2→1.
+    let schedule: [&[usize]; 7] = [
+        &[0],
+        &[0, 1],
+        &[0, 1, 2, 3, 4],
+        &[0, 1, 2, 3, 4],
+        &[0, 2, 3, 4],
+        &[2, 4],
+        &[2],
+    ];
+    let steps_of = |s: usize| schedule.iter().filter(|m| m.contains(&s)).count();
+    let forced: Vec<Vec<u32>> =
+        (0..5).map(|s| forced_tokens(steps_of(s), s as u32)).collect();
+
+    // Isolated sequential references.
+    let mut want: Vec<Vec<Vec<f32>>> = Vec::new();
+    for s in 0..5 {
+        let mut c = KvCache::new(&cfg);
+        want.push(sequential_decode(&eng, &mut c, &prompts[s], &forced[s]));
+    }
+
+    let mut caches: Vec<Option<KvCache>> = (0..5).map(|_| None).collect();
+    let mut step: [usize; 5] = [0; 5];
+    for (round, members) in schedule.iter().enumerate() {
+        // Join: prefill newcomers.
+        for &s in members.iter() {
+            if caches[s].is_none() {
+                let mut c = KvCache::new(&cfg);
+                eng.prefill(&mut c, &prompts[s]);
+                caches[s] = Some(c);
+            }
+        }
+        let toks: Vec<u32> = members.iter().map(|&s| forced[s][step[s]]).collect();
+        let stores: Vec<&mut dyn KvStore> = caches
+            .iter_mut()
+            .enumerate()
+            .filter(|(i, c)| members.contains(i) && c.is_some())
+            .map(|(_, c)| c.as_mut().unwrap() as &mut dyn KvStore)
+            .collect();
+        assert_eq!(stores.len(), members.len());
+        let mut kv = StoreBatch { stores };
+        let got = eng.decode_batch(&mut kv, &toks);
+        for (j, &s) in members.iter().enumerate() {
+            assert_eq!(
+                &got[j], &want[s][step[s]],
+                "round {round}: seq {s} (step {}) diverged",
+                step[s]
+            );
+            step[s] += 1;
+        }
+        // Leave: drop retired members' caches (mid-schedule retirement).
+        for (s, c) in caches.iter_mut().enumerate() {
+            if c.is_some() && !schedule[round + 1..].iter().any(|m| m.contains(&s)) {
+                *c = None;
+            }
+        }
+    }
+    for s in 0..5 {
+        assert_eq!(step[s], steps_of(s), "seq {s} stepped every scheduled round");
+    }
+}
+
+#[test]
+fn batched_decode_through_paged_pool_is_bit_identical() {
+    // The coordinator's actual store: several sequences of one paged
+    // f32 pool, batched through `PagedKvPool::batch_view`, against
+    // isolated dense-cache sequential runs.
+    let cfg = ModelConfig::test();
+    let eng = quant_engine("q8_0", 37);
+    let rounds = 5;
+    for &bt in &[4usize, 16] {
+        let batch = 5;
+        let prompts: Vec<Vec<u32>> =
+            (0..batch).map(|s| prompt_tokens(3 + s, s as u32)).collect();
+        let forced: Vec<Vec<u32>> =
+            (0..batch).map(|s| forced_tokens(rounds, s as u32)).collect();
+        let mut want: Vec<Vec<Vec<f32>>> = Vec::new();
+        for s in 0..batch {
+            let mut c = KvCache::new(&cfg);
+            want.push(sequential_decode(&eng, &mut c, &prompts[s], &forced[s]));
+        }
+        let mut pool = PagedKvPool::new(&cfg, bt, KvQuant::F32, 64 << 20);
+        let ids: Vec<_> = (0..batch)
+            .map(|s| {
+                let id = pool.create_seq();
+                eng.prefill(&mut pool.seq_view(id), &prompts[s]);
+                id
+            })
+            .collect();
+        for r in 0..rounds {
+            let toks: Vec<u32> = (0..batch).map(|s| forced[s][r]).collect();
+            let got = eng.decode_batch(&mut pool.batch_view(&ids), &toks);
+            for (s, g) in got.iter().enumerate() {
+                assert_eq!(g, &want[s][r], "bt={bt} seq={s} round={r} diverged");
+            }
+        }
+        for id in ids {
+            pool.release_seq(id);
+        }
+        assert_eq!(pool.in_use_blocks(), 0);
+    }
+}
+
+#[test]
+fn coordinator_fused_rounds_match_solo_runs() {
+    // End-to-end: greedy generations through a coordinator decoding 3
+    // sequences per fused round must equal the same requests run alone.
+    // Overlap is made deterministic the way the PR-2 occupancy test
+    // does it: a long request is submitted first and its followers only
+    // after its first token arrives — it then has ≥ 23 decode rounds
+    // left, so the followers provably share fused rounds with it.
+    use itq3s::coordinator::{Coordinator, CoordinatorConfig, Event, GenRequest};
+    let prompts = ["the archive of ", "rowan fixed the ", "in the year "];
+    let max_toks = |i: usize| if i == 0 { 24 } else { 10 };
+    let run = |max_batch: usize, prompt: &str, max_new: usize| {
+        let coord = Coordinator::new(
+            Box::new(quant_engine("itq3_s", 41)),
+            CoordinatorConfig { max_batch, prefill_chunk: 8, ..Default::default() },
+        );
+        let (text, _) = coord.generate_collect(GenRequest {
+            prompt: prompt.into(),
+            max_new_tokens: max_new,
+            ..Default::default()
+        });
+        coord.shutdown();
+        text
+    };
+    let solo: Vec<String> =
+        prompts.iter().enumerate().map(|(i, p)| run(1, p, max_toks(i))).collect();
+
+    let coord = Coordinator::new(
+        Box::new(quant_engine("itq3_s", 41)),
+        CoordinatorConfig { max_batch: 3, prefill_chunk: 8, ..Default::default() },
+    );
+    let rx0 = coord.generate(GenRequest {
+        prompt: prompts[0].into(),
+        max_new_tokens: max_toks(0),
+        ..Default::default()
+    });
+    // Wait for the long request's first token before admitting rivals.
+    let mut text0 = String::new();
+    for ev in rx0.iter() {
+        if let Event::Token { text: t, .. } = ev {
+            text0.push_str(&t);
+            break;
+        }
+    }
+    let followers: Vec<_> = (1..3)
+        .map(|i| {
+            coord.generate(GenRequest {
+                prompt: prompts[i].into(),
+                max_new_tokens: max_toks(i),
+                ..Default::default()
+            })
+        })
+        .collect();
+    for (i, rx) in followers.into_iter().enumerate() {
+        let mut text = String::new();
+        for ev in rx.iter() {
+            match ev {
+                Event::Token { text: t, .. } => text.push_str(&t),
+                Event::Done { .. } => break,
+                _ => {}
+            }
+        }
+        assert_eq!(text, solo[i + 1], "follower {} diverged under fused batching", i + 1);
+    }
+    for ev in rx0.iter() {
+        match ev {
+            Event::Token { text: t, .. } => text0.push_str(&t),
+            Event::Done { .. } => break,
+            _ => {}
+        }
+    }
+    assert_eq!(text0, solo[0], "long request diverged under fused batching");
+    let stats = coord.stats().unwrap();
+    assert!(
+        stats.get("decode_batch_size_max").unwrap().as_f64().unwrap() >= 2.0,
+        "fused rounds must actually have batched"
+    );
+    coord.shutdown();
+}

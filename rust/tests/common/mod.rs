@@ -1,0 +1,103 @@
+//! Shared builders for the integration tests: tiny deterministic models,
+//! engines over every hot format, and KV plumbing helpers. Each test
+//! binary compiles this module independently and uses a subset of it.
+#![allow(dead_code)]
+
+use itq3s::model::native::Engine;
+use itq3s::model::{DenseModel, KvCache, KvStore, ModelConfig, NativeEngine, QuantizedModel};
+use itq3s::quant::format_by_name;
+
+/// The serving formats with hand-specialized W3A8/GEMM kernels —
+/// derived from the `Format` capability itself so a format that gains
+/// a kernel is picked up by the batched-decode harness automatically.
+pub fn hot_formats() -> Vec<&'static str> {
+    itq3s::quant::TABLE1_FORMATS
+        .iter()
+        .copied()
+        .filter(|name| format_by_name(name).unwrap().has_q8_kernel())
+        .collect()
+}
+
+/// Deterministic heavy-tailed tiny model (same architecture the trained
+/// checkpoint uses; seeds keep every run bit-reproducible).
+pub fn dense_model(seed: u64) -> DenseModel {
+    DenseModel::random(&ModelConfig::test(), seed, Some(5.0))
+}
+
+pub fn dense_engine(seed: u64) -> NativeEngine {
+    NativeEngine::dense(dense_model(seed))
+}
+
+/// Quantize the seed model into `fmt` and wrap it in a native engine.
+pub fn quant_engine(fmt: &str, seed: u64) -> NativeEngine {
+    NativeEngine::quantized(QuantizedModel::quantize(
+        &dense_model(seed),
+        format_by_name(fmt).unwrap_or_else(|| panic!("unknown format {fmt}")),
+    ))
+}
+
+/// Deterministic pseudo-prompt of `len` tokens (distinct per `salt`).
+pub fn prompt_tokens(len: usize, salt: u32) -> Vec<u32> {
+    (0..len as u32).map(|i| (i * 31 + salt * 17 + 1) % 256).collect()
+}
+
+/// Prefill `prompt` and then teacher-force `forced` through
+/// [`Engine::decode_step`], returning the logits of every decode step —
+/// the sequential reference the batched paths are differentially tested
+/// against.
+pub fn sequential_decode(
+    eng: &dyn Engine,
+    store: &mut dyn KvStore,
+    prompt: &[u32],
+    forced: &[u32],
+) -> Vec<Vec<f32>> {
+    eng.prefill(store, prompt);
+    forced.iter().map(|&t| eng.decode_step(store, t)).collect()
+}
+
+/// A [`KvStore`] that forwards everything to `primary` while recording
+/// every written K/V row into a dense f32 `shadow` — so a lossy
+/// (quantized) primary can be compared row-by-row against exactly what
+/// the engine wrote into it.
+pub struct TeeStore<'a> {
+    pub primary: &'a mut dyn KvStore,
+    pub shadow: KvCache,
+}
+
+impl<'a> TeeStore<'a> {
+    pub fn new(primary: &'a mut dyn KvStore, cfg: &ModelConfig) -> Self {
+        TeeStore { primary, shadow: KvCache::new(cfg) }
+    }
+}
+
+impl KvStore for TeeStore<'_> {
+    fn len(&self) -> usize {
+        self.primary.len()
+    }
+
+    fn capacity(&self) -> usize {
+        self.primary.capacity()
+    }
+
+    fn tokens(&self) -> &[u32] {
+        self.primary.tokens()
+    }
+
+    fn push_token(&mut self, t: u32) {
+        self.shadow.tokens.push(t);
+        self.primary.push_token(t);
+    }
+
+    fn k_at(&mut self, layer: usize, pos: usize) -> &[f32] {
+        self.primary.k_at(layer, pos)
+    }
+
+    fn v_at(&mut self, layer: usize, pos: usize) -> &[f32] {
+        self.primary.v_at(layer, pos)
+    }
+
+    fn write_kv(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        self.shadow.write_kv(layer, pos, k, v);
+        self.primary.write_kv(layer, pos, k, v);
+    }
+}
