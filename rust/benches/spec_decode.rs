@@ -1,0 +1,91 @@
+//! Speculative-decoding bench: accepted-tokens/s over draft length
+//! {0, 2, 4, 8} x acceptance regime (repetitive vs adversarial
+//! prompts), single stream on the itq3_s W3A8 engine over a paged f32
+//! pool — the configuration the coordinator actually serves. Draft
+//! length 0 is the vanilla one-token-per-pass baseline. Writes
+//! `BENCH_spec.json` so EXPERIMENTS.md §Speculative has a
+//! machine-readable trajectory across PRs.
+
+use itq3s::bench::harness::bench;
+use itq3s::kvpaged::{KvQuant, PagedKvPool};
+use itq3s::model::{DenseModel, ModelConfig, NativeEngine, QuantizedModel};
+use itq3s::spec::{run_greedy, NgramDrafter, SpecRun};
+use itq3s::util::json::Json;
+use itq3s::util::XorShift;
+use std::collections::BTreeMap;
+
+/// One measured generation: `n` greedy tokens at draft length `k`
+/// (0 = vanilla — `run_greedy` then never enters a verify pass) on a
+/// fresh paged pool. Shares `spec::run_greedy` with the differential
+/// tests, so the measured protocol is exactly the tested one.
+fn run(eng: &NativeEngine, prompt: &[u32], cfg: &ModelConfig, n: usize, k: usize) -> SpecRun {
+    let mut pool = PagedKvPool::new(cfg, 16, KvQuant::F32, 64 << 20);
+    let id = pool.create_seq();
+    let r = run_greedy(eng, &mut pool.seq_view(id), prompt, n, &mut NgramDrafter::default(), k);
+    pool.release_seq(id);
+    r
+}
+
+fn main() {
+    let cfg = ModelConfig::tiny(); // max_seq 256: room for prompt + drafts
+    let dense = DenseModel::random(&cfg, 42, Some(5.0));
+    let fmt = itq3s::quant::format_by_name("itq3_s").unwrap();
+    let eng = NativeEngine::quantized(QuantizedModel::quantize(&dense, fmt));
+
+    // Repetitive prompt: period-4 token cycle the ngram drafter can
+    // exploit. Adversarial: uniform random bytes — drafts rarely land.
+    let repetitive: Vec<u32> = (0..64u32).map(|i| 40 + (i % 4)).collect();
+    let mut rng = XorShift::new(7);
+    let adversarial: Vec<u32> = (0..64).map(|_| rng.next_below(256) as u32).collect();
+    let gen_tokens = 48usize;
+
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
+    for (regime, prompt) in [("repetitive", &repetitive), ("adversarial", &adversarial)] {
+        let mut by_k: BTreeMap<String, Json> = BTreeMap::new();
+        let mut base_tps = 0.0f64;
+        for &k in &[0usize, 2, 4, 8] {
+            // Acceptance accounting from one un-timed run (identical
+            // to the timed ones — everything is deterministic).
+            let SpecRun { drafted, accepted, .. } = run(&eng, prompt, &cfg, gen_tokens, k);
+            let label = format!("{regime}_k{k}");
+            let r = bench(&label, 1, 5, || {
+                run(&eng, prompt, &cfg, gen_tokens, k);
+            });
+            let tps = gen_tokens as f64 / r.mean_s;
+            if k == 0 {
+                base_tps = tps;
+            }
+            let accept_rate =
+                if drafted > 0 { accepted as f64 / drafted as f64 } else { 0.0 };
+            println!(
+                "{regime:<11} k={k}: {tps:>9.1} tok/s ({:.2}x vs k=0), accept {:.0}% ({accepted}/{drafted})",
+                tps / base_tps,
+                accept_rate * 100.0
+            );
+            by_k.insert(
+                format!("k{k}"),
+                Json::obj(vec![
+                    ("tokens_per_s", Json::num(tps)),
+                    ("speedup_vs_vanilla", Json::num(tps / base_tps)),
+                    ("drafted", Json::num(drafted as f64)),
+                    ("accepted", Json::num(accepted as f64)),
+                    ("accept_rate", Json::num(accept_rate)),
+                ]),
+            );
+        }
+        report.insert(
+            regime.to_string(),
+            Json::obj(vec![
+                ("gen_tokens", Json::num(gen_tokens as f64)),
+                ("prompt_tokens", Json::num(prompt.len() as f64)),
+                ("by_draft_len", Json::Obj(by_k)),
+            ]),
+        );
+    }
+
+    let out = Json::Obj(report).to_string();
+    match std::fs::write("BENCH_spec.json", &out) {
+        Ok(()) => println!("wrote BENCH_spec.json"),
+        Err(e) => eprintln!("could not write BENCH_spec.json: {e}"),
+    }
+}

@@ -111,6 +111,13 @@ impl KvPool {
         self.pool.seq_len(id)
     }
 
+    /// Roll `id` back to `len` tokens (speculative rollback: released
+    /// tail blocks return to the pool; cache entries over the dropped
+    /// span are invalidated).
+    pub fn truncate(&mut self, id: SeqId, len: usize) {
+        self.pool.truncate_seq(id, len)
+    }
+
     pub fn seq_view(&mut self, id: SeqId) -> PagedSeq<'_> {
         self.pool.seq_view(id)
     }

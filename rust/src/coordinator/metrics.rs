@@ -39,6 +39,14 @@ pub struct Metrics {
     /// each decode round actually got, vs `batch_occupancy` which also
     /// counts prefill-only sequences).
     pub decode_batch_size: RingStats,
+    /// Draft tokens proposed to speculative verify passes.
+    pub spec_drafted: u64,
+    /// Draft tokens accepted (each one saved a full decode pass).
+    pub spec_accepted: u64,
+    /// Per-verify-round acceptance rate (accepted / drafted).
+    pub spec_accept_rate: RingStats,
+    /// Per-verify-round accepted-run length (0..=draft_len).
+    pub spec_run_len: RingStats,
     pub kv_peak_bytes: usize,
     /// Paged-pool snapshot fragment (block/prefix stats), refreshed on
     /// each stats request.
@@ -68,6 +76,10 @@ impl Metrics {
             prefill_tokens_per_round: RingStats::new(WINDOW),
             batch_occupancy: RingStats::new(WINDOW),
             decode_batch_size: RingStats::new(WINDOW),
+            spec_drafted: 0,
+            spec_accepted: 0,
+            spec_accept_rate: RingStats::new(WINDOW),
+            spec_run_len: RingStats::new(WINDOW),
             kv_peak_bytes: 0,
             kv_pool: Json::Null,
         }
@@ -106,6 +118,17 @@ impl Metrics {
             ("batch_occupancy_max", Json::num(self.batch_occupancy.max())),
             ("decode_batch_size_mean", Json::num(self.decode_batch_size.mean())),
             ("decode_batch_size_max", Json::num(self.decode_batch_size.max())),
+            // Speculation counters are appended after the pre-existing
+            // keys so every older key keeps its name and meaning.
+            ("spec_drafted_total", Json::num(self.spec_drafted as f64)),
+            ("spec_accepted_total", Json::num(self.spec_accepted as f64)),
+            ("spec_accept_rate_mean", Json::num(self.spec_accept_rate.mean())),
+            ("spec_accept_rate_p50", Json::num(self.spec_accept_rate.p50())),
+            ("spec_accept_rate_p99", Json::num(self.spec_accept_rate.p99())),
+            ("spec_run_len_mean", Json::num(self.spec_run_len.mean())),
+            ("spec_run_len_p50", Json::num(self.spec_run_len.p50())),
+            ("spec_run_len_p99", Json::num(self.spec_run_len.p99())),
+            ("spec_run_len_max", Json::num(self.spec_run_len.max())),
             ("kv_peak_bytes", Json::num(self.kv_peak_bytes as f64)),
         ];
         // Splice in the paged-pool fragment (flat keys, stable shape).
@@ -146,6 +169,24 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.get("batch_occupancy_max").unwrap().as_f64(), Some(7.0));
         assert!(s.get("decode_step_ms_p50").unwrap().as_f64().unwrap() <= 17.0);
+    }
+
+    #[test]
+    fn speculation_counters_surface_without_touching_old_keys() {
+        let mut m = Metrics::new();
+        m.spec_drafted = 12;
+        m.spec_accepted = 9;
+        m.spec_accept_rate.push(0.75);
+        m.spec_run_len.push(3.0);
+        let s = m.snapshot();
+        assert_eq!(s.get("spec_drafted_total").unwrap().as_u64(), Some(12));
+        assert_eq!(s.get("spec_accepted_total").unwrap().as_u64(), Some(9));
+        assert!(s.get("spec_accept_rate_mean").unwrap().as_f64().unwrap() > 0.7);
+        assert_eq!(s.get("spec_run_len_max").unwrap().as_f64(), Some(3.0));
+        // Pre-existing keys are still present under their old names.
+        for key in ["gen_tokens", "decode_step_ms_p99", "decode_batch_size_max", "kv_peak_bytes"] {
+            assert!(s.get(key).is_some(), "missing {key}");
+        }
     }
 
     #[test]

@@ -12,7 +12,17 @@ pub struct GenRequest {
     /// Restrict temperature sampling to the k highest-logit tokens
     /// (`None` = full softmax; ignored when greedy).
     pub top_k: Option<usize>,
+    /// Nucleus sampling: keep the smallest top-probability set with
+    /// cumulative mass >= p (`None` = no cut; composes with `top_k`;
+    /// ignored when greedy).
+    pub top_p: Option<f32>,
     pub seed: u64,
+    /// Speculative decoding opt-out: `false` forces vanilla one-token
+    /// decode rounds even when the coordinator speculates. Sampled
+    /// requests (`temperature > 0`) never speculate regardless —
+    /// greedy verification is the only lossless mode until sampled
+    /// verification lands.
+    pub speculation: bool,
     /// Stop generation at the first '.' after this many tokens (0 = off).
     pub stop_at_sentence: bool,
     /// Scheduling priority: when the KV pool runs dry the
@@ -28,7 +38,9 @@ impl Default for GenRequest {
             max_new_tokens: 32,
             temperature: 0.0,
             top_k: None,
+            top_p: None,
             seed: 0,
+            speculation: true,
             stop_at_sentence: false,
             priority: 0,
         }
@@ -52,8 +64,18 @@ impl GenRequest {
                 r.top_k = Some(k as usize);
             }
         }
+        if let Some(p) = j.get("top_p").and_then(|v| v.as_f64()) {
+            // p >= 1 keeps everything and p <= 0 is degenerate: both
+            // mean "no nucleus cut".
+            if p > 0.0 && p < 1.0 {
+                r.top_p = Some(p as f32);
+            }
+        }
         if let Some(s) = j.get("seed").and_then(|v| v.as_u64()) {
             r.seed = s;
+        }
+        if let Some(s) = j.get("speculation").and_then(|v| v.as_bool()) {
+            r.speculation = s;
         }
         if let Some(s) = j.get("stop_at_sentence").and_then(|v| v.as_bool()) {
             r.stop_at_sentence = s;
@@ -113,7 +135,7 @@ mod tests {
     #[test]
     fn request_from_json() {
         let j = Json::parse(
-            r#"{"prompt":"hi","max_tokens":5,"temperature":0.7,"top_k":40,"seed":9,"priority":2}"#,
+            r#"{"prompt":"hi","max_tokens":5,"temperature":0.7,"top_k":40,"top_p":0.9,"seed":9,"priority":2,"speculation":false}"#,
         )
         .unwrap();
         let r = GenRequest::from_json(&j);
@@ -121,8 +143,10 @@ mod tests {
         assert_eq!(r.max_new_tokens, 5);
         assert!((r.temperature - 0.7).abs() < 1e-6);
         assert_eq!(r.top_k, Some(40));
+        assert!((r.top_p.unwrap() - 0.9).abs() < 1e-6);
         assert_eq!(r.seed, 9);
         assert_eq!(r.priority, 2);
+        assert!(!r.speculation);
     }
 
     #[test]
@@ -131,12 +155,22 @@ mod tests {
         assert_eq!(r.max_new_tokens, 32);
         assert_eq!(r.temperature, 0.0);
         assert_eq!(r.top_k, None);
+        assert_eq!(r.top_p, None);
         assert_eq!(r.priority, 0);
+        assert!(r.speculation, "speculation is opt-out");
     }
 
     #[test]
     fn top_k_zero_means_unrestricted() {
         let r = GenRequest::from_json(&Json::parse(r#"{"top_k":0}"#).unwrap());
         assert_eq!(r.top_k, None);
+    }
+
+    #[test]
+    fn degenerate_top_p_means_unrestricted() {
+        for raw in [r#"{"top_p":0}"#, r#"{"top_p":1.0}"#, r#"{"top_p":1.5}"#] {
+            let r = GenRequest::from_json(&Json::parse(raw).unwrap());
+            assert_eq!(r.top_p, None, "{raw}");
+        }
     }
 }

@@ -1,17 +1,28 @@
 //! Token sampling: greedy argmax or seeded temperature sampling, with
-//! optional top-k truncation of the candidate set.
+//! optional top-k and top-p (nucleus) truncation of the candidate set.
+//!
+//! Top-k and top-p compose the standard way: the candidate set is first
+//! restricted to the `k` highest logits (if set), the temperature
+//! softmax is taken over that set, and the nucleus cut then keeps the
+//! smallest probability-sorted prefix whose cumulative mass reaches
+//! `p`. Greedy decoding (`temperature <= 0`) ignores both. Besides
+//! serving sampled requests, deterministic nucleus truncation is the
+//! prerequisite for lossless *sampled* speculative verification later
+//! (the verifier must be able to replay the exact truncated
+//! distribution at every drafted position).
 
 use crate::util::XorShift;
 
 pub struct Sampler {
     temperature: f32,
     top_k: Option<usize>,
+    top_p: Option<f32>,
     rng: XorShift,
 }
 
 impl Sampler {
     pub fn new(temperature: f32, seed: u64) -> Self {
-        Sampler { temperature, top_k: None, rng: XorShift::new(seed) }
+        Sampler { temperature, top_k: None, top_p: None, rng: XorShift::new(seed) }
     }
 
     /// Restrict temperature sampling to the `k` highest logits. `None`
@@ -22,15 +33,27 @@ impl Sampler {
         self
     }
 
+    /// Nucleus sampling: keep the smallest set of highest-probability
+    /// tokens whose cumulative probability reaches `p`. `None` or
+    /// `p >= 1.0` disables the cut; `p <= 0` degenerates to the single
+    /// most probable candidate. Composes with [`Sampler::with_top_k`]
+    /// (the nucleus is taken over the top-k-restricted distribution).
+    pub fn with_top_p(mut self, p: Option<f32>) -> Self {
+        self.top_p = p;
+        self
+    }
+
     /// Pick the next token from logits.
     pub fn sample(&mut self, logits: &[f32]) -> u32 {
         if self.temperature <= 0.0 {
             return argmax(logits);
         }
-        match self.top_k {
-            Some(k) if k < logits.len() => self.sample_top_k(logits, k.max(1)),
-            _ => self.sample_full(logits),
+        let k_active = matches!(self.top_k, Some(k) if k < logits.len());
+        let p_active = matches!(self.top_p, Some(p) if p < 1.0);
+        if !k_active && !p_active {
+            return self.sample_full(logits);
         }
+        self.sample_truncated(logits, k_active, p_active)
     }
 
     /// Softmax with temperature over all logits, inverse-CDF draw.
@@ -55,18 +78,24 @@ impl Sampler {
         (probs.len() - 1) as u32
     }
 
-    /// Temperature draw over the `k` highest logits only. Candidates are
-    /// ordered by (logit desc, index asc) so ties break deterministically;
-    /// the top set is found by partitioning (O(V + k log k), not a full
-    /// vocabulary sort — this runs once per sampled token).
-    fn sample_top_k(&mut self, logits: &[f32], k: usize) -> u32 {
+    /// Temperature draw over a truncated candidate set: top-k first
+    /// (partition, O(V + k log k) — only the k survivors are sorted),
+    /// then the nucleus cut over the candidate distribution. A pure
+    /// top-p cut (no top-k) sorts the full distribution once per
+    /// sampled token, which is fine at this vocabulary scale; compose
+    /// with top-k to bound it. Candidates are ordered by (logit desc,
+    /// index asc) so ties break deterministically.
+    fn sample_truncated(&mut self, logits: &[f32], k_active: bool, p_active: bool) -> u32 {
         let desc = |a: &(f32, u32), b: &(f32, u32)| {
             b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
         };
         let mut cand: Vec<(f32, u32)> =
             logits.iter().enumerate().map(|(i, &x)| (x, i as u32)).collect();
-        cand.select_nth_unstable_by(k - 1, desc);
-        cand.truncate(k);
+        if k_active {
+            let k = self.top_k.expect("k_active").max(1);
+            cand.select_nth_unstable_by(k - 1, desc);
+            cand.truncate(k);
+        }
         cand.sort_by(desc);
         let inv_t = 1.0 / self.temperature;
         let m = cand[0].0;
@@ -75,6 +104,26 @@ impl Sampler {
         let sum: f64 = probs.iter().sum();
         for p in probs.iter_mut() {
             *p /= sum;
+        }
+        if p_active {
+            // Smallest probability-sorted prefix with cumulative mass
+            // >= p (always at least one candidate), then renormalize.
+            let target = self.top_p.expect("p_active") as f64;
+            let mut cum = 0.0f64;
+            let mut keep = probs.len();
+            for (i, &pr) in probs.iter().enumerate() {
+                cum += pr;
+                if cum >= target {
+                    keep = i + 1;
+                    break;
+                }
+            }
+            cand.truncate(keep);
+            probs.truncate(keep);
+            let nsum: f64 = probs.iter().sum();
+            for p in probs.iter_mut() {
+                *p /= nsum;
+            }
         }
         let mut u = self.rng.next_f64();
         for (i, &p) in probs.iter().enumerate() {
@@ -179,6 +228,101 @@ mod tests {
             .scan(Sampler::new(0.8, 7).with_top_k(Some(16)), |s, _| Some(s.sample(&logits)))
             .collect();
         assert_eq!(a, b, "k >= vocab must take the full-softmax path");
+    }
+
+    /// The minimal nucleus of `logits` at temperature `t`: smallest
+    /// probability-sorted (desc, ties by index asc) prefix with
+    /// cumulative probability >= p — computed independently of the
+    /// sampler's implementation.
+    fn nucleus(logits: &[f32], t: f32, p: f64) -> std::collections::HashSet<u32> {
+        let mut cand: Vec<(f32, u32)> =
+            logits.iter().enumerate().map(|(i, &x)| (x, i as u32)).collect();
+        cand.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1))
+        });
+        let m = cand[0].0;
+        // Mirror the sampler's exact float ops ((x - m) * inv_t in f32)
+        // so a 1-ulp difference cannot shift the nucleus boundary.
+        let inv_t = 1.0 / t;
+        let w: Vec<f64> =
+            cand.iter().map(|&(x, _)| (((x - m) * inv_t) as f64).exp()).collect();
+        let sum: f64 = w.iter().sum();
+        let mut cum = 0.0;
+        let mut keep = std::collections::HashSet::new();
+        for (i, &wi) in w.iter().enumerate() {
+            cum += wi / sum;
+            keep.insert(cand[i].1);
+            if cum >= p {
+                break;
+            }
+        }
+        keep
+    }
+
+    #[test]
+    fn top_p_is_seeded_deterministic() {
+        let logits: Vec<f32> = (0..32).map(|i| (i as f32 * 0.53).sin()).collect();
+        let draw = || -> Vec<u32> {
+            let mut s = Sampler::new(0.9, 17).with_top_p(Some(0.7));
+            (0..30).map(|_| s.sample(&logits)).collect()
+        };
+        assert_eq!(draw(), draw());
+    }
+
+    #[test]
+    fn top_p_never_leaves_the_nucleus() {
+        let logits: Vec<f32> = (0..64).map(|i| (i as f32 * 0.41).sin() * 2.0).collect();
+        for &p in &[0.3f32, 0.6, 0.9] {
+            let allowed = nucleus(&logits, 1.2, p as f64);
+            let mut s = Sampler::new(1.2, 29).with_top_p(Some(p));
+            for _ in 0..300 {
+                let tok = s.sample(&logits);
+                assert!(allowed.contains(&tok), "p={p}: token {tok} outside the nucleus");
+            }
+        }
+    }
+
+    #[test]
+    fn top_p_one_matches_full_sampling() {
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32 * 0.7).sin()).collect();
+        let a: Vec<u32> = (0..20)
+            .scan(Sampler::new(0.8, 7), |s, _| Some(s.sample(&logits)))
+            .collect();
+        let b: Vec<u32> = (0..20)
+            .scan(Sampler::new(0.8, 7).with_top_p(Some(1.0)), |s, _| Some(s.sample(&logits)))
+            .collect();
+        assert_eq!(a, b, "p >= 1 must take the full-softmax path");
+    }
+
+    #[test]
+    fn tiny_top_p_is_greedy() {
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32 * 1.1).cos()).collect();
+        let mut s = Sampler::new(1.0, 9).with_top_p(Some(1e-6));
+        for _ in 0..20 {
+            assert_eq!(s.sample(&logits), argmax(&logits));
+        }
+    }
+
+    #[test]
+    fn top_k_and_top_p_compose() {
+        // The nucleus is taken over the top-k-restricted distribution:
+        // draws must satisfy BOTH constraints.
+        let logits: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin() * 3.0).collect();
+        let k = 8;
+        let mut top: Vec<(f32, u32)> =
+            logits.iter().enumerate().map(|(i, &x)| (x, i as u32)).collect();
+        top.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        let topk: Vec<f32> = top[..k].iter().map(|&(x, _)| x).collect();
+        let idx: Vec<u32> = top[..k].iter().map(|&(_, i)| i).collect();
+        // Nucleus over the k retained logits, mapped back to vocab ids.
+        let local = nucleus(&topk, 1.0, 0.6);
+        let allowed: std::collections::HashSet<u32> =
+            local.iter().map(|&li| idx[li as usize]).collect();
+        let mut s = Sampler::new(1.0, 31).with_top_k(Some(k)).with_top_p(Some(0.6));
+        for _ in 0..300 {
+            let tok = s.sample(&logits);
+            assert!(allowed.contains(&tok), "token {tok} violates top-k+top-p");
+        }
     }
 
     #[test]

@@ -201,6 +201,41 @@ impl PagedKvPool {
         self.prefix.insert(&mut self.pool, &tokens, bt, &blocks);
     }
 
+    /// Roll sequence `id` back to its first `len` tokens (speculative
+    /// rollback): the token history is truncated, tail blocks past the
+    /// last kept position are released — refcounted, so a block shared
+    /// with the prefix cache or a forked sequence merely loses this
+    /// sequence's reference and stays valid for its other holders
+    /// (their content was COW-protected from the rolled-back writes) —
+    /// and any prefix-cache chain entry registered over the dropped
+    /// span is invalidated, so the cache can never serve a rolled-back
+    /// span.
+    pub fn truncate_seq(&mut self, id: SeqId, len: usize) {
+        let bt = self.pool.block_tokens();
+        let old = self.seqs[id.0].as_ref().expect("released SeqId").tokens.len();
+        assert!(len <= old, "truncate({len}) beyond length {old}");
+        if len == old {
+            return;
+        }
+        // Invalidate cached entries over the dropped span first — this
+        // needs the pre-truncation token history to walk the chain.
+        self.prefix.forget_from(
+            &mut self.pool,
+            &self.seqs[id.0].as_ref().expect("released SeqId").tokens,
+            bt,
+            len,
+        );
+        let seq = self.seqs[id.0].as_mut().expect("released SeqId");
+        seq.tokens.truncate(len);
+        // Keep exactly the blocks that still hold a kept position. (A
+        // recompute engine's table can be shorter than the token count;
+        // truncate is then a no-op on blocks.)
+        let keep = len.div_ceil(bt);
+        seq.table.truncate(&mut self.pool, keep);
+        // The dequant memo may span released (and soon recycled) blocks.
+        self.dq_key = None;
+    }
+
     /// Fork a sequence: shared block table (refcounted), copied token
     /// history. Continuations diverge via copy-on-write.
     pub fn fork_seq(&mut self, id: SeqId) -> SeqId {
@@ -304,6 +339,7 @@ impl PagedKvPool {
             ("prefix_hit_tokens", Json::num(hit_tokens as f64)),
             ("prefix_hit_ratio", Json::num(hit_tokens as f64 / lookup_tokens as f64)),
             ("prefix_evictions", Json::num(evictions as f64)),
+            ("prefix_invalidations", Json::num(self.prefix.invalidations as f64)),
         ])
     }
 }
@@ -341,6 +377,10 @@ impl KvStore for PagedSeq<'_> {
 
     fn write_kv(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
         self.pool.write_kv(self.id, layer, pos, k, v)
+    }
+
+    fn truncate(&mut self, len: usize) {
+        self.pool.truncate_seq(self.id, len)
     }
 }
 
@@ -383,6 +423,10 @@ impl crate::model::KvBatchStore for PagedBatch<'_> {
 
     fn write_kv(&mut self, i: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
         self.pool.write_kv(self.ids[i], layer, pos, k, v)
+    }
+
+    fn truncate(&mut self, i: usize, len: usize) {
+        self.pool.truncate_seq(self.ids[i], len)
     }
 }
 
@@ -499,6 +543,71 @@ mod tests {
         p.release_seq(a);
         p.release_seq(b);
         assert_eq!(p.in_use_blocks(), 0);
+    }
+
+    #[test]
+    fn truncate_seq_releases_tail_blocks_and_keeps_content() {
+        let cfg = ModelConfig::test();
+        let mut p = tiny_pool(4, 8, KvQuant::F32);
+        let id = p.create_seq();
+        let rows: Vec<Vec<f32>> =
+            (0..10).map(|i| vec![i as f32; cfg.dim]).collect();
+        {
+            let mut view = p.seq_view(id);
+            for (pos, r) in rows.iter().enumerate() {
+                for l in 0..cfg.n_layers {
+                    view.write_kv(l, pos, r, r);
+                }
+                view.push_token(pos as u32);
+            }
+        }
+        assert_eq!(p.in_use_blocks(), 3); // ceil(10/4)
+        p.truncate_seq(id, 5);
+        assert_eq!(p.seq_len(id), 5);
+        assert_eq!(p.in_use_blocks(), 2); // ceil(5/4): block 2 freed
+        // Kept positions are untouched, and the freed span can be
+        // rewritten through the normal append path.
+        {
+            let mut view = p.seq_view(id);
+            assert_eq!(view.k_at(1, 4), &rows[4][..]);
+            assert_eq!(view.v_at(0, 0), &rows[0][..]);
+            for l in 0..cfg.n_layers {
+                view.write_kv(l, 5, &rows[9], &rows[9]);
+            }
+            view.push_token(99);
+            assert_eq!(view.k_at(0, 5), &rows[9][..]);
+        }
+        // Truncate to a block boundary and to zero.
+        p.truncate_seq(id, 4);
+        assert_eq!(p.in_use_blocks(), 1);
+        p.truncate_seq(id, 0);
+        assert_eq!(p.in_use_blocks(), 0);
+        p.release_seq(id);
+    }
+
+    #[test]
+    fn truncate_seq_invalidates_cached_entries_over_the_span() {
+        let cfg = ModelConfig::test();
+        let mut p = tiny_pool(4, 8, KvQuant::F32);
+        let id = p.create_seq();
+        let row = vec![0.5f32; cfg.dim];
+        for pos in 0..8 {
+            for l in 0..cfg.n_layers {
+                p.write_kv(id, l, pos, &row, &row);
+            }
+            p.seq_mut(id).tokens.push(pos as u32);
+        }
+        p.cache_prefix(id); // blocks 0 and 1 registered
+        let prompt: Vec<u32> = (0..8).collect();
+        // Roll back into block 1: its cache entry must be dropped, the
+        // block-0 entry kept.
+        p.truncate_seq(id, 5);
+        let probe = p.create_seq();
+        assert_eq!(p.map_cached_prefix(probe, &prompt), 4, "only block 0 may serve");
+        p.release_seq(probe);
+        p.release_seq(id);
+        p.clear_prefix_cache();
+        assert_eq!(p.in_use_blocks(), 0, "no reference leaked by invalidation");
     }
 
     #[test]

@@ -54,6 +54,9 @@ pub struct PrefixCache {
     pub hit_tokens: u64,
     pub insertions: u64,
     pub evictions: u64,
+    /// Entries removed because their span was rolled back
+    /// ([`PrefixCache::forget_from`]), as opposed to LRU-evicted.
+    pub invalidations: u64,
 }
 
 impl PrefixCache {
@@ -165,6 +168,41 @@ impl PrefixCache {
         freed
     }
 
+    /// Remove every cached chain entry of `tokens` that covers any
+    /// position at or beyond `keep_len`, releasing its block reference.
+    /// Called on sequence rollback (`tokens` is the *pre-truncation*
+    /// history) so a rolled-back span can never be served from the
+    /// cache. Entries wholly inside the kept prefix stay. The walk
+    /// continues through missing or removed entries — children are
+    /// keyed on the parent *hash*, which is computable from the tokens
+    /// alone — so orphaned children (e.g. after an earlier LRU
+    /// eviction of their parent) are still found and dropped.
+    pub fn forget_from(
+        &mut self,
+        pool: &mut BlockPool,
+        tokens: &[u32],
+        block_tokens: usize,
+        keep_len: usize,
+    ) {
+        let mut parent = 0u64;
+        for (i, chunk) in tokens.chunks_exact(block_tokens).enumerate() {
+            let key = chain_hash(parent, chunk);
+            let covers_dropped = (i + 1) * block_tokens > keep_len;
+            match self.entries.get(&key) {
+                Some(e) if e.parent == parent && e.tokens == chunk => {
+                    if covers_dropped {
+                        let e = self.entries.remove(&key).expect("entry just seen");
+                        pool.release(e.block);
+                        self.invalidations += 1;
+                    }
+                }
+                Some(_) => break, // hash collision: not our chain
+                None => {}
+            }
+            parent = key;
+        }
+    }
+
     /// Drop every entry, releasing the cache's block references.
     pub fn clear(&mut self, pool: &mut BlockPool) {
         for (_, e) in self.entries.drain() {
@@ -251,6 +289,33 @@ mod tests {
         assert_eq!(c.lookup(&a, 4, usize::MAX).len(), 1);
         assert!(c.lookup(&b, 4, usize::MAX).is_empty());
         assert_eq!(c.evict_for(&mut p, 1), 0, "shared block is pinned");
+    }
+
+    #[test]
+    fn forget_from_drops_exactly_the_rolled_back_span() {
+        let mut p = pool(4, 8);
+        let mut c = PrefixCache::new();
+        let toks: Vec<u32> = (0..16).collect();
+        let blocks = alloc_n(&mut p, 4);
+        c.insert(&mut p, &toks, 4, &blocks);
+        assert_eq!(c.len(), 4);
+        // Roll back to 10 tokens: block 2 (positions 8..12) and block 3
+        // (12..16) cover dropped positions; blocks 0 and 1 stay.
+        c.forget_from(&mut p, &toks, 4, 10);
+        assert_eq!(c.invalidations, 2);
+        assert_eq!(c.lookup(&toks, 4, usize::MAX), blocks[..2]);
+        // The dropped entries released their references: only the
+        // allocator refs remain on blocks 2 and 3.
+        assert_eq!(p.refcount(blocks[2]), 1);
+        assert_eq!(p.refcount(blocks[3]), 1);
+        assert_eq!(p.refcount(blocks[0]), 2);
+        // Another sequence's chain is untouched.
+        let other: Vec<u32> = (100..108).collect();
+        let ob = alloc_n(&mut p, 2);
+        c.insert(&mut p, &other, 4, &ob);
+        c.forget_from(&mut p, &toks, 4, 0);
+        assert_eq!(c.lookup(&other, 4, usize::MAX), ob);
+        assert!(c.lookup(&toks, 4, usize::MAX).is_empty());
     }
 
     #[test]

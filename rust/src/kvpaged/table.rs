@@ -52,6 +52,18 @@ impl BlockTable {
         self.blocks.clear();
     }
 
+    /// Release the mapped blocks beyond the first `keep`, shrinking the
+    /// table (speculative rollback). Refcounts make this COW-correct: a
+    /// tail block shared with the prefix cache or a forked sequence
+    /// merely loses this table's reference and survives for its other
+    /// holders; a private one returns to the free list.
+    pub fn truncate(&mut self, pool: &mut BlockPool, keep: usize) {
+        while self.blocks.len() > keep {
+            let b = self.blocks.pop().expect("len checked");
+            pool.release(b);
+        }
+    }
+
     /// Physical block for writing position `pos`, allocating the next
     /// logical block or COW-forking a shared one as needed. `None` when
     /// the pool is dry — callers prevent this by checking
@@ -143,6 +155,32 @@ mod tests {
         a.release_all(&mut p);
         b.release_all(&mut p);
         assert_eq!(p.in_use_blocks(), 0);
+    }
+
+    #[test]
+    fn truncate_releases_private_tail_but_only_unrefs_shared() {
+        let mut p = pool(4, 8);
+        let mut a = BlockTable::new();
+        let x = vec![2.0f32; p.dim()];
+        for pos in 0..10 {
+            let b = a.block_for_write(&mut p, pos).unwrap();
+            p.write_row(b, Plane::K, 0, pos % 4, &x);
+        }
+        assert_eq!(a.n_blocks(), 3);
+        let shared_tail = a.physical(2);
+        p.retain(shared_tail); // e.g. a prefix-cache reference
+        a.truncate(&mut p, 1);
+        assert_eq!(a.n_blocks(), 1);
+        // The shared block survives its other holder; the private one
+        // (logical 1) went back to the free list.
+        assert_eq!(p.refcount(shared_tail), 1);
+        assert_eq!(p.in_use_blocks(), 2);
+        p.release(shared_tail);
+        a.release_all(&mut p);
+        assert_eq!(p.in_use_blocks(), 0);
+        // Truncate-to-current-size is a no-op.
+        a.truncate(&mut p, 5);
+        assert_eq!(a.n_blocks(), 0);
     }
 
     #[test]

@@ -16,9 +16,11 @@
 //!   (ITQ3_S and all evaluated baselines), the W3A8 integer serving
 //!   kernels (`quant::act` + `Format::dot_block_q8`, the CPU analog of
 //!   the paper's DP4A MMQ/MMVQ pipeline) with row-sharded parallelism
-//!   (`util::threadpool`), a GGUF-like model container, a perplexity
-//!   evaluator, and the PJRT runtime that executes the AOT artifacts.
-//!   Python never runs on the request path.
+//!   (`util::threadpool`), speculative decoding (`spec`: zero-artifact
+//!   drafters + a fused multi-position verify pass with paged-KV
+//!   rollback), a GGUF-like model container, a perplexity evaluator,
+//!   and the PJRT runtime that executes the AOT artifacts. Python
+//!   never runs on the request path.
 //!
 //! See `DESIGN.md` for the paper → module map and `EXPERIMENTS.md` for
 //! the reproduced tables.
@@ -34,6 +36,7 @@ pub mod model;
 pub mod quant;
 pub mod runtime;
 pub mod server;
+pub mod spec;
 pub mod tensor;
 pub mod util;
 

@@ -10,6 +10,7 @@
 //! itq3s eval-ppl    --model M.iguf [--split valid|web] [--engine native|pjrt]
 //! itq3s serve       --model M.iguf [--addr A] [--engine native|pjrt]
 //!                   [--kv-budget BYTES] [--kv-block-tokens N] [--kv-quant f32|q8]
+//!                   [--spec-draft-len K] [--spec-drafter ngram|self]
 //! itq3s table1|table2|table3                       paper-table harnesses
 //! itq3s e2e                                        end-to-end pipeline check
 //! ```
@@ -165,19 +166,32 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
     if kv_block_tokens == 0 {
         bail!("--kv-block-tokens must be positive");
     }
+    // Speculative decoding defaults on for serving (greedy requests
+    // only; per-request `"speculation": false` opts out). 0 disables.
+    let spec_draft_len: usize = flag_or(flags, "spec-draft-len", "4").parse()?;
+    let spec_drafter_name = flag_or(flags, "spec-drafter", "ngram");
+    let spec_drafter = itq3s::spec::DrafterKind::parse(&spec_drafter_name)
+        .with_context(|| format!("unknown --spec-drafter '{spec_drafter_name}' (ngram|self)"))?;
     let cfg = itq3s::coordinator::CoordinatorConfig {
         max_batch: flag_or(flags, "max-batch", "8").parse()?,
         kv_budget_bytes: flag_or(flags, "kv-budget", "268435456").parse()?,
         kv_block_tokens,
         kv_quant,
+        spec_draft_len,
+        spec_drafter,
         ..Default::default()
     };
     println!(
-        "serving {} on {addr} [{engine}] (kv: {} budget, {}-token blocks, {})",
+        "serving {} on {addr} [{engine}] (kv: {} budget, {}-token blocks, {}; spec: {})",
         model.display(),
         itq3s::util::human_bytes(cfg.kv_budget_bytes as u64),
         cfg.kv_block_tokens,
         kv_quant_name,
+        if spec_draft_len == 0 {
+            "off".to_string()
+        } else {
+            format!("{spec_drafter_name} x{spec_draft_len}")
+        },
     );
     itq3s::server::run(&addr, eng, cfg)
 }

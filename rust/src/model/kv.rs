@@ -36,6 +36,13 @@ pub trait KvStore {
     fn v_at(&mut self, layer: usize, pos: usize) -> &[f32];
     /// Store the K/V vectors for (`layer`, `pos`).
     fn write_kv(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]);
+    /// Roll the sequence back to its first `len` tokens, discarding the
+    /// tail tokens and any KV written for them (speculative-decode
+    /// rollback). `len` must not exceed the current length. After the
+    /// call, positions `len..` are free to be rewritten; a store may
+    /// leave stale payload there (the engine always writes a position
+    /// before reading it).
+    fn truncate(&mut self, len: usize);
 }
 
 /// Batched KV access for the fused multi-sequence decode pass.
@@ -71,6 +78,9 @@ pub trait KvBatchStore {
     fn v_at(&mut self, i: usize, layer: usize, pos: usize) -> &[f32];
     /// Store sequence `i`'s K/V vectors for (`layer`, `pos`).
     fn write_kv(&mut self, i: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]);
+    /// Roll sequence `i` back to its first `len` tokens (the
+    /// [`KvStore::truncate`] analog).
+    fn truncate(&mut self, i: usize, len: usize);
 }
 
 /// A decode batch over independent per-sequence stores.
@@ -110,6 +120,10 @@ impl KvBatchStore for StoreBatch<'_> {
     fn write_kv(&mut self, i: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
         self.stores[i].write_kv(layer, pos, k, v)
     }
+
+    fn truncate(&mut self, i: usize, len: usize) {
+        self.stores[i].truncate(len)
+    }
 }
 
 /// One slot of a [`KvBatchStore`] viewed as a plain [`KvStore`].
@@ -145,6 +159,78 @@ impl KvStore for BatchSlot<'_> {
 
     fn write_kv(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
         self.batch.write_kv(self.i, layer, pos, k, v)
+    }
+
+    fn truncate(&mut self, len: usize) {
+        self.batch.truncate(self.i, len)
+    }
+}
+
+/// `n` consecutive positions of **one** sequence presented as a decode
+/// batch: slot `i` stands for position `base + i`, where `base` is the
+/// store's length at construction.
+///
+/// This is how the speculative verify pass reuses the fused batched
+/// decode unchanged: [`NativeEngine::score_tokens`] hands
+/// `decode_batch` a `SpecSlots` view over `[pending, draft...]`, and
+/// the batched pass's write-KV-then-attend-per-layer order makes slot
+/// `i`'s attention read exactly the KV state a sequential
+/// `decode_step` at position `base + i` would see — slots `< i` have
+/// written their rows for the layer before any slot attends, and slot
+/// `i` only reads positions `0..=base + i`. The fused pass pushes
+/// tokens only after all layers complete, so the fixed per-slot
+/// `seq_len` stays valid for the whole call.
+///
+/// [`NativeEngine::score_tokens`]: crate::model::native::Engine::score_tokens
+pub struct SpecSlots<'a> {
+    store: &'a mut dyn KvStore,
+    base: usize,
+    n: usize,
+}
+
+impl<'a> SpecSlots<'a> {
+    pub fn new(store: &'a mut dyn KvStore, n: usize) -> Self {
+        let base = store.len();
+        SpecSlots { store, base, n }
+    }
+}
+
+impl KvBatchStore for SpecSlots<'_> {
+    fn n_seqs(&self) -> usize {
+        self.n
+    }
+
+    fn seq_len(&self, i: usize) -> usize {
+        debug_assert!(i < self.n);
+        self.base + i
+    }
+
+    fn capacity(&self, _i: usize) -> usize {
+        self.store.capacity()
+    }
+
+    fn tokens(&self, _i: usize) -> &[u32] {
+        self.store.tokens()
+    }
+
+    fn push_token(&mut self, _i: usize, t: u32) {
+        self.store.push_token(t)
+    }
+
+    fn k_at(&mut self, _i: usize, layer: usize, pos: usize) -> &[f32] {
+        self.store.k_at(layer, pos)
+    }
+
+    fn v_at(&mut self, _i: usize, layer: usize, pos: usize) -> &[f32] {
+        self.store.v_at(layer, pos)
+    }
+
+    fn write_kv(&mut self, _i: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        self.store.write_kv(layer, pos, k, v)
+    }
+
+    fn truncate(&mut self, _i: usize, len: usize) {
+        self.store.truncate(len)
     }
 }
 
@@ -245,6 +331,14 @@ impl KvStore for KvCache {
     fn write_kv(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
         KvCache::write_kv(self, layer, pos, k, v)
     }
+
+    fn truncate(&mut self, len: usize) {
+        assert!(len <= self.tokens.len(), "truncate({len}) beyond length");
+        // KV rows past `len` are left in place: reads never go past the
+        // token count, and every position is rewritten before the first
+        // read that could see it.
+        self.tokens.truncate(len);
+    }
 }
 
 #[cfg(test)]
@@ -303,6 +397,52 @@ mod tests {
         assert_eq!(b.tokens, vec![42, 7]);
         assert_eq!(b.k_at(0, 0), &k[..]);
         assert!(a.is_empty());
+    }
+
+    #[test]
+    fn truncate_drops_tail_tokens() {
+        let cfg = ModelConfig::test();
+        let mut c = KvCache::new(&cfg);
+        let row = vec![1.0f32; cfg.dim];
+        for pos in 0..5 {
+            c.write_kv(0, pos, &row, &row);
+            KvStore::push_token(&mut c, pos as u32);
+        }
+        KvStore::truncate(&mut c, 3);
+        assert_eq!(c.len(), 3);
+        assert_eq!(KvStore::tokens(&c), &[0, 1, 2]);
+        // Truncate to the current length is a no-op; to zero empties.
+        KvStore::truncate(&mut c, 3);
+        assert_eq!(c.len(), 3);
+        KvStore::truncate(&mut c, 0);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn spec_slots_present_consecutive_positions_of_one_store() {
+        let cfg = ModelConfig::test();
+        let mut c = KvCache::new(&cfg);
+        let k: Vec<f32> = (0..cfg.dim).map(|i| i as f32).collect();
+        // Two tokens already consumed.
+        for pos in 0..2 {
+            c.write_kv(0, pos, &k, &k);
+            KvStore::push_token(&mut c, 100 + pos as u32);
+        }
+        let mut slots = SpecSlots::new(&mut c, 3);
+        assert_eq!(slots.n_seqs(), 3);
+        // Slot i is position base + i, with a fixed base.
+        assert_eq!(slots.seq_len(0), 2);
+        assert_eq!(slots.seq_len(2), 4);
+        slots.write_kv(1, 1, 3, &k, &k);
+        assert_eq!(slots.k_at(1, 1, 3), &k[..]);
+        // Pushes land on the single underlying store without moving the
+        // per-slot positions (decode_batch pushes only at the end).
+        slots.push_token(0, 7);
+        slots.push_token(1, 8);
+        assert_eq!(slots.seq_len(0), 2);
+        drop(slots);
+        assert_eq!(c.tokens, vec![100, 101, 7, 8]);
+        assert_eq!(KvCache::k_at(&c, 1, 3), &k[..]);
     }
 
     #[test]

@@ -17,6 +17,6 @@ pub mod tokenizer;
 pub mod weights;
 
 pub use config::ModelConfig;
-pub use kv::{BatchSlot, KvBatchStore, KvCache, KvStore, StoreBatch};
+pub use kv::{BatchSlot, KvBatchStore, KvCache, KvStore, SpecSlots, StoreBatch};
 pub use native::NativeEngine;
 pub use weights::{DenseModel, QuantizedModel};

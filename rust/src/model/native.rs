@@ -61,6 +61,21 @@ pub trait Engine: Send + Sync {
         }
         out
     }
+    /// Feed `tokens` sequentially — writing KV as it goes — and return
+    /// next-token logits at **every** fed position: the speculative
+    /// verify pass. Unlike [`Engine::prefill`] (which runs the batched
+    /// f32 MMQ path), this must replay the *decode* path's numerics:
+    ///
+    /// Contract (test-enforced in `rust/tests/spec_decode.rs`): the
+    /// returned logits and the resulting KV state are **bit-identical**
+    /// to feeding the same tokens one at a time through
+    /// [`Engine::decode_step`]. The default is that sequential loop;
+    /// the native engine overrides it with a fused pass that scores all
+    /// positions through one batched Q8 GEMM per linear, so verifying
+    /// `k` drafts costs roughly one weight-unpack sweep instead of `k`.
+    fn score_tokens(&self, cache: &mut dyn KvStore, tokens: &[u32]) -> Vec<Vec<f32>> {
+        tokens.iter().map(|&t| self.decode_step(cache, t)).collect()
+    }
     /// Ingest a whole prompt, returning logits at every position
     /// (`(len, vocab)`).
     fn prefill(&self, cache: &mut dyn KvStore, tokens: &[u32]) -> Tensor;
@@ -506,6 +521,25 @@ impl Engine for NativeEngine {
         (0..nb).map(|s| self.logits_for(&x[s * dim..(s + 1) * dim])).collect()
     }
 
+    /// Fused verify pass: `n` consecutive positions of one sequence run
+    /// through [`NativeEngine::decode_batch`] via a [`SpecSlots`] view,
+    /// so every linear is one batched Q8 GEMM over all positions (each
+    /// weight block unpacked once for the whole span). Bit-identity
+    /// with sequential `decode_step` follows from the batched pass's
+    /// own per-slot contract plus causality of the slot layout: within
+    /// each layer all slots write their K/V rows before any slot
+    /// attends, and slot `i` reads only positions `0..=base + i` — so
+    /// slot `i` sees exactly the state a sequential step at that
+    /// position would, layer by layer, by induction.
+    fn score_tokens(&self, cache: &mut dyn KvStore, tokens: &[u32]) -> Vec<Vec<f32>> {
+        if tokens.len() < 2 {
+            // Nothing to fuse; take the sequential path.
+            return tokens.iter().map(|&t| self.decode_step(cache, t)).collect();
+        }
+        let mut slots = super::SpecSlots::new(cache, tokens.len());
+        self.decode_batch(&mut slots, tokens)
+    }
+
     fn prefill(&self, cache: &mut dyn KvStore, tokens: &[u32]) -> Tensor {
         let cfg = self.cfg().clone();
         let seq = tokens.len();
@@ -781,6 +815,49 @@ mod tests {
         }
         for (c, p) in caches.iter().zip(&prompts) {
             assert_eq!(c.len(), p.len() + 2, "token history must advance");
+        }
+    }
+
+    #[test]
+    fn score_tokens_matches_sequential_decode_bitwise() {
+        // Engine-level spot check of the verify-pass contract (the full
+        // drafter/backend sweep is tests/spec_decode.rs): the fused
+        // multi-position score equals the same tokens fed one at a time
+        // through decode_step, bit for bit, logits and KV state alike.
+        let cfg = ModelConfig::test();
+        let dense = DenseModel::random(&cfg, 55, Some(5.0));
+        let fmt = format_by_name("itq3_s").unwrap();
+        let eng = NativeEngine::quantized(QuantizedModel::quantize(&dense, fmt));
+        let prompt = [3u32, 1, 4, 1, 5];
+        let feed = [9u32, 2, 6, 5];
+
+        let mut c_seq = KvCache::new(&cfg);
+        eng.prefill(&mut c_seq, &prompt);
+        let want: Vec<Vec<f32>> = feed.iter().map(|&t| eng.decode_step(&mut c_seq, t)).collect();
+
+        let mut c_fused = KvCache::new(&cfg);
+        eng.prefill(&mut c_fused, &prompt);
+        let got = eng.score_tokens(&mut c_fused, &feed);
+
+        assert_eq!(got.len(), feed.len());
+        for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(w, g, "position {i} diverged from sequential decode");
+        }
+        assert_eq!(c_seq.len(), c_fused.len());
+        assert_eq!(c_seq.tokens, c_fused.tokens);
+        for layer in 0..cfg.n_layers {
+            for pos in 0..c_seq.len() {
+                assert_eq!(
+                    KvCache::k_at(&c_seq, layer, pos),
+                    KvCache::k_at(&c_fused, layer, pos),
+                    "K row ({layer},{pos}) diverged"
+                );
+                assert_eq!(
+                    KvCache::v_at(&c_seq, layer, pos),
+                    KvCache::v_at(&c_fused, layer, pos),
+                    "V row ({layer},{pos}) diverged"
+                );
+            }
         }
     }
 

@@ -178,6 +178,14 @@ impl Engine for PjrtEngine {
     // so a decode round can only ever be one independent re-score per
     // sequence — exactly the trait's default sequential fallback, which
     // is trivially bit-identical to per-sequence `decode_step`.
+    //
+    // `Engine::score_tokens` (the speculative verify pass) keeps its
+    // default for the same reason: the recompute engine re-scores the
+    // whole window per decode step anyway, so the sequential fallback
+    // is already one execute per fed token and trivially matches
+    // `decode_step`. Speculation still *works* against this engine
+    // (rollback only touches the token history here); it just cannot
+    // amortize the passes.
 
     fn prefill(&self, cache: &mut dyn KvStore, tokens: &[u32]) -> Tensor {
         let start = cache.len();

@@ -1,0 +1,221 @@
+//! Zero-extra-artifact drafters: token-sequence guessers that cost no
+//! second model, no adapter heads, and no extra weights.
+//!
+//! Both implementations draft purely from state the serving stack
+//! already has:
+//!
+//! - [`NgramDrafter`] — prompt-lookup decoding: the longest recent
+//!   n-gram suffix of the sequence is searched for an earlier
+//!   occurrence in the sequence's *own* token history, and the tokens
+//!   that followed that occurrence are proposed. Strong on extractive /
+//!   repetitive continuations (summaries, code, structured text), free
+//!   elsewhere.
+//! - [`SelfDraft`] — greedy-reuse: every verify pass already computes a
+//!   greedy argmax at each scored position; the chain beyond the
+//!   accepted run (computed under partially stale context) is kept and
+//!   replayed as the next round's draft. Bootstraps by repeating the
+//!   last token until the first verify pass refills the buffer.
+//!
+//! Drafters only ever *guess*: the verify pass accepts exactly the
+//! prefix that matches the model's own greedy choices, so a bad drafter
+//! costs latency, never correctness.
+
+/// A speculative token proposer. Implementations must be cheap — the
+/// coordinator drafts once per decode round per sequence.
+pub trait Drafter: Send {
+    /// Propose up to `k` tokens continuing `history` (the sequence's
+    /// full token stream, ending with the token about to be fed to the
+    /// verify pass). Returning fewer than `k` (or none) is always
+    /// legal; returning more is truncated by the caller.
+    fn draft(&mut self, history: &[u32], k: usize) -> Vec<u32>;
+
+    /// Verification feedback: of `proposed`, the first `accepted`
+    /// matched the model, and `verify_argmax` holds the verify pass's
+    /// greedy token at every scored position (index `accepted` is the
+    /// next pending token; later entries were computed under stale
+    /// context). Stateless drafters ignore this.
+    fn observe(&mut self, proposed: &[u32], accepted: usize, verify_argmax: &[u32]);
+
+    fn name(&self) -> &'static str;
+}
+
+/// Prompt-lookup drafter: proposes the continuation of the most recent
+/// earlier occurrence of the sequence's n-gram suffix, preferring the
+/// longest match (`max_n` down to `min_n`).
+pub struct NgramDrafter {
+    /// Longest suffix length tried first.
+    pub max_n: usize,
+    /// Shortest suffix length tried before giving up.
+    pub min_n: usize,
+}
+
+impl Default for NgramDrafter {
+    fn default() -> Self {
+        NgramDrafter { max_n: 4, min_n: 1 }
+    }
+}
+
+impl Drafter for NgramDrafter {
+    fn draft(&mut self, history: &[u32], k: usize) -> Vec<u32> {
+        if k == 0 || history.is_empty() {
+            return Vec::new();
+        }
+        let len = history.len();
+        for n in (self.min_n..=self.max_n).rev() {
+            if len < n + 1 {
+                continue; // need the suffix plus at least one earlier token
+            }
+            let suffix = &history[len - n..];
+            // Most recent earlier occurrence wins (recency tracks the
+            // local pattern better than the first occurrence).
+            let mut i = len - n;
+            while i > 0 {
+                i -= 1;
+                if &history[i..i + n] == suffix {
+                    // Propose what followed it; the span may overlap the
+                    // suffix itself (periodic patterns draft themselves).
+                    let cont = &history[i + n..(i + n + k).min(len)];
+                    if !cont.is_empty() {
+                        return cont.to_vec();
+                    }
+                }
+            }
+        }
+        Vec::new()
+    }
+
+    fn observe(&mut self, _proposed: &[u32], _accepted: usize, _verify_argmax: &[u32]) {}
+
+    fn name(&self) -> &'static str {
+        "ngram"
+    }
+}
+
+/// Greedy-reuse drafter: replays the previous verify pass's argmax
+/// chain beyond the accepted run as the next round's draft.
+#[derive(Default)]
+pub struct SelfDraft {
+    /// Stale-context greedy continuation from the last verify pass.
+    buf: Vec<u32>,
+}
+
+impl Drafter for SelfDraft {
+    fn draft(&mut self, history: &[u32], k: usize) -> Vec<u32> {
+        if k == 0 {
+            return Vec::new();
+        }
+        if !self.buf.is_empty() {
+            let take = self.buf.len().min(k);
+            return self.buf[..take].to_vec();
+        }
+        // Bootstrap: repeat the last token. Trivial, but it costs one
+        // verify pass at worst and self-sustains from then on (the pass
+        // refills `buf` whatever the acceptance).
+        match history.last() {
+            Some(&t) => vec![t; k],
+            None => Vec::new(),
+        }
+    }
+
+    fn observe(&mut self, _proposed: &[u32], accepted: usize, verify_argmax: &[u32]) {
+        // verify_argmax[accepted] becomes the next pending token; the
+        // entries after it are the model's greedy guesses one context
+        // slip away — exactly what the next round should try.
+        self.buf = verify_argmax.get(accepted + 1..).map(|s| s.to_vec()).unwrap_or_default();
+    }
+
+    fn name(&self) -> &'static str {
+        "self"
+    }
+}
+
+/// Which drafter the coordinator builds per speculating sequence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DrafterKind {
+    Ngram,
+    SelfDraft,
+}
+
+impl DrafterKind {
+    pub fn parse(s: &str) -> Option<DrafterKind> {
+        match s {
+            "ngram" => Some(DrafterKind::Ngram),
+            "self" => Some(DrafterKind::SelfDraft),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DrafterKind::Ngram => "ngram",
+            DrafterKind::SelfDraft => "self",
+        }
+    }
+
+    /// Fresh drafter state for one sequence (drafters are per-sequence:
+    /// their history view and reuse buffers must not leak across
+    /// requests).
+    pub fn build(&self) -> Box<dyn Drafter> {
+        match self {
+            DrafterKind::Ngram => Box::new(NgramDrafter::default()),
+            DrafterKind::SelfDraft => Box::new(SelfDraft::default()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ngram_drafts_the_repeating_continuation() {
+        let mut d = NgramDrafter::default();
+        // history: a b c d a b c d a b -> suffix [a b] last seen at 4,
+        // followed by [c d a b ...].
+        let h = [10u32, 11, 12, 13, 10, 11, 12, 13, 10, 11];
+        assert_eq!(d.draft(&h, 4), vec![12, 13, 10, 11]);
+        // k caps the proposal.
+        assert_eq!(d.draft(&h, 2), vec![12, 13]);
+    }
+
+    #[test]
+    fn ngram_prefers_the_longest_and_most_recent_match() {
+        let mut d = NgramDrafter::default();
+        // Suffix [1 2] occurs at 0 (followed by 3) and at 3 (followed
+        // by 9): recency must pick 9.
+        let h = [1u32, 2, 3, 1, 2, 9, 1, 2];
+        assert_eq!(d.draft(&h, 1), vec![9]);
+    }
+
+    #[test]
+    fn ngram_gives_up_on_novel_suffixes() {
+        let mut d = NgramDrafter::default();
+        let h = [1u32, 2, 3, 4, 5, 6, 7, 8];
+        assert!(d.draft(&h, 4).is_empty());
+        assert!(d.draft(&[], 4).is_empty());
+        assert!(d.draft(&h, 0).is_empty());
+    }
+
+    #[test]
+    fn self_draft_bootstraps_then_reuses_the_verify_chain() {
+        let mut d = SelfDraft::default();
+        let h = [5u32, 6, 7];
+        // Bootstrap: repeat the last token.
+        assert_eq!(d.draft(&h, 3), vec![7, 7, 7]);
+        // A verify pass (2 of 3 accepted) leaves its stale-context tail.
+        d.observe(&[7, 7, 7], 2, &[7, 7, 40, 41]);
+        assert_eq!(d.draft(&h, 8), vec![41]);
+        // Full acceptance leaves nothing to reuse -> bootstrap again.
+        d.observe(&[41], 1, &[41, 50]);
+        assert_eq!(d.draft(&h, 2), vec![7, 7]);
+    }
+
+    #[test]
+    fn kind_parses_and_builds() {
+        assert_eq!(DrafterKind::parse("ngram"), Some(DrafterKind::Ngram));
+        assert_eq!(DrafterKind::parse("self"), Some(DrafterKind::SelfDraft));
+        assert_eq!(DrafterKind::parse("medusa"), None);
+        assert_eq!(DrafterKind::Ngram.build().name(), "ngram");
+        assert_eq!(DrafterKind::SelfDraft.build().name(), "self");
+    }
+}

@@ -1,0 +1,246 @@
+//! Speculative decoding: draft-and-verify on the fused batch path.
+//!
+//! PRs 1–3 built exactly the machinery speculative decoding needs —
+//! cheap W3A8 integer kernels, a fused batched GEMM that scores many
+//! positions per weight-block unpack, and a refcounted paged KV pool —
+//! yet a low-batch request still paid one full model pass per token.
+//! This module converts that batch efficiency into single-stream
+//! latency:
+//!
+//! 1. a [`Drafter`] guesses the next `k` tokens from state the stack
+//!    already has (no second model, no extra artifacts);
+//! 2. one **verify pass** ([`spec_step`]) feeds the pending token plus
+//!    the `k` drafts through
+//!    [`Engine::score_tokens`](crate::model::native::Engine::score_tokens)
+//!    — on the native engine that is the same fused Q8 GEMM path as
+//!    `decode_batch`, so all `k + 1` positions cost roughly one
+//!    weight-unpack sweep — writing KV as it goes;
+//! 3. the longest draft prefix matching the model's own greedy argmax
+//!    chain is **accepted**; the rejected suffix's KV is **rolled
+//!    back** via [`KvStore::truncate`] (dense stores drop tail tokens
+//!    in place; the paged pool releases refcounted tail blocks
+//!    COW-correctly and invalidates any cached chain entry over the
+//!    span).
+//!
+//! Acceptance logic never changes outputs, only latency: with greedy
+//! decoding the accepted run plus the correction/bonus token is
+//! *exactly* the token stream sequential
+//! [`decode_step`](crate::model::native::Engine::decode_step) rounds
+//! would have produced (test-enforced across drafters, draft lengths,
+//! and KV backends in `rust/tests/spec_decode.rs`). Temperature
+//! sampling is therefore not speculated — lossless sampled
+//! verification needs the top-p machinery to replay the sampler's
+//! distribution, which lands separately — and the coordinator disables
+//! drafting automatically for sampled requests.
+
+pub mod drafter;
+
+pub use drafter::{Drafter, DrafterKind, NgramDrafter, SelfDraft};
+
+use crate::coordinator::sampler::argmax;
+use crate::model::native::Engine;
+use crate::model::KvStore;
+
+/// Result of one draft-and-verify round.
+pub struct SpecOutcome {
+    /// Draft tokens verified as the model's own greedy continuation
+    /// (`drafts[..accepted]` in the caller's buffer).
+    pub accepted: usize,
+    /// The model's next token after the accepted run: the correction
+    /// for the first rejected draft, or the bonus token when every
+    /// draft was accepted.
+    pub next: u32,
+    /// Greedy argmax at every scored position (`accepted + 1 ..` were
+    /// computed under stale context — drafter reuse material).
+    pub verify_argmax: Vec<u32>,
+    /// Store length before the pass; after the call the store holds
+    /// `base + 1 + accepted` tokens.
+    pub base: usize,
+}
+
+/// One greedy draft-and-verify round over any engine and KV store.
+///
+/// Feeds `[pending, drafts...]` through the engine's multi-token verify
+/// pass, accepts the longest prefix of `drafts` matching the model's
+/// greedy argmax chain, rolls the store back to the last accepted
+/// position, and returns the model's true next token. On return the
+/// store has consumed exactly `pending` plus the accepted drafts —
+/// the same state sequential greedy `decode_step` rounds would have
+/// left behind.
+///
+/// The caller must ensure `store.len() + 1 + drafts.len()` does not
+/// exceed the store/context capacity (the verify pass writes the whole
+/// span before rollback).
+pub fn spec_step(
+    engine: &dyn Engine,
+    store: &mut dyn KvStore,
+    pending: u32,
+    drafts: &[u32],
+) -> SpecOutcome {
+    let base = store.len();
+    let mut feed = Vec::with_capacity(1 + drafts.len());
+    feed.push(pending);
+    feed.extend_from_slice(drafts);
+    let logits = engine.score_tokens(store, &feed);
+    debug_assert_eq!(logits.len(), feed.len());
+    let verify_argmax: Vec<u32> = logits.iter().map(|l| argmax(l)).collect();
+    let mut accepted = 0usize;
+    while accepted < drafts.len() && verify_argmax[accepted] == drafts[accepted] {
+        accepted += 1;
+    }
+    // Rollback: keep `pending` plus the accepted run, discard the
+    // rejected suffix's tokens and KV.
+    store.truncate(base + 1 + accepted);
+    SpecOutcome { accepted, next: verify_argmax[accepted], verify_argmax, base }
+}
+
+/// Result of [`run_greedy`].
+pub struct SpecRun {
+    /// The produced greedy tokens: `n` of them, or fewer if the
+    /// context window filled first.
+    pub tokens: Vec<u32>,
+    /// Draft tokens proposed across all verify passes.
+    pub drafted: u64,
+    /// Draft tokens accepted across all verify passes.
+    pub accepted: u64,
+}
+
+/// Single-stream reference driver: prefill `prompt`, then produce `n`
+/// greedy tokens with up-to-`k`-token drafts from `drafter` verified
+/// through [`spec_step`] (rounds where the drafter proposes nothing
+/// fall back to one vanilla `decode_step`). This is the round protocol
+/// the coordinator's speculative path follows, minus scheduling — the
+/// differential tests and `benches/spec_decode.rs` both drive this one
+/// function, so the measured protocol and the tested protocol cannot
+/// drift apart.
+pub fn run_greedy(
+    engine: &dyn Engine,
+    store: &mut dyn KvStore,
+    prompt: &[u32],
+    n: usize,
+    drafter: &mut dyn Drafter,
+    k: usize,
+) -> SpecRun {
+    let max_seq = engine.config().max_seq;
+    let l = engine.prefill(store, prompt);
+    let mut pending = argmax(l.row(prompt.len() - 1));
+    let mut tokens = vec![pending];
+    let mut history: Vec<u32> = prompt.to_vec();
+    history.push(pending);
+    let (mut drafted, mut accepted) = (0u64, 0u64);
+    while tokens.len() < n {
+        if store.len() >= max_seq {
+            break; // context exhausted: the pending token cannot be fed
+        }
+        // The verify span (pending + drafts) must fit the context, and
+        // drafts past the remaining token budget would be surplus work
+        // (a round produces up to kk + 1 tokens).
+        let kk = k
+            .min(max_seq - store.len() - 1)
+            .min((n - tokens.len()).saturating_sub(1));
+        let mut drafts = drafter.draft(&history, kk);
+        drafts.truncate(kk);
+        if drafts.is_empty() {
+            let logits = engine.decode_step(store, pending);
+            pending = argmax(&logits);
+            tokens.push(pending);
+            history.push(pending);
+            continue;
+        }
+        let o = spec_step(engine, store, pending, &drafts);
+        drafter.observe(&drafts, o.accepted, &o.verify_argmax);
+        drafted += drafts.len() as u64;
+        accepted += o.accepted as u64;
+        for &g in &drafts[..o.accepted] {
+            tokens.push(g);
+            history.push(g);
+        }
+        pending = o.next;
+        tokens.push(pending);
+        history.push(pending);
+        assert_eq!(
+            store.len(),
+            prompt.len() + tokens.len() - 1,
+            "store must hold exactly the fed prefix after rollback"
+        );
+    }
+    tokens.truncate(n);
+    SpecRun { tokens, drafted, accepted }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{DenseModel, KvCache, ModelConfig, NativeEngine};
+
+    fn engine() -> NativeEngine {
+        NativeEngine::dense(DenseModel::random(&ModelConfig::test(), 17, Some(5.0)))
+    }
+
+    /// Greedy reference stream: first token from the prefill logits,
+    /// then sequential decode steps.
+    fn greedy_reference(eng: &NativeEngine, prompt: &[u32], n: usize) -> Vec<u32> {
+        let mut c = KvCache::new(eng.config());
+        let l = eng.prefill(&mut c, prompt);
+        let mut tok = argmax(l.row(prompt.len() - 1));
+        let mut out = vec![tok];
+        while out.len() < n {
+            let logits = eng.decode_step(&mut c, tok);
+            tok = argmax(&logits);
+            out.push(tok);
+        }
+        out
+    }
+
+    #[test]
+    fn all_correct_drafts_are_accepted_with_a_bonus_token() {
+        let eng = engine();
+        let prompt = [1u32, 2, 3, 4, 5];
+        let want = greedy_reference(&eng, &prompt, 6);
+        let mut c = KvCache::new(eng.config());
+        let l = eng.prefill(&mut c, &prompt);
+        let pending = argmax(l.row(prompt.len() - 1));
+        assert_eq!(pending, want[0]);
+        // Oracle drafts: the true greedy continuation.
+        let o = spec_step(&eng, &mut c, pending, &want[1..5]);
+        assert_eq!(o.accepted, 4, "oracle drafts must all be accepted");
+        assert_eq!(o.next, want[5], "bonus token must be the true 6th token");
+        assert_eq!(c.len(), prompt.len() + 5, "pending + 4 accepted consumed");
+    }
+
+    #[test]
+    fn all_wrong_drafts_degrade_to_one_true_token() {
+        let eng = engine();
+        let prompt = [9u32, 8, 7];
+        let want = greedy_reference(&eng, &prompt, 2);
+        let mut c = KvCache::new(eng.config());
+        let l = eng.prefill(&mut c, &prompt);
+        let pending = argmax(l.row(prompt.len() - 1));
+        // Drafts guaranteed wrong: shift the true tokens by one.
+        let bad: Vec<u32> = (0..4).map(|i| (want[1] + 1 + i) % 256).collect();
+        let base = c.len();
+        let o = spec_step(&eng, &mut c, pending, &bad);
+        assert_eq!(o.accepted, 0);
+        assert_eq!(o.next, want[1], "correction token is the true next token");
+        assert_eq!(c.len(), base + 1, "rejected suffix rolled back");
+    }
+
+    #[test]
+    fn partial_acceptance_stops_at_first_divergence() {
+        let eng = engine();
+        let prompt = [40u32, 41, 42, 43];
+        let want = greedy_reference(&eng, &prompt, 5);
+        let mut c = KvCache::new(eng.config());
+        let l = eng.prefill(&mut c, &prompt);
+        let pending = argmax(l.row(prompt.len() - 1));
+        // Two correct drafts, then a wrong one, then garbage.
+        let drafts = vec![want[1], want[2], (want[3] + 1) % 256, 0];
+        let base = c.len();
+        let o = spec_step(&eng, &mut c, pending, &drafts);
+        assert_eq!(o.accepted, 2);
+        assert_eq!(o.next, want[3], "correction replaces the rejected draft");
+        assert_eq!(c.len(), base + 3);
+        // The verify chain prefix is the true token stream.
+        assert_eq!(&o.verify_argmax[..3], &want[1..4]);
+    }
+}

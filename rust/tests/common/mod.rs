@@ -36,6 +36,33 @@ pub fn quant_engine(fmt: &str, seed: u64) -> NativeEngine {
     ))
 }
 
+/// Does the trained-checkpoint fixture exist (`make artifacts` has run)?
+pub fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/model_fp32.iguf").exists()
+}
+
+/// Dense model from the trained checkpoint when artifacts exist, else
+/// the deterministic random heavy-tailed test model seeded with `seed`
+/// — the shared fixture the end-to-end suites (`serving.rs`,
+/// `w3a8.rs`) build their engines from.
+pub fn dense_fixture_or_random(seed: u64) -> DenseModel {
+    if have_artifacts() {
+        itq3s::gguf::load_dense(std::path::Path::new("artifacts/model_fp32.iguf")).unwrap()
+    } else {
+        eprintln!("artifacts/ not built; using a random heavy-tailed model");
+        dense_model(seed)
+    }
+}
+
+/// The serving fixture: the checkpoint (or its random fallback)
+/// quantized into `fmt` behind a native engine.
+pub fn quant_fixture(fmt: &str, seed: u64) -> NativeEngine {
+    NativeEngine::quantized(QuantizedModel::quantize(
+        &dense_fixture_or_random(seed),
+        format_by_name(fmt).unwrap_or_else(|| panic!("unknown format {fmt}")),
+    ))
+}
+
 /// Deterministic pseudo-prompt of `len` tokens (distinct per `salt`).
 pub fn prompt_tokens(len: usize, salt: u32) -> Vec<u32> {
     (0..len as u32).map(|i| (i * 31 + salt * 17 + 1) % 256).collect()
@@ -99,5 +126,10 @@ impl KvStore for TeeStore<'_> {
     fn write_kv(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
         self.shadow.write_kv(layer, pos, k, v);
         self.primary.write_kv(layer, pos, k, v);
+    }
+
+    fn truncate(&mut self, len: usize) {
+        self.shadow.tokens.truncate(len);
+        self.primary.truncate(len);
     }
 }

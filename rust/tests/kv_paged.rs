@@ -198,6 +198,169 @@ fn paged_q8_kv_rows_obey_the_q8_error_bound() {
 }
 
 #[test]
+fn truncate_after_cow_fork_leaks_zero_blocks() {
+    // Rollback audit: fork a sequence mid-block (shared tail), let the
+    // fork write (COW), roll the fork back, and account for every
+    // block. The shared original must keep its content; releasing
+    // everything must drain the pool to its starting free count.
+    let cfg = ModelConfig::test();
+    let eng = engine(19);
+    let mut pool = PagedKvPool::new(&cfg, 4, KvQuant::F32, 64 << 20);
+    let baseline_in_use = pool.in_use_blocks();
+    assert_eq!(baseline_in_use, 0);
+
+    let prompt: Vec<u32> = (0..10).map(|i| (i * 3 + 1) % 256).collect(); // 10 % 4 != 0
+    let a = pool.create_seq();
+    eng.prefill(&mut pool.seq_view(a), &prompt);
+    let b = pool.fork_seq(a);
+
+    // The fork extends into the shared tail block (COW) and beyond.
+    for &t in &[70u32, 71, 72, 73, 74] {
+        eng.decode_step(&mut pool.seq_view(b), t);
+    }
+    assert!(pool.cow_forks() >= 1, "shared-tail append must have forked");
+    let before_rollback = pool.in_use_blocks();
+
+    // Roll the fork all the way back to the shared prompt length.
+    pool.truncate_seq(b, prompt.len());
+    assert!(
+        pool.in_use_blocks() < before_rollback,
+        "rollback must release the fork's private tail blocks"
+    );
+
+    // The original's state is untouched: decoding from `a` equals a
+    // fresh unshared run, bit for bit.
+    let cont = [90u32, 91];
+    let mut la = Vec::new();
+    for &t in &cont {
+        la.push(eng.decode_step(&mut pool.seq_view(a), t));
+    }
+    let mut refpool = PagedKvPool::new(&cfg, 4, KvQuant::F32, 64 << 20);
+    let r = refpool.create_seq();
+    eng.prefill(&mut refpool.seq_view(r), &prompt);
+    for (i, &t) in cont.iter().enumerate() {
+        let want = eng.decode_step(&mut refpool.seq_view(r), t);
+        assert_eq!(&want, &la[i], "original diverged after fork rollback at step {i}");
+    }
+
+    pool.release_seq(a);
+    pool.release_seq(b);
+    pool.clear_prefix_cache();
+    assert_eq!(pool.in_use_blocks(), baseline_in_use, "block leak after rollback");
+}
+
+#[test]
+fn rollback_heavy_spec_run_returns_pool_to_baseline() {
+    // Adversarial drafts force a rejection (and so a KV rollback) every
+    // single round; after the run the pool must hold exactly what a
+    // vanilla run would — and releasing the sequence must drain it.
+    struct WrongDrafter;
+    impl itq3s::spec::Drafter for WrongDrafter {
+        fn draft(&mut self, history: &[u32], k: usize) -> Vec<u32> {
+            // Guess tokens that shift the last token by odd offsets —
+            // the verify argmax may coincide on the first, but runs of
+            // eight will reject quickly and trigger deep rollbacks.
+            let last = *history.last().unwrap_or(&0);
+            (0..k as u32).map(|i| (last + 2 * i + 1) % 256).collect()
+        }
+        fn observe(&mut self, _p: &[u32], _a: usize, _v: &[u32]) {}
+        fn name(&self) -> &'static str {
+            "wrong"
+        }
+    }
+
+    let cfg = ModelConfig::test();
+    let eng = engine(21);
+    let prompt: Vec<u32> = (0..9).map(|i| (i * 17 + 2) % 256).collect();
+    for &quant in &[KvQuant::F32, KvQuant::Q8] {
+        let mut pool = PagedKvPool::new(&cfg, 4, quant, 64 << 20);
+        let id = pool.create_seq();
+        let mut drafter = WrongDrafter;
+        let mut pending = {
+            let mut view = pool.seq_view(id);
+            let l = eng.prefill(&mut view, &prompt);
+            argmax(l.row(prompt.len() - 1))
+        };
+        let mut produced = 1usize;
+        while produced < 16 {
+            let drafts = {
+                use itq3s::spec::Drafter;
+                let k = 8usize.min(cfg.max_seq - pool.seq_len(id) - 1);
+                drafter.draft(&prompt, k)
+            };
+            let o = itq3s::spec::spec_step(&eng, &mut pool.seq_view(id), pending, &drafts);
+            produced += o.accepted + 1;
+            pending = o.next;
+        }
+        // The store holds exactly the consumed tokens (prompt plus the
+        // fed share of the produced stream) — no verify-pass residue —
+        // and block accounting matches that length exactly.
+        let len = pool.seq_len(id);
+        assert_eq!(len, prompt.len() + produced - 1, "rejected spans must be trimmed");
+        let expect_blocks = len.div_ceil(4);
+        assert_eq!(pool.in_use_blocks(), expect_blocks, "quant={quant:?}");
+        pool.release_seq(id);
+        pool.clear_prefix_cache();
+        assert_eq!(pool.in_use_blocks(), 0, "quant={quant:?}: leaked blocks");
+    }
+}
+
+#[test]
+fn prefix_cache_never_serves_a_truncated_span() {
+    // Register a prefix that extends into decoded tokens, roll the
+    // sequence back below the registered span, and prove the cache (a)
+    // no longer serves the dropped blocks and (b) what it still serves
+    // reproduces a fresh run bit for bit.
+    let cfg = ModelConfig::test();
+    let eng = engine(23);
+    let bt = 4usize;
+    let mut pool = PagedKvPool::new(&cfg, bt, KvQuant::F32, 64 << 20);
+    let prompt: Vec<u32> = (0..8).map(|i| (i * 5 + 3) % 256).collect(); // 2 whole blocks
+
+    let a = pool.create_seq();
+    eng.prefill(&mut pool.seq_view(a), &prompt);
+    // Teacher-force 8 more tokens and cache the now-16-token prefix.
+    let forced = [60u32, 61, 62, 63, 64, 65, 66, 67];
+    for &t in &forced {
+        eng.decode_step(&mut pool.seq_view(a), t);
+    }
+    pool.cache_prefix(a); // 4 whole blocks registered
+    let full: Vec<u32> = prompt.iter().chain(&forced).copied().collect();
+
+    // Rollback into the third block: blocks 2 and 3 of the chain must
+    // be invalidated, blocks 0 and 1 (wholly inside the kept prefix)
+    // must survive.
+    pool.truncate_seq(a, 10);
+    let probe = pool.create_seq();
+    let mapped = pool.map_cached_prefix(probe, &full);
+    assert_eq!(mapped, 2 * bt, "only the kept whole blocks may be served");
+
+    // What the cache serves is real KV state: continue the probe over
+    // the mapped prefix and compare with an entirely fresh pool.
+    let rest = &full[mapped..12];
+    let got = {
+        let mut view = pool.seq_view(probe);
+        let l = eng.prefill(&mut view, rest);
+        l.row(rest.len() - 1).to_vec()
+    };
+    let want = {
+        // Chunked exactly like the probe's path (mapped 8-token prefix
+        // + one continuation prefill), so the comparison is bit-exact.
+        let mut fresh = PagedKvPool::new(&cfg, bt, KvQuant::F32, 64 << 20);
+        let r = fresh.create_seq();
+        eng.prefill(&mut fresh.seq_view(r), &full[..mapped]);
+        let l = eng.prefill(&mut fresh.seq_view(r), rest);
+        l.row(rest.len() - 1).to_vec()
+    };
+    assert_eq!(got, want, "served prefix must reproduce the fresh run exactly");
+
+    pool.release_seq(probe);
+    pool.release_seq(a);
+    pool.clear_prefix_cache();
+    assert_eq!(pool.in_use_blocks(), 0, "invalidation must not leak references");
+}
+
+#[test]
 fn q8_pool_holds_about_4x_more_tokens_per_byte() {
     let cfg = ModelConfig::test();
     let budget = 1 << 20;
@@ -231,6 +394,7 @@ fn prefix_cache_skips_reprefill_for_repeated_prompts() {
             prefill_chunk: 8,
             kv_block_tokens: 4,
             kv_quant: KvQuant::F32,
+            ..Default::default()
         },
     );
     let prompt = "the shared prefix of every request".to_string(); // 35 tokens with BOS
@@ -276,6 +440,7 @@ fn shared_prefix_batch_beats_worst_case_admission_bound() {
             prefill_chunk: 8,
             kv_block_tokens: bt,
             kv_quant: KvQuant::F32,
+            ..Default::default()
         },
     );
     // Long request first; wait for its first token so its prefix is

@@ -2,27 +2,24 @@
 //! artifacts exist, falling back to a random model otherwise: quantize →
 //! coordinator → TCP server → concurrent clients → consistent results.
 
+mod common;
+
+use common::quant_fixture;
 use itq3s::coordinator::{CoordinatorConfig, Event, FinishReason, GenRequest};
-use itq3s::model::{DenseModel, ModelConfig, NativeEngine, QuantizedModel};
+use itq3s::model::NativeEngine;
 use itq3s::server;
 use itq3s::util::json::Json;
-use std::path::Path;
 
+/// The shared serving fixture (trained checkpoint when artifacts
+/// exist, deterministic random model otherwise), quantized to itq3_s.
 fn test_engine() -> NativeEngine {
-    let art = Path::new("artifacts/model_fp32.iguf");
-    let dense = if art.exists() {
-        itq3s::gguf::load_dense(art).unwrap()
-    } else {
-        DenseModel::random(&ModelConfig::test(), 11, Some(5.0))
-    };
-    let fmt = itq3s::quant::format_by_name("itq3_s").unwrap();
-    NativeEngine::quantized(QuantizedModel::quantize(&dense, fmt))
+    quant_fixture("itq3_s", 11)
 }
 
 #[test]
 fn quantized_model_serves_coherent_text() {
     let engine = test_engine();
-    let trained = Path::new("artifacts/model_fp32.iguf").exists();
+    let trained = common::have_artifacts();
     let coord = itq3s::coordinator::Coordinator::new(
         Box::new(engine),
         CoordinatorConfig {

@@ -1,0 +1,247 @@
+//! Speculative-decoding acceptance harness: greedy draft-and-verify
+//! must be **token-identical** to vanilla sequential `decode_step`
+//! decoding for every (drafter, draft length, KV backend) combination —
+//! acceptance logic changes latency, never outputs — and the verify
+//! pass itself must be bit-identical to sequential decode on every
+//! backend. Deterministic oracle/adversarial drafters pin the
+//! accept-all (bonus token) and reject-all (rollback every round)
+//! extremes; the real ngram/self drafters cover the mixed paths.
+
+mod common;
+
+use common::{dense_engine, prompt_tokens, quant_engine};
+use itq3s::coordinator::sampler::argmax;
+use itq3s::kvpaged::{KvQuant, PagedKvPool};
+use itq3s::model::native::Engine;
+use itq3s::model::{KvCache, KvStore, ModelConfig};
+use itq3s::spec::{run_greedy, Drafter, DrafterKind, NgramDrafter, SelfDraft, SpecRun};
+
+/// KV backends the sweep runs each combination against.
+#[derive(Clone, Copy, Debug)]
+enum Backend {
+    Dense,
+    PagedF32(usize),
+    PagedQ8(usize),
+}
+
+const BACKENDS: [Backend; 4] =
+    [Backend::Dense, Backend::PagedF32(4), Backend::PagedF32(16), Backend::PagedQ8(4)];
+
+/// Run `f` against a fresh store of the given backend; paged stores are
+/// leak-audited on the way out.
+fn with_store<R>(
+    backend: Backend,
+    cfg: &ModelConfig,
+    f: impl FnOnce(&mut dyn KvStore) -> R,
+) -> R {
+    match backend {
+        Backend::Dense => {
+            let mut c = KvCache::new(cfg);
+            f(&mut c)
+        }
+        Backend::PagedF32(bt) | Backend::PagedQ8(bt) => {
+            let quant = match backend {
+                Backend::PagedQ8(_) => KvQuant::Q8,
+                _ => KvQuant::F32,
+            };
+            let mut p = PagedKvPool::new(cfg, bt, quant, 64 << 20);
+            let id = p.create_seq();
+            let r = f(&mut p.seq_view(id));
+            p.release_seq(id);
+            assert_eq!(p.in_use_blocks(), 0, "{backend:?}: leaked blocks");
+            r
+        }
+    }
+}
+
+/// Vanilla greedy reference: first token from the prefill logits, then
+/// one `decode_step` per token.
+fn vanilla_greedy(eng: &dyn Engine, store: &mut dyn KvStore, prompt: &[u32], n: usize) -> Vec<u32> {
+    let l = eng.prefill(store, prompt);
+    let mut tok = argmax(l.row(prompt.len() - 1));
+    let mut out = vec![tok];
+    while out.len() < n {
+        let logits = eng.decode_step(store, tok);
+        tok = argmax(&logits);
+        out.push(tok);
+    }
+    out
+}
+
+/// Drafts the true greedy continuation (verification accepts
+/// everything — pins the bonus-token path).
+struct OracleDrafter {
+    script: Vec<u32>,
+    prompt_len: usize,
+}
+
+impl Drafter for OracleDrafter {
+    fn draft(&mut self, history: &[u32], k: usize) -> Vec<u32> {
+        let produced = history.len() - self.prompt_len;
+        let end = (produced + k).min(self.script.len());
+        self.script.get(produced..end).map(|s| s.to_vec()).unwrap_or_default()
+    }
+    fn observe(&mut self, _p: &[u32], _a: usize, _v: &[u32]) {}
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+}
+
+/// Drafts the true continuation shifted by one — the first draft is
+/// always rejected (pins the full-rollback path: one true token per
+/// verify pass, every pass truncates).
+struct AntiOracleDrafter {
+    script: Vec<u32>,
+    prompt_len: usize,
+}
+
+impl Drafter for AntiOracleDrafter {
+    fn draft(&mut self, history: &[u32], k: usize) -> Vec<u32> {
+        let produced = history.len() - self.prompt_len;
+        let end = (produced + k).min(self.script.len());
+        self.script
+            .get(produced..end)
+            .map(|s| s.iter().map(|&t| (t + 1) % 256).collect())
+            .unwrap_or_default()
+    }
+    fn observe(&mut self, _p: &[u32], _a: usize, _v: &[u32]) {}
+    fn name(&self) -> &'static str {
+        "anti"
+    }
+}
+
+/// A repetitive prompt (gives the ngram drafter something to find) —
+/// distinct from `prompt_tokens`, which is the adversarial one.
+fn repetitive_prompt(len: usize) -> Vec<u32> {
+    (0..len as u32).map(|i| 30 + (i % 3)).collect()
+}
+
+#[test]
+fn spec_decode_token_identical_for_every_drafter_length_backend() {
+    let cfg = ModelConfig::test();
+    let eng = quant_engine("itq3_s", 51);
+    let n = 18;
+    for prompt in [repetitive_prompt(12), prompt_tokens(11, 9)] {
+        for backend in BACKENDS {
+            let want = with_store(backend, &cfg, |s| vanilla_greedy(&eng, s, &prompt, n));
+            for k in [1usize, 2, 4, 8] {
+                // Real drafters plus the two deterministic extremes.
+                let mut drafters: Vec<(&str, Box<dyn Drafter>)> = vec![
+                    ("ngram", DrafterKind::Ngram.build()),
+                    ("self", DrafterKind::SelfDraft.build()),
+                    (
+                        "oracle",
+                        Box::new(OracleDrafter {
+                            script: want.clone(),
+                            prompt_len: prompt.len(),
+                        }),
+                    ),
+                    (
+                        "anti",
+                        Box::new(AntiOracleDrafter {
+                            script: want.clone(),
+                            prompt_len: prompt.len(),
+                        }),
+                    ),
+                ];
+                for (name, drafter) in drafters.iter_mut() {
+                    let run: SpecRun = with_store(backend, &cfg, |s| {
+                        run_greedy(&eng, s, &prompt, n, drafter.as_mut(), k)
+                    });
+                    assert_eq!(
+                        run.tokens, want,
+                        "{name} k={k} {backend:?}: speculative tokens diverged"
+                    );
+                    match *name {
+                        "oracle" => {
+                            assert!(run.drafted > 0);
+                            assert_eq!(
+                                run.accepted, run.drafted,
+                                "oracle drafts must all be accepted"
+                            );
+                        }
+                        "anti" => {
+                            assert!(run.drafted > 0);
+                            assert_eq!(run.accepted, 0, "anti-oracle drafts must all be rejected");
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn spec_decode_token_identical_on_dense_weights() {
+    // The dense (unquantized) engine takes the non-GEMM route through
+    // the same verify pass; one smaller sweep pins it.
+    let cfg = ModelConfig::test();
+    let eng = dense_engine(53);
+    let prompt = repetitive_prompt(10);
+    for backend in [Backend::Dense, Backend::PagedF32(4)] {
+        let want = with_store(backend, &cfg, |s| vanilla_greedy(&eng, s, &prompt, 14));
+        for k in [2usize, 5] {
+            let mut ngram = NgramDrafter::default();
+            let mut selfd = SelfDraft::default();
+            let drafters: [&mut dyn Drafter; 2] = [&mut ngram, &mut selfd];
+            for d in drafters {
+                let run =
+                    with_store(backend, &cfg, |s| run_greedy(&eng, s, &prompt, 14, d, k));
+                assert_eq!(run.tokens, want, "k={k} {backend:?} dense-weight run diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn score_tokens_bitwise_matches_sequential_on_every_backend() {
+    // The verify pass's own contract, exercised through the paged
+    // stores (the engine-level dense check lives in model/native.rs).
+    let cfg = ModelConfig::test();
+    for fmt in ["itq3_s", "q8_0"] {
+        let eng = quant_engine(fmt, 57);
+        let prompt = prompt_tokens(9, 3);
+        let feed = [7u32, 19, 4, 2, 250];
+        for backend in BACKENDS {
+            let want = with_store(backend, &cfg, |s| {
+                eng.prefill(s, &prompt);
+                feed.iter().map(|&t| eng.decode_step(s, t)).collect::<Vec<_>>()
+            });
+            let got = with_store(backend, &cfg, |s| {
+                eng.prefill(s, &prompt);
+                eng.score_tokens(s, &feed)
+            });
+            for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(w, g, "{fmt} {backend:?}: position {i} logits diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn truncate_then_continue_matches_never_speculated_run() {
+    // Rollback leaves no ghost state: write a junk span through
+    // score_tokens, truncate it away, continue decoding — the
+    // continuation must equal a run that never speculated, bit for
+    // bit, on every backend.
+    let cfg = ModelConfig::test();
+    let eng = quant_engine("itq3_s", 59);
+    let prompt = prompt_tokens(10, 5);
+    let junk = [201u32, 202, 203, 204];
+    let cont = [17u32, 71];
+    for backend in BACKENDS {
+        let want = with_store(backend, &cfg, |s| {
+            eng.prefill(s, &prompt);
+            cont.iter().map(|&t| eng.decode_step(s, t)).collect::<Vec<_>>()
+        });
+        let got = with_store(backend, &cfg, |s| {
+            eng.prefill(s, &prompt);
+            let base = s.len();
+            eng.score_tokens(s, &junk);
+            s.truncate(base);
+            cont.iter().map(|&t| eng.decode_step(s, t)).collect::<Vec<_>>()
+        });
+        assert_eq!(want, got, "{backend:?}: rollback left ghost state");
+    }
+}

@@ -4,19 +4,16 @@
 //! fixture `pjrt_parity.rs` uses) and on a random heavy-tailed model
 //! otherwise.
 
-use itq3s::model::native::Engine;
-use itq3s::model::{DenseModel, KvCache, ModelConfig, NativeEngine, QuantizedModel};
-use itq3s::quant::format_by_name;
-use std::path::Path;
+mod common;
 
+use itq3s::model::native::Engine;
+use itq3s::model::{DenseModel, KvCache, NativeEngine, QuantizedModel};
+use itq3s::quant::format_by_name;
+
+/// The shared artifacts-or-random fixture from `common` (same seed the
+/// suite has always used).
 fn dense_fixture() -> DenseModel {
-    let art = Path::new("artifacts/model_fp32.iguf");
-    if art.exists() {
-        itq3s::gguf::load_dense(art).unwrap()
-    } else {
-        eprintln!("artifacts/ not built; using a random heavy-tailed model");
-        DenseModel::random(&ModelConfig::test(), 23, Some(5.0))
-    }
+    common::dense_fixture_or_random(23)
 }
 
 #[test]
