@@ -2,14 +2,19 @@
 //! {0, 2, 4, 8} x acceptance regime (repetitive vs adversarial
 //! prompts), single stream on the itq3_s W3A8 engine over a paged f32
 //! pool — the configuration the coordinator actually serves. Draft
-//! length 0 is the vanilla one-token-per-pass baseline. Writes
-//! `BENCH_spec.json` so EXPERIMENTS.md §Speculative has a
-//! machine-readable trajectory across PRs.
+//! length 0 is the vanilla one-token-per-pass baseline. A second
+//! sweep measures *sampled* speculation (accept rate and tokens/s vs
+//! temperature at fixed draft length) now that the rejection-sampling
+//! verify loop makes sampled requests speculate too. Writes
+//! `BENCH_spec.json` (schema documented in EXPERIMENTS.md §Benchmark
+//! artifacts) so EXPERIMENTS.md §Speculative / §Sampled-speculation
+//! have a machine-readable trajectory across PRs.
 
 use itq3s::bench::harness::bench;
+use itq3s::coordinator::sampler::Sampler;
 use itq3s::kvpaged::{KvQuant, PagedKvPool};
 use itq3s::model::{DenseModel, ModelConfig, NativeEngine, QuantizedModel};
-use itq3s::spec::{run_greedy, NgramDrafter, SpecRun};
+use itq3s::spec::{run_greedy, run_sampled, NgramDrafter, SpecRun};
 use itq3s::util::json::Json;
 use itq3s::util::XorShift;
 use std::collections::BTreeMap;
@@ -22,6 +27,33 @@ fn run(eng: &NativeEngine, prompt: &[u32], cfg: &ModelConfig, n: usize, k: usize
     let mut pool = PagedKvPool::new(cfg, 16, KvQuant::F32, 64 << 20);
     let id = pool.create_seq();
     let r = run_greedy(eng, &mut pool.seq_view(id), prompt, n, &mut NgramDrafter::default(), k);
+    pool.release_seq(id);
+    r
+}
+
+/// Sampled variant: same protocol through `spec::run_sampled` with a
+/// fresh same-seed sampler per run (determinism makes the un-timed
+/// accounting run identical to the timed ones).
+fn run_t(
+    eng: &NativeEngine,
+    prompt: &[u32],
+    cfg: &ModelConfig,
+    n: usize,
+    k: usize,
+    temperature: f32,
+) -> SpecRun {
+    let mut pool = PagedKvPool::new(cfg, 16, KvQuant::F32, 64 << 20);
+    let id = pool.create_seq();
+    let mut sampler = Sampler::new(temperature, 1234).with_top_k(Some(40));
+    let r = run_sampled(
+        eng,
+        &mut pool.seq_view(id),
+        prompt,
+        n,
+        &mut NgramDrafter::default(),
+        k,
+        &mut sampler,
+    );
     pool.release_seq(id);
     r
 }
@@ -82,6 +114,64 @@ fn main() {
             ]),
         );
     }
+
+    // §Sampled-speculation: accept rate and accepted-tokens/s vs
+    // temperature at the serving default draft length (k=4, top-k 40),
+    // repetitive prompt. temperature 0 is the greedy reference point
+    // of the same loop; rising temperature flattens the target
+    // distribution, so point-mass drafts get accepted less often and
+    // the speedup decays toward the verify-pass overhead — this sweep
+    // prices that decay.
+    let spec_k = 4usize;
+    let mut by_t: BTreeMap<String, Json> = BTreeMap::new();
+    let mut base_tps = 0.0f64;
+    for &temp in &[0.0f32, 0.3, 0.6, 0.9, 1.2] {
+        let SpecRun { drafted, accepted, resampled, .. } =
+            run_t(&eng, &repetitive, &cfg, gen_tokens, spec_k, temp);
+        // Vanilla baseline at the same temperature (k=0): the honest
+        // denominator, since sampling itself costs a little.
+        let rb = bench(&format!("sampled_t{temp}_k0"), 1, 5, || {
+            run_t(&eng, &repetitive, &cfg, gen_tokens, 0, temp);
+        });
+        let r = bench(&format!("sampled_t{temp}_k{spec_k}"), 1, 5, || {
+            run_t(&eng, &repetitive, &cfg, gen_tokens, spec_k, temp);
+        });
+        let tps = gen_tokens as f64 / r.mean_s;
+        let vanilla_tps = gen_tokens as f64 / rb.mean_s;
+        if temp == 0.0 {
+            base_tps = tps;
+        }
+        let accept_rate = if drafted > 0 { accepted as f64 / drafted as f64 } else { 0.0 };
+        println!(
+            "sampled t={temp:<4} k={spec_k}: {tps:>9.1} tok/s ({:.2}x vs own k=0, {:.2}x vs t=0), accept {:.0}% ({accepted}/{drafted}), resampled {resampled}",
+            tps / vanilla_tps,
+            tps / base_tps,
+            accept_rate * 100.0
+        );
+        by_t.insert(
+            format!("t{temp}"),
+            Json::obj(vec![
+                ("tokens_per_s", Json::num(tps)),
+                ("vanilla_tokens_per_s", Json::num(vanilla_tps)),
+                ("speedup_vs_vanilla", Json::num(tps / vanilla_tps)),
+                ("drafted", Json::num(drafted as f64)),
+                ("accepted", Json::num(accepted as f64)),
+                ("accept_rate", Json::num(accept_rate)),
+                ("resampled_rounds", Json::num(resampled as f64)),
+            ]),
+        );
+    }
+    report.insert(
+        "sampled".to_string(),
+        Json::obj(vec![
+            ("gen_tokens", Json::num(gen_tokens as f64)),
+            ("prompt_tokens", Json::num(repetitive.len() as f64)),
+            ("draft_len", Json::num(spec_k as f64)),
+            ("top_k", Json::num(40.0)),
+            ("seed", Json::num(1234.0)),
+            ("by_temperature", Json::Obj(by_t)),
+        ]),
+    );
 
     let out = Json::Obj(report).to_string();
     match std::fs::write("BENCH_spec.json", &out) {

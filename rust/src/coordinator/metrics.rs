@@ -43,8 +43,18 @@ pub struct Metrics {
     pub spec_drafted: u64,
     /// Draft tokens accepted (each one saved a full decode pass).
     pub spec_accepted: u64,
-    /// Per-verify-round acceptance rate (accepted / drafted).
+    /// Per-verify-round acceptance rate (accepted / drafted), all
+    /// modes pooled.
     pub spec_accept_rate: RingStats,
+    /// Acceptance rate of greedy-mode verify rounds only (exact argmax
+    /// matching).
+    pub spec_accept_rate_greedy: RingStats,
+    /// Acceptance rate of sampled-mode verify rounds only (stochastic
+    /// rejection-sampling acceptance).
+    pub spec_accept_rate_sampled: RingStats,
+    /// Sampled-mode verify rounds whose correction token came from
+    /// residual resampling after a rejected draft.
+    pub spec_resampled: u64,
     /// Per-verify-round accepted-run length (0..=draft_len).
     pub spec_run_len: RingStats,
     pub kv_peak_bytes: usize,
@@ -79,6 +89,9 @@ impl Metrics {
             spec_drafted: 0,
             spec_accepted: 0,
             spec_accept_rate: RingStats::new(WINDOW),
+            spec_accept_rate_greedy: RingStats::new(WINDOW),
+            spec_accept_rate_sampled: RingStats::new(WINDOW),
+            spec_resampled: 0,
             spec_run_len: RingStats::new(WINDOW),
             kv_peak_bytes: 0,
             kv_pool: Json::Null,
@@ -137,6 +150,28 @@ impl Metrics {
                 fields.push((k.as_str(), v.clone()));
             }
         }
+        // Sampled-speculation keys (PR 5), appended after every
+        // pre-existing key — including the pool fragment — so the
+        // snapshot stays append-only for positional/streaming readers.
+        fields.push(("spec_resample_total", Json::num(self.spec_resampled as f64)));
+        fields.push((
+            "spec_accept_rate_greedy_mean",
+            Json::num(self.spec_accept_rate_greedy.mean()),
+        ));
+        fields.push(("spec_accept_rate_greedy_p50", Json::num(self.spec_accept_rate_greedy.p50())));
+        fields.push(("spec_accept_rate_greedy_p99", Json::num(self.spec_accept_rate_greedy.p99())));
+        fields.push((
+            "spec_accept_rate_sampled_mean",
+            Json::num(self.spec_accept_rate_sampled.mean()),
+        ));
+        fields.push((
+            "spec_accept_rate_sampled_p50",
+            Json::num(self.spec_accept_rate_sampled.p50()),
+        ));
+        fields.push((
+            "spec_accept_rate_sampled_p99",
+            Json::num(self.spec_accept_rate_sampled.p99()),
+        ));
         Json::obj(fields)
     }
 }
@@ -185,6 +220,30 @@ mod tests {
         assert_eq!(s.get("spec_run_len_max").unwrap().as_f64(), Some(3.0));
         // Pre-existing keys are still present under their old names.
         for key in ["gen_tokens", "decode_step_ms_p99", "decode_batch_size_max", "kv_peak_bytes"] {
+            assert!(s.get(key).is_some(), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn sampled_speculation_keys_surface_without_touching_old_keys() {
+        let mut m = Metrics::new();
+        m.spec_resampled = 4;
+        m.spec_accept_rate_greedy.push(1.0);
+        m.spec_accept_rate_sampled.push(0.5);
+        let s = m.snapshot();
+        assert_eq!(s.get("spec_resample_total").unwrap().as_u64(), Some(4));
+        assert_eq!(s.get("spec_accept_rate_greedy_mean").unwrap().as_f64(), Some(1.0));
+        assert_eq!(s.get("spec_accept_rate_sampled_p50").unwrap().as_f64(), Some(0.5));
+        // The pooled PR-4 speculation keys keep their old names and
+        // meaning next to the new per-mode ones.
+        for key in [
+            "spec_drafted_total",
+            "spec_accepted_total",
+            "spec_accept_rate_mean",
+            "spec_accept_rate_p50",
+            "spec_accept_rate_p99",
+            "spec_run_len_mean",
+        ] {
             assert!(s.get(key).is_some(), "missing {key}");
         }
     }

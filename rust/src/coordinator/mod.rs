@@ -24,13 +24,18 @@
 //!    that turns occupancy into per-token latency), stream to their
 //!    clients, and are retired on their stop conditions, releasing
 //!    blocks immediately (whole-block prefixes stay cached for reuse).
-//!    Greedy sequences may instead take a **speculative** round
+//!    Sequences may instead take a **speculative** round
 //!    (`spec_draft_len > 0`): a [`crate::spec::Drafter`] guesses the
 //!    next tokens, one multi-position verify pass scores them all
 //!    through the same fused GEMMs, the accepted run streams out in a
 //!    single round, and the rejected suffix's KV is rolled back
-//!    ([`kvpool::KvPool::truncate`]). Acceptance is exact greedy
-//!    verification, so speculation changes latency, never tokens.
+//!    ([`kvpool::KvPool::truncate`]). Acceptance runs the
+//!    rejection-sampling loop of [`crate::spec::spec_step_sampled`]
+//!    against the sequence's own seeded sampler, so speculation is
+//!    lossless for greedy *and* sampled (temperature/top-k/top-p)
+//!    requests alike — for the point-mass drafters it is same-seed
+//!    token-identical to vanilla rounds, not merely
+//!    distribution-preserving.
 //!
 //! Clients talk to the worker over channels; each request gets an
 //! unbounded event stream so a slow client never blocks the batch.
@@ -66,10 +71,11 @@ pub struct CoordinatorConfig {
     /// denser).
     pub kv_quant: KvQuant,
     /// Max draft tokens per speculative verify pass (0 disables
-    /// speculative decoding). Only greedy requests speculate; sampled
-    /// requests take vanilla rounds until lossless sampled
-    /// verification lands. The budget is per *round*, shared across
-    /// the decode-ready sequences (each gets `spec_draft_len / ready`),
+    /// speculative decoding). Greedy and sampled requests both
+    /// speculate — verification replays the sequence's own sampler, so
+    /// it is lossless in every decoding mode. The budget is per
+    /// *round*, shared across the decode-ready sequences (each gets
+    /// `spec_draft_len / ready`),
     /// so single streams get the full verify-pass win while wide
     /// batches keep the fused vanilla GEMM instead of running one
     /// verify pass per sequence.
@@ -121,14 +127,14 @@ struct SeqState {
     pending: Option<u32>,
     sampler: sampler::Sampler,
     /// Speculative drafter, `None` when this sequence never speculates
-    /// (coordinator speculation off, per-request opt-out, or sampled —
-    /// greedy verification is the only lossless mode today). Carried
+    /// (coordinator speculation off or per-request opt-out). Carried
     /// across preemption like the rest of the state.
     drafter: Option<Box<dyn spec::Drafter>>,
-    /// Draft tokens planned for this round's verify pass (refilled each
-    /// round *before* capacity planning so the round's block demand
-    /// covers the verify writes; cleared when capacity is tight).
-    round_drafts: Vec<u32>,
+    /// Draft proposals planned for this round's verify pass (refilled
+    /// each round *before* capacity planning so the round's block
+    /// demand covers the verify writes; cleared when capacity is
+    /// tight).
+    round_drafts: Vec<spec::DraftDist>,
     submitted: Instant,
     ttft_ms: Option<f64>,
     /// High-water mark of prompt tokens counted into
@@ -388,12 +394,11 @@ fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
                         let tail = prompt.split_off(prompt.len() - keep);
                         prompt = std::iter::once(tokenizer::BOS).chain(tail).collect();
                     }
-                    // Speculate only where verification is lossless:
-                    // greedy decoding, coordinator speculation on, and
-                    // no per-request opt-out.
-                    let speculative = cfg.spec_draft_len > 0
-                        && w.req.speculation
-                        && w.req.temperature <= 0.0;
+                    // Speculation is lossless in every decoding mode
+                    // (the verify pass replays the sequence's own
+                    // sampler), so only the coordinator switch and the
+                    // per-request opt-out gate it.
+                    let speculative = cfg.spec_draft_len > 0 && w.req.speculation;
                     SeqState {
                         prompt_tokens: prompt.len(),
                         prefill: prompt,
@@ -482,10 +487,10 @@ fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
         // ---- 1.75 speculative draft planning ------------------------
         // Drafts are chosen *before* capacity planning so the round's
         // block demand covers the verify pass's KV writes (the rejected
-        // share is rolled back within the same round). Only greedy,
-        // fully-prefilled sequences with a pending token and room for
-        // at least two more tokens speculate; everything else takes the
-        // fused vanilla round.
+        // share is rolled back within the same round). Only
+        // fully-prefilled, speculation-enabled sequences with a pending
+        // token and room for at least two more tokens speculate;
+        // everything else takes the fused vanilla round.
         //
         // A speculative round trades the fused multi-sequence GEMM for
         // one verify pass *per* sequence, so the draft budget is shared
@@ -546,7 +551,7 @@ fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
             history.extend_from_slice(&s.prefill[..s.prompt_tokens]);
             history.extend_from_slice(&s.generated);
             history.push(pending);
-            let mut drafts = s.drafter.as_mut().expect("checked above").draft(&history, k);
+            let mut drafts = s.drafter.as_mut().expect("checked above").draft_dist(&history, k);
             drafts.truncate(k);
             s.round_drafts = drafts;
         }
@@ -698,18 +703,27 @@ fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
 
         // ---- 4a. speculative verify rounds --------------------------
         // One multi-position pass per speculating sequence: feed the
-        // pending token plus the drafts, accept the prefix matching the
-        // model's own greedy chain, roll back the rest. The accepted
-        // run streams out with exactly the per-token stop checks the
-        // vanilla rounds would have applied (same token stream, same
-        // finish reason, same KV state — only fewer engine passes).
+        // pending token plus the drafts, run the rejection-sampling
+        // accept loop against the sequence's own seeded sampler (greedy
+        // sequences degenerate to the argmax-prefix rule and consume no
+        // randomness), roll back the rest. The accepted run streams out
+        // with exactly the per-token stop checks the vanilla rounds
+        // would have applied (same token stream, same finish reason,
+        // same KV state, same sampler RNG position — only fewer engine
+        // passes).
         for &i in &spec_idx {
             let seq = &mut active[i];
             let drafts = std::mem::take(&mut seq.state.round_drafts);
+            let draft_toks: Vec<u32> = drafts.iter().map(|d| d.token).collect();
             let pending = *seq.state.generated.last().expect("pending was delivered");
             let t0 = Instant::now();
-            let outcome =
-                spec::spec_step(engine.as_ref(), &mut pool.seq_view(seq.seq), pending, &drafts);
+            let outcome = spec::spec_step_sampled(
+                engine.as_ref(),
+                &mut pool.seq_view(seq.seq),
+                pending,
+                &drafts,
+                &mut seq.state.sampler,
+            );
             // The pass produced `accepted` verified tokens plus the
             // next pending one; amortize its wall time over those.
             let produced = outcome.accepted + 1;
@@ -719,10 +733,20 @@ fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
             }
             metrics.spec_drafted += drafts.len() as u64;
             metrics.spec_accepted += outcome.accepted as u64;
-            metrics.spec_accept_rate.push(outcome.accepted as f64 / drafts.len() as f64);
+            metrics.spec_resampled += outcome.resampled as u64;
+            let rate = outcome.accepted as f64 / drafts.len() as f64;
+            metrics.spec_accept_rate.push(rate);
+            // Per-mode acceptance: sampled drafts face a stochastic
+            // accept rule, greedy ones an exact match — aggregating
+            // them hides drafter regressions in either mode.
+            if seq.req.temperature > 0.0 {
+                metrics.spec_accept_rate_sampled.push(rate);
+            } else {
+                metrics.spec_accept_rate_greedy.push(rate);
+            }
             metrics.spec_run_len.push(outcome.accepted as f64);
             if let Some(d) = seq.state.drafter.as_mut() {
-                d.observe(&drafts, outcome.accepted, &outcome.verify_argmax);
+                d.observe(&draft_toks, outcome.accepted, &outcome.verify_argmax);
             }
             // Stream the accepted run. Accepted token `jj` corresponds
             // to a virtual vanilla round whose pre-feed context length
@@ -731,7 +755,7 @@ fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
             // exactly the token sequential rounds would have finished
             // at.
             let mut reason: Option<FinishReason> = None;
-            for (jj, &g) in drafts[..outcome.accepted].iter().enumerate() {
+            for (jj, &g) in draft_toks[..outcome.accepted].iter().enumerate() {
                 let ctx = outcome.base + jj + 1;
                 if let Some(r) =
                     deliver_and_resolve(seq, &mut metrics, g, ctx, model_cfg.max_seq)
@@ -1044,7 +1068,7 @@ mod tests {
     }
 
     #[test]
-    fn speculation_respects_opt_out_and_sampling() {
+    fn speculation_respects_opt_out() {
         let c = spec_coordinator(4, spec::DrafterKind::Ngram);
         // Per-request opt-out: vanilla rounds only.
         let (_, done) = c.generate_collect(GenRequest {
@@ -1056,19 +1080,66 @@ mod tests {
         assert!(matches!(done, Some(Event::Done { .. })));
         let stats = c.stats().unwrap();
         assert_eq!(stats.get("spec_drafted_total").unwrap().as_u64(), Some(0));
-        // Temperature sampling would break losslessness: speculation is
-        // disabled automatically (until top-p replay verification).
-        let (_, done) = c.generate_collect(GenRequest {
-            prompt: "abcabcabc".into(),
-            max_new_tokens: 8,
-            temperature: 0.8,
-            seed: 5,
-            ..Default::default()
-        });
-        assert!(matches!(done, Some(Event::Done { .. })));
-        let stats = c.stats().unwrap();
-        assert_eq!(stats.get("spec_drafted_total").unwrap().as_u64(), Some(0));
         c.shutdown();
+    }
+
+    #[test]
+    fn sampled_requests_speculate_and_match_vanilla_token_for_token() {
+        // Same-seed sampled requests must stream identical text whether
+        // the coordinator speculates or not — the rejection-sampling
+        // verify loop replays the request's own sampler, so for the
+        // point-mass drafters speculation is sample-path identical, not
+        // merely distribution-preserving. Sweep the filter
+        // configurations so the truncated-support compositions are
+        // covered end-to-end.
+        let configs: [(f32, Option<u64>, Option<f64>); 3] =
+            [(0.8, None, None), (0.9, Some(16), None), (0.7, Some(24), Some(0.9))];
+        for (temperature, top_k, top_p) in configs {
+            let req = GenRequest {
+                prompt: "abcabcabcabc".into(),
+                max_new_tokens: 14,
+                temperature,
+                top_k: top_k.map(|k| k as usize),
+                top_p: top_p.map(|p| p as f32),
+                seed: 42,
+                ..Default::default()
+            };
+            let vanilla = coordinator(4, 64 << 20); // spec_draft_len = 0
+            let (want, done_v) = vanilla.generate_collect(req.clone());
+            vanilla.shutdown();
+            assert!(matches!(done_v, Some(Event::Done { .. })));
+            for kind in [spec::DrafterKind::Ngram, spec::DrafterKind::SelfDraft] {
+                for draft_len in [2usize, 4] {
+                    let c = spec_coordinator(draft_len, kind);
+                    let (got, done_s) = c.generate_collect(req.clone());
+                    let Some(Event::Done { reason, gen_tokens, .. }) = done_s else {
+                        panic!("no done event")
+                    };
+                    assert_eq!(
+                        got, want,
+                        "t={temperature} k={top_k:?} p={top_p:?} {kind:?} \
+                         draft_len={draft_len}: sampled speculation diverged"
+                    );
+                    assert_eq!(gen_tokens, 14);
+                    assert_eq!(reason, FinishReason::MaxTokens);
+                    // SelfDraft always proposes (bootstrap repeats the
+                    // last token), so sampled verify passes provably
+                    // ran — no silent fallback to vanilla rounds.
+                    if kind == spec::DrafterKind::SelfDraft {
+                        let stats = c.stats().unwrap();
+                        assert!(
+                            stats.get("spec_drafted_total").unwrap().as_u64().unwrap() > 0,
+                            "sampled request never entered a verify pass"
+                        );
+                        assert!(
+                            stats.get("spec_accept_rate_sampled_mean").is_some(),
+                            "per-mode accept ring missing"
+                        );
+                    }
+                    c.shutdown();
+                }
+            }
+        }
     }
 
     #[test]

@@ -18,10 +18,13 @@ pub struct GenRequest {
     pub top_p: Option<f32>,
     pub seed: u64,
     /// Speculative decoding opt-out: `false` forces vanilla one-token
-    /// decode rounds even when the coordinator speculates. Sampled
-    /// requests (`temperature > 0`) never speculate regardless —
-    /// greedy verification is the only lossless mode until sampled
-    /// verification lands.
+    /// decode rounds even when the coordinator speculates. Speculation
+    /// is lossless in every decoding mode — greedy requests verify by
+    /// exact argmax matching, sampled requests (`temperature > 0`,
+    /// with or without `top_k`/`top_p`) by rejection sampling against
+    /// the request's own seeded sampler — so the only reason to opt
+    /// out is to reclaim the verify pass's extra KV headroom or
+    /// measure the vanilla baseline.
     pub speculation: bool,
     /// Stop generation at the first '.' after this many tokens (0 = off).
     pub stop_at_sentence: bool,

@@ -5,13 +5,59 @@
 //! restricted to the `k` highest logits (if set), the temperature
 //! softmax is taken over that set, and the nucleus cut then keeps the
 //! smallest probability-sorted prefix whose cumulative mass reaches
-//! `p`. Greedy decoding (`temperature <= 0`) ignores both. Besides
-//! serving sampled requests, deterministic nucleus truncation is the
-//! prerequisite for lossless *sampled* speculative verification later
-//! (the verifier must be able to replay the exact truncated
-//! distribution at every drafted position).
+//! `p`. Greedy decoding (`temperature <= 0`) ignores both.
+//!
+//! Sampling is split into two halves so the speculative verifier can
+//! replay it exactly: [`Sampler::dist`] resolves the logits into the
+//! post-filter distribution (a [`Dist`]) without touching the RNG, and
+//! [`Sampler::draw`] consumes one uniform to pick from it (none when
+//! greedy). [`Sampler::sample`] is literally `draw(dist(logits))`, so a
+//! verify pass that calls the two halves on bit-identical logits
+//! advances the RNG stream exactly as vanilla decoding would — the
+//! foundation of lossless *sampled* speculative decoding
+//! ([`crate::spec::spec_step_sampled`]).
 
 use crate::util::XorShift;
+
+/// A fully-resolved sampling distribution at one position: the
+/// candidate support after temperature/top-k/top-p filtering, with
+/// normalized probabilities, in the exact order [`Sampler::draw`] walks
+/// its CDF. Produced by [`Sampler::dist`].
+#[derive(Clone, Debug)]
+pub struct Dist {
+    /// `(token, probability)` pairs; probabilities sum to 1 over the
+    /// support. Full-softmax distributions are in vocabulary order,
+    /// truncated ones in (logit desc, index asc) candidate order.
+    cand: Vec<(u32, f64)>,
+    /// Greedy point mass: [`Sampler::draw`] returns the single
+    /// candidate without consuming randomness (`temperature <= 0`
+    /// never touches the RNG).
+    greedy: bool,
+}
+
+impl Dist {
+    /// The post-filter support with normalized probabilities, in CDF
+    /// walk order.
+    pub fn support(&self) -> &[(u32, f64)] {
+        &self.cand
+    }
+
+    /// True when this is the greedy point mass (drawing from it
+    /// consumes no randomness).
+    pub fn is_greedy(&self) -> bool {
+        self.greedy
+    }
+
+    /// Probability of `token` under this distribution (0 outside the
+    /// post-filter support).
+    pub fn prob_of(&self, token: u32) -> f64 {
+        self.cand
+            .iter()
+            .find(|&&(t, _)| t == token)
+            .map(|&(_, p)| p)
+            .unwrap_or(0.0)
+    }
+}
 
 pub struct Sampler {
     temperature: f32,
@@ -43,49 +89,89 @@ impl Sampler {
         self
     }
 
-    /// Pick the next token from logits.
+    /// Pick the next token from logits. Exactly equivalent to
+    /// `self.draw(&self.dist(logits))` — the two-phase form the
+    /// speculative verifier uses.
     pub fn sample(&mut self, logits: &[f32]) -> u32 {
+        let d = self.dist(logits);
+        self.draw(&d)
+    }
+
+    /// Resolve `logits` into the post-filter sampling distribution.
+    /// Pure: never touches the RNG, so the verify pass can inspect the
+    /// distribution (acceptance tests, residuals) and only pay a
+    /// uniform when it actually draws.
+    pub fn dist(&self, logits: &[f32]) -> Dist {
         if self.temperature <= 0.0 {
-            return argmax(logits);
+            return Dist { cand: vec![(argmax(logits), 1.0)], greedy: true };
         }
         let k_active = matches!(self.top_k, Some(k) if k < logits.len());
         let p_active = matches!(self.top_p, Some(p) if p < 1.0);
         if !k_active && !p_active {
-            return self.sample_full(logits);
+            return self.dist_full(logits);
         }
-        self.sample_truncated(logits, k_active, p_active)
+        self.dist_truncated(logits, k_active, p_active)
     }
 
-    /// Softmax with temperature over all logits, inverse-CDF draw.
-    fn sample_full(&mut self, logits: &[f32]) -> u32 {
-        let inv_t = 1.0 / self.temperature;
-        let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut probs: Vec<f64> = logits
-            .iter()
-            .map(|&x| (((x - m) * inv_t) as f64).exp())
-            .collect();
-        let sum: f64 = probs.iter().sum();
-        for p in probs.iter_mut() {
-            *p /= sum;
+    /// One inverse-CDF draw from a resolved distribution. Consumes
+    /// exactly one uniform — except for the greedy point mass, which
+    /// (like greedy [`Sampler::sample`] always did) consumes none.
+    pub fn draw(&mut self, d: &Dist) -> u32 {
+        if d.greedy {
+            return d.cand[0].0;
         }
+        self.draw_from(&d.cand)
+    }
+
+    /// Inverse-CDF draw from an explicit `(token, probability)` list
+    /// (probabilities must be normalized) using this sampler's RNG
+    /// stream — the residual-resampling primitive of the speculative
+    /// accept loop. Consumes exactly one uniform.
+    pub fn draw_from(&mut self, probs: &[(u32, f64)]) -> u32 {
         let mut u = self.rng.next_f64();
-        for (i, &p) in probs.iter().enumerate() {
+        for &(t, p) in probs {
             if u < p {
-                return i as u32;
+                return t;
             }
             u -= p;
         }
-        (probs.len() - 1) as u32
+        probs.last().map(|&(t, _)| t).unwrap_or(0)
     }
 
-    /// Temperature draw over a truncated candidate set: top-k first
-    /// (partition, O(V + k log k) — only the k survivors are sorted),
-    /// then the nucleus cut over the candidate distribution. A pure
-    /// top-p cut (no top-k) sorts the full distribution once per
+    /// One raw uniform in `[0, 1)` from the sampler's RNG — the
+    /// accept-test coin of generalized (non-point-mass) rejection
+    /// sampling.
+    pub fn next_uniform(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    /// Softmax with temperature over all logits, in vocabulary order.
+    /// Built directly as `(token, prob)` pairs — one allocation, like
+    /// the pre-`Dist` sampler — with the exact same f64 operations in
+    /// the same order, so draws stay bit-identical.
+    fn dist_full(&self, logits: &[f32]) -> Dist {
+        let inv_t = 1.0 / self.temperature;
+        let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut cand: Vec<(u32, f64)> = logits
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| (i as u32, (((x - m) * inv_t) as f64).exp()))
+            .collect();
+        let sum: f64 = cand.iter().map(|&(_, p)| p).sum();
+        for (_, p) in cand.iter_mut() {
+            *p /= sum;
+        }
+        Dist { cand, greedy: false }
+    }
+
+    /// Temperature distribution over a truncated candidate set: top-k
+    /// first (partition, O(V + k log k) — only the k survivors are
+    /// sorted), then the nucleus cut over the candidate distribution. A
+    /// pure top-p cut (no top-k) sorts the full distribution once per
     /// sampled token, which is fine at this vocabulary scale; compose
     /// with top-k to bound it. Candidates are ordered by (logit desc,
     /// index asc) so ties break deterministically.
-    fn sample_truncated(&mut self, logits: &[f32], k_active: bool, p_active: bool) -> u32 {
+    fn dist_truncated(&self, logits: &[f32], k_active: bool, p_active: bool) -> Dist {
         let desc = |a: &(f32, u32), b: &(f32, u32)| {
             b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
         };
@@ -99,10 +185,14 @@ impl Sampler {
         cand.sort_by(desc);
         let inv_t = 1.0 / self.temperature;
         let m = cand[0].0;
-        let mut probs: Vec<f64> =
-            cand.iter().map(|&(x, _)| (((x - m) * inv_t) as f64).exp()).collect();
-        let sum: f64 = probs.iter().sum();
-        for p in probs.iter_mut() {
+        // From here on work in (token, prob) pairs directly — same f64
+        // operations in the same order as the probs-vector form, so
+        // draws stay bit-identical, without a second support-sized
+        // allocation on the sampling hot path.
+        let mut pairs: Vec<(u32, f64)> =
+            cand.iter().map(|&(x, t)| (t, (((x - m) * inv_t) as f64).exp())).collect();
+        let sum: f64 = pairs.iter().map(|&(_, p)| p).sum();
+        for (_, p) in pairs.iter_mut() {
             *p /= sum;
         }
         if p_active {
@@ -110,29 +200,21 @@ impl Sampler {
             // >= p (always at least one candidate), then renormalize.
             let target = self.top_p.expect("p_active") as f64;
             let mut cum = 0.0f64;
-            let mut keep = probs.len();
-            for (i, &pr) in probs.iter().enumerate() {
+            let mut keep = pairs.len();
+            for (i, &(_, pr)) in pairs.iter().enumerate() {
                 cum += pr;
                 if cum >= target {
                     keep = i + 1;
                     break;
                 }
             }
-            cand.truncate(keep);
-            probs.truncate(keep);
-            let nsum: f64 = probs.iter().sum();
-            for p in probs.iter_mut() {
+            pairs.truncate(keep);
+            let nsum: f64 = pairs.iter().map(|&(_, p)| p).sum();
+            for (_, p) in pairs.iter_mut() {
                 *p /= nsum;
             }
         }
-        let mut u = self.rng.next_f64();
-        for (i, &p) in probs.iter().enumerate() {
-            if u < p {
-                return cand[i].1;
-            }
-            u -= p;
-        }
-        cand[cand.len() - 1].1
+        Dist { cand: pairs, greedy: false }
     }
 }
 
@@ -323,6 +405,76 @@ mod tests {
             let tok = s.sample(&logits);
             assert!(allowed.contains(&tok), "token {tok} violates top-k+top-p");
         }
+    }
+
+    #[test]
+    fn dist_plus_draw_replays_sample_exactly() {
+        // The two-phase form (dist then draw) must reproduce sample()
+        // bit for bit — same tokens, same RNG stream — in every filter
+        // configuration. This is the property sampled speculative
+        // verification stands on.
+        let logits: Vec<f32> = (0..64).map(|i| (i as f32 * 0.43).sin() * 2.0).collect();
+        let configs: [(f32, Option<usize>, Option<f32>); 5] = [
+            (0.0, None, None),
+            (0.8, None, None),
+            (0.9, Some(8), None),
+            (1.1, None, Some(0.7)),
+            (0.7, Some(12), Some(0.8)),
+        ];
+        for &(t, k, p) in &configs {
+            let mut a = Sampler::new(t, 99).with_top_k(k).with_top_p(p);
+            let mut b = Sampler::new(t, 99).with_top_k(k).with_top_p(p);
+            for _ in 0..40 {
+                let d = b.dist(&logits);
+                assert_eq!(a.sample(&logits), b.draw(&d), "t={t} k={k:?} p={p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn dist_probs_are_normalized_over_the_support() {
+        let logits: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).cos()).collect();
+        for s in [
+            Sampler::new(0.8, 1),
+            Sampler::new(0.8, 1).with_top_k(Some(5)),
+            Sampler::new(1.2, 1).with_top_p(Some(0.6)),
+        ] {
+            let d = s.dist(&logits);
+            let sum: f64 = d.support().iter().map(|&(_, p)| p).sum();
+            assert!((sum - 1.0).abs() < 1e-9, "support mass {sum}");
+            for &(t, p) in d.support() {
+                assert!(p > 0.0);
+                assert_eq!(d.prob_of(t), p);
+            }
+            assert_eq!(d.prob_of(9999), 0.0, "outside the support");
+        }
+    }
+
+    #[test]
+    fn greedy_dist_is_a_point_mass_and_never_draws() {
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32 * 1.3).sin()).collect();
+        let mut s = Sampler::new(0.0, 7);
+        let d = s.dist(&logits);
+        assert!(d.is_greedy());
+        assert_eq!(d.support().len(), 1);
+        assert_eq!(s.draw(&d), argmax(&logits));
+        // Drawing from the greedy dist consumed no randomness: the next
+        // uniform equals a fresh same-seed sampler's first uniform.
+        let mut fresh = Sampler::new(0.0, 7);
+        assert_eq!(s.next_uniform(), fresh.next_uniform());
+    }
+
+    #[test]
+    fn draw_from_follows_the_explicit_distribution() {
+        let mut s = Sampler::new(1.0, 3);
+        let probs = [(5u32, 0.25f64), (9, 0.5), (30, 0.25)];
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..4000 {
+            *counts.entry(s.draw_from(&probs)).or_insert(0usize) += 1;
+        }
+        assert_eq!(counts.len(), 3);
+        let c9 = counts[&9] as f64 / 4000.0;
+        assert!((c9 - 0.5).abs() < 0.05, "p(9)≈{c9}");
     }
 
     #[test]

@@ -18,12 +18,20 @@
 //!   the paper's DP4A MMQ/MMVQ pipeline) with row-sharded parallelism
 //!   (`util::threadpool`), speculative decoding (`spec`: zero-artifact
 //!   drafters + a fused multi-position verify pass with paged-KV
-//!   rollback), a GGUF-like model container, a perplexity evaluator,
-//!   and the PJRT runtime that executes the AOT artifacts. Python
-//!   never runs on the request path.
+//!   rollback, lossless for greedy *and* sampled decoding via
+//!   rejection-sampling verification), a GGUF-like model container, a
+//!   perplexity evaluator, and the PJRT runtime that executes the AOT
+//!   artifacts. Python never runs on the request path.
 //!
-//! See `DESIGN.md` for the paper → module map and `EXPERIMENTS.md` for
-//! the reproduced tables.
+//! Standalone documentation:
+//!
+//! - `docs/ARCHITECTURE.md` — module map, data flow, and the
+//!   bit-identity contracts the test suite enforces.
+//! - `docs/PROTOCOL.md` — the complete JSON-lines serving protocol
+//!   (also included into [`server`]'s rustdoc, where its examples run
+//!   as doctests).
+//! - `EXPERIMENTS.md` — reproduced tables, benchmark methodology, and
+//!   the `BENCH_*.json` schemas.
 
 pub mod bench;
 pub mod coordinator;

@@ -166,8 +166,10 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
     if kv_block_tokens == 0 {
         bail!("--kv-block-tokens must be positive");
     }
-    // Speculative decoding defaults on for serving (greedy requests
-    // only; per-request `"speculation": false` opts out). 0 disables.
+    // Speculative decoding defaults on for serving — lossless for
+    // greedy AND sampled requests (rejection-sampling verification
+    // replays each request's own sampler); per-request
+    // `"speculation": false` opts out. 0 disables.
     let spec_draft_len: usize = flag_or(flags, "spec-draft-len", "4").parse()?;
     let spec_drafter_name = flag_or(flags, "spec-drafter", "ngram");
     let spec_drafter = itq3s::spec::DrafterKind::parse(&spec_drafter_name)

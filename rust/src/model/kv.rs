@@ -170,7 +170,9 @@ impl KvStore for BatchSlot<'_> {
 /// batch: slot `i` stands for position `base + i`, where `base` is the
 /// store's length at construction.
 ///
-/// This is how the speculative verify pass reuses the fused batched
+/// This is how the speculative verify pass (greedy and sampled alike —
+/// the acceptance rule lives above the engine, in
+/// [`crate::spec::spec_step_sampled`]) reuses the fused batched
 /// decode unchanged: [`NativeEngine::score_tokens`] hands
 /// `decode_batch` a `SpecSlots` view over `[pending, draft...]`, and
 /// the batched pass's write-KV-then-attend-per-layer order makes slot

@@ -63,7 +63,11 @@ pub trait Engine: Send + Sync {
     }
     /// Feed `tokens` sequentially — writing KV as it goes — and return
     /// next-token logits at **every** fed position: the speculative
-    /// verify pass. Unlike [`Engine::prefill`] (which runs the batched
+    /// verify pass. Returning full per-position logits (never just the
+    /// argmax) is load-bearing: lossless *sampled* verification
+    /// ([`crate::spec::spec_step_sampled`]) rebuilds the sampler's
+    /// exact post-filter distribution at each drafted position from
+    /// them. Unlike [`Engine::prefill`] (which runs the batched
     /// f32 MMQ path), this must replay the *decode* path's numerics:
     ///
     /// Contract (test-enforced in `rust/tests/spec_decode.rs`): the

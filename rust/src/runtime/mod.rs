@@ -183,9 +183,10 @@ impl Engine for PjrtEngine {
     // default for the same reason: the recompute engine re-scores the
     // whole window per decode step anyway, so the sequential fallback
     // is already one execute per fed token and trivially matches
-    // `decode_step`. Speculation still *works* against this engine
-    // (rollback only touches the token history here); it just cannot
-    // amortize the passes.
+    // `decode_step`. Speculation — greedy or sampled — still *works*
+    // against this engine (the acceptance loop only needs per-position
+    // logits, and rollback only touches the token history here); it
+    // just cannot amortize the passes.
 
     fn prefill(&self, cache: &mut dyn KvStore, tokens: &[u32]) -> Tensor {
         let start = cache.len();

@@ -3,20 +3,13 @@
 //! single-worker coordinator behind channels gives the same separation
 //! of IO and compute).
 //!
-//! Protocol (one JSON object per line, both directions):
+//! The complete wire-protocol reference below is included verbatim
+//! from `docs/PROTOCOL.md` — the single source of truth for every op,
+//! request field, and response shape. Its client example compiles and
+//! runs as a doctest, so the documented protocol cannot drift from the
+//! implementation.
 //!
-//! ```text
-//! -> {"op":"generate","prompt":"...","max_tokens":32,"temperature":0.0}
-//! <- {"token":"t"} ... streamed ...
-//! <- {"done":true,"reason":"max_tokens","text":"...","gen_tokens":32,
-//!     "ttft_ms":12.0,"total_ms":230.0}
-//! -> {"op":"score","text":"..."}
-//! <- {"ppl":3.21,"nll":1.166,"tokens":512}
-//! -> {"op":"stats"}
-//! <- {...metrics snapshot...}
-//! -> {"op":"shutdown"}
-//! <- {"ok":true}
-//! ```
+#![doc = include_str!("../../../docs/PROTOCOL.md")]
 
 use crate::coordinator::{Coordinator, CoordinatorConfig, Event, GenRequest};
 use crate::model::native::Engine;

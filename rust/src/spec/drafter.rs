@@ -20,6 +20,48 @@
 //! prefix that matches the model's own greedy choices, so a bad drafter
 //! costs latency, never correctness.
 
+/// A drafted token together with the proposal distribution it was
+/// drawn from — the unit the rejection-sampling verify loop
+/// ([`crate::spec::spec_step_sampled`]) consumes.
+///
+/// For the theorem behind lossless sampled speculation to hold, the
+/// proposed `token` must actually be *drawn from* `probs` (a drafter
+/// with a spread proposal samples with its own RNG). The default
+/// everywhere is the degenerate case: a **point mass** on the token the
+/// drafter would have proposed greedily, for which rejection sampling
+/// reduces to "accept iff the verifier's own draw equals the draft" —
+/// no extra randomness, and greedy verification falls out as the
+/// temperature-0 special case.
+#[derive(Clone, Debug)]
+pub struct DraftDist {
+    /// The token proposed for this position (drawn from `probs`).
+    pub token: u32,
+    /// The proposal distribution: `(token, probability)` pairs summing
+    /// to 1. Length 1 marks a point mass.
+    pub probs: Vec<(u32, f64)>,
+}
+
+impl DraftDist {
+    /// A point-mass proposal on `token` (the default drafting mode).
+    pub fn point(token: u32) -> Self {
+        DraftDist { token, probs: vec![(token, 1.0)] }
+    }
+
+    /// Is this proposal a point mass (probability 1 on its token)?
+    pub fn is_point(&self) -> bool {
+        self.probs.len() == 1
+    }
+
+    /// Proposal probability of `t` (0 outside the proposal support).
+    pub fn prob_of(&self, t: u32) -> f64 {
+        self.probs
+            .iter()
+            .find(|&&(tok, _)| tok == t)
+            .map(|&(_, p)| p)
+            .unwrap_or(0.0)
+    }
+}
+
 /// A speculative token proposer. Implementations must be cheap — the
 /// coordinator drafts once per decode round per sequence.
 pub trait Drafter: Send {
@@ -28,6 +70,19 @@ pub trait Drafter: Send {
     /// verify pass). Returning fewer than `k` (or none) is always
     /// legal; returning more is truncated by the caller.
     fn draft(&mut self, history: &[u32], k: usize) -> Vec<u32>;
+
+    /// Propose up to `k` tokens *with their proposal distributions* —
+    /// what the sampled verify loop consumes. The default wraps
+    /// [`Drafter::draft`]'s tokens as point masses, which makes
+    /// rejection sampling degenerate to exact-match acceptance (and, at
+    /// temperature 0, to the greedy argmax-prefix rule) — greedy
+    /// speculation is a special case of this interface, not a separate
+    /// code path. Drafters with a genuine distribution (e.g. a small
+    /// draft model) override this and must *sample* each token from
+    /// its returned distribution.
+    fn draft_dist(&mut self, history: &[u32], k: usize) -> Vec<DraftDist> {
+        self.draft(history, k).into_iter().map(DraftDist::point).collect()
+    }
 
     /// Verification feedback: of `proposed`, the first `accepted`
     /// matched the model, and `verify_argmax` holds the verify pass's
@@ -208,6 +263,21 @@ mod tests {
         // Full acceptance leaves nothing to reuse -> bootstrap again.
         d.observe(&[41], 1, &[41, 50]);
         assert_eq!(d.draft(&h, 2), vec![7, 7]);
+    }
+
+    #[test]
+    fn default_draft_dist_is_a_point_mass_on_the_greedy_draft() {
+        let mut d = NgramDrafter::default();
+        let h = [10u32, 11, 12, 13, 10, 11, 12, 13, 10, 11];
+        let toks = d.draft(&h, 4);
+        let dists = d.draft_dist(&h, 4);
+        assert_eq!(dists.len(), toks.len());
+        for (dd, &t) in dists.iter().zip(&toks) {
+            assert_eq!(dd.token, t);
+            assert!(dd.is_point());
+            assert_eq!(dd.prob_of(t), 1.0);
+            assert_eq!(dd.prob_of(t.wrapping_add(1)), 0.0);
+        }
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Speculative decoding: draft-and-verify on the fused batch path.
+//! Speculative decoding: draft-and-verify on the fused batch path,
+//! lossless under greedy *and* sampled decoding.
 //!
 //! PRs 1–3 built exactly the machinery speculative decoding needs —
 //! cheap W3A8 integer kernels, a fused batched GEMM that scores many
@@ -8,48 +9,78 @@
 //! latency:
 //!
 //! 1. a [`Drafter`] guesses the next `k` tokens from state the stack
-//!    already has (no second model, no extra artifacts);
-//! 2. one **verify pass** ([`spec_step`]) feeds the pending token plus
-//!    the `k` drafts through
+//!    already has (no second model, no extra artifacts), each wrapped
+//!    in a [`DraftDist`] — the proposal distribution the token was
+//!    drawn from (a point mass for the built-in drafters);
+//! 2. one **verify pass** feeds the pending token plus the `k` drafts
+//!    through
 //!    [`Engine::score_tokens`](crate::model::native::Engine::score_tokens)
 //!    — on the native engine that is the same fused Q8 GEMM path as
 //!    `decode_batch`, so all `k + 1` positions cost roughly one
-//!    weight-unpack sweep — writing KV as it goes;
-//! 3. the longest draft prefix matching the model's own greedy argmax
-//!    chain is **accepted**; the rejected suffix's KV is **rolled
-//!    back** via [`KvStore::truncate`] (dense stores drop tail tokens
-//!    in place; the paged pool releases refcounted tail blocks
-//!    COW-correctly and invalidates any cached chain entry over the
-//!    span).
+//!    weight-unpack sweep — writing KV as it goes and returning
+//!    per-position logits;
+//! 3. [`spec_step_sampled`] runs the **rejection-sampling accept
+//!    loop** against the sequence's own seeded
+//!    [`Sampler`](crate::coordinator::sampler::Sampler): at each
+//!    drafted position the target distribution is the sampler's
+//!    post-filter (temperature/top-k/top-p) distribution over the
+//!    verify logits; draft `d` is accepted with probability
+//!    `min(1, p_target(d) / p_draft(d))`, and the first rejection is
+//!    replaced by a token from the normalized residual
+//!    `max(0, p_target - p_draft)` restricted to the post-filter
+//!    support. The rejected suffix's KV is **rolled back** via
+//!    [`KvStore::truncate`] (dense stores drop tail tokens in place;
+//!    the paged pool releases refcounted tail blocks COW-correctly and
+//!    invalidates any cached chain entry over the span).
 //!
-//! Acceptance logic never changes outputs, only latency: with greedy
-//! decoding the accepted run plus the correction/bonus token is
-//! *exactly* the token stream sequential
-//! [`decode_step`](crate::model::native::Engine::decode_step) rounds
-//! would have produced (test-enforced across drafters, draft lengths,
-//! and KV backends in `rust/tests/spec_decode.rs`). Temperature
-//! sampling is therefore not speculated — lossless sampled
-//! verification needs the top-p machinery to replay the sampler's
-//! distribution, which lands separately — and the coordinator disables
-//! drafting automatically for sampled requests.
+//! Acceptance never changes the output distribution, only latency —
+//! the standard speculative-sampling theorem. Two special cases make
+//! it *exactly* lossless in the strongest (same-seed, token-identical)
+//! sense this repo tests by:
+//!
+//! - **Point-mass drafts** (the default [`Drafter::draft_dist`]): the
+//!   accept rule is implemented as a *coupled replay* — the verifier
+//!   draws the target's own token `t*` exactly as vanilla sampling
+//!   would (same [`Sampler::dist`]/[`Sampler::draw`] arithmetic, same
+//!   RNG stream) and accepts iff `t* == d`. Mathematically this *is*
+//!   rejection sampling (accept probability `p_target(d)`, and `t*`
+//!   conditioned on rejection follows the normalized residual, which
+//!   for a point mass is the target restricted to `!= d`), but the
+//!   coupling additionally makes the produced token stream
+//!   bit-identical to vanilla same-seed sampling — test-enforced in
+//!   `rust/tests/spec_decode.rs`.
+//! - **Greedy decoding** (`temperature <= 0`): the target distribution
+//!   is a point mass on the argmax and drawing from it consumes no
+//!   randomness, so the loop degenerates to the argmax-prefix rule —
+//!   greedy speculation ([`spec_step`]) is a thin wrapper over the
+//!   sampled path, not a separate code path.
+//!
+//! Spread (non-degenerate) proposal distributions take the general
+//! accept-ratio + residual-resampling branch, which is
+//! distribution-lossless (χ²-tested in `rust/tests/spec_decode.rs`)
+//! though not sample-path coupled.
 
 pub mod drafter;
 
-pub use drafter::{Drafter, DrafterKind, NgramDrafter, SelfDraft};
+pub use drafter::{DraftDist, Drafter, DrafterKind, NgramDrafter, SelfDraft};
 
-use crate::coordinator::sampler::argmax;
+use crate::coordinator::sampler::{argmax, Sampler};
 use crate::model::native::Engine;
 use crate::model::KvStore;
 
 /// Result of one draft-and-verify round.
 pub struct SpecOutcome {
-    /// Draft tokens verified as the model's own greedy continuation
-    /// (`drafts[..accepted]` in the caller's buffer).
+    /// Draft tokens verified as accepted (`drafts[..accepted]` in the
+    /// caller's buffer).
     pub accepted: usize,
     /// The model's next token after the accepted run: the correction
     /// for the first rejected draft, or the bonus token when every
     /// draft was accepted.
     pub next: u32,
+    /// Did `next` come from residual resampling after a sampled-mode
+    /// rejection? (Greedy corrections and bonus tokens are not
+    /// resamples.) Feeds the coordinator's `spec_resample_total`.
+    pub resampled: bool,
     /// Greedy argmax at every scored position (`accepted + 1 ..` were
     /// computed under stale context — drafter reuse material).
     pub verify_argmax: Vec<u32>,
@@ -58,76 +89,163 @@ pub struct SpecOutcome {
     pub base: usize,
 }
 
-/// One greedy draft-and-verify round over any engine and KV store.
+/// One draft-and-verify round over any engine and KV store, lossless
+/// for the sampler's exact decoding mode (greedy, temperature,
+/// top-k/top-p or any composition).
 ///
-/// Feeds `[pending, drafts...]` through the engine's multi-token verify
-/// pass, accepts the longest prefix of `drafts` matching the model's
-/// greedy argmax chain, rolls the store back to the last accepted
-/// position, and returns the model's true next token. On return the
-/// store has consumed exactly `pending` plus the accepted drafts —
-/// the same state sequential greedy `decode_step` rounds would have
-/// left behind.
+/// Feeds `[pending, drafts...]` through the engine's multi-position
+/// verify pass, runs the rejection-sampling accept loop against
+/// `sampler` (see the module docs for the acceptance rule and its
+/// greedy/point-mass degenerations), rolls the store back to the last
+/// accepted position, and returns the model's true next token. On
+/// return the store has consumed exactly `pending` plus the accepted
+/// drafts — the same state sequential decode rounds would have left
+/// behind. For **point-mass** proposals (the default drafters),
+/// `sampler`'s RNG additionally advances exactly one draw per produced
+/// token (accepted drafts, then the correction or bonus), so spec and
+/// vanilla rounds interleave with same-seed token identity. Spread
+/// proposals spend extra randomness (accept coins, residual draws):
+/// the output *distribution* is still exactly the sampler's, but the
+/// sample path is no longer coupled to the vanilla RNG stream.
 ///
 /// The caller must ensure `store.len() + 1 + drafts.len()` does not
 /// exceed the store/context capacity (the verify pass writes the whole
 /// span before rollback).
+pub fn spec_step_sampled(
+    engine: &dyn Engine,
+    store: &mut dyn KvStore,
+    pending: u32,
+    drafts: &[DraftDist],
+    sampler: &mut Sampler,
+) -> SpecOutcome {
+    let base = store.len();
+    let mut feed = Vec::with_capacity(1 + drafts.len());
+    feed.push(pending);
+    feed.extend(drafts.iter().map(|d| d.token));
+    let logits = engine.score_tokens(store, &feed);
+    debug_assert_eq!(logits.len(), feed.len());
+    let verify_argmax: Vec<u32> = logits.iter().map(|l| argmax(l)).collect();
+
+    let mut accepted = 0usize;
+    let mut next = None;
+    let mut resampled = false;
+    for d in drafts {
+        let target = sampler.dist(&logits[accepted]);
+        if d.is_point() {
+            // Coupled replay (see module docs): draw the target's own
+            // token with vanilla's exact arithmetic and RNG stream;
+            // accepting iff it equals the draft IS the rejection rule
+            // for a point-mass proposal, and rejection hands us the
+            // residual-distributed correction for free.
+            let t_star = sampler.draw(&target);
+            if t_star == d.token {
+                accepted += 1;
+                continue;
+            }
+            resampled = !target.is_greedy();
+            next = Some(t_star);
+        } else {
+            // General rejection sampling: accept with probability
+            // min(1, p_target(d) / p_draft(d)). p_t >= p_d accepts
+            // with certainty, so no coin is spent on it.
+            let p_t = target.prob_of(d.token);
+            let p_d = d.prob_of(d.token).max(f64::MIN_POSITIVE);
+            if p_t >= p_d || sampler.next_uniform() * p_d < p_t {
+                accepted += 1;
+                continue;
+            }
+            // Residual resample, restricted to the target's post-filter
+            // support (tokens the truncated target can emit at all —
+            // what keeps truncated-support compositions exactly
+            // lossless).
+            let residual: Vec<(u32, f64)> = target
+                .support()
+                .iter()
+                .map(|&(t, p)| (t, (p - d.prob_of(t)).max(0.0)))
+                .filter(|&(_, p)| p > 0.0)
+                .collect();
+            let sum: f64 = residual.iter().map(|&(_, p)| p).sum();
+            next = Some(if sum > 0.0 {
+                let norm: Vec<(u32, f64)> = residual.iter().map(|&(t, p)| (t, p / sum)).collect();
+                sampler.draw_from(&norm)
+            } else {
+                // Numerically-empty residual (proposal dominates the
+                // target everywhere, so the reject branch has measure
+                // ~0): a fresh target draw is still the target law.
+                sampler.draw(&target)
+            });
+            resampled = true;
+        }
+        break;
+    }
+    let next = next.unwrap_or_else(|| {
+        // Every draft accepted: the bonus token from the last scored
+        // position, drawn exactly as a vanilla round would.
+        let target = sampler.dist(&logits[drafts.len()]);
+        sampler.draw(&target)
+    });
+    // Rollback: keep `pending` plus the accepted run, discard the
+    // rejected suffix's tokens and KV.
+    store.truncate(base + 1 + accepted);
+    SpecOutcome { accepted, next, resampled, verify_argmax, base }
+}
+
+/// One greedy draft-and-verify round: accepts the longest prefix of
+/// `drafts` matching the model's greedy argmax chain. This is
+/// [`spec_step_sampled`] with a greedy sampler and point-mass drafts —
+/// the temperature-0 special case, kept as the zero-state entry point
+/// for callers that have no sampler (benches, greedy-only tests).
 pub fn spec_step(
     engine: &dyn Engine,
     store: &mut dyn KvStore,
     pending: u32,
     drafts: &[u32],
 ) -> SpecOutcome {
-    let base = store.len();
-    let mut feed = Vec::with_capacity(1 + drafts.len());
-    feed.push(pending);
-    feed.extend_from_slice(drafts);
-    let logits = engine.score_tokens(store, &feed);
-    debug_assert_eq!(logits.len(), feed.len());
-    let verify_argmax: Vec<u32> = logits.iter().map(|l| argmax(l)).collect();
-    let mut accepted = 0usize;
-    while accepted < drafts.len() && verify_argmax[accepted] == drafts[accepted] {
-        accepted += 1;
-    }
-    // Rollback: keep `pending` plus the accepted run, discard the
-    // rejected suffix's tokens and KV.
-    store.truncate(base + 1 + accepted);
-    SpecOutcome { accepted, next: verify_argmax[accepted], verify_argmax, base }
+    let dd: Vec<DraftDist> = drafts.iter().map(|&t| DraftDist::point(t)).collect();
+    // A greedy sampler never touches its RNG, so the seed is inert.
+    let mut greedy = Sampler::new(0.0, 0);
+    spec_step_sampled(engine, store, pending, &dd, &mut greedy)
 }
 
-/// Result of [`run_greedy`].
+/// Result of [`run_greedy`] / [`run_sampled`].
 pub struct SpecRun {
-    /// The produced greedy tokens: `n` of them, or fewer if the
-    /// context window filled first.
+    /// The produced tokens: `n` of them, or fewer if the context
+    /// window filled first.
     pub tokens: Vec<u32>,
     /// Draft tokens proposed across all verify passes.
     pub drafted: u64,
     /// Draft tokens accepted across all verify passes.
     pub accepted: u64,
+    /// Verify rounds whose correction token came from residual
+    /// resampling (sampled mode only; always 0 for greedy runs).
+    pub resampled: u64,
 }
 
-/// Single-stream reference driver: prefill `prompt`, then produce `n`
-/// greedy tokens with up-to-`k`-token drafts from `drafter` verified
-/// through [`spec_step`] (rounds where the drafter proposes nothing
-/// fall back to one vanilla `decode_step`). This is the round protocol
-/// the coordinator's speculative path follows, minus scheduling — the
-/// differential tests and `benches/spec_decode.rs` both drive this one
-/// function, so the measured protocol and the tested protocol cannot
-/// drift apart.
-pub fn run_greedy(
+/// Single-stream sampled driver: prefill `prompt`, then produce `n`
+/// tokens with the sequence's own seeded `sampler`, speculating with
+/// up-to-`k`-token proposals from `drafter` verified through
+/// [`spec_step_sampled`] (rounds where the drafter proposes nothing
+/// fall back to one vanilla `decode_step` + sample). This is the round
+/// protocol the coordinator's speculative path follows, minus
+/// scheduling — the differential tests and `benches/spec_decode.rs`
+/// both drive this one function, so the measured protocol and the
+/// tested protocol cannot drift apart.
+pub fn run_sampled(
     engine: &dyn Engine,
     store: &mut dyn KvStore,
     prompt: &[u32],
     n: usize,
     drafter: &mut dyn Drafter,
     k: usize,
+    sampler: &mut Sampler,
 ) -> SpecRun {
     let max_seq = engine.config().max_seq;
     let l = engine.prefill(store, prompt);
-    let mut pending = argmax(l.row(prompt.len() - 1));
+    let mut pending = sampler.sample(l.row(prompt.len() - 1));
     let mut tokens = vec![pending];
     let mut history: Vec<u32> = prompt.to_vec();
     history.push(pending);
-    let (mut drafted, mut accepted) = (0u64, 0u64);
+    let (mut drafted, mut accepted, mut resampled) = (0u64, 0u64, 0u64);
     while tokens.len() < n {
         if store.len() >= max_seq {
             break; // context exhausted: the pending token cannot be fed
@@ -138,20 +256,22 @@ pub fn run_greedy(
         let kk = k
             .min(max_seq - store.len() - 1)
             .min((n - tokens.len()).saturating_sub(1));
-        let mut drafts = drafter.draft(&history, kk);
+        let mut drafts = drafter.draft_dist(&history, kk);
         drafts.truncate(kk);
         if drafts.is_empty() {
             let logits = engine.decode_step(store, pending);
-            pending = argmax(&logits);
+            pending = sampler.sample(&logits);
             tokens.push(pending);
             history.push(pending);
             continue;
         }
-        let o = spec_step(engine, store, pending, &drafts);
-        drafter.observe(&drafts, o.accepted, &o.verify_argmax);
+        let o = spec_step_sampled(engine, store, pending, &drafts, sampler);
+        let draft_toks: Vec<u32> = drafts.iter().map(|d| d.token).collect();
+        drafter.observe(&draft_toks, o.accepted, &o.verify_argmax);
         drafted += drafts.len() as u64;
         accepted += o.accepted as u64;
-        for &g in &drafts[..o.accepted] {
+        resampled += o.resampled as u64;
+        for &g in &draft_toks[..o.accepted] {
             tokens.push(g);
             history.push(g);
         }
@@ -165,7 +285,22 @@ pub fn run_greedy(
         );
     }
     tokens.truncate(n);
-    SpecRun { tokens, drafted, accepted }
+    SpecRun { tokens, drafted, accepted, resampled }
+}
+
+/// Single-stream greedy driver: [`run_sampled`] with a greedy sampler
+/// (which never touches its RNG) — kept as the zero-state entry point
+/// for greedy benches and tests.
+pub fn run_greedy(
+    engine: &dyn Engine,
+    store: &mut dyn KvStore,
+    prompt: &[u32],
+    n: usize,
+    drafter: &mut dyn Drafter,
+    k: usize,
+) -> SpecRun {
+    let mut greedy = Sampler::new(0.0, 0);
+    run_sampled(engine, store, prompt, n, drafter, k, &mut greedy)
 }
 
 #[cfg(test)]
@@ -192,6 +327,26 @@ mod tests {
         out
     }
 
+    /// Sampled reference stream with a fresh sampler built by `mk`.
+    fn sampled_reference(
+        eng: &NativeEngine,
+        prompt: &[u32],
+        n: usize,
+        mk: impl Fn() -> Sampler,
+    ) -> Vec<u32> {
+        let mut c = KvCache::new(eng.config());
+        let mut s = mk();
+        let l = eng.prefill(&mut c, prompt);
+        let mut tok = s.sample(l.row(prompt.len() - 1));
+        let mut out = vec![tok];
+        while out.len() < n {
+            let logits = eng.decode_step(&mut c, tok);
+            tok = s.sample(&logits);
+            out.push(tok);
+        }
+        out
+    }
+
     #[test]
     fn all_correct_drafts_are_accepted_with_a_bonus_token() {
         let eng = engine();
@@ -205,6 +360,7 @@ mod tests {
         let o = spec_step(&eng, &mut c, pending, &want[1..5]);
         assert_eq!(o.accepted, 4, "oracle drafts must all be accepted");
         assert_eq!(o.next, want[5], "bonus token must be the true 6th token");
+        assert!(!o.resampled, "greedy rounds never resample");
         assert_eq!(c.len(), prompt.len() + 5, "pending + 4 accepted consumed");
     }
 
@@ -242,5 +398,116 @@ mod tests {
         assert_eq!(c.len(), base + 3);
         // The verify chain prefix is the true token stream.
         assert_eq!(&o.verify_argmax[..3], &want[1..4]);
+    }
+
+    #[test]
+    fn sampled_point_mass_round_replays_vanilla_rng_exactly() {
+        // One sampled verify round with point-mass drafts must consume
+        // the RNG and produce tokens exactly as vanilla same-seed
+        // sampling would — whatever the drafts are.
+        let eng = engine();
+        let prompt = [3u32, 1, 4, 1, 5];
+        let mk = || Sampler::new(0.8, 123).with_top_k(Some(16));
+        let want = sampled_reference(&eng, &prompt, 5, mk);
+
+        for junk in [[7u32, 7, 7, 7], [250, 1, 9, 33]] {
+            // Draft junk (arbitrary acceptance pattern) and then finish
+            // the stream with vanilla rounds: the full token stream and
+            // the sampler state must match the reference.
+            let mut c = KvCache::new(eng.config());
+            let mut s = mk();
+            let l = eng.prefill(&mut c, &prompt);
+            let mut tokens = vec![s.sample(l.row(prompt.len() - 1))];
+            let dd: Vec<DraftDist> = junk.iter().map(|&t| DraftDist::point(t)).collect();
+            let o = spec_step_sampled(&eng, &mut c, tokens[0], &dd, &mut s);
+            tokens.extend(junk[..o.accepted].iter().copied());
+            tokens.push(o.next);
+            while tokens.len() < 5 {
+                let logits = eng.decode_step(&mut c, *tokens.last().unwrap());
+                tokens.push(s.sample(&logits));
+            }
+            tokens.truncate(5);
+            assert_eq!(tokens, want, "junk={junk:?}");
+        }
+    }
+
+    #[test]
+    fn run_sampled_is_token_identical_to_vanilla_for_point_drafters() {
+        let eng = engine();
+        let prompt = [10u32, 11, 12, 10, 11, 12, 10, 11];
+        let mk = || Sampler::new(0.9, 7).with_top_p(Some(0.9));
+        let want = sampled_reference(&eng, &prompt, 12, mk);
+        for k in [1usize, 3, 6] {
+            let mut d = SelfDraft::default();
+            let mut c = KvCache::new(eng.config());
+            let mut s = mk();
+            let run = run_sampled(&eng, &mut c, &prompt, 12, &mut d, k, &mut s);
+            assert_eq!(run.tokens, want, "k={k} diverged from vanilla sampling");
+            assert!(run.drafted > 0, "self-draft always proposes");
+        }
+    }
+
+    #[test]
+    fn spread_draft_rejection_resamples_within_the_target_support() {
+        // A proposal with zero target mass on its token is always
+        // rejected; the correction must come from the target's
+        // post-filter support and be flagged as a resample.
+        let eng = engine();
+        let prompt = [5u32, 6, 7, 8];
+        let mut c = KvCache::new(eng.config());
+        let l = eng.prefill(&mut c, &prompt);
+        let mut s = Sampler::new(0.8, 11).with_top_k(Some(4));
+        let pending = s.sample(l.row(prompt.len() - 1));
+        // The target support at the next position, from a side sampler
+        // (dist() is pure, so this consumes no randomness).
+        let mut probe = KvCache::new(eng.config());
+        eng.prefill(&mut probe, &prompt);
+        let next_logits = eng.decode_step(&mut probe, pending);
+        let target = s.dist(&next_logits);
+        // Proposal: spread over two tokens that are OUTSIDE the top-4
+        // support (tokens get ~0 target probability).
+        let outside: Vec<u32> = (0..256u32)
+            .filter(|t| target.prob_of(*t) == 0.0)
+            .take(2)
+            .collect();
+        let d = DraftDist {
+            token: outside[0],
+            probs: vec![(outside[0], 0.5), (outside[1], 0.5)],
+        };
+        let o = spec_step_sampled(&eng, &mut c, pending, &[d], &mut s);
+        assert_eq!(o.accepted, 0, "zero-target-mass draft must be rejected");
+        assert!(o.resampled, "correction must be flagged as a resample");
+        assert!(
+            target.prob_of(o.next) > 0.0,
+            "correction {} left the post-filter support",
+            o.next
+        );
+    }
+
+    #[test]
+    fn spread_draft_with_dominating_target_is_always_accepted() {
+        // p_target(d) >= p_draft(d) accepts deterministically (accept
+        // probability 1) — exercised via a proposal that spreads mass
+        // away from its own token.
+        let eng = engine();
+        let prompt = [1u32, 9, 9, 1];
+        let mut c = KvCache::new(eng.config());
+        let l = eng.prefill(&mut c, &prompt);
+        let mut s = Sampler::new(1.0, 5).with_top_k(Some(2));
+        let pending = s.sample(l.row(prompt.len() - 1));
+        let mut probe = KvCache::new(eng.config());
+        eng.prefill(&mut probe, &prompt);
+        let next_logits = eng.decode_step(&mut probe, pending);
+        let target = s.dist(&next_logits);
+        // Propose the target's most likely token but claim only 1% of
+        // the proposal mass on it: p_t >= p_d, certain accept.
+        let (top, p_top) = target.support()[0];
+        assert!(p_top >= 0.01);
+        let spread = DraftDist {
+            token: top,
+            probs: vec![(top, 0.01), (top.wrapping_add(1) % 256, 0.99)],
+        };
+        let o = spec_step_sampled(&eng, &mut c, pending, &[spread], &mut s);
+        assert_eq!(o.accepted, 1, "dominated proposal must always be accepted");
     }
 }

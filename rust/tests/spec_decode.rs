@@ -1,20 +1,38 @@
-//! Speculative-decoding acceptance harness: greedy draft-and-verify
-//! must be **token-identical** to vanilla sequential `decode_step`
-//! decoding for every (drafter, draft length, KV backend) combination —
-//! acceptance logic changes latency, never outputs — and the verify
-//! pass itself must be bit-identical to sequential decode on every
-//! backend. Deterministic oracle/adversarial drafters pin the
-//! accept-all (bonus token) and reject-all (rollback every round)
-//! extremes; the real ngram/self drafters cover the mixed paths.
+//! Speculative-decoding acceptance harness: draft-and-verify must be
+//! **token-identical** to vanilla sequential `decode_step` decoding for
+//! every (drafter, draft length, KV backend) combination — acceptance
+//! logic changes latency, never outputs — and the verify pass itself
+//! must be bit-identical to sequential decode on every backend.
+//! Deterministic oracle/adversarial drafters pin the accept-all (bonus
+//! token) and reject-all (rollback every round) extremes; the real
+//! ngram/self drafters cover the mixed paths.
+//!
+//! Sampled speculation is held to the same bar, per mode:
+//!
+//! - point-mass drafters (the default): same-seed **token identity**
+//!   with vanilla sampled decode across (temperature, top-k, top-p)
+//!   compositions and every KV backend — the coupled-replay accept
+//!   rule makes speculation sample-path identical, not merely
+//!   distribution-preserving;
+//! - spread (non-degenerate) proposals: a χ²-style check that the
+//!   produced-token distribution matches the target's post-filter
+//!   distribution (rejection + residual resampling is lossless even
+//!   when the proposal is wrong), plus support-containment;
+//! - rollback: sampled rejections release paged blocks exactly (leak
+//!   audit on f32 and Q8 pools).
 
 mod common;
 
 use common::{dense_engine, prompt_tokens, quant_engine};
-use itq3s::coordinator::sampler::argmax;
+use itq3s::coordinator::sampler::{argmax, Sampler};
 use itq3s::kvpaged::{KvQuant, PagedKvPool};
 use itq3s::model::native::Engine;
 use itq3s::model::{KvCache, KvStore, ModelConfig};
-use itq3s::spec::{run_greedy, Drafter, DrafterKind, NgramDrafter, SelfDraft, SpecRun};
+use itq3s::spec::{
+    run_greedy, run_sampled, spec_step_sampled, DraftDist, Drafter, DrafterKind, NgramDrafter,
+    SelfDraft, SpecRun,
+};
+use itq3s::util::XorShift;
 
 /// KV backends the sweep runs each combination against.
 #[derive(Clone, Copy, Debug)]
@@ -216,6 +234,223 @@ fn score_tokens_bitwise_matches_sequential_on_every_backend() {
                 assert_eq!(w, g, "{fmt} {backend:?}: position {i} logits diverged");
             }
         }
+    }
+}
+
+/// Vanilla sampled reference: first token from the prefill logits
+/// through `sampler`, then one `decode_step` + sample per token.
+fn vanilla_sampled(
+    eng: &dyn Engine,
+    store: &mut dyn KvStore,
+    prompt: &[u32],
+    n: usize,
+    sampler: &mut Sampler,
+) -> Vec<u32> {
+    let l = eng.prefill(store, prompt);
+    let mut tok = sampler.sample(l.row(prompt.len() - 1));
+    let mut out = vec![tok];
+    while out.len() < n {
+        let logits = eng.decode_step(store, tok);
+        tok = sampler.sample(&logits);
+        out.push(tok);
+    }
+    out
+}
+
+#[test]
+fn sampled_spec_token_identical_to_vanilla_for_every_filter_and_backend() {
+    // Point-mass drafters: same-seed sampled speculation must stream
+    // exactly the tokens vanilla sampling streams, for every filter
+    // composition (plain temperature, top-k, top-p, both) on every KV
+    // backend, whatever the drafter guesses.
+    let cfg = ModelConfig::test();
+    let eng = quant_engine("itq3_s", 51);
+    let n = 16;
+    let configs: [(f32, Option<usize>, Option<f32>); 4] = [
+        (0.7, None, None),
+        (0.9, Some(8), None),
+        (0.8, None, Some(0.85)),
+        (1.1, Some(12), Some(0.7)),
+    ];
+    let prompt = repetitive_prompt(12);
+    for (temperature, top_k, top_p) in configs {
+        let mk = || Sampler::new(temperature, 1234).with_top_k(top_k).with_top_p(top_p);
+        for backend in BACKENDS {
+            let want = with_store(backend, &cfg, |s| {
+                vanilla_sampled(&eng, s, &prompt, n, &mut mk())
+            });
+            for k in [1usize, 2, 4] {
+                let mut drafters: Vec<(&str, Box<dyn Drafter>)> = vec![
+                    ("ngram", DrafterKind::Ngram.build()),
+                    ("self", DrafterKind::SelfDraft.build()),
+                ];
+                for (name, drafter) in drafters.iter_mut() {
+                    let run = with_store(backend, &cfg, |s| {
+                        run_sampled(&eng, s, &prompt, n, drafter.as_mut(), k, &mut mk())
+                    });
+                    assert_eq!(
+                        run.tokens, want,
+                        "t={temperature} k={top_k:?} p={top_p:?} {name} draft_len={k} \
+                         {backend:?}: sampled speculation diverged from vanilla"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sampled_spec_spread_drafts_preserve_the_target_distribution() {
+    // A genuinely spread (non-point-mass) proposal takes the
+    // accept-ratio + residual-resampling branch. Over many
+    // independently-seeded single-draft rounds the token produced at
+    // the drafted position must (a) never leave the target's
+    // post-filter support and (b) follow the target distribution — the
+    // speculative-sampling losslessness theorem, checked χ²-style.
+    // Everything is seeded, so the statistic is deterministic.
+    let cfg = ModelConfig::test();
+    let eng = quant_engine("itq3_s", 61);
+    let prompt = prompt_tokens(8, 2);
+    let pending = 7u32;
+    let mk = |seed: u64| Sampler::new(0.8, seed).with_top_k(Some(8));
+
+    // Target distribution at the drafted position, from the vanilla
+    // logits (score_tokens is bit-identical to decode_step, so the
+    // verify pass sees these exact logits).
+    let mut probe = KvCache::new(&cfg);
+    eng.prefill(&mut probe, &prompt);
+    let logits = eng.decode_step(&mut probe, pending);
+    let target = mk(0).dist(&logits);
+    let support: Vec<(u32, f64)> = target.support().to_vec();
+    assert_eq!(support.len(), 8, "top-8 support expected");
+
+    // Proposal: spread over the target's two most likely tokens plus
+    // two tokens outside the support (always-rejected mass).
+    let outside: Vec<u32> = (0..256u32).filter(|t| target.prob_of(*t) == 0.0).take(2).collect();
+    let q = vec![
+        (support[0].0, 0.4f64),
+        (support[1].0, 0.3),
+        (outside[0], 0.2),
+        (outside[1], 0.1),
+    ];
+
+    let n_trials = 1200usize;
+    let mut counts: std::collections::HashMap<u32, usize> = Default::default();
+    let (mut accepts, mut resamples) = (0usize, 0usize);
+    let mut store = KvCache::new(&cfg);
+    eng.prefill(&mut store, &prompt);
+    let base = store.len();
+    let mut proposal_rng = XorShift::new(999);
+    for trial in 0..n_trials {
+        // The theorem requires the proposed token be drawn from q.
+        let mut u = proposal_rng.next_f64();
+        let mut tok = q[q.len() - 1].0;
+        for &(t, p) in &q {
+            if u < p {
+                tok = t;
+                break;
+            }
+            u -= p;
+        }
+        let d = DraftDist { token: tok, probs: q.clone() };
+        let mut s = mk(1000 + trial as u64);
+        let o = spec_step_sampled(&eng, &mut store, pending, &[d], &mut s);
+        let produced = if o.accepted == 1 {
+            accepts += 1;
+            tok
+        } else {
+            o.next
+        };
+        if o.resampled {
+            resamples += 1;
+        }
+        *counts.entry(produced).or_insert(0) += 1;
+        store.truncate(base); // reset for the next independent trial
+    }
+    assert!(
+        accepts > 0 && resamples > 0,
+        "both branches must fire (accepts={accepts}, resamples={resamples})"
+    );
+    // (a) support containment.
+    let total_in: usize = support.iter().map(|&(t, _)| *counts.get(&t).unwrap_or(&0)).sum();
+    assert_eq!(total_in, n_trials, "produced tokens left the post-filter support");
+    // (b) χ² against the target, pooling thin cells (exp < 15) so no
+    // single near-empty tail cell dominates the statistic.
+    let (mut chi2, mut pooled_exp, mut pooled_obs) = (0.0f64, 0.0f64, 0.0f64);
+    for &(t, p) in &support {
+        let exp = p * n_trials as f64;
+        let obs = *counts.get(&t).unwrap_or(&0) as f64;
+        if exp < 15.0 {
+            pooled_exp += exp;
+            pooled_obs += obs;
+        } else {
+            chi2 += (obs - exp) * (obs - exp) / exp;
+        }
+    }
+    if pooled_exp > 0.0 {
+        chi2 += (pooled_obs - pooled_exp) * (pooled_obs - pooled_exp) / pooled_exp;
+    }
+    // <= 8 cells → <= 7 degrees of freedom; χ²₇(0.999) ≈ 24.3. The
+    // seeds make this a fixed number; 35 leaves wide margin, while an
+    // implementation that skips residual restriction or resampling
+    // lands in the hundreds.
+    assert!(chi2 < 35.0, "chi2={chi2} (counts={counts:?})");
+}
+
+/// Always proposes `tok` — under sampling this is rejected most rounds,
+/// hammering the rollback path.
+struct ConstDrafter {
+    tok: u32,
+}
+
+impl Drafter for ConstDrafter {
+    fn draft(&mut self, _history: &[u32], k: usize) -> Vec<u32> {
+        vec![self.tok; k]
+    }
+    fn observe(&mut self, _p: &[u32], _a: usize, _v: &[u32]) {}
+    fn name(&self) -> &'static str {
+        "const"
+    }
+}
+
+#[test]
+fn sampled_rejection_rollback_leaks_no_paged_blocks() {
+    // Rejection-heavy sampled speculation on the paged pools: every
+    // rolled-back suffix must return its tail blocks, leaving exactly
+    // the blocks the surviving tokens occupy — and nothing after
+    // release.
+    let cfg = ModelConfig::test();
+    let eng = quant_engine("itq3_s", 63);
+    let prompt = prompt_tokens(9, 4);
+    let n = 14;
+    for (quant, bt) in [(KvQuant::F32, 4usize), (KvQuant::Q8, 4), (KvQuant::F32, 16)] {
+        let mut pool = PagedKvPool::new(&cfg, bt, quant, 64 << 20);
+        let id = pool.create_seq();
+        let mut drafter = ConstDrafter { tok: 201 };
+        let mut sampler = Sampler::new(0.9, 31).with_top_k(Some(4));
+        let run = run_sampled(
+            &eng,
+            &mut pool.seq_view(id),
+            &prompt,
+            n,
+            &mut drafter,
+            4,
+            &mut sampler,
+        );
+        assert_eq!(run.tokens.len(), n);
+        assert!(run.drafted > 0, "const drafter always proposes");
+        // The store holds prompt + everything fed; the pool must hold
+        // exactly the blocks for that many tokens — a leaked
+        // speculative block would show up here.
+        let held = prompt.len() + run.tokens.len() - 1;
+        let expected_blocks = held.div_ceil(bt);
+        assert_eq!(
+            pool.in_use_blocks(),
+            expected_blocks,
+            "{quant:?} bt={bt}: rollback leaked blocks"
+        );
+        pool.release_seq(id);
+        assert_eq!(pool.in_use_blocks(), 0, "{quant:?} bt={bt}: release leaked blocks");
     }
 }
 
