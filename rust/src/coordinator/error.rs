@@ -1,0 +1,138 @@
+//! Structured serving errors — the typed failure vocabulary of the
+//! protocol edge.
+//!
+//! Every way a request can fail *before producing a normal `Done`
+//! terminal* is one of these variants, serialized on the wire as
+//!
+//! ```json
+//! {"error":{"code":"overloaded","message":"…","retry_after_ms":120}}
+//! ```
+//!
+//! (`retry_after_ms` appears only on [`ServeError::Overloaded`]).
+//! Failures *during* generation keep the richer partial-result shape:
+//! a deadline that expires mid-stream ends in `Done` with reason
+//! `deadline_exceeded` carrying the partial text, not in this error
+//! object. The full wire contract is `docs/PROTOCOL.md` § Errors; the
+//! failure-domain map (which subsystem raises which code, and the test
+//! enforcing it) is `docs/ARCHITECTURE.md` § "Failure domains &
+//! recovery".
+
+use crate::util::json::Json;
+
+/// Typed terminal failure for a request (or a malformed protocol line).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission queue is at `--max-queue-depth`; retry after the hint.
+    Overloaded { retry_after_ms: u64 },
+    /// The request's deadline expired before any tokens were produced.
+    /// (Mid-stream expiry surfaces as `Done{reason: DeadlineExceeded}`
+    /// with partial text instead.)
+    DeadlineExceeded,
+    /// The client went away; nobody is listening for the result.
+    Cancelled,
+    /// The request line could not be understood (malformed JSON,
+    /// unknown op, invalid field).
+    BadRequest(String),
+    /// The engine failed this request unrecoverably — e.g. the request
+    /// was implicated in repeated engine panics across worker restarts.
+    EngineFailure(String),
+    /// The server is draining for shutdown and admits no new work.
+    ShuttingDown,
+}
+
+impl ServeError {
+    /// Stable wire code (the `error.code` field).
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::Overloaded { .. } => "overloaded",
+            ServeError::DeadlineExceeded => "deadline_exceeded",
+            ServeError::Cancelled => "cancelled",
+            ServeError::BadRequest(_) => "bad_request",
+            ServeError::EngineFailure(_) => "engine_failure",
+            ServeError::ShuttingDown => "shutting_down",
+        }
+    }
+
+    /// Human-readable detail (the `error.message` field).
+    pub fn message(&self) -> String {
+        match self {
+            ServeError::Overloaded { retry_after_ms } => {
+                format!("admission queue full; retry after ~{retry_after_ms} ms")
+            }
+            ServeError::DeadlineExceeded => "deadline expired before completion".to_string(),
+            ServeError::Cancelled => "request cancelled".to_string(),
+            ServeError::BadRequest(m) => m.clone(),
+            ServeError::EngineFailure(m) => format!("engine failure: {m}"),
+            ServeError::ShuttingDown => "server is shutting down".to_string(),
+        }
+    }
+
+    /// Backoff hint — `Some` only for [`ServeError::Overloaded`].
+    pub fn retry_after_ms(&self) -> Option<u64> {
+        match self {
+            ServeError::Overloaded { retry_after_ms } => Some(*retry_after_ms),
+            _ => None,
+        }
+    }
+
+    /// The wire shape: `{"error":{"code","message"[,"retry_after_ms"]}}`.
+    pub fn to_json(&self) -> Json {
+        let mut inner = vec![
+            ("code", Json::str(self.code())),
+            ("message", Json::str(self.message())),
+        ];
+        if let Some(ms) = self.retry_after_ms() {
+            inner.push(("retry_after_ms", Json::num(ms as f64)));
+        }
+        Json::obj(vec![("error", Json::obj(inner))])
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code(), self.message())
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_shape_has_code_and_message() {
+        let j = ServeError::BadRequest("unknown op 'generat'".into()).to_json();
+        let e = j.get("error").expect("error envelope");
+        assert_eq!(e.get("code").unwrap().as_str(), Some("bad_request"));
+        assert_eq!(e.get("message").unwrap().as_str(), Some("unknown op 'generat'"));
+        assert!(e.get("retry_after_ms").is_none());
+    }
+
+    #[test]
+    fn overloaded_carries_retry_hint() {
+        let err = ServeError::Overloaded { retry_after_ms: 120 };
+        let j = err.to_json();
+        let e = j.get("error").unwrap();
+        assert_eq!(e.get("code").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(e.get("retry_after_ms").unwrap().as_u64(), Some(120));
+        assert_eq!(err.retry_after_ms(), Some(120));
+    }
+
+    #[test]
+    fn codes_are_stable_and_distinct() {
+        let all = [
+            ServeError::Overloaded { retry_after_ms: 1 }.code(),
+            ServeError::DeadlineExceeded.code(),
+            ServeError::Cancelled.code(),
+            ServeError::BadRequest(String::new()).code(),
+            ServeError::EngineFailure(String::new()).code(),
+            ServeError::ShuttingDown.code(),
+        ];
+        let set: std::collections::BTreeSet<_> = all.iter().collect();
+        assert_eq!(set.len(), all.len());
+        // Round-trippable through the wire shape and Display.
+        let s = ServeError::ShuttingDown.to_string();
+        assert!(s.starts_with("shutting_down: "));
+    }
+}

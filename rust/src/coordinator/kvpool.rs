@@ -58,6 +58,13 @@ impl KvPool {
         self.pool.peak_bytes
     }
 
+    /// Drop all cached (unreferenced) prefix blocks; live sequences are
+    /// unaffected. Admin/testing hook — leak audits call this so
+    /// `in_use` reflects live sequences only.
+    pub fn clear_prefix_cache(&mut self) {
+        self.pool.clear_prefix_cache();
+    }
+
     /// Could a sequence of `tokens` prompt tokens (plus one decode
     /// token) *ever* fit this pool, even with every other block free?
     /// `false` means the request must be rejected, not queued — waiting

@@ -61,6 +61,20 @@ pub struct Metrics {
     /// Paged-pool snapshot fragment (block/prefix stats), refreshed on
     /// each stats request.
     pub kv_pool: Json,
+    /// Connection handlers that exited with an IO/protocol error
+    /// (logged once per connection by the server accept loop).
+    pub conn_errors: u64,
+    /// Requests shed at admission because the queue was at
+    /// `--max-queue-depth` (each received a typed `Overloaded` error
+    /// with a `retry_after_ms` hint).
+    pub rejected_overload: u64,
+    /// Requests whose deadline expired — queued or mid-generation.
+    pub deadline_expired: u64,
+    /// Times the worker caught an engine panic and rebuilt the engine
+    /// scratch + KV pool, requeuing the surviving sequences.
+    pub worker_restarts: u64,
+    /// Admission-queue depth sampled once per scheduling round.
+    pub queue_depth: RingStats,
 }
 
 impl Default for Metrics {
@@ -95,6 +109,11 @@ impl Metrics {
             spec_run_len: RingStats::new(WINDOW),
             kv_peak_bytes: 0,
             kv_pool: Json::Null,
+            conn_errors: 0,
+            rejected_overload: 0,
+            deadline_expired: 0,
+            worker_restarts: 0,
+            queue_depth: RingStats::new(WINDOW),
         }
     }
 
@@ -172,6 +191,16 @@ impl Metrics {
             "spec_accept_rate_sampled_p99",
             Json::num(self.spec_accept_rate_sampled.p99()),
         ));
+        // Robustness keys (PR 6), appended last for the same
+        // append-only reason.
+        fields.push(("conn_errors", Json::num(self.conn_errors as f64)));
+        fields.push(("rejected_overload", Json::num(self.rejected_overload as f64)));
+        fields.push(("deadline_expired", Json::num(self.deadline_expired as f64)));
+        fields.push(("worker_restarts", Json::num(self.worker_restarts as f64)));
+        fields.push(("queue_depth_mean", Json::num(self.queue_depth.mean())));
+        fields.push(("queue_depth_p50", Json::num(self.queue_depth.p50())));
+        fields.push(("queue_depth_p99", Json::num(self.queue_depth.p99())));
+        fields.push(("queue_depth_max", Json::num(self.queue_depth.max())));
         Json::obj(fields)
     }
 }
@@ -243,6 +272,34 @@ mod tests {
             "spec_accept_rate_p50",
             "spec_accept_rate_p99",
             "spec_run_len_mean",
+        ] {
+            assert!(s.get(key).is_some(), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn robustness_keys_surface_without_touching_old_keys() {
+        let mut m = Metrics::new();
+        m.conn_errors = 2;
+        m.rejected_overload = 7;
+        m.deadline_expired = 3;
+        m.worker_restarts = 1;
+        m.queue_depth.push(4.0);
+        m.queue_depth.push(6.0);
+        let s = m.snapshot();
+        assert_eq!(s.get("conn_errors").unwrap().as_u64(), Some(2));
+        assert_eq!(s.get("rejected_overload").unwrap().as_u64(), Some(7));
+        assert_eq!(s.get("deadline_expired").unwrap().as_u64(), Some(3));
+        assert_eq!(s.get("worker_restarts").unwrap().as_u64(), Some(1));
+        assert_eq!(s.get("queue_depth_max").unwrap().as_f64(), Some(6.0));
+        assert!(s.get("queue_depth_p50").unwrap().as_f64().unwrap() >= 4.0);
+        assert!(s.get("queue_depth_p99").unwrap().as_f64().unwrap() >= 4.0);
+        // Every pre-existing key family keeps its old name.
+        for key in [
+            "requests_cancelled",
+            "spec_resample_total",
+            "decode_step_ms_p50",
+            "kv_peak_bytes",
         ] {
             assert!(s.get(key).is_some(), "missing {key}");
         }

@@ -39,7 +39,24 @@
 //!
 //! Clients talk to the worker over channels; each request gets an
 //! unbounded event stream so a slow client never blocks the batch.
+//!
+//! **Fault tolerance.** The scheduling round runs under `catch_unwind`:
+//! an engine panic fails only the sequences implicated in the poisoned
+//! state (after [`MAX_SEQ_FAULTS`] consecutive panics they get a typed
+//! [`ServeError::EngineFailure`]), the engine scratch and KV pool are
+//! rebuilt, and the survivors are requeued from the same snapshots
+//! preemption uses. Requests carry wall-clock deadlines (per-request
+//! `deadline_ms`, tightened by the server-wide
+//! [`CoordinatorConfig::request_timeout_ms`]) checked while queued, per
+//! prefill chunk, and per decode round; the admission queue is bounded
+//! at [`CoordinatorConfig::max_queue_depth`], shedding new work with a
+//! typed `Overloaded` + `retry_after_ms` hint; and shutdown drains
+//! in-flight requests instead of cancelling them. Each mechanism is
+//! exercised deterministically by the failpoint chaos suite
+//! (`rust/tests/chaos.rs`; see `docs/ARCHITECTURE.md` § "Failure
+//! domains & recovery").
 
+pub mod error;
 pub mod kvpool;
 pub mod metrics;
 pub mod request;
@@ -49,13 +66,23 @@ use crate::eval::{perplexity, PplReport};
 use crate::kvpaged::{KvQuant, SeqId};
 use crate::model::native::Engine;
 use crate::model::tokenizer;
+use crate::model::ModelConfig;
 use crate::spec;
 use crate::util::json::Json;
 use anyhow::Result;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::{Duration, Instant};
 
+pub use error::ServeError;
 pub use request::{Event, FinishReason, GenRequest};
+
+/// Consecutive engine panics a sequence may be implicated in before it
+/// is failed with a typed [`ServeError::EngineFailure`] instead of
+/// being requeued — bounds the damage of a poison-pill request that
+/// deterministically crashes the engine.
+const MAX_SEQ_FAULTS: u32 = 3;
 
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
@@ -82,6 +109,17 @@ pub struct CoordinatorConfig {
     pub spec_draft_len: usize,
     /// Which zero-artifact drafter speculating sequences use.
     pub spec_drafter: spec::DrafterKind,
+    /// Server-wide default deadline in milliseconds, measured from
+    /// intake (`None` = none). A request's own `deadline_ms` can only
+    /// tighten it: the effective deadline is the minimum of the two.
+    pub request_timeout_ms: Option<u64>,
+    /// Admission-queue bound: a new request arriving while this many
+    /// are already waiting is shed with a typed
+    /// [`ServeError::Overloaded`] carrying a `retry_after_ms` hint
+    /// derived from the observed decode p50. Internal requeues
+    /// (preemption, panic recovery) re-enter at the queue front and
+    /// are exempt — shedding admitted work would lose streamed tokens.
+    pub max_queue_depth: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -94,6 +132,8 @@ impl Default for CoordinatorConfig {
             kv_quant: KvQuant::F32,
             spec_draft_len: 0,
             spec_drafter: spec::DrafterKind::Ngram,
+            request_timeout_ms: None,
+            max_queue_depth: 256,
         }
     }
 }
@@ -102,6 +142,12 @@ enum Cmd {
     Generate(GenRequest, Sender<Event>),
     Score(String, Sender<PplReport>),
     Stats(Sender<Json>),
+    /// Drop all cached (unreferenced) prefix blocks — admin/testing
+    /// hook, used by leak audits to reduce the pool to live state only.
+    ClearPrefixCache(Sender<()>),
+    /// A server connection handler exited with an error (counted under
+    /// `conn_errors`; the handler already logged the detail).
+    ConnError,
     Shutdown,
 }
 
@@ -135,6 +181,9 @@ struct SeqState {
     /// demand covers the verify writes; cleared when capacity is
     /// tight).
     round_drafts: Vec<spec::DraftDist>,
+    /// Intake time (when the request entered the queue), so
+    /// `ttft_ms`/`total_ms` include queue wait — the latency the client
+    /// actually experienced.
     submitted: Instant,
     ttft_ms: Option<f64>,
     /// High-water mark of prompt tokens counted into
@@ -142,11 +191,26 @@ struct SeqState {
     /// same tokens (and of regenerated decode history) is not
     /// double-counted as client prompt input.
     counted_prompt: usize,
+    /// Effective wall-clock deadline (per-request `deadline_ms` min
+    /// server `request_timeout_ms`, both from intake), `None` = none.
+    deadline: Option<Instant>,
+    /// Consecutive engine panics this sequence was implicated in;
+    /// cleared by any cleanly completed round, failed typed at
+    /// [`MAX_SEQ_FAULTS`].
+    faults: u32,
+    /// The terminal event was already sent. Guards the window between
+    /// `finish()` and retirement: a panic there must not requeue the
+    /// sequence and produce a second terminal.
+    done: bool,
 }
 
 struct WaitingReq {
     req: GenRequest,
     events: Sender<Event>,
+    /// Intake time — deadlines are measured from here, and requeues
+    /// carry the original so a preempted/restarted request's clock
+    /// never resets.
+    enqueued: Instant,
     /// `None` until the first admission attempt tokenizes the prompt.
     state: Option<SeqState>,
 }
@@ -234,7 +298,7 @@ impl Coordinator {
             match ev {
                 Event::Heartbeat => {}
                 Event::Token { text: ref t, .. } => text.push_str(t),
-                Event::Done { .. } => {
+                Event::Done { .. } | Event::Error(_) => {
                     done = Some(ev);
                     break;
                 }
@@ -256,6 +320,24 @@ impl Coordinator {
         rx.recv().map_err(|_| anyhow::anyhow!("worker gone"))
     }
 
+    /// Drop all cached (unreferenced) prefix blocks. Live sequences are
+    /// unaffected; used by leak audits to assert `in_use == 0` after a
+    /// workload fully drains.
+    pub fn clear_prefix_cache(&self) -> Result<()> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Cmd::ClearPrefixCache(tx))
+            .map_err(|_| anyhow::anyhow!("worker gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("worker gone"))
+    }
+
+    /// Record a connection-handler failure (fire-and-forget; called by
+    /// the server accept loop after logging the error).
+    pub fn note_conn_error(&self) {
+        let _ = self.tx.send(Cmd::ConnError);
+    }
+
+    /// Stop accepting work and wait for in-flight requests to drain.
     pub fn shutdown(mut self) {
         let _ = self.tx.send(Cmd::Shutdown);
         if let Some(h) = self.handle.take() {
@@ -299,18 +381,51 @@ fn deliver_and_resolve(
         Some(FinishReason::ContextFull)
     } else if stop_hit {
         Some(FinishReason::StopCondition)
+    } else if seq.state.deadline.is_some_and(|d| Instant::now() >= d) {
+        // Lowest-priority branch: a request that finished anyway keeps
+        // its real reason. `now()` is only evaluated when a deadline is
+        // actually set, so deadline-free serving takes no clock reads.
+        Some(FinishReason::DeadlineExceeded)
     } else {
         None
     }
 }
 
-/// Finish bookkeeping shared by every retirement site.
-fn finish(seq: &ActiveSeq, metrics: &mut metrics::Metrics, reason: FinishReason) {
+/// Finish bookkeeping shared by every retirement site. Marks the
+/// sequence `done` so a panic between here and retirement cannot
+/// requeue it for a second terminal.
+fn finish(seq: &mut ActiveSeq, metrics: &mut metrics::Metrics, reason: FinishReason) {
     seq.send_done(reason);
+    seq.state.done = true;
     metrics.requests_finished += 1;
     if reason == FinishReason::Cancelled {
         metrics.requests_cancelled += 1;
     }
+    if reason == FinishReason::DeadlineExceeded {
+        metrics.deadline_expired += 1;
+    }
+}
+
+/// The request's effective deadline: per-request `deadline_ms` min the
+/// server-wide `request_timeout_ms`, both measured from intake.
+fn effective_deadline(
+    req: &GenRequest,
+    cfg: &CoordinatorConfig,
+    from: Instant,
+) -> Option<Instant> {
+    let ms = match (req.deadline_ms, cfg.request_timeout_ms) {
+        (Some(a), Some(b)) => Some(a.min(b)),
+        (a, b) => a.or(b),
+    }?;
+    Some(from + Duration::from_millis(ms))
+}
+
+/// Backoff hint for shed requests: queue depth × observed decode p50,
+/// clamped to [1 ms, 60 s]. Crude but honest — it scales with how much
+/// work is ahead of the client at current service speed.
+fn retry_after_hint(metrics: &metrics::Metrics, depth: usize) -> u64 {
+    let per_slot_ms = metrics.decode_step_ms.p50().max(1.0);
+    (per_slot_ms * depth.max(1) as f64).clamp(1.0, 60_000.0) as u64
 }
 
 fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
@@ -322,21 +437,28 @@ fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
         cfg.kv_quant,
     );
     let mut metrics = metrics::Metrics::new();
-    let mut waiting: std::collections::VecDeque<WaitingReq> = std::collections::VecDeque::new();
+    let mut waiting: VecDeque<WaitingReq> = VecDeque::new();
     let mut active: Vec<ActiveSeq> = Vec::new();
-    let mut shutdown = false;
+    // Drain-then-stop: once set, new work is shed with `ShuttingDown`
+    // and the worker exits only when everything in flight has resolved
+    // (bounded by `max_new_tokens`; dead clients fall to the heartbeat
+    // probe), so shutdown never truncates an accepted stream.
+    let mut draining = false;
     let mut admit_counter: u64 = 0;
 
-    while !shutdown {
+    loop {
         // ---- 0. intake ----------------------------------------------
         loop {
+            if draining && active.is_empty() && waiting.is_empty() {
+                return;
+            }
             let cmd = if active.is_empty() && waiting.is_empty() {
                 // Idle: block (with timeout so shutdown-by-drop works).
                 match rx.recv_timeout(Duration::from_millis(100)) {
                     Ok(c) => c,
                     Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
                     Err(_) => {
-                        shutdown = true;
+                        draining = true;
                         break;
                     }
                 }
@@ -345,7 +467,7 @@ fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
                     Ok(c) => c,
                     Err(std::sync::mpsc::TryRecvError::Empty) => break,
                     Err(_) => {
-                        shutdown = true;
+                        draining = true;
                         break;
                     }
                 }
@@ -353,467 +475,682 @@ fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
             match cmd {
                 Cmd::Generate(req, tx) => {
                     metrics.requests_submitted += 1;
-                    waiting.push_back(WaitingReq { req, events: tx, state: None });
+                    if draining {
+                        let _ = tx.send(Event::Error(ServeError::ShuttingDown));
+                    } else if waiting.len() >= cfg.max_queue_depth {
+                        // Bounded admission: the round's own shed order
+                        // (drop drafts, then preempt) happens in the
+                        // capacity loop; rejecting *new* work is the
+                        // last resort and the only shed clients see.
+                        metrics.rejected_overload += 1;
+                        let hint = retry_after_hint(&metrics, waiting.len());
+                        let _ = tx.send(Event::Error(ServeError::Overloaded {
+                            retry_after_ms: hint,
+                        }));
+                    } else {
+                        waiting.push_back(WaitingReq {
+                            req,
+                            events: tx,
+                            enqueued: Instant::now(),
+                            state: None,
+                        });
+                    }
                 }
                 Cmd::Score(text, tx) => {
                     let _ = tx.send(perplexity(engine.as_ref(), &text));
                 }
                 Cmd::Stats(tx) => {
-                    metrics.kv_peak_bytes = pool.peak_bytes();
+                    // Max-accumulate: the pool is rebuilt (peak reset)
+                    // on panic recovery, but the serving-lifetime peak
+                    // must survive the restart.
+                    metrics.kv_peak_bytes = metrics.kv_peak_bytes.max(pool.peak_bytes());
                     metrics.kv_pool = pool.stats_json();
                     let _ = tx.send(metrics.snapshot());
                 }
+                Cmd::ClearPrefixCache(tx) => {
+                    pool.clear_prefix_cache();
+                    let _ = tx.send(());
+                }
+                Cmd::ConnError => {
+                    metrics.conn_errors += 1;
+                }
                 Cmd::Shutdown => {
-                    shutdown = true;
+                    draining = true;
                 }
             }
         }
-        if shutdown {
-            break;
+        if active.is_empty() && waiting.is_empty() {
+            if draining {
+                return;
+            }
+            continue;
         }
+        metrics.queue_depth.push(waiting.len() as f64);
 
-        // ---- 1. admission -------------------------------------------
-        while active.len() < cfg.max_batch {
-            let Some(w) = waiting.pop_front() else { break };
-            // Probe the client before paying for tokenize/map/prefill.
-            if w.events.send(Event::Heartbeat).is_err() {
-                metrics.requests_cancelled += 1;
-                metrics.requests_finished += 1;
-                continue;
-            }
-            // First attempt tokenizes; requeues and preemptions carry
-            // their state back so nothing is recomputed or restarted.
-            let state = match w.state {
-                Some(s) => s,
-                None => {
-                    let mut prompt = tokenizer::encode(&w.req.prompt);
-                    // Truncate over-long prompts from the front, keeping BOS.
-                    let ctx_cap = model_cfg.max_seq.saturating_sub(2);
-                    if prompt.len() > ctx_cap {
-                        let keep = ctx_cap - 1;
-                        let tail = prompt.split_off(prompt.len() - keep);
-                        prompt = std::iter::once(tokenizer::BOS).chain(tail).collect();
-                    }
-                    // Speculation is lossless in every decoding mode
-                    // (the verify pass replays the sequence's own
-                    // sampler), so only the coordinator switch and the
-                    // per-request opt-out gate it.
-                    let speculative = cfg.spec_draft_len > 0 && w.req.speculation;
-                    SeqState {
-                        prompt_tokens: prompt.len(),
-                        prefill: prompt,
-                        generated: Vec::new(),
-                        pending: None,
-                        sampler: sampler::Sampler::new(w.req.temperature, w.req.seed)
-                            .with_top_k(w.req.top_k)
-                            .with_top_p(w.req.top_p),
-                        drafter: speculative.then(|| cfg.spec_drafter.build()),
-                        round_drafts: Vec::new(),
-                        submitted: Instant::now(),
-                        ttft_ms: None,
-                        counted_prompt: 0,
-                    }
-                }
+        // The scheduling round is the panic isolation domain: an engine
+        // panic (poisoned scratch, failpoint, kernel bug) unwinds to
+        // here, and recovery rebuilds the engine scratch + KV pool and
+        // requeues the survivors. The `AssertUnwindSafe` is justified
+        // by that recovery: everything the closure mutates is either
+        // rebuilt wholesale (pool, engine scratch) or restored from
+        // per-sequence snapshots designed to survive interruption at
+        // any point (the same ones preemption uses).
+        let round = catch_unwind(AssertUnwindSafe(|| {
+            run_round(
+                engine.as_ref(),
+                &cfg,
+                &model_cfg,
+                &mut pool,
+                &mut metrics,
+                &mut waiting,
+                &mut active,
+                &mut admit_counter,
+            )
+        }));
+        if round.is_err() {
+            restart_after_panic(
+                engine.as_ref(),
+                &cfg,
+                &model_cfg,
+                &mut pool,
+                &mut metrics,
+                &mut waiting,
+                &mut active,
+            );
+        }
+    }
+}
+
+/// One scheduling round: deadline sweep, admission, liveness probe,
+/// draft planning, capacity/preemption, chunked prefill, decode, and
+/// retirement. Extracted from the worker loop so the whole round runs
+/// under one `catch_unwind` — see `restart_after_panic` for what
+/// happens when it unwinds.
+#[allow(clippy::too_many_arguments)]
+fn run_round(
+    engine: &dyn Engine,
+    cfg: &CoordinatorConfig,
+    model_cfg: &ModelConfig,
+    pool: &mut kvpool::KvPool,
+    metrics: &mut metrics::Metrics,
+    waiting: &mut VecDeque<WaitingReq>,
+    active: &mut Vec<ActiveSeq>,
+    admit_counter: &mut u64,
+) {
+    {
+        // ---- 0.5 queued-deadline sweep ------------------------------
+        // Expire waiting requests before spending admission work on
+        // them. A requeued sequence keeps its partial text; a request
+        // that never ran reports empty counters. Both get the same
+        // partial-result `Done{DeadlineExceeded}` terminal that
+        // mid-generation expiry produces.
+        let now = Instant::now();
+        waiting.retain(|w| {
+            let deadline = match &w.state {
+                Some(s) => s.deadline,
+                None => effective_deadline(&w.req, cfg, w.enqueued),
             };
-            // A prompt whose span exceeds the whole pool can never be
-            // admitted; queueing it would head-of-line-block and spin
-            // forever. Reject it outright.
-            if !pool.fits_ever(state.prefill.len()) {
-                metrics.requests_rejected += 1;
-                let _ = w.events.send(Event::Done {
-                    reason: FinishReason::ContextFull,
-                    text: tokenizer::decode(&state.generated),
-                    prompt_tokens: state.prompt_tokens,
-                    gen_tokens: state.generated.len(),
-                    ttft_ms: state.ttft_ms.unwrap_or(0.0),
-                    total_ms: state.submitted.elapsed().as_secs_f64() * 1000.0,
+            if !deadline.is_some_and(|d| now >= d) {
+                return true;
+            }
+            metrics.deadline_expired += 1;
+            metrics.requests_finished += 1;
+            let (text, prompt_tokens, gen_tokens, ttft_ms) = match &w.state {
+                Some(s) => (
+                    tokenizer::decode(&s.generated),
+                    s.prompt_tokens,
+                    s.generated.len(),
+                    s.ttft_ms.unwrap_or(0.0),
+                ),
+                None => (String::new(), 0, 0, 0.0),
+            };
+            let _ = w.events.send(Event::Done {
+                reason: FinishReason::DeadlineExceeded,
+                text,
+                prompt_tokens,
+                gen_tokens,
+                ttft_ms,
+                total_ms: w.enqueued.elapsed().as_secs_f64() * 1000.0,
+            });
+            false
+        });
+    }
+
+    // ---- 1. admission -------------------------------------------
+    while active.len() < cfg.max_batch {
+        let Some(w) = waiting.pop_front() else { break };
+        // Probe the client before paying for tokenize/map/prefill.
+        if w.events.send(Event::Heartbeat).is_err() {
+            metrics.requests_cancelled += 1;
+            metrics.requests_finished += 1;
+            continue;
+        }
+        // First attempt tokenizes; requeues and preemptions carry
+        // their state back so nothing is recomputed or restarted.
+        let state = match w.state {
+            Some(s) => s,
+            None => {
+                let mut prompt = tokenizer::encode(&w.req.prompt);
+                // Truncate over-long prompts from the front, keeping BOS.
+                let ctx_cap = model_cfg.max_seq.saturating_sub(2);
+                if prompt.len() > ctx_cap {
+                    let keep = ctx_cap - 1;
+                    let tail = prompt.split_off(prompt.len() - keep);
+                    prompt = std::iter::once(tokenizer::BOS).chain(tail).collect();
+                }
+                // Speculation is lossless in every decoding mode
+                // (the verify pass replays the sequence's own
+                // sampler), so only the coordinator switch and the
+                // per-request opt-out gate it.
+                let speculative = cfg.spec_draft_len > 0 && w.req.speculation;
+                SeqState {
+                    prompt_tokens: prompt.len(),
+                    prefill: prompt,
+                    generated: Vec::new(),
+                    pending: None,
+                    sampler: sampler::Sampler::new(w.req.temperature, w.req.seed)
+                        .with_top_k(w.req.top_k)
+                        .with_top_p(w.req.top_p),
+                    drafter: speculative.then(|| cfg.spec_drafter.build()),
+                    round_drafts: Vec::new(),
+                    submitted: w.enqueued,
+                    ttft_ms: None,
+                    counted_prompt: 0,
+                    deadline: effective_deadline(&w.req, cfg, w.enqueued),
+                    faults: 0,
+                    done: false,
+                }
+            }
+        };
+        // A prompt whose span exceeds the whole pool can never be
+        // admitted; queueing it would head-of-line-block and spin
+        // forever. Reject it outright.
+        if !pool.fits_ever(state.prefill.len()) {
+            metrics.requests_rejected += 1;
+            let _ = w.events.send(Event::Done {
+                reason: FinishReason::ContextFull,
+                text: tokenizer::decode(&state.generated),
+                prompt_tokens: state.prompt_tokens,
+                gen_tokens: state.generated.len(),
+                ttft_ms: state.ttft_ms.unwrap_or(0.0),
+                total_ms: state.submitted.elapsed().as_secs_f64() * 1000.0,
+            });
+            continue;
+        }
+        match pool.admit(&state.prefill) {
+            Some((seq, mapped)) => {
+                metrics.prefix_reused_tokens += mapped as u64;
+                *admit_counter += 1;
+                let mut state = state;
+                // Cache-mapped prompt tokens are accounted as prefix
+                // reuse, not as ingested prompt input.
+                state.counted_prompt =
+                    state.counted_prompt.max(mapped.min(state.prompt_tokens));
+                active.push(ActiveSeq {
+                    req: w.req,
+                    events: w.events,
+                    seq,
+                    state,
+                    prefilled: mapped,
+                    admitted_order: *admit_counter,
                 });
-                continue;
             }
-            match pool.admit(&state.prefill) {
-                Some((seq, mapped)) => {
-                    metrics.prefix_reused_tokens += mapped as u64;
-                    admit_counter += 1;
-                    let mut state = state;
-                    // Cache-mapped prompt tokens are accounted as prefix
-                    // reuse, not as ingested prompt input.
-                    state.counted_prompt =
-                        state.counted_prompt.max(mapped.min(state.prompt_tokens));
-                    active.push(ActiveSeq {
-                        req: w.req,
-                        events: w.events,
-                        seq,
-                        state,
-                        prefilled: mapped,
-                        admitted_order: admit_counter,
-                    });
-                }
-                None => {
-                    // No blocks free right now: requeue and stop
-                    // admitting this round.
-                    waiting.push_front(WaitingReq {
-                        req: w.req,
-                        events: w.events,
-                        state: Some(state),
-                    });
-                    break;
-                }
-            }
-        }
-        if active.is_empty() {
-            continue;
-        }
-
-        // ---- 1.5 dead-client probe ----------------------------------
-        // A dropped receiver used to be noticed only when delivering a
-        // decode token, so a cancelled long-prompt request burned whole
-        // prefill rounds first. Probe before spending the round.
-        let mut i = 0;
-        while i < active.len() {
-            let mid_prefill = active[i].prefilled < active[i].state.prefill.len();
-            if mid_prefill && active[i].events.send(Event::Heartbeat).is_err() {
-                let seq = active.swap_remove(i);
-                pool.release(seq.seq);
-                metrics.requests_cancelled += 1;
-                metrics.requests_finished += 1;
-            } else {
-                i += 1;
-            }
-        }
-        if active.is_empty() {
-            continue;
-        }
-
-        // ---- 1.75 speculative draft planning ------------------------
-        // Drafts are chosen *before* capacity planning so the round's
-        // block demand covers the verify pass's KV writes (the rejected
-        // share is rolled back within the same round). Only
-        // fully-prefilled, speculation-enabled sequences with a pending
-        // token and room for at least two more tokens speculate;
-        // everything else takes the fused vanilla round.
-        //
-        // A speculative round trades the fused multi-sequence GEMM for
-        // one verify pass *per* sequence, so the draft budget is shared
-        // across the round's decode-ready set: a single stream gets the
-        // full `spec_draft_len`, while wide batches scale the per-
-        // sequence draft length down (to 0 — i.e. back to the single
-        // fused vanilla pass) rather than paying one weight-unpack
-        // sweep per sequence.
-        // Eligibility mirrors the per-sequence checks below (budget
-        // room for >= 2 more tokens, context room for >= 1 draft), so
-        // sequences that cannot speculate anyway don't shrink the
-        // shared budget.
-        let spec_ready = active
-            .iter()
-            .filter(|a| {
-                a.state.drafter.is_some()
-                    && a.state.pending.is_some()
-                    && a.prefilled >= a.state.prefill.len()
-                    && a.state.generated.len() + 3 <= a.req.max_new_tokens
-                    && pool.seq_len(a.seq) + 2 <= model_cfg.max_seq
-            })
-            .count()
-            .max(1);
-        let round_draft_len = cfg.spec_draft_len / spec_ready;
-        for seq in active.iter_mut() {
-            seq.state.round_drafts.clear();
-            let s = &mut seq.state;
-            if s.drafter.is_none() || seq.prefilled < s.prefill.len() {
-                continue;
-            }
-            let Some(pending) = s.pending else { continue };
-            // Delivery of `pending` happens this round; if it finishes
-            // the request (budget or context) nothing is fed at all.
-            let g_after = s.generated.len() + 1;
-            if g_after >= seq.req.max_new_tokens {
-                continue;
-            }
-            let ctx = pool.seq_len(seq.seq);
-            if ctx + 1 >= model_cfg.max_seq {
-                continue;
-            }
-            // Useful draft count: the request's remaining budget after
-            // this delivery, minus the never-fed final token; and the
-            // context must hold the whole verify span (ctx + 1 + k
-            // positions) before rollback.
-            let room = seq.req.max_new_tokens - g_after;
-            let k = round_draft_len
-                .min(room.saturating_sub(1))
-                .min(model_cfg.max_seq - ctx - 1);
-            if k == 0 {
-                continue;
-            }
-            // Full token stream: prompt + everything generated + the
-            // pending token about to be fed (prefill holds prompt +
-            // pre-preemption history, so slice the prompt part only).
-            let mut history =
-                Vec::with_capacity(s.prompt_tokens + s.generated.len() + 1);
-            history.extend_from_slice(&s.prefill[..s.prompt_tokens]);
-            history.extend_from_slice(&s.generated);
-            history.push(pending);
-            let mut drafts = s.drafter.as_mut().expect("checked above").draft_dist(&history, k);
-            drafts.truncate(k);
-            s.round_drafts = drafts;
-        }
-
-        // ---- 2. capacity & preemption -------------------------------
-        // Sum the whole round's block demand into one reclaim target so
-        // engine calls later this round cannot fail mid-forward (the
-        // pool takes no reservations; the worker is the only writer).
-        // When the pool stays dry after prefix-cache eviction, first
-        // drop the round's speculative drafts (speculation is strictly
-        // optional — shedding it is the cheapest reclaim), then preempt-
-        // and-requeue the lowest-priority sequence (ties: most recently
-        // admitted first) and replan from scratch.
-        'capacity: loop {
-            let mut planned = 0usize;
-            let mut satisfied = true;
-            for i in 0..active.len() {
-                let demand = active[i].round_demand(cfg.prefill_chunk);
-                if demand == 0 {
-                    continue;
-                }
-                let need = pool.blocks_needed(active[i].seq, demand);
-                if pool.reclaim(planned + need) {
-                    planned += need;
-                    continue;
-                }
-                satisfied = false;
-                if active.iter().any(|a| !a.state.round_drafts.is_empty()) {
-                    for a in active.iter_mut() {
-                        a.state.round_drafts.clear();
-                    }
-                    break; // replan without speculation before preempting
-                }
-                if active.len() == 1 {
-                    // Nothing to preempt and the pool cannot hold this
-                    // sequence's next step: finish it, not livelock.
-                    let seq = active.swap_remove(0);
-                    finish(&seq, &mut metrics, FinishReason::ContextFull);
-                    pool.release(seq.seq);
-                    break;
-                }
-                // Choose the victim across the whole batch.
-                let mut victim = 0;
-                for j in 1..active.len() {
-                    let a =
-                        (active[j].req.priority, std::cmp::Reverse(active[j].admitted_order));
-                    let b = (
-                        active[victim].req.priority,
-                        std::cmp::Reverse(active[victim].admitted_order),
-                    );
-                    if a < b {
-                        victim = j;
-                    }
-                }
-                // Retain the victim's prefix in the cache (inside
-                // `release`), free its blocks, and send it back to the
-                // front of the queue with its scheduling state so it
-                // resumes rather than restarts. The resumed prefill is
-                // rebuilt as prompt + all generated tokens (truncate
-                // first — repeated preemptions must not re-append).
-                let v = active.swap_remove(victim);
-                pool.release(v.seq);
-                metrics.preemptions += 1;
-                let mut state = v.state;
-                state.prefill.truncate(state.prompt_tokens);
-                state.prefill.extend_from_slice(&state.generated);
+            None => {
+                // No blocks free right now: requeue and stop
+                // admitting this round.
                 waiting.push_front(WaitingReq {
-                    req: v.req,
-                    events: v.events,
+                    req: w.req,
+                    events: w.events,
+                    enqueued: w.enqueued,
                     state: Some(state),
                 });
-                break; // replan with the survivor set
-            }
-            if satisfied || active.is_empty() {
-                break 'capacity;
+                break;
             }
         }
-        if active.is_empty() {
+    }
+    if active.is_empty() {
+        return;
+    }
+
+    // ---- 1.5 liveness & deadline sweep --------------------------
+    // Probe every active client before spending the round — a
+    // dropped receiver cancels within one round whether the
+    // sequence is mid-prefill or mid-decode (an abandoned stream
+    // must not decode on to max_tokens). Then expire deadlines:
+    // checking here (once per round, before the engine calls)
+    // bounds how far past its deadline a request can run by one
+    // round, for prefill-only rounds too.
+    let now = Instant::now();
+    let mut i = 0;
+    while i < active.len() {
+        if active[i].events.send(Event::Heartbeat).is_err() {
+            let mut seq = active.swap_remove(i);
+            seq.state.done = true; // receiver gone; no terminal to send
+            pool.release(seq.seq);
+            metrics.requests_cancelled += 1;
+            metrics.requests_finished += 1;
             continue;
         }
-        // Occupancy counts sequences that actually compute this round
-        // (post-preemption), so the §7.3 acceptance comparison is honest.
-        metrics.batch_occupancy.push(active.len() as f64);
-
-        // ---- 3. chunked prefill -------------------------------------
-        for seq in active.iter_mut() {
-            if seq.prefilled < seq.state.prefill.len() {
-                let end = (seq.prefilled + cfg.prefill_chunk).min(seq.state.prefill.len());
-                let chunk = &seq.state.prefill[seq.prefilled..end];
-                let logits = engine.prefill(&mut pool.seq_view(seq.seq), chunk);
-                // Count only first-time ingestion of *client prompt*
-                // tokens — re-prefill after preemption (including the
-                // regenerated decode history) is work, not prompt input.
-                let fresh = end
-                    .min(seq.state.prompt_tokens)
-                    .saturating_sub(seq.state.counted_prompt);
-                metrics.prompt_tokens += fresh as u64;
-                seq.state.counted_prompt += fresh;
-                metrics.prefill_tokens_per_round.push(chunk.len() as f64);
-                seq.prefilled = end;
-                if seq.prefilled == seq.state.prefill.len() {
-                    // Prompt resident and final: publish its whole-block
-                    // prefix for sharing, then sample the first token
-                    // (unless resuming with one already sampled).
-                    pool.cache_prefix(seq.seq);
-                    if seq.state.pending.is_none() {
-                        let tok = seq.state.sampler.sample(logits.row(chunk.len() - 1));
-                        seq.state.pending = Some(tok);
-                    }
-                    if seq.state.ttft_ms.is_none() {
-                        let ttft = seq.state.submitted.elapsed().as_secs_f64() * 1000.0;
-                        seq.state.ttft_ms = Some(ttft);
-                        metrics.ttft_ms.push(ttft);
-                    }
-                }
-            }
+        if active[i].state.deadline.is_some_and(|d| now >= d) {
+            let mut seq = active.swap_remove(i);
+            finish(&mut seq, metrics, FinishReason::DeadlineExceeded);
+            pool.release(seq.seq);
+            continue;
         }
+        i += 1;
+    }
+    if active.is_empty() {
+        return;
+    }
 
-        // ---- 4. decode round (fused batch + speculative passes) -----
-        // Token delivery and stop conditions are resolved per sequence
-        // first; survivors without drafts then advance through a single
-        // `decode_batch` call (each weight block unpacked once for the
-        // whole batch), while sequences with planned drafts each run
-        // one multi-position verify pass over the same fused GEMMs —
-        // accepting a whole run of tokens per pass and rolling the
-        // rejected suffix's KV back.
-        let mut finished: Vec<usize> = Vec::new();
-        let mut spec_idx: Vec<usize> = Vec::new();
-        let mut step_idx: Vec<usize> = Vec::new();
-        let mut step_toks: Vec<u32> = Vec::new();
-        for (i, seq) in active.iter_mut().enumerate() {
-            let Some(tok) = seq.state.pending else { continue };
-            // Deliver the sampled token and resolve stop conditions.
-            let ctx = pool.seq_len(seq.seq);
-            if let Some(reason) =
-                deliver_and_resolve(seq, &mut metrics, tok, ctx, model_cfg.max_seq)
-            {
-                finish(seq, &mut metrics, reason);
-                finished.push(i);
+    // ---- 1.75 speculative draft planning ------------------------
+    // Drafts are chosen *before* capacity planning so the round's
+    // block demand covers the verify pass's KV writes (the rejected
+    // share is rolled back within the same round). Only
+    // fully-prefilled, speculation-enabled sequences with a pending
+    // token and room for at least two more tokens speculate;
+    // everything else takes the fused vanilla round.
+    //
+    // A speculative round trades the fused multi-sequence GEMM for
+    // one verify pass *per* sequence, so the draft budget is shared
+    // across the round's decode-ready set: a single stream gets the
+    // full `spec_draft_len`, while wide batches scale the per-
+    // sequence draft length down (to 0 — i.e. back to the single
+    // fused vanilla pass) rather than paying one weight-unpack
+    // sweep per sequence.
+    // Eligibility mirrors the per-sequence checks below (budget
+    // room for >= 2 more tokens, context room for >= 1 draft), so
+    // sequences that cannot speculate anyway don't shrink the
+    // shared budget.
+    let spec_ready = active
+        .iter()
+        .filter(|a| {
+            a.state.drafter.is_some()
+                && a.state.pending.is_some()
+                && a.prefilled >= a.state.prefill.len()
+                && a.state.generated.len() + 3 <= a.req.max_new_tokens
+                && pool.seq_len(a.seq) + 2 <= model_cfg.max_seq
+        })
+        .count()
+        .max(1);
+    let round_draft_len = cfg.spec_draft_len / spec_ready;
+    for seq in active.iter_mut() {
+        seq.state.round_drafts.clear();
+        let s = &mut seq.state;
+        if s.drafter.is_none() || seq.prefilled < s.prefill.len() {
+            continue;
+        }
+        let Some(pending) = s.pending else { continue };
+        // Delivery of `pending` happens this round; if it finishes
+        // the request (budget or context) nothing is fed at all.
+        let g_after = s.generated.len() + 1;
+        if g_after >= seq.req.max_new_tokens {
+            continue;
+        }
+        let ctx = pool.seq_len(seq.seq);
+        if ctx + 1 >= model_cfg.max_seq {
+            continue;
+        }
+        // Useful draft count: the request's remaining budget after
+        // this delivery, minus the never-fed final token; and the
+        // context must hold the whole verify span (ctx + 1 + k
+        // positions) before rollback.
+        let room = seq.req.max_new_tokens - g_after;
+        let k = round_draft_len
+            .min(room.saturating_sub(1))
+            .min(model_cfg.max_seq - ctx - 1);
+        if k == 0 {
+            continue;
+        }
+        // Full token stream: prompt + everything generated + the
+        // pending token about to be fed (prefill holds prompt +
+        // pre-preemption history, so slice the prompt part only).
+        let mut history =
+            Vec::with_capacity(s.prompt_tokens + s.generated.len() + 1);
+        history.extend_from_slice(&s.prefill[..s.prompt_tokens]);
+        history.extend_from_slice(&s.generated);
+        history.push(pending);
+        let mut drafts = s.drafter.as_mut().expect("checked above").draft_dist(&history, k);
+        drafts.truncate(k);
+        s.round_drafts = drafts;
+    }
+
+    // ---- 2. capacity & preemption -------------------------------
+    // Sum the whole round's block demand into one reclaim target so
+    // engine calls later this round cannot fail mid-forward (the
+    // pool takes no reservations; the worker is the only writer).
+    // When the pool stays dry after prefix-cache eviction, first
+    // drop the round's speculative drafts (speculation is strictly
+    // optional — shedding it is the cheapest reclaim), then preempt-
+    // and-requeue the lowest-priority sequence (ties: most recently
+    // admitted first) and replan from scratch.
+    'capacity: loop {
+        let mut planned = 0usize;
+        let mut satisfied = true;
+        for i in 0..active.len() {
+            let demand = active[i].round_demand(cfg.prefill_chunk);
+            if demand == 0 {
                 continue;
             }
-            if seq.state.round_drafts.is_empty() {
-                step_idx.push(i);
-                step_toks.push(tok);
-            } else {
-                spec_idx.push(i);
+            let need = pool.blocks_needed(active[i].seq, demand);
+            if pool.reclaim(planned + need) {
+                planned += need;
+                continue;
             }
-        }
-
-        // ---- 4a. speculative verify rounds --------------------------
-        // One multi-position pass per speculating sequence: feed the
-        // pending token plus the drafts, run the rejection-sampling
-        // accept loop against the sequence's own seeded sampler (greedy
-        // sequences degenerate to the argmax-prefix rule and consume no
-        // randomness), roll back the rest. The accepted run streams out
-        // with exactly the per-token stop checks the vanilla rounds
-        // would have applied (same token stream, same finish reason,
-        // same KV state, same sampler RNG position — only fewer engine
-        // passes).
-        for &i in &spec_idx {
-            let seq = &mut active[i];
-            let drafts = std::mem::take(&mut seq.state.round_drafts);
-            let draft_toks: Vec<u32> = drafts.iter().map(|d| d.token).collect();
-            let pending = *seq.state.generated.last().expect("pending was delivered");
-            let t0 = Instant::now();
-            let outcome = spec::spec_step_sampled(
-                engine.as_ref(),
-                &mut pool.seq_view(seq.seq),
-                pending,
-                &drafts,
-                &mut seq.state.sampler,
-            );
-            // The pass produced `accepted` verified tokens plus the
-            // next pending one; amortize its wall time over those.
-            let produced = outcome.accepted + 1;
-            let per_tok_ms = t0.elapsed().as_secs_f64() * 1000.0 / produced as f64;
-            for _ in 0..produced {
-                metrics.decode_step_ms.push(per_tok_ms);
+            satisfied = false;
+            if active.iter().any(|a| !a.state.round_drafts.is_empty()) {
+                for a in active.iter_mut() {
+                    a.state.round_drafts.clear();
+                }
+                break; // replan without speculation before preempting
             }
-            metrics.spec_drafted += drafts.len() as u64;
-            metrics.spec_accepted += outcome.accepted as u64;
-            metrics.spec_resampled += outcome.resampled as u64;
-            let rate = outcome.accepted as f64 / drafts.len() as f64;
-            metrics.spec_accept_rate.push(rate);
-            // Per-mode acceptance: sampled drafts face a stochastic
-            // accept rule, greedy ones an exact match — aggregating
-            // them hides drafter regressions in either mode.
-            if seq.req.temperature > 0.0 {
-                metrics.spec_accept_rate_sampled.push(rate);
-            } else {
-                metrics.spec_accept_rate_greedy.push(rate);
+            if active.len() == 1 {
+                // Nothing to preempt and the pool cannot hold this
+                // sequence's next step: finish it, not livelock.
+                let mut seq = active.swap_remove(0);
+                finish(&mut seq, metrics, FinishReason::ContextFull);
+                pool.release(seq.seq);
+                break;
             }
-            metrics.spec_run_len.push(outcome.accepted as f64);
-            if let Some(d) = seq.state.drafter.as_mut() {
-                d.observe(&draft_toks, outcome.accepted, &outcome.verify_argmax);
-            }
-            // Stream the accepted run. Accepted token `jj` corresponds
-            // to a virtual vanilla round whose pre-feed context length
-            // is `base + jj + 1`, so `deliver_and_resolve` replays the
-            // exact vanilla ladder at that state — the run finishes at
-            // exactly the token sequential rounds would have finished
-            // at.
-            let mut reason: Option<FinishReason> = None;
-            for (jj, &g) in draft_toks[..outcome.accepted].iter().enumerate() {
-                let ctx = outcome.base + jj + 1;
-                if let Some(r) =
-                    deliver_and_resolve(seq, &mut metrics, g, ctx, model_cfg.max_seq)
-                {
-                    // Vanilla never feeds a finishing token: roll the
-                    // cache back to the fed prefix (pending + the
-                    // earlier accepted tokens).
-                    pool.truncate(seq.seq, ctx);
-                    reason = Some(r);
-                    break;
+            // Choose the victim across the whole batch.
+            let mut victim = 0;
+            for j in 1..active.len() {
+                let a =
+                    (active[j].req.priority, std::cmp::Reverse(active[j].admitted_order));
+                let b = (
+                    active[victim].req.priority,
+                    std::cmp::Reverse(active[victim].admitted_order),
+                );
+                if a < b {
+                    victim = j;
                 }
             }
-            if let Some(r) = reason {
-                finish(seq, &mut metrics, r);
-                seq.state.pending = None;
-                finished.push(i);
-            } else {
-                seq.state.pending = Some(outcome.next);
-            }
+            // Retain the victim's prefix in the cache (inside
+            // `release`), free its blocks, and send it back to the
+            // front of the queue with its scheduling state so it
+            // resumes rather than restarts. The resumed prefill is
+            // rebuilt as prompt + all generated tokens (truncate
+            // first — repeated preemptions must not re-append).
+            let v = active.swap_remove(victim);
+            pool.release(v.seq);
+            metrics.preemptions += 1;
+            let mut state = v.state;
+            state.prefill.truncate(state.prompt_tokens);
+            state.prefill.extend_from_slice(&state.generated);
+            waiting.push_front(WaitingReq {
+                req: v.req,
+                events: v.events,
+                enqueued: state.submitted,
+                state: Some(state),
+            });
+            break; // replan with the survivor set
         }
-
-        // ---- 4b. fused vanilla batch --------------------------------
-        if !step_idx.is_empty() {
-            let ids: Vec<SeqId> = step_idx.iter().map(|&i| active[i].seq).collect();
-            let t0 = Instant::now();
-            let logits = engine.decode_batch(&mut pool.batch_view(&ids), &step_toks);
-            let per_tok_ms =
-                t0.elapsed().as_secs_f64() * 1000.0 / step_idx.len() as f64;
-            metrics.decode_batch_size.push(step_idx.len() as f64);
-            for (j, &i) in step_idx.iter().enumerate() {
-                metrics.decode_step_ms.push(per_tok_ms);
-                let seq = &mut active[i];
-                seq.state.pending = Some(seq.state.sampler.sample(&logits[j]));
-            }
+        if satisfied || active.is_empty() {
+            break 'capacity;
         }
+    }
+    if active.is_empty() {
+        return;
+    }
+    // Occupancy counts sequences that actually compute this round
+    // (post-preemption), so the §7.3 acceptance comparison is honest.
+    metrics.batch_occupancy.push(active.len() as f64);
 
-        // ---- 5. retire finished -------------------------------------
-        // Indices must drop highest-first for swap_remove to stay
-        // valid; the speculative pass can append out of order.
-        finished.sort_unstable();
-        for &i in finished.iter().rev() {
-            let seq = active.swap_remove(i);
-            pool.release(seq.seq);
+    // ---- 3. chunked prefill -------------------------------------
+    for seq in active.iter_mut() {
+        if seq.prefilled < seq.state.prefill.len() {
+            let end = (seq.prefilled + cfg.prefill_chunk).min(seq.state.prefill.len());
+            let chunk = &seq.state.prefill[seq.prefilled..end];
+            // Chaos site: an engine failure mid-prefill (the round
+            // is the isolation domain — see `restart_after_panic`).
+            if crate::util::failpoint::should_fail("engine.prefill") {
+                panic!("failpoint 'engine.prefill': injected engine failure");
+            }
+            let logits = engine.prefill(&mut pool.seq_view(seq.seq), chunk);
+            // Count only first-time ingestion of *client prompt*
+            // tokens — re-prefill after preemption (including the
+            // regenerated decode history) is work, not prompt input.
+            let fresh = end
+                .min(seq.state.prompt_tokens)
+                .saturating_sub(seq.state.counted_prompt);
+            metrics.prompt_tokens += fresh as u64;
+            seq.state.counted_prompt += fresh;
+            metrics.prefill_tokens_per_round.push(chunk.len() as f64);
+            seq.prefilled = end;
+            if seq.prefilled == seq.state.prefill.len() {
+                // Prompt resident and final: publish its whole-block
+                // prefix for sharing, then sample the first token
+                // (unless resuming with one already sampled).
+                pool.cache_prefix(seq.seq);
+                if seq.state.pending.is_none() {
+                    let tok = seq.state.sampler.sample(logits.row(chunk.len() - 1));
+                    seq.state.pending = Some(tok);
+                }
+                if seq.state.ttft_ms.is_none() {
+                    let ttft = seq.state.submitted.elapsed().as_secs_f64() * 1000.0;
+                    seq.state.ttft_ms = Some(ttft);
+                    metrics.ttft_ms.push(ttft);
+                }
+            }
         }
     }
 
-    // Drain: cancel anything still queued or running.
-    for seq in active {
-        seq.send_done(FinishReason::Cancelled);
+    // ---- 4. decode round (fused batch + speculative passes) -----
+    // Token delivery and stop conditions are resolved per sequence
+    // first; survivors without drafts then advance through a single
+    // `decode_batch` call (each weight block unpacked once for the
+    // whole batch), while sequences with planned drafts each run
+    // one multi-position verify pass over the same fused GEMMs —
+    // accepting a whole run of tokens per pass and rolling the
+    // rejected suffix's KV back.
+    let mut finished: Vec<usize> = Vec::new();
+    let mut spec_idx: Vec<usize> = Vec::new();
+    let mut step_idx: Vec<usize> = Vec::new();
+    let mut step_toks: Vec<u32> = Vec::new();
+    for (i, seq) in active.iter_mut().enumerate() {
+        let Some(tok) = seq.state.pending else { continue };
+        // Consume the pending token at delivery: a panic later this
+        // round then cannot re-deliver it after restart (the token
+        // is already in `generated`, so the requeued prefill covers
+        // it; survivors get a fresh pending from their next pass).
+        seq.state.pending = None;
+        // Deliver the sampled token and resolve stop conditions.
+        let ctx = pool.seq_len(seq.seq);
+        if let Some(reason) =
+            deliver_and_resolve(seq, metrics, tok, ctx, model_cfg.max_seq)
+        {
+            finish(seq, metrics, reason);
+            finished.push(i);
+            continue;
+        }
+        if seq.state.round_drafts.is_empty() {
+            step_idx.push(i);
+            step_toks.push(tok);
+        } else {
+            spec_idx.push(i);
+        }
     }
-    for w in waiting {
-        let _ = w.events.send(Event::Done {
-            reason: FinishReason::Cancelled,
-            text: String::new(),
-            prompt_tokens: 0,
-            gen_tokens: 0,
-            ttft_ms: 0.0,
-            total_ms: 0.0,
+
+    // ---- 4a. speculative verify rounds --------------------------
+    // One multi-position pass per speculating sequence: feed the
+    // pending token plus the drafts, run the rejection-sampling
+    // accept loop against the sequence's own seeded sampler (greedy
+    // sequences degenerate to the argmax-prefix rule and consume no
+    // randomness), roll back the rest. The accepted run streams out
+    // with exactly the per-token stop checks the vanilla rounds
+    // would have applied (same token stream, same finish reason,
+    // same KV state, same sampler RNG position — only fewer engine
+    // passes).
+    for &i in &spec_idx {
+        let seq = &mut active[i];
+        let drafts = std::mem::take(&mut seq.state.round_drafts);
+        let draft_toks: Vec<u32> = drafts.iter().map(|d| d.token).collect();
+        let pending = *seq.state.generated.last().expect("pending was delivered");
+        // Chaos site: an engine failure mid-decode, on the
+        // speculative verify path.
+        if crate::util::failpoint::should_fail("engine.decode") {
+            panic!("failpoint 'engine.decode': injected engine failure");
+        }
+        let t0 = Instant::now();
+        let outcome = spec::spec_step_sampled(
+            engine,
+            &mut pool.seq_view(seq.seq),
+            pending,
+            &drafts,
+            &mut seq.state.sampler,
+        );
+        // The pass produced `accepted` verified tokens plus the
+        // next pending one; amortize its wall time over those.
+        let produced = outcome.accepted + 1;
+        let per_tok_ms = t0.elapsed().as_secs_f64() * 1000.0 / produced as f64;
+        for _ in 0..produced {
+            metrics.decode_step_ms.push(per_tok_ms);
+        }
+        metrics.spec_drafted += drafts.len() as u64;
+        metrics.spec_accepted += outcome.accepted as u64;
+        metrics.spec_resampled += outcome.resampled as u64;
+        let rate = outcome.accepted as f64 / drafts.len() as f64;
+        metrics.spec_accept_rate.push(rate);
+        // Per-mode acceptance: sampled drafts face a stochastic
+        // accept rule, greedy ones an exact match — aggregating
+        // them hides drafter regressions in either mode.
+        if seq.req.temperature > 0.0 {
+            metrics.spec_accept_rate_sampled.push(rate);
+        } else {
+            metrics.spec_accept_rate_greedy.push(rate);
+        }
+        metrics.spec_run_len.push(outcome.accepted as f64);
+        if let Some(d) = seq.state.drafter.as_mut() {
+            d.observe(&draft_toks, outcome.accepted, &outcome.verify_argmax);
+        }
+        // Stream the accepted run. Accepted token `jj` corresponds
+        // to a virtual vanilla round whose pre-feed context length
+        // is `base + jj + 1`, so `deliver_and_resolve` replays the
+        // exact vanilla ladder at that state — the run finishes at
+        // exactly the token sequential rounds would have finished
+        // at.
+        let mut reason: Option<FinishReason> = None;
+        for (jj, &g) in draft_toks[..outcome.accepted].iter().enumerate() {
+            let ctx = outcome.base + jj + 1;
+            if let Some(r) = deliver_and_resolve(seq, metrics, g, ctx, model_cfg.max_seq) {
+                // Vanilla never feeds a finishing token: roll the
+                // cache back to the fed prefix (pending + the
+                // earlier accepted tokens).
+                pool.truncate(seq.seq, ctx);
+                reason = Some(r);
+                break;
+            }
+        }
+        if let Some(r) = reason {
+            finish(seq, metrics, r);
+            finished.push(i);
+        } else {
+            seq.state.pending = Some(outcome.next);
+        }
+    }
+
+    // ---- 4b. fused vanilla batch --------------------------------
+    if !step_idx.is_empty() {
+        let ids: Vec<SeqId> = step_idx.iter().map(|&i| active[i].seq).collect();
+        // Chaos site: an engine failure mid-decode, on the fused
+        // vanilla path (same site name as the verify path — hit
+        // counts script "the n-th decode" across both).
+        if crate::util::failpoint::should_fail("engine.decode") {
+            panic!("failpoint 'engine.decode': injected engine failure");
+        }
+        let t0 = Instant::now();
+        let logits = engine.decode_batch(&mut pool.batch_view(&ids), &step_toks);
+        let per_tok_ms =
+            t0.elapsed().as_secs_f64() * 1000.0 / step_idx.len() as f64;
+        metrics.decode_batch_size.push(step_idx.len() as f64);
+        for (j, &i) in step_idx.iter().enumerate() {
+            metrics.decode_step_ms.push(per_tok_ms);
+            let seq = &mut active[i];
+            seq.state.pending = Some(seq.state.sampler.sample(&logits[j]));
+        }
+    }
+
+    // ---- 5. retire finished -------------------------------------
+    // Indices must drop highest-first for swap_remove to stay
+    // valid; the speculative pass can append out of order.
+    finished.sort_unstable();
+    for &i in finished.iter().rev() {
+        let seq = active.swap_remove(i);
+        pool.release(seq.seq);
+    }
+
+    // A cleanly completed round exonerates the survivors: `faults`
+    // only accumulates across *consecutive* panicked rounds, so a
+    // long-running sequence that merely shared batches with a
+    // poison-pill request is not failed for it.
+    for seq in active.iter_mut() {
+        seq.state.faults = 0;
+    }
+}
+
+/// Recover from a panicked round: rebuild everything the panic may
+/// have poisoned and requeue the surviving sequences.
+///
+/// The engine's interior-mutable scratch is restored via
+/// [`Engine::reset`], and the KV pool is rebuilt wholesale — zero
+/// leaked blocks by construction, at the cost of the prefix cache
+/// (survivors re-prefill their history, exactly as after preemption).
+/// Sequences whose terminal already went out (`state.done`) are
+/// dropped; the rest are snapshotted like preemption victims and
+/// pushed back at the queue front in admission order. A sequence
+/// implicated in [`MAX_SEQ_FAULTS`] consecutive panics is failed with
+/// a typed [`ServeError::EngineFailure`] instead of being requeued, so
+/// a poison-pill request cannot crash-loop the worker forever.
+fn restart_after_panic(
+    engine: &dyn Engine,
+    cfg: &CoordinatorConfig,
+    model_cfg: &ModelConfig,
+    pool: &mut kvpool::KvPool,
+    metrics: &mut metrics::Metrics,
+    waiting: &mut VecDeque<WaitingReq>,
+    active: &mut Vec<ActiveSeq>,
+) {
+    metrics.worker_restarts += 1;
+    // The old pool's high-water mark would vanish with it.
+    metrics.kv_peak_bytes = metrics.kv_peak_bytes.max(pool.peak_bytes());
+    engine.reset();
+    *pool = kvpool::KvPool::new(
+        model_cfg,
+        cfg.kv_budget_bytes,
+        cfg.kv_block_tokens,
+        cfg.kv_quant,
+    );
+    // drain(..).rev() + push_front re-enters survivors in admission
+    // order at the head of the queue, ahead of never-admitted work.
+    active.sort_by_key(|a| a.admitted_order);
+    for v in active.drain(..).rev() {
+        if v.state.done {
+            // Terminal already sent (the panic hit between finish()
+            // and retirement) — dropping the sender is all that's left.
+            continue;
+        }
+        let mut state = v.state;
+        state.faults += 1;
+        if state.faults >= MAX_SEQ_FAULTS {
+            metrics.requests_finished += 1;
+            let _ = v.events.send(Event::Error(ServeError::EngineFailure(format!(
+                "request implicated in {} consecutive engine panics",
+                state.faults
+            ))));
+            continue;
+        }
+        // The preemption snapshot: everything delivered stays
+        // delivered, the sampler keeps its RNG position, and the
+        // consumed history re-prefills (the fresh pool has no cached
+        // prefixes, so this is a full re-ingest).
+        state.round_drafts.clear();
+        state.prefill.truncate(state.prompt_tokens);
+        state.prefill.extend_from_slice(&state.generated);
+        waiting.push_front(WaitingReq {
+            req: v.req,
+            events: v.events,
+            enqueued: state.submitted,
+            state: Some(state),
         });
     }
 }
@@ -1308,5 +1645,156 @@ mod tests {
             "pool pressure must have preempted"
         );
         c.shutdown();
+    }
+
+    #[test]
+    fn deadline_expires_to_partial_done() {
+        // A 1 ms deadline against a ~62-token prompt (8 per round, two
+        // transformer layers per chunk) cannot be met; the request must
+        // end in a partial-result Done{DeadlineExceeded}, not hang and
+        // not surface an opaque error.
+        let c = coordinator(2, 64 << 20);
+        let (_, done) = c.generate_collect(GenRequest {
+            prompt: "z".repeat(400),
+            max_new_tokens: 500,
+            deadline_ms: Some(1),
+            ..Default::default()
+        });
+        let Some(Event::Done { reason, gen_tokens, .. }) = done else {
+            panic!("deadline expiry must still yield a Done terminal, got {done:?}")
+        };
+        assert_eq!(reason, FinishReason::DeadlineExceeded);
+        assert!(gen_tokens < 500);
+        let stats = c.stats().unwrap();
+        assert!(stats.get("deadline_expired").unwrap().as_u64().unwrap() >= 1);
+        // The coordinator still serves after an expiry.
+        let (_, done) = c.generate_collect(GenRequest {
+            prompt: "ok".into(),
+            max_new_tokens: 2,
+            ..Default::default()
+        });
+        assert!(matches!(done, Some(Event::Done { reason: FinishReason::MaxTokens, .. })));
+        c.shutdown();
+    }
+
+    #[test]
+    fn server_default_timeout_applies_and_client_can_only_tighten() {
+        let cfg = ModelConfig::test();
+        let engine = NativeEngine::dense(DenseModel::random(&cfg, 3, None));
+        let c = Coordinator::new(
+            Box::new(engine),
+            CoordinatorConfig {
+                max_batch: 2,
+                kv_budget_bytes: 64 << 20,
+                prefill_chunk: 8,
+                request_timeout_ms: Some(1),
+                ..Default::default()
+            },
+        );
+        // No per-request deadline: the server-wide default still expires it.
+        let (_, done) = c.generate_collect(GenRequest {
+            prompt: "z".repeat(400),
+            max_new_tokens: 500,
+            ..Default::default()
+        });
+        let Some(Event::Done { reason, .. }) = done else { panic!("no done") };
+        assert_eq!(reason, FinishReason::DeadlineExceeded);
+        // A *looser* client deadline must not widen the server bound.
+        let (_, done) = c.generate_collect(GenRequest {
+            prompt: "z".repeat(400),
+            max_new_tokens: 500,
+            deadline_ms: Some(120_000),
+            ..Default::default()
+        });
+        let Some(Event::Done { reason, .. }) = done else { panic!("no done") };
+        assert_eq!(reason, FinishReason::DeadlineExceeded);
+        c.shutdown();
+    }
+
+    #[test]
+    fn overload_sheds_with_retry_hint() {
+        // One slot and a queue bound of one: of six concurrent
+        // requests, the head of the line completes and at least four of
+        // the rest are shed with a typed Overloaded carrying a backoff
+        // hint (how many shed exactly depends on whether a round runs
+        // between intakes — both interleavings are correct).
+        let cfg = ModelConfig::test();
+        let engine = NativeEngine::dense(DenseModel::random(&cfg, 3, None));
+        let c = Coordinator::new(
+            Box::new(engine),
+            CoordinatorConfig {
+                max_batch: 1,
+                kv_budget_bytes: 64 << 20,
+                prefill_chunk: 8,
+                max_queue_depth: 1,
+                ..Default::default()
+            },
+        );
+        let first = c.generate(GenRequest {
+            prompt: "a".repeat(200),
+            max_new_tokens: 12,
+            ..Default::default()
+        });
+        let rest: Vec<_> = (0..5)
+            .map(|i| {
+                c.generate(GenRequest {
+                    prompt: format!("later {i}"),
+                    max_new_tokens: 4,
+                    ..Default::default()
+                })
+            })
+            .collect();
+        let done = first.iter().find(|e| matches!(e, Event::Done { .. }));
+        assert!(
+            matches!(done, Some(Event::Done { reason: FinishReason::MaxTokens, .. })),
+            "head-of-line request must complete"
+        );
+        let mut shed = 0;
+        for rx in rest {
+            let mut terminals = 0;
+            for ev in rx.iter() {
+                match ev {
+                    Event::Heartbeat | Event::Token { .. } => {}
+                    Event::Done { .. } => terminals += 1,
+                    Event::Error(e) => {
+                        terminals += 1;
+                        assert_eq!(e.code(), "overloaded");
+                        assert!(e.retry_after_ms().unwrap() >= 1);
+                        shed += 1;
+                    }
+                }
+            }
+            assert_eq!(terminals, 1, "exactly one terminal event per request");
+        }
+        assert!(shed >= 4, "queue bound of 1 must shed most of the burst, shed {shed}");
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.get("rejected_overload").unwrap().as_u64(), Some(shed));
+        assert!(stats.get("queue_depth_p50").is_some());
+        assert!(stats.get("queue_depth_p99").is_some());
+        c.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight_requests() {
+        // Shutdown must complete accepted work, not cancel it: the
+        // request is submitted strictly before the shutdown command on
+        // the same channel, so the worker drains it to MaxTokens.
+        let c = coordinator(2, 64 << 20);
+        let rx = c.generate(GenRequest {
+            prompt: "drain me".into(),
+            max_new_tokens: 12,
+            ..Default::default()
+        });
+        c.shutdown(); // blocks until the worker exits
+        let events: Vec<Event> = rx.try_iter().collect();
+        let done = events.iter().find_map(|e| match e {
+            Event::Done { reason, gen_tokens, .. } => Some((*reason, *gen_tokens)),
+            _ => None,
+        });
+        assert_eq!(
+            done,
+            Some((FinishReason::MaxTokens, 12)),
+            "in-flight request must drain to completion through shutdown"
+        );
     }
 }

@@ -1,5 +1,6 @@
 //! Request/response types for the serving coordinator.
 
+use super::error::ServeError;
 use crate::util::json::Json;
 
 /// A generation request as submitted by a client.
@@ -32,6 +33,12 @@ pub struct GenRequest {
     /// lowest-priority running sequence is preempted first (ties break
     /// toward the most recently admitted). Default 0.
     pub priority: i32,
+    /// Wall-clock budget in milliseconds, measured from intake. `None`
+    /// means "no client deadline"; the server's `--request-timeout-ms`
+    /// (if set) still applies, and the effective deadline is whichever
+    /// is tighter. Expiry mid-generation returns the partial text under
+    /// `Done{reason: DeadlineExceeded}`.
+    pub deadline_ms: Option<u64>,
 }
 
 impl Default for GenRequest {
@@ -46,6 +53,7 @@ impl Default for GenRequest {
             speculation: true,
             stop_at_sentence: false,
             priority: 0,
+            deadline_ms: None,
         }
     }
 }
@@ -86,6 +94,12 @@ impl GenRequest {
         if let Some(p) = j.get("priority").and_then(|v| v.as_f64()) {
             r.priority = p as i32;
         }
+        if let Some(d) = j.get("deadline_ms").and_then(|v| v.as_u64()) {
+            // 0 (and absence) mean "no client deadline".
+            if d > 0 {
+                r.deadline_ms = Some(d);
+            }
+        }
         r
     }
 }
@@ -97,6 +111,9 @@ pub enum FinishReason {
     StopCondition,
     ContextFull,
     Cancelled,
+    /// The request's wall-clock deadline expired mid-generation; the
+    /// `Done` event carries whatever text was produced so far.
+    DeadlineExceeded,
 }
 
 impl FinishReason {
@@ -106,6 +123,7 @@ impl FinishReason {
             FinishReason::StopCondition => "stop",
             FinishReason::ContextFull => "context_full",
             FinishReason::Cancelled => "cancelled",
+            FinishReason::DeadlineExceeded => "deadline_exceeded",
         }
     }
 }
@@ -114,13 +132,15 @@ impl FinishReason {
 #[derive(Clone, Debug)]
 pub enum Event {
     /// Liveness probe: carries no data and is never serialized to the
-    /// wire. The coordinator sends one before burning a prefill round on
-    /// a sequence, so a dropped receiver cancels the request *before*
-    /// its prompt is (re)ingested rather than at first decode token.
+    /// wire. The coordinator sends one to every active sequence each
+    /// round — at admission, per prefill chunk, and per decode round —
+    /// so a dropped receiver cancels the request within one round
+    /// instead of decoding on to `max_tokens`.
     Heartbeat,
     /// One generated token (id + decoded text fragment).
     Token { token: u32, text: String },
-    /// Generation finished.
+    /// Generation finished (possibly with partial text, e.g. when the
+    /// request's deadline expired mid-stream).
     Done {
         reason: FinishReason,
         text: String,
@@ -129,6 +149,11 @@ pub enum Event {
         ttft_ms: f64,
         total_ms: f64,
     },
+    /// The request failed before producing a normal terminal: shed at
+    /// admission (overloaded / shutting down), expired while still
+    /// queued, or implicated in repeated engine failures. Terminal —
+    /// exactly one of `Done` or `Error` ends every accepted stream.
+    Error(ServeError),
 }
 
 #[cfg(test)]
@@ -161,6 +186,16 @@ mod tests {
         assert_eq!(r.top_p, None);
         assert_eq!(r.priority, 0);
         assert!(r.speculation, "speculation is opt-out");
+    }
+
+    #[test]
+    fn deadline_ms_parses_and_zero_means_none() {
+        let r = GenRequest::from_json(&Json::parse(r#"{"deadline_ms":250}"#).unwrap());
+        assert_eq!(r.deadline_ms, Some(250));
+        let r = GenRequest::from_json(&Json::parse(r#"{"deadline_ms":0}"#).unwrap());
+        assert_eq!(r.deadline_ms, None);
+        let r = GenRequest::from_json(&Json::parse("{}").unwrap());
+        assert_eq!(r.deadline_ms, None);
     }
 
     #[test]

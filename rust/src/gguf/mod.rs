@@ -66,7 +66,14 @@ impl TensorEntry {
         if self.dtype != "f32" {
             bail!("tensor {} has dtype {}, expected f32", self.name, self.dtype);
         }
-        if self.data.len() != self.rows * self.cols * 4 {
+        // Checked: rows/cols come from untrusted file headers, so the
+        // expected-size product must not wrap around in release builds.
+        let expect = self
+            .rows
+            .checked_mul(self.cols)
+            .and_then(|n| n.checked_mul(4))
+            .with_context(|| format!("tensor {}: element count overflows", self.name))?;
+        if self.data.len() != expect {
             bail!("tensor {}: payload size mismatch", self.name);
         }
         Ok(self
@@ -95,7 +102,10 @@ impl IgufFile {
             .with_context(|| format!("missing tensor '{name}'"))
     }
 
-    pub fn save(&self, path: &Path) -> Result<()> {
+    /// Serialize to the wire layout (module doc). `save` writes exactly
+    /// these bytes; hardening tests build files in memory and corrupt
+    /// them deterministically without touching the filesystem.
+    pub fn to_bytes(&self) -> Vec<u8> {
         let mut buf: Vec<u8> = Vec::new();
         buf.extend_from_slice(MAGIC);
         buf.extend_from_slice(&VERSION.to_le_bytes());
@@ -119,6 +129,11 @@ impl IgufFile {
             }
             buf.extend_from_slice(&t.data);
         }
+        buf
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let buf = self.to_bytes();
         let mut f = std::fs::File::create(path)
             .with_context(|| format!("create {}", path.display()))?;
         f.write_all(&buf)?;
@@ -126,6 +141,9 @@ impl IgufFile {
     }
 
     pub fn load(path: &Path) -> Result<Self> {
+        if crate::util::failpoint::should_fail("gguf.load.io") {
+            bail!("failpoint 'gguf.load.io': injected IO failure reading {}", path.display());
+        }
         let mut bytes = Vec::new();
         std::fs::File::open(path)
             .with_context(|| format!("open {}", path.display()))?
@@ -134,13 +152,19 @@ impl IgufFile {
     }
 
     pub fn parse(bytes: &[u8]) -> Result<Self> {
+        if crate::util::failpoint::should_fail("gguf.parse.header") {
+            bail!("failpoint 'gguf.parse.header': injected header parse failure");
+        }
         let mut pos = 0usize;
+        // Checked: `n` comes straight from untrusted length fields, so
+        // the bound test must not wrap (e.g. meta_len = u64::MAX).
         let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
-            if *pos + n > bytes.len() {
-                bail!("truncated IGUF file at offset {}", *pos);
-            }
-            let s = &bytes[*pos..*pos + n];
-            *pos += n;
+            let end = pos
+                .checked_add(n)
+                .filter(|&e| e <= bytes.len())
+                .with_context(|| format!("truncated IGUF file at offset {}", *pos))?;
+            let s = &bytes[*pos..end];
+            *pos = end;
             Ok(s)
         };
         let u32_at = |pos: &mut usize| -> Result<u32> {
@@ -179,6 +203,9 @@ impl IgufFile {
         }
         let mut tensors = Vec::with_capacity(n);
         for (name, dtype, rows, cols, padded_cols, dlen) in headers {
+            if crate::util::failpoint::should_fail("gguf.parse.tensor") {
+                bail!("failpoint 'gguf.parse.tensor': injected failure at tensor '{name}'");
+            }
             while pos % ALIGN != 0 {
                 pos += 1;
             }
@@ -279,7 +306,23 @@ fn quant_entry(name: &str, pl: &PaddedLinear, fmt_name: &str) -> TensorEntry {
 fn load_quant_entry(t: &TensorEntry) -> Result<PaddedLinear> {
     let fmt = format_by_name(&t.dtype)
         .with_context(|| format!("unknown format '{}' for tensor {}", t.dtype, t.name))?;
-    let expect = t.rows * (t.padded_cols / fmt.block_elems()) * fmt.block_bytes();
+    let be = fmt.block_elems();
+    if t.padded_cols % be != 0 {
+        bail!(
+            "tensor {}: padded_cols {} is not a multiple of the {} block size {}",
+            t.name,
+            t.padded_cols,
+            t.dtype,
+            be
+        );
+    }
+    // Checked: header fields are untrusted; the size product must not
+    // wrap around in release builds.
+    let expect = t
+        .rows
+        .checked_mul(t.padded_cols / be)
+        .and_then(|n| n.checked_mul(fmt.block_bytes()))
+        .with_context(|| format!("tensor {}: payload size overflows", t.name))?;
     if t.data.len() != expect {
         bail!("tensor {}: payload {} != expected {}", t.name, t.data.len(), expect);
     }
@@ -422,5 +465,88 @@ mod tests {
         save_dense(&m, &good).unwrap();
         let bytes = std::fs::read(&good).unwrap();
         assert!(IgufFile::parse(&bytes[..bytes.len() / 2]).is_err());
+    }
+
+    fn small_file() -> IgufFile {
+        IgufFile {
+            meta: Json::obj(vec![("kind", Json::str("test"))]),
+            tensors: vec![
+                TensorEntry::from_f32("a", 2, 2, &[1., 2., 3., 4.]),
+                TensorEntry::from_f32("b", 1, 3, &[5., 6., 7.]),
+            ],
+        }
+    }
+
+    #[test]
+    fn truncation_at_every_offset_is_a_typed_error() {
+        // The wire format has no optional trailer: every proper prefix
+        // cuts a required field or payload and must surface as Err —
+        // never a panic, never a partially-populated Ok.
+        let bytes = small_file().to_bytes();
+        IgufFile::parse(&bytes).expect("full file parses");
+        for cut in 0..bytes.len() {
+            assert!(
+                IgufFile::parse(&bytes[..cut]).is_err(),
+                "prefix of {cut}/{} bytes must be rejected",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_bytes_never_panic() {
+        // Single-byte corruption anywhere in the file may parse (payload
+        // bytes are opaque) or err (structure damaged) but must never
+        // panic or wrap an allocation size.
+        let bytes = small_file().to_bytes();
+        crate::util::prop::forall("corrupt IGUF bytes parse totally", 500, |g| {
+            let mut b = bytes.clone();
+            let i = g.usize_in(0, b.len() - 1);
+            b[i] ^= (g.u64() as u8) | 1; // always flips at least one bit
+            let _ = IgufFile::parse(&b);
+        });
+    }
+
+    #[test]
+    fn implausible_sizes_are_rejected_not_overflowed() {
+        // meta_len = u64::MAX is a truncation error, not an OOM or a
+        // wrapped bounds check.
+        let mut b = Vec::new();
+        b.extend_from_slice(MAGIC);
+        b.extend_from_slice(&VERSION.to_le_bytes());
+        b.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert!(IgufFile::parse(&b).is_err());
+        // Element-count products that overflow usize are typed errors.
+        let t = TensorEntry {
+            name: "x".into(),
+            dtype: "f32".into(),
+            rows: usize::MAX / 2,
+            cols: 3,
+            padded_cols: 3,
+            data: vec![0u8; 12],
+        };
+        assert!(t.to_f32().is_err());
+        // Same for quantized payload sizing: blocks * block_bytes wraps.
+        let fmt = fbn("itq3_s").unwrap();
+        let q = TensorEntry {
+            name: "q".into(),
+            dtype: "itq3_s".into(),
+            rows: usize::MAX / 2,
+            cols: 3,
+            padded_cols: 2 * fmt.block_elems(),
+            data: vec![0u8; 12],
+        };
+        assert!(load_quant_entry(&q).is_err());
+        // And a padded_cols that is not block-aligned is rejected before
+        // any division.
+        let misaligned = TensorEntry {
+            name: "m".into(),
+            dtype: "itq3_s".into(),
+            rows: 1,
+            cols: 3,
+            padded_cols: fmt.block_elems() + 1,
+            data: vec![0u8; 12],
+        };
+        assert!(load_quant_entry(&misaligned).is_err());
     }
 }

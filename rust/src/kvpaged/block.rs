@@ -156,6 +156,15 @@ impl BlockPool {
 
     /// Allocate one block at refcount 1, or `None` when the pool is dry.
     pub fn try_alloc(&mut self) -> Option<BlockId> {
+        // Chaos site: injected exhaustion. Allocation is lazy (the
+        // scheduler only checks availability up front), so this
+        // surfaces on the write path as the coordinator's "scheduler
+        // must ensure_append first" panic — i.e. it exercises the
+        // worker-restart recovery, which the chaos suite verifies ends
+        // in typed terminals and a leak-free pool.
+        if crate::util::failpoint::should_fail("kvpaged.alloc") {
+            return None;
+        }
         let b = if let Some(b) = self.free.pop() {
             b
         } else if self.refcounts.len() < self.cap_blocks {

@@ -11,6 +11,7 @@
 //! itq3s serve       --model M.iguf [--addr A] [--engine native|pjrt]
 //!                   [--kv-budget BYTES] [--kv-block-tokens N] [--kv-quant f32|q8]
 //!                   [--spec-draft-len K] [--spec-drafter ngram|self]
+//!                   [--request-timeout-ms MS] [--max-queue-depth N]
 //! itq3s table1|table2|table3                       paper-table harnesses
 //! itq3s e2e                                        end-to-end pipeline check
 //! ```
@@ -174,6 +175,13 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
     let spec_drafter_name = flag_or(flags, "spec-drafter", "ngram");
     let spec_drafter = itq3s::spec::DrafterKind::parse(&spec_drafter_name)
         .with_context(|| format!("unknown --spec-drafter '{spec_drafter_name}' (ngram|self)"))?;
+    // Server-side deadline cap applied to every request (clients may
+    // only tighten it with `deadline_ms`). 0 = no server default.
+    let request_timeout_ms: u64 = flag_or(flags, "request-timeout-ms", "0").parse()?;
+    let max_queue_depth: usize = flag_or(flags, "max-queue-depth", "256").parse()?;
+    if max_queue_depth == 0 {
+        bail!("--max-queue-depth must be positive");
+    }
     let cfg = itq3s::coordinator::CoordinatorConfig {
         max_batch: flag_or(flags, "max-batch", "8").parse()?,
         kv_budget_bytes: flag_or(flags, "kv-budget", "268435456").parse()?,
@@ -181,6 +189,8 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         kv_quant,
         spec_draft_len,
         spec_drafter,
+        request_timeout_ms: (request_timeout_ms > 0).then_some(request_timeout_ms),
+        max_queue_depth,
         ..Default::default()
     };
     println!(

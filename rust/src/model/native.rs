@@ -83,6 +83,11 @@ pub trait Engine: Send + Sync {
     /// Ingest a whole prompt, returning logits at every position
     /// (`(len, vocab)`).
     fn prefill(&self, cache: &mut dyn KvStore, tokens: &[u32]) -> Tensor;
+    /// Restore any interior-mutable engine state after a caught panic
+    /// (the coordinator calls this before requeuing survivors). The
+    /// weights are immutable, so for most engines this is a no-op; the
+    /// native engine clears and rebuilds its poisoned scratch mutexes.
+    fn reset(&self) {}
 }
 
 /// Weight storage variants the native engine can run.
@@ -347,6 +352,17 @@ impl Engine for NativeEngine {
         self.cfg()
     }
 
+    fn reset(&self) {
+        // A panic while a scratch lock was held poisons it; both locks
+        // hold plain staging buffers with no cross-call invariants, so
+        // recovery is: un-poison, then restore the pristine (empty)
+        // state rather than trust buffers a forward pass died in.
+        self.scratch.clear_poison();
+        *self.scratch.lock().expect("just cleared") = MatvecScratch::new();
+        self.batch_scratch.clear_poison();
+        *self.batch_scratch.lock().expect("just cleared") = BatchScratch::default();
+    }
+
     fn decode_step(&self, cache: &mut dyn KvStore, token: u32) -> Vec<f32> {
         let cfg = self.cfg().clone();
         let pos = cache.len();
@@ -462,6 +478,12 @@ impl Engine for NativeEngine {
         }
         let mut mv = self.scratch.lock().expect("matvec scratch poisoned");
         let aq = self.act_quant;
+        // Chaos site: a panic while BOTH scratch locks are held — the
+        // worst case for `reset`, which must clear two poisoned
+        // mutexes before the engine is usable again.
+        if crate::util::failpoint::should_fail("native.decode_locked") {
+            panic!("failpoint 'native.decode_locked': injected panic under scratch locks");
+        }
 
         for li in 0..cfg.n_layers {
             let l = self.layer(li);

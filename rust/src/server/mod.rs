@@ -11,7 +11,7 @@
 //!
 #![doc = include_str!("../../../docs/PROTOCOL.md")]
 
-use crate::coordinator::{Coordinator, CoordinatorConfig, Event, GenRequest};
+use crate::coordinator::{Coordinator, CoordinatorConfig, Event, GenRequest, ServeError};
 use crate::model::native::Engine;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
@@ -52,7 +52,14 @@ fn serve_on(
                 let coord = coord.clone();
                 let stop = stop.clone();
                 conns.push(std::thread::spawn(move || {
-                    let _ = handle_conn(stream, &coord, &stop);
+                    // A handler error is one connection's problem, not
+                    // the server's — but swallowing it silently hides
+                    // misbehaving clients and broken pipes. Log once
+                    // per connection and count it in stats.
+                    if let Err(e) = handle_conn(stream, &coord, &stop) {
+                        eprintln!("itq3s-server: connection error: {e:#}");
+                        coord.note_conn_error();
+                    }
                 }));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -68,6 +75,14 @@ fn serve_on(
 }
 
 fn send(stream: &mut TcpStream, j: &Json) -> std::io::Result<()> {
+    // Chaos site: injected IO failure on the response path (a client
+    // whose socket dies mid-stream), surfacing as the handler's error.
+    if crate::util::failpoint::should_fail("server.send") {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::BrokenPipe,
+            "failpoint 'server.send': injected IO failure",
+        ));
+    }
     stream.write_all(j.to_string().as_bytes())?;
     stream.write_all(b"\n")
 }
@@ -86,7 +101,8 @@ fn handle_conn(
         let msg = match Json::parse(&line) {
             Ok(m) => m,
             Err(e) => {
-                send(&mut stream, &Json::obj(vec![("error", Json::str(e.to_string()))]))?;
+                let err = ServeError::BadRequest(format!("malformed JSON: {e}"));
+                send(&mut stream, &err.to_json())?;
                 continue;
             }
         };
@@ -123,6 +139,13 @@ fn handle_conn(
                             )?;
                             break;
                         }
+                        // Typed terminal failure (shed, expired while
+                        // queued, engine failure): forward and move on
+                        // — the connection itself is fine.
+                        Event::Error(e) => {
+                            send(&mut stream, &e.to_json())?;
+                            break;
+                        }
                     }
                 }
             }
@@ -139,7 +162,7 @@ fn handle_conn(
                     )?,
                     Err(e) => send(
                         &mut stream,
-                        &Json::obj(vec![("error", Json::str(e.to_string()))]),
+                        &ServeError::EngineFailure(e.to_string()).to_json(),
                     )?,
                 }
             }
@@ -153,10 +176,8 @@ fn handle_conn(
                 return Ok(());
             }
             other => {
-                send(
-                    &mut stream,
-                    &Json::obj(vec![("error", Json::str(format!("unknown op '{other}'")))]),
-                )?;
+                let err = ServeError::BadRequest(format!("unknown op '{other}'"));
+                send(&mut stream, &err.to_json())?;
             }
         }
     }
@@ -296,10 +317,62 @@ mod tests {
         let mut c = Client::connect(&addr.to_string()).unwrap();
         c.stream.write_all(b"{not json\n").unwrap();
         let err = c.recv().unwrap();
-        assert!(err.get("error").is_some());
+        let body = err.get("error").expect("typed error object");
+        assert_eq!(body.get("code").unwrap().as_str(), Some("bad_request"));
+        assert!(body
+            .get("message")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("malformed JSON"));
         // Connection still works.
         let done = c.generate("x", 2).unwrap();
         assert_eq!(done.get("done"), Some(&Json::Bool(true)));
+        c.send(&Json::obj(vec![("op", Json::str("shutdown"))])).unwrap();
+        let _ = c.recv();
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn unknown_op_answers_typed_bad_request() {
+        let (addr, handle) = spawn_test_server();
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        c.send(&Json::obj(vec![("op", Json::str("frobnicate"))])).unwrap();
+        let err = c.recv().unwrap();
+        let body = err.get("error").expect("typed error object");
+        assert_eq!(body.get("code").unwrap().as_str(), Some("bad_request"));
+        assert!(body.get("message").unwrap().as_str().unwrap().contains("frobnicate"));
+        // The connection survives a bad op.
+        let done = c.generate("y", 2).unwrap();
+        assert_eq!(done.get("done"), Some(&Json::Bool(true)));
+        c.send(&Json::obj(vec![("op", Json::str("shutdown"))])).unwrap();
+        let _ = c.recv();
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn deadline_ms_field_expires_request() {
+        let (addr, handle) = spawn_test_server();
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        // A 1 ms deadline on a long prompt cannot be met; the wire-level
+        // terminal is a normal Done with reason deadline_exceeded.
+        c.send(&Json::obj(vec![
+            ("op", Json::str("generate")),
+            ("prompt", Json::str(&"z".repeat(400))),
+            ("max_tokens", Json::num(500.0)),
+            ("deadline_ms", Json::num(1.0)),
+        ]))
+        .unwrap();
+        let done = loop {
+            let msg = c.recv().unwrap();
+            if msg.get("done").is_some() || msg.get("error").is_some() {
+                break msg;
+            }
+        };
+        assert_eq!(done.get("reason").unwrap().as_str(), Some("deadline_exceeded"));
+        // The server keeps serving.
+        let ok = c.generate("after", 2).unwrap();
+        assert_eq!(ok.get("reason").unwrap().as_str(), Some("max_tokens"));
         c.send(&Json::obj(vec![("op", Json::str("shutdown"))])).unwrap();
         let _ = c.recv();
         handle.join().unwrap().unwrap();

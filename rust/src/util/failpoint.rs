@@ -1,0 +1,233 @@
+//! Deterministic fault injection for the robustness test suite.
+//!
+//! A *failpoint* is a named site in production code that asks, each time
+//! execution passes it, "should I fail right now?". With the default
+//! feature set the answer is a compile-time constant `false` — the call
+//! inlines to nothing and the serving paths carry zero overhead. With
+//! `--features failpoints` a process-global registry scripts the
+//! answer: tests arm a site with a 1-based *hit window* and a
+//! [`FailAction`], then drive a real workload through the coordinator
+//! or server and assert on the typed wreckage.
+//!
+//! Sites are plain strings (`"engine.decode"`, `"kvpaged.alloc"`, …)
+//! checked via [`should_fail`]; the full list lives in
+//! `docs/ARCHITECTURE.md` § "Failure domains & recovery". Triggers are
+//! counted per-site, so a schedule like "fail the 3rd decode round"
+//! is `arm_at("engine.decode", 3, FailAction::Panic)` — deterministic
+//! because the coordinator is a single worker thread.
+//!
+//! The registry is process-global, so tests that arm *real* sites must
+//! serialize against each other **and** against every other test that
+//! might trip those sites. [`exclusive`] provides that: chaos tests
+//! live in their own integration binary (`rust/tests/chaos.rs`, cargo
+//! runs test binaries one at a time) and each takes the exclusive
+//! guard, which resets the registry on acquire and on drop.
+
+/// What an armed failpoint does when its hit window matches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailAction {
+    /// Report failure: [`should_fail`] returns `true` and the call site
+    /// takes its error path (typed `Err`, `None` from an allocator, …).
+    Error,
+    /// Panic at the site with a recognizable message — exercises the
+    /// coordinator's `catch_unwind` restart path.
+    Panic,
+    /// Sleep for the given milliseconds, then proceed normally. Used to
+    /// pace fast paths (e.g. decode rounds on a tiny test model) so
+    /// mid-flight client behavior lands deterministically.
+    Sleep(u64),
+}
+
+#[cfg(feature = "failpoints")]
+mod imp {
+    use super::FailAction;
+    use std::collections::BTreeMap;
+    use std::sync::{Mutex, MutexGuard};
+
+    #[derive(Clone, Copy, Debug)]
+    struct Trigger {
+        /// 1-based first hit the trigger fires on.
+        from: u64,
+        /// Last hit (inclusive); `u64::MAX` means "forever".
+        to: u64,
+        action: FailAction,
+    }
+
+    #[derive(Default)]
+    struct Site {
+        hits: u64,
+        triggers: Vec<Trigger>,
+    }
+
+    static REGISTRY: Mutex<BTreeMap<String, Site>> = Mutex::new(BTreeMap::new());
+    /// Serializes chaos tests; independent of the registry lock.
+    static EXCLUSIVE: Mutex<()> = Mutex::new(());
+
+    /// A failpoint panic unwinds through `registry()`'s guard *after*
+    /// it is dropped, but an injected panic elsewhere may still poison
+    /// either mutex — both locks hold plain data, so poison is noise.
+    fn registry() -> MutexGuard<'static, BTreeMap<String, Site>> {
+        REGISTRY.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Arm `site` to perform `action` on hits `from..=to` (1-based).
+    pub fn arm(site: &str, from: u64, to: u64, action: FailAction) {
+        assert!(from >= 1 && to >= from, "hit window must be 1-based and non-empty");
+        registry()
+            .entry(site.to_string())
+            .or_default()
+            .triggers
+            .push(Trigger { from, to, action });
+    }
+
+    /// Arm `site` for exactly the `n`-th hit.
+    pub fn arm_at(site: &str, n: u64, action: FailAction) {
+        arm(site, n, n, action);
+    }
+
+    /// Arm `site` from the `n`-th hit onward, forever.
+    pub fn arm_from(site: &str, n: u64, action: FailAction) {
+        arm(site, n, u64::MAX, action);
+    }
+
+    /// Total times `site` has been evaluated since the last [`reset`].
+    pub fn hits(site: &str) -> u64 {
+        registry().get(site).map_or(0, |s| s.hits)
+    }
+
+    /// Clear every trigger and hit counter.
+    pub fn reset() {
+        registry().clear();
+    }
+
+    /// Evaluate `site`: count the hit, fire a matching trigger if any.
+    ///
+    /// Returns `true` when the call site should take its error path.
+    /// `FailAction::Panic` panics here (with the registry lock already
+    /// released); `FailAction::Sleep` delays and then reports `false`.
+    pub fn should_fail(site: &str) -> bool {
+        let mut reg = registry();
+        let s = reg.entry(site.to_string()).or_default();
+        s.hits += 1;
+        let hit = s.hits;
+        let act = s
+            .triggers
+            .iter()
+            .find(|t| hit >= t.from && hit <= t.to)
+            .map(|t| t.action);
+        drop(reg);
+        match act {
+            None => false,
+            Some(FailAction::Error) => true,
+            Some(FailAction::Sleep(ms)) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                false
+            }
+            Some(FailAction::Panic) => panic!("failpoint '{site}': injected panic"),
+        }
+    }
+
+    /// Held by a chaos test for its whole body: serializes armed-site
+    /// tests and guarantees a clean registry on entry and exit.
+    pub struct FailpointsGuard {
+        _lock: MutexGuard<'static, ()>,
+    }
+
+    impl Drop for FailpointsGuard {
+        fn drop(&mut self) {
+            reset();
+        }
+    }
+
+    /// Acquire the chaos-test lock and reset the registry.
+    pub fn exclusive() -> FailpointsGuard {
+        let lock = EXCLUSIVE.lock().unwrap_or_else(|e| e.into_inner());
+        reset();
+        FailpointsGuard { _lock: lock }
+    }
+}
+
+#[cfg(feature = "failpoints")]
+pub use imp::*;
+
+/// With failpoints compiled out every site check is a constant `false`
+/// — the optimizer deletes the branch entirely.
+#[cfg(not(feature = "failpoints"))]
+#[inline(always)]
+pub fn should_fail(_site: &str) -> bool {
+    false
+}
+
+#[cfg(all(test, feature = "failpoints"))]
+mod tests {
+    use super::*;
+
+    // These self-tests use fictitious "test.*" sites that no production
+    // code evaluates, so holding `exclusive()` only serializes them
+    // against other chaos tests without perturbing ordinary lib tests.
+
+    #[test]
+    fn unarmed_sites_never_fail_but_count_hits() {
+        let _g = exclusive();
+        assert!(!should_fail("test.unarmed"));
+        assert!(!should_fail("test.unarmed"));
+        assert_eq!(hits("test.unarmed"), 2);
+        assert_eq!(hits("test.never-evaluated"), 0);
+    }
+
+    #[test]
+    fn hit_windows_are_one_based_and_inclusive() {
+        let _g = exclusive();
+        arm("test.window", 2, 3, FailAction::Error);
+        assert!(!should_fail("test.window")); // hit 1
+        assert!(should_fail("test.window")); // hit 2
+        assert!(should_fail("test.window")); // hit 3
+        assert!(!should_fail("test.window")); // hit 4
+        assert_eq!(hits("test.window"), 4);
+    }
+
+    #[test]
+    fn arm_from_fires_forever_and_reset_clears() {
+        let _g = exclusive();
+        arm_from("test.forever", 1, FailAction::Error);
+        for _ in 0..5 {
+            assert!(should_fail("test.forever"));
+        }
+        reset();
+        assert!(!should_fail("test.forever"));
+        assert_eq!(hits("test.forever"), 1);
+    }
+
+    #[test]
+    fn panic_action_panics_with_site_name() {
+        let _g = exclusive();
+        arm_at("test.panics", 1, FailAction::Panic);
+        let err = std::panic::catch_unwind(|| should_fail("test.panics"))
+            .expect_err("armed panic must unwind");
+        let msg = err.downcast_ref::<String>().expect("panic payload is a String");
+        assert!(msg.contains("test.panics"), "panic message names the site: {msg}");
+        // The registry mutex was released before panicking: still usable.
+        assert_eq!(hits("test.panics"), 1);
+        assert!(!should_fail("test.panics"));
+    }
+
+    #[test]
+    fn sleep_action_delays_then_proceeds() {
+        let _g = exclusive();
+        arm_at("test.sleepy", 1, FailAction::Sleep(20));
+        let t0 = std::time::Instant::now();
+        assert!(!should_fail("test.sleepy"));
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(20));
+        assert!(!should_fail("test.sleepy"));
+    }
+
+    #[test]
+    fn exclusive_guard_resets_on_drop() {
+        let g = exclusive();
+        arm_from("test.guarded", 1, FailAction::Error);
+        assert!(should_fail("test.guarded"));
+        drop(g);
+        let _g = exclusive();
+        assert!(!should_fail("test.guarded"));
+    }
+}

@@ -5,6 +5,7 @@
 //! `half`, `criterion`, or `proptest` is implemented here from scratch
 //! (see DESIGN.md §6 "Substitutions").
 
+pub mod failpoint;
 pub mod json;
 pub mod prng;
 pub mod prop;

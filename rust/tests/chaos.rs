@@ -1,0 +1,238 @@
+//! Deterministic chaos suite: scripted failpoint schedules driven
+//! through the real coordinator and server, asserting the typed
+//! wreckage — every request ends in exactly one terminal event, the KV
+//! pool leaks nothing, and the worker keeps serving after injected
+//! panics. Requires `--features failpoints`; without it this whole
+//! binary compiles to nothing and cargo reports zero tests.
+//!
+//! The failpoint registry is process-global, so every test here takes
+//! [`failpoint::exclusive`] for its whole body: armed *real* sites must
+//! not bleed into each other (cargo runs integration binaries one at a
+//! time, so only tests within this file race).
+#![cfg(feature = "failpoints")]
+
+mod common;
+
+use itq3s::coordinator::{Coordinator, CoordinatorConfig, Event, FinishReason, GenRequest};
+use itq3s::gguf::{IgufFile, TensorEntry};
+use itq3s::server::{spawn_ephemeral, Client};
+use itq3s::util::failpoint::{self, FailAction};
+use itq3s::util::json::Json;
+
+fn chaos_coordinator(max_batch: usize) -> Coordinator {
+    Coordinator::new(
+        Box::new(common::dense_engine(7)),
+        CoordinatorConfig {
+            max_batch,
+            kv_budget_bytes: 64 << 20,
+            prefill_chunk: 8,
+            ..Default::default()
+        },
+    )
+}
+
+/// Drain a receiver and count terminal events (`Done` or `Error`).
+fn terminals(rx: std::sync::mpsc::Receiver<Event>) -> usize {
+    let mut n = 0;
+    for ev in rx.iter() {
+        if matches!(ev, Event::Done { .. } | Event::Error(_)) {
+            n += 1;
+        }
+    }
+    n
+}
+
+#[test]
+fn scripted_chaos_schedule_recovers_and_leaks_nothing() {
+    let _g = failpoint::exclusive();
+    // The schedule: a prefill panic early, a decode panic a few rounds
+    // in, a panic *while holding the engine scratch locks* (exercises
+    // poison recovery in `Engine::reset`), and one block-allocation
+    // failure. All one-shot windows, all hit by any 6-request workload
+    // on a 4-slot batch — deterministic because the coordinator is a
+    // single worker thread.
+    failpoint::arm_at("engine.prefill", 2, FailAction::Panic);
+    failpoint::arm_at("engine.decode", 3, FailAction::Panic);
+    failpoint::arm_at("native.decode_locked", 1, FailAction::Panic);
+    failpoint::arm_at("kvpaged.alloc", 5, FailAction::Error);
+
+    let c = chaos_coordinator(4);
+    let mut kept = Vec::new();
+    for i in 0..4 {
+        kept.push(c.generate(GenRequest {
+            prompt: format!("shared prefix, request number {i}"),
+            max_new_tokens: 6 + i,
+            ..Default::default()
+        }));
+    }
+    // One client that vanishes immediately...
+    drop(c.generate(GenRequest {
+        prompt: "shared prefix, abandoned".into(),
+        max_new_tokens: 400,
+        ..Default::default()
+    }));
+    // ...and one whose deadline cannot be met.
+    kept.push(c.generate(GenRequest {
+        prompt: "z".repeat(400),
+        max_new_tokens: 500,
+        deadline_ms: Some(1),
+        ..Default::default()
+    }));
+
+    for (i, rx) in kept.into_iter().enumerate() {
+        assert_eq!(terminals(rx), 1, "request {i}: exactly one terminal event");
+    }
+
+    // The worker survived every injected fault and still serves.
+    let (_, done) = c.generate_collect(GenRequest {
+        prompt: "after the storm".into(),
+        max_new_tokens: 4,
+        ..Default::default()
+    });
+    assert!(
+        matches!(done, Some(Event::Done { reason: FinishReason::MaxTokens, .. })),
+        "fresh request after recovery must complete normally: {done:?}"
+    );
+
+    // Leak audit: with every request resolved, dropping the cached
+    // prefixes must leave zero blocks in use.
+    c.clear_prefix_cache().unwrap();
+    let stats = c.stats().unwrap();
+    assert_eq!(
+        stats.get("kv_blocks_in_use").unwrap().as_u64(),
+        Some(0),
+        "resolved workload must not leak KV blocks"
+    );
+    assert!(
+        stats.get("worker_restarts").unwrap().as_u64().unwrap() >= 1,
+        "the injected panics must have restarted the worker"
+    );
+    assert!(stats.get("deadline_expired").unwrap().as_u64().unwrap() >= 1);
+    assert!(stats.get("requests_cancelled").unwrap().as_u64().unwrap() >= 1);
+    c.shutdown();
+}
+
+#[test]
+fn decode_phase_dead_client_cancelled_within_rounds() {
+    let _g = failpoint::exclusive();
+    // Pace decode rounds so the client provably disconnects mid-decode
+    // (on a tiny model whole requests otherwise finish between two
+    // receiver operations).
+    failpoint::arm_from("engine.decode", 1, FailAction::Sleep(15));
+
+    let c = chaos_coordinator(2);
+    let rx = c.generate(GenRequest {
+        prompt: "about to be abandoned".into(),
+        max_new_tokens: 400,
+        ..Default::default()
+    });
+    // Read two streamed tokens — the sequence is decoding — then vanish.
+    let mut seen = 0;
+    for ev in rx.iter() {
+        if matches!(ev, Event::Token { .. }) {
+            seen += 1;
+            if seen == 2 {
+                break;
+            }
+        }
+    }
+    drop(rx);
+
+    // The decode-round heartbeat probe cancels the abandoned sequence
+    // within a round; a fresh request completes and the total token
+    // spend stays far below the abandoned request's 400-token budget.
+    let (_, done) = c.generate_collect(GenRequest {
+        prompt: "alive".into(),
+        max_new_tokens: 2,
+        ..Default::default()
+    });
+    assert!(matches!(done, Some(Event::Done { .. })));
+    let stats = c.stats().unwrap();
+    assert!(stats.get("requests_cancelled").unwrap().as_u64().unwrap() >= 1);
+    assert!(
+        stats.get("gen_tokens").unwrap().as_u64().unwrap() <= 20,
+        "abandoned request must not decode on toward max_tokens"
+    );
+    c.shutdown();
+}
+
+#[test]
+fn server_conn_error_surfaces_and_server_survives() {
+    let _g = failpoint::exclusive();
+    // The very first wire send in the server process fails (a client
+    // whose socket died). That connection's handler exits with an
+    // error; the server logs it, counts it, and keeps accepting.
+    failpoint::arm_at("server.send", 1, FailAction::Error);
+
+    let (addr, handle) = spawn_ephemeral(
+        Box::new(common::dense_engine(7)),
+        CoordinatorConfig {
+            max_batch: 2,
+            kv_budget_bytes: 64 << 20,
+            prefill_chunk: 8,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = addr.to_string();
+
+    let mut a = Client::connect(&addr).unwrap();
+    assert!(
+        a.generate("doomed", 3).is_err(),
+        "the injected send failure must kill this connection"
+    );
+
+    // The failed handler closes the socket *before* it reports the
+    // error to the coordinator, so poll briefly instead of racing it.
+    let mut b = Client::connect(&addr).unwrap();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    loop {
+        b.send(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+        let stats = b.recv().unwrap();
+        if stats.get("conn_errors").unwrap().as_u64().unwrap() >= 1 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "the dead connection was never counted under conn_errors"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    let done = b.generate("still serving", 3).unwrap();
+    assert_eq!(done.get("done"), Some(&Json::Bool(true)));
+    b.send(&Json::obj(vec![("op", Json::str("shutdown"))])).unwrap();
+    let _ = b.recv();
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn gguf_failpoints_surface_typed_errors() {
+    let _g = failpoint::exclusive();
+    let file = IgufFile {
+        meta: Json::obj(vec![("kind", Json::str("chaos"))]),
+        tensors: vec![
+            TensorEntry::from_f32("a", 2, 2, &[1., 2., 3., 4.]),
+            TensorEntry::from_f32("b", 1, 3, &[5., 6., 7.]),
+        ],
+    };
+    let bytes = file.to_bytes();
+
+    failpoint::arm_at("gguf.parse.header", 1, FailAction::Error);
+    let err = IgufFile::parse(&bytes).expect_err("armed header site must fail");
+    assert!(err.to_string().contains("failpoint"), "typed error names the site: {err}");
+    IgufFile::parse(&bytes).expect("one-shot window passed; same bytes parse clean");
+
+    failpoint::arm_at("gguf.parse.tensor", 1, FailAction::Error);
+    let err = IgufFile::parse(&bytes).expect_err("armed tensor site must fail");
+    assert!(err.to_string().contains("failpoint"));
+    IgufFile::parse(&bytes).expect("tensor window passed");
+
+    let dir = std::env::temp_dir().join("itq3s-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("chaos.iguf");
+    file.save(&path).unwrap();
+    failpoint::arm_at("gguf.load.io", 1, FailAction::Error);
+    let err = IgufFile::load(&path).expect_err("armed IO site must fail");
+    assert!(err.to_string().contains("failpoint"));
+    IgufFile::load(&path).expect("IO window passed; the file itself is fine");
+}
