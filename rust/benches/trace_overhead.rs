@@ -1,0 +1,90 @@
+//! Observability-overhead bench: decode throughput through the full
+//! coordinator with per-request tracing off vs on (`"trace": true`),
+//! plus the same pair again under speculation, on the itq3_s W3A8
+//! engine. Tracing must never change the generated tokens; this bench
+//! prices what it *does* cost (a handful of `Instant` reads and small
+//! event pushes per round — expected noise-level). When built with
+//! `--features profiling` the phase-profiler scopes are live too, so
+//! the run also prices the instrumented engine. Writes
+//! `BENCH_obs.json` (schema in EXPERIMENTS.md §Benchmark artifacts).
+
+use itq3s::bench::harness::bench;
+use itq3s::coordinator::{Coordinator, CoordinatorConfig, Event, GenRequest};
+use itq3s::model::{DenseModel, ModelConfig, NativeEngine, QuantizedModel};
+use itq3s::util::json::Json;
+use itq3s::util::profile;
+use std::collections::BTreeMap;
+
+/// Run one generation to completion, returning generated-token count.
+fn run_one(c: &Coordinator, prompt: &str, n: usize, trace: bool) -> usize {
+    let rx = c.generate(GenRequest {
+        prompt: prompt.to_string(),
+        max_new_tokens: n,
+        trace,
+        ..Default::default()
+    });
+    for ev in rx.iter() {
+        match ev {
+            Event::Done { gen_tokens, .. } => return gen_tokens,
+            Event::Error(e) => panic!("bench request failed: {e:?}"),
+            _ => {}
+        }
+    }
+    panic!("stream ended without a terminal event");
+}
+
+fn main() {
+    let cfg = ModelConfig::tiny();
+    let dense = DenseModel::random(&cfg, 42, Some(5.0));
+
+    let prompt = "the quick brown fox jumps over the lazy dog. ".repeat(3);
+    let gen_tokens = 48usize;
+
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
+    report.insert("gen_tokens".into(), Json::num(gen_tokens as f64));
+    report.insert("prompt_bytes".into(), Json::num(prompt.len() as f64));
+    report.insert("profiling_enabled".into(), Json::Bool(profile::ENABLED));
+
+    for (mode, draft_len) in [("vanilla", 0usize), ("speculative", 4)] {
+        let fmt = itq3s::quant::format_by_name("itq3_s").unwrap();
+        let eng = NativeEngine::quantized(QuantizedModel::quantize(&dense, fmt));
+        let coord = Coordinator::new(
+            Box::new(eng),
+            CoordinatorConfig {
+                max_batch: 4,
+                kv_budget_bytes: 64 << 20,
+                spec_draft_len: draft_len,
+                ..Default::default()
+            },
+        );
+        let mut tps = [0.0f64; 2];
+        for (i, traced) in [false, true].into_iter().enumerate() {
+            let label = format!("{mode}_{}", if traced { "traced" } else { "untraced" });
+            let got = run_one(&coord, &prompt, gen_tokens, traced);
+            assert_eq!(got, gen_tokens, "{label}: short generation");
+            let r = bench(&label, 1, 5, || {
+                run_one(&coord, &prompt, gen_tokens, traced);
+            });
+            tps[i] = gen_tokens as f64 / r.mean_s;
+        }
+        let overhead_pct = (tps[0] / tps[1] - 1.0) * 100.0;
+        println!(
+            "{mode:<12}: untraced {:>8.1} tok/s, traced {:>8.1} tok/s ({overhead_pct:+.1}% overhead)",
+            tps[0], tps[1]
+        );
+        report.insert(
+            mode.to_string(),
+            Json::obj(vec![
+                ("untraced_tokens_per_s", Json::num(tps[0])),
+                ("traced_tokens_per_s", Json::num(tps[1])),
+                ("trace_overhead_pct", Json::num(overhead_pct)),
+            ]),
+        );
+    }
+
+    let out = Json::Obj(report).to_string();
+    match std::fs::write("BENCH_obs.json", &out) {
+        Ok(()) => println!("wrote BENCH_obs.json"),
+        Err(e) => eprintln!("could not write BENCH_obs.json: {e}"),
+    }
+}

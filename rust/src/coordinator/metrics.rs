@@ -5,7 +5,8 @@
 //! under sustained load (no unbounded per-request vectors).
 
 use crate::util::json::Json;
-use crate::util::stats::RingStats;
+use crate::util::profile::{NUM_PHASES, PHASE_NAMES};
+use crate::util::stats::{LogHistogram, RingStats};
 use std::time::Instant;
 
 /// Retained samples per distribution (percentile window).
@@ -75,6 +76,24 @@ pub struct Metrics {
     pub worker_restarts: u64,
     /// Admission-queue depth sampled once per scheduling round.
     pub queue_depth: RingStats,
+    /// True wall time of each decode stage (one fused round: spec
+    /// verify passes plus the batched decode call plus sampling) —
+    /// complements the batch-amortized `decode_step_ms`, whose samples
+    /// divide away the batch size. Round-level variance (a slow round
+    /// among fast ones) is directly visible here.
+    pub decode_round_ms: RingStats,
+    /// Per-round engine-phase wall time (`util/profile.rs` order:
+    /// rot_quant, gemm, attention, sampler). Only fed when built with
+    /// `--features profiling`; empty rings otherwise, and the
+    /// `phase_*_ms` snapshot keys are omitted so the default-feature
+    /// snapshot stays byte-identical.
+    pub phase_ms: [RingStats; NUM_PHASES],
+    /// Process-lifetime TTFT histogram backing the Prometheus
+    /// exposition (exact bounded-memory bucket counts, unlike the
+    /// windowed ring above).
+    pub ttft_hist: LogHistogram,
+    /// Process-lifetime decode-round-time histogram (Prometheus).
+    pub decode_round_hist: LogHistogram,
 }
 
 impl Default for Metrics {
@@ -114,6 +133,10 @@ impl Metrics {
             deadline_expired: 0,
             worker_restarts: 0,
             queue_depth: RingStats::new(WINDOW),
+            decode_round_ms: RingStats::new(WINDOW),
+            phase_ms: std::array::from_fn(|_| RingStats::new(WINDOW)),
+            ttft_hist: LogHistogram::latency_ms(),
+            decode_round_hist: LogHistogram::latency_ms(),
         }
     }
 
@@ -201,7 +224,109 @@ impl Metrics {
         fields.push(("queue_depth_p50", Json::num(self.queue_depth.p50())));
         fields.push(("queue_depth_p99", Json::num(self.queue_depth.p99())));
         fields.push(("queue_depth_max", Json::num(self.queue_depth.max())));
-        Json::obj(fields)
+        // Observability keys (PR 7), appended after everything above —
+        // append-only as always.
+        fields.push(("decode_round_ms_mean", Json::num(self.decode_round_ms.mean())));
+        fields.push(("decode_round_ms_p50", Json::num(self.decode_round_ms.p50())));
+        fields.push(("decode_round_ms_p99", Json::num(self.decode_round_ms.p99())));
+        fields.push(("decode_round_ms_max", Json::num(self.decode_round_ms.max())));
+        let mut snap = Json::obj(fields);
+        // Phase-profile keys exist only when the profiler is compiled
+        // in: with default features the snapshot is byte-identical to
+        // a build without this code.
+        if crate::util::profile::ENABLED {
+            if let Json::Obj(m) = &mut snap {
+                for (i, name) in PHASE_NAMES.iter().enumerate() {
+                    m.insert(format!("phase_{name}_ms_mean"), Json::num(self.phase_ms[i].mean()));
+                    m.insert(format!("phase_{name}_ms_p50"), Json::num(self.phase_ms[i].p50()));
+                    m.insert(format!("phase_{name}_ms_p99"), Json::num(self.phase_ms[i].p99()));
+                }
+            }
+        }
+        snap
+    }
+
+    /// Render the metrics in Prometheus text exposition format
+    /// (version 0.0.4): counters, gauges, summaries for the windowed
+    /// rings, and true histograms from the [`LogHistogram`]s. Served
+    /// by the `metrics` op (`docs/PROTOCOL.md`).
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut counter = |name: &str, help: &str, v: f64| {
+            out.push_str(&format!(
+                "# HELP itq3s_{name} {help}\n# TYPE itq3s_{name} counter\nitq3s_{name} {v}\n"
+            ));
+        };
+        counter("requests_submitted_total", "Requests accepted at intake.", self.requests_submitted as f64);
+        counter("requests_finished_total", "Requests that reached a Done terminal.", self.requests_finished as f64);
+        counter("requests_rejected_total", "Requests rejected (context_full at admission).", self.requests_rejected as f64);
+        counter("requests_cancelled_total", "Requests cancelled by client disconnect.", self.requests_cancelled as f64);
+        counter("prompt_tokens_total", "Prompt tokens consumed.", self.prompt_tokens as f64);
+        counter("gen_tokens_total", "Tokens generated.", self.gen_tokens as f64);
+        counter("prefix_reused_tokens_total", "Prompt tokens served from the prefix cache.", self.prefix_reused_tokens as f64);
+        counter("preemptions_total", "Sequences preempted under KV pressure.", self.preemptions as f64);
+        counter("spec_drafted_total", "Draft tokens proposed to verify passes.", self.spec_drafted as f64);
+        counter("spec_accepted_total", "Draft tokens accepted by verify passes.", self.spec_accepted as f64);
+        counter("spec_resample_total", "Verify rounds corrected by residual resampling.", self.spec_resampled as f64);
+        counter("conn_errors_total", "Connection handlers that exited with an error.", self.conn_errors as f64);
+        counter("rejected_overload_total", "Requests shed at the admission-queue bound.", self.rejected_overload as f64);
+        counter("deadline_expired_total", "Requests whose deadline expired.", self.deadline_expired as f64);
+        counter("worker_restarts_total", "Panic-isolated scheduler restarts.", self.worker_restarts as f64);
+
+        let mut gauge = |name: &str, help: &str, v: f64| {
+            out.push_str(&format!(
+                "# HELP itq3s_{name} {help}\n# TYPE itq3s_{name} gauge\nitq3s_{name} {v}\n"
+            ));
+        };
+        gauge("uptime_seconds", "Seconds since the coordinator started.", self.started.elapsed().as_secs_f64());
+        gauge("decode_tps", "Aggregate decode throughput (tokens/sec) since start.", self.decode_tps());
+        gauge("kv_peak_bytes", "Peak KV pool bytes in use.", self.kv_peak_bytes as f64);
+        // Numeric paged-pool fragment keys ride along as gauges.
+        if let Json::Obj(pool) = &self.kv_pool {
+            for (k, v) in pool {
+                if let Some(x) = v.as_f64() {
+                    gauge(k, "Paged KV pool statistic (see docs/PROTOCOL.md stats keys).", x);
+                }
+            }
+        }
+
+        let mut summary = |name: &str, help: &str, r: &RingStats| {
+            out.push_str(&format!("# HELP itq3s_{name} {help}\n# TYPE itq3s_{name} summary\n"));
+            out.push_str(&format!("itq3s_{name}{{quantile=\"0.5\"}} {}\n", r.p50()));
+            out.push_str(&format!("itq3s_{name}{{quantile=\"0.99\"}} {}\n", r.p99()));
+            out.push_str(&format!("itq3s_{name}_sum {}\n", r.mean() * r.count() as f64));
+            out.push_str(&format!("itq3s_{name}_count {}\n", r.count()));
+        };
+        summary("ttft_ms", "Submit-to-first-token latency (ms; windowed quantiles).", &self.ttft_ms);
+        summary("decode_step_ms", "Batch-amortized per-token decode time (ms).", &self.decode_step_ms);
+        summary("decode_round_ms", "True wall time per decode round (ms).", &self.decode_round_ms);
+        summary("batch_occupancy", "Active sequences per scheduling round.", &self.batch_occupancy);
+        summary("decode_batch_size", "Sequences per fused decode call.", &self.decode_batch_size);
+        summary("spec_accept_rate", "Per-verify-round draft acceptance rate.", &self.spec_accept_rate);
+        summary("spec_run_len", "Accepted-run length per verify round.", &self.spec_run_len);
+        summary("queue_depth", "Admission-queue depth per scheduling round.", &self.queue_depth);
+        if crate::util::profile::ENABLED {
+            for (i, name) in PHASE_NAMES.iter().enumerate() {
+                summary(
+                    &format!("phase_{name}_ms"),
+                    "Engine phase wall time per scheduling round (ms; --features profiling).",
+                    &self.phase_ms[i],
+                );
+            }
+        }
+
+        let mut histogram = |name: &str, help: &str, h: &LogHistogram| {
+            out.push_str(&format!("# HELP itq3s_{name} {help}\n# TYPE itq3s_{name} histogram\n"));
+            for (le, cum) in h.cumulative() {
+                let le = if le.is_infinite() { "+Inf".to_string() } else { le.to_string() };
+                out.push_str(&format!("itq3s_{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+            }
+            out.push_str(&format!("itq3s_{name}_sum {}\n", h.sum()));
+            out.push_str(&format!("itq3s_{name}_count {}\n", h.count()));
+        };
+        histogram("ttft_ms_hist", "Submit-to-first-token latency (ms; lifetime histogram).", &self.ttft_hist);
+        histogram("decode_round_ms_hist", "True wall time per decode round (ms; lifetime histogram).", &self.decode_round_hist);
+        out
     }
 }
 
@@ -311,5 +436,136 @@ mod tests {
         m.kv_pool = Json::obj(vec![("kv_blocks_in_use", Json::num(5.0))]);
         let s = m.snapshot();
         assert_eq!(s.get("kv_blocks_in_use").unwrap().as_u64(), Some(5));
+    }
+
+    /// Golden append-only key test: the exact key set of
+    /// `Metrics::snapshot` (sans the pool fragment, which the pool
+    /// owns). A future PR may *add* keys — extend this list — but a
+    /// missing or renamed key is a break for every stats consumer.
+    #[test]
+    fn snapshot_key_set_is_golden_append_only() {
+        let mut expected: Vec<String> = [
+            // PR 1-3 core.
+            "uptime_s",
+            "requests_submitted",
+            "requests_finished",
+            "requests_rejected",
+            "requests_cancelled",
+            "prompt_tokens",
+            "gen_tokens",
+            "prefix_reused_tokens",
+            "preemptions",
+            "decode_tps",
+            "ttft_ms_mean",
+            "ttft_ms_p50",
+            "ttft_ms_p99",
+            "ttft_ms_max",
+            "decode_step_ms_mean",
+            "decode_step_ms_p50",
+            "decode_step_ms_p99",
+            "batch_occupancy_mean",
+            "batch_occupancy_max",
+            "decode_batch_size_mean",
+            "decode_batch_size_max",
+            "kv_peak_bytes",
+            // PR 4-5 speculation.
+            "spec_drafted_total",
+            "spec_accepted_total",
+            "spec_accept_rate_mean",
+            "spec_accept_rate_p50",
+            "spec_accept_rate_p99",
+            "spec_run_len_mean",
+            "spec_run_len_p50",
+            "spec_run_len_p99",
+            "spec_run_len_max",
+            "spec_resample_total",
+            "spec_accept_rate_greedy_mean",
+            "spec_accept_rate_greedy_p50",
+            "spec_accept_rate_greedy_p99",
+            "spec_accept_rate_sampled_mean",
+            "spec_accept_rate_sampled_p50",
+            "spec_accept_rate_sampled_p99",
+            // PR 6 robustness.
+            "conn_errors",
+            "rejected_overload",
+            "deadline_expired",
+            "worker_restarts",
+            "queue_depth_mean",
+            "queue_depth_p50",
+            "queue_depth_p99",
+            "queue_depth_max",
+            // PR 7 observability.
+            "decode_round_ms_mean",
+            "decode_round_ms_p50",
+            "decode_round_ms_p99",
+            "decode_round_ms_max",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        if crate::util::profile::ENABLED {
+            for name in PHASE_NAMES {
+                for suffix in ["mean", "p50", "p99"] {
+                    expected.push(format!("phase_{name}_ms_{suffix}"));
+                }
+            }
+        }
+        expected.sort();
+
+        let Json::Obj(m) = Metrics::new().snapshot() else {
+            panic!("snapshot must be an object")
+        };
+        let actual: Vec<String> = m.keys().cloned().collect();
+        // Json::Obj is a BTreeMap, so serialization order is the
+        // sorted key order — comparing the sorted lists pins the
+        // serialized byte layout of the key set.
+        assert_eq!(actual, expected, "snapshot keys changed; stats keys are append-only");
+    }
+
+    #[test]
+    fn decode_round_ms_surfaces_alongside_amortized_step_time() {
+        let mut m = Metrics::new();
+        // A 4-wide round that took 8 ms: amortized step time 2 ms,
+        // true round time 8 ms.
+        for _ in 0..4 {
+            m.decode_step_ms.push(2.0);
+        }
+        m.decode_round_ms.push(8.0);
+        let s = m.snapshot();
+        assert_eq!(s.get("decode_step_ms_p50").unwrap().as_f64(), Some(2.0));
+        assert_eq!(s.get("decode_round_ms_p50").unwrap().as_f64(), Some(8.0));
+        assert_eq!(s.get("decode_round_ms_max").unwrap().as_f64(), Some(8.0));
+    }
+
+    #[test]
+    fn prometheus_exposition_renders_counters_summaries_histograms() {
+        let mut m = Metrics::new();
+        m.requests_submitted = 3;
+        m.gen_tokens = 42;
+        m.ttft_ms.push(12.5);
+        m.ttft_hist.push(12.5);
+        m.decode_round_ms.push(4.0);
+        m.decode_round_hist.push(4.0);
+        m.kv_pool = Json::obj(vec![
+            ("kv_blocks_in_use", Json::num(5.0)),
+            ("kv_quant", Json::str("f32")), // non-numeric: skipped
+        ]);
+        let text = m.prometheus();
+        assert!(text.contains("# TYPE itq3s_requests_submitted_total counter"));
+        assert!(text.contains("itq3s_requests_submitted_total 3\n"));
+        assert!(text.contains("itq3s_gen_tokens_total 42\n"));
+        assert!(text.contains("# TYPE itq3s_ttft_ms summary"));
+        assert!(text.contains("itq3s_ttft_ms{quantile=\"0.5\"} 12.5\n"));
+        assert!(text.contains("itq3s_ttft_ms_count 1\n"));
+        assert!(text.contains("# TYPE itq3s_ttft_ms_hist histogram"));
+        assert!(text.contains("itq3s_ttft_ms_hist_bucket{le=\"+Inf\"} 1\n"));
+        assert!(text.contains("itq3s_ttft_ms_hist_count 1\n"));
+        assert!(text.contains("# TYPE itq3s_decode_round_ms summary"));
+        assert!(text.contains("itq3s_kv_blocks_in_use 5\n"));
+        assert!(!text.contains("kv_quant"), "non-numeric pool keys are not gauges");
+        // The histogram's cumulative counts are monotone: the 12.5 ms
+        // sample appears in the 16 ms bucket and everything above.
+        assert!(text.contains("itq3s_ttft_ms_hist_bucket{le=\"16\"} 1\n"));
+        assert!(text.contains("itq3s_ttft_ms_hist_bucket{le=\"8\"} 0\n"));
     }
 }

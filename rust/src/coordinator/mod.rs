@@ -55,6 +55,18 @@
 //! exercised deterministically by the failpoint chaos suite
 //! (`rust/tests/chaos.rs`; see `docs/ARCHITECTURE.md` § "Failure
 //! domains & recovery").
+//!
+//! **Observability.** Requests can opt into per-request trace
+//! timelines (`"trace": true` → [`crate::util::trace`]; terminal
+//! `done` lines then carry a `timing` phase breakdown and finished
+//! timelines are served by the `trace` op). Every round feeds a
+//! process-global flight recorder ([`crate::util::flight`]) that is
+//! dumped through the structured logger when a round panics and is
+//! queryable via the `dump` op. Metrics are exposed both as the JSON
+//! `stats` snapshot and as Prometheus text (`metrics` op), and the
+//! engine's internal phases can be profiled under
+//! `--features profiling` ([`crate::util::profile`]). See
+//! `docs/ARCHITECTURE.md` § "Observability".
 
 pub mod error;
 pub mod kvpool;
@@ -69,6 +81,8 @@ use crate::model::tokenizer;
 use crate::model::ModelConfig;
 use crate::spec;
 use crate::util::json::Json;
+use crate::util::trace::{RequestTrace, Span, TraceEventKind, TraceStore};
+use crate::util::{flight, log, profile};
 use anyhow::Result;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -148,6 +162,11 @@ enum Cmd {
     /// A server connection handler exited with an error (counted under
     /// `conn_errors`; the handler already logged the detail).
     ConnError,
+    /// The `n` most recent completed trace timelines, newest first
+    /// (requests that opted in with `GenRequest::trace`).
+    Trace(usize, Sender<Json>),
+    /// Prometheus text exposition of the serving metrics.
+    Prometheus(Sender<String>),
     Shutdown,
 }
 
@@ -202,6 +221,13 @@ struct SeqState {
     /// `finish()` and retirement: a panic there must not requeue the
     /// sequence and produce a second terminal.
     done: bool,
+    /// Coordinator-assigned request id (1-based submission order).
+    /// Flight-recorder entries and log lines refer to requests by it.
+    id: u64,
+    /// Trace timeline for requests that opted in
+    /// (`GenRequest::trace`); carried across preemption and restart
+    /// like the rest of the state.
+    trace: Option<Box<RequestTrace>>,
 }
 
 struct WaitingReq {
@@ -213,6 +239,11 @@ struct WaitingReq {
     enqueued: Instant,
     /// `None` until the first admission attempt tokenizes the prompt.
     state: Option<SeqState>,
+    /// Coordinator-assigned request id (also in `state` once built).
+    id: u64,
+    /// Trace timeline carried only until the first admission builds
+    /// `state` (which then owns it); requeues leave this `None`.
+    trace: Option<Box<RequestTrace>>,
 }
 
 struct ActiveSeq {
@@ -228,7 +259,14 @@ struct ActiveSeq {
 }
 
 impl ActiveSeq {
-    fn send_done(&self, reason: FinishReason) {
+    /// Send the terminal `Done` (with the `timing` breakdown when the
+    /// request is traced) and return the completed timeline, if any,
+    /// for the caller to retire into the [`TraceStore`].
+    fn send_done(&mut self, reason: FinishReason) -> Option<Json> {
+        let timing = self.state.trace.as_mut().map(|t| {
+            t.record(TraceEventKind::Terminal);
+            t.timing_json()
+        });
         let s = &self.state;
         let _ = self.events.send(Event::Done {
             reason,
@@ -237,7 +275,9 @@ impl ActiveSeq {
             gen_tokens: s.generated.len(),
             ttft_ms: s.ttft_ms.unwrap_or(0.0),
             total_ms: s.submitted.elapsed().as_secs_f64() * 1000.0,
+            timing,
         });
+        s.trace.as_ref().map(|t| t.timeline_json(reason.as_str()))
     }
 
     /// Tokens this sequence wants to append in the coming round. A
@@ -320,6 +360,30 @@ impl Coordinator {
         rx.recv().map_err(|_| anyhow::anyhow!("worker gone"))
     }
 
+    /// The `n` most recent completed trace timelines, newest first —
+    /// requests that opted in with `GenRequest::trace` (the `trace` op).
+    pub fn trace(&self, n: usize) -> Result<Json> {
+        let (tx, rx) = channel();
+        self.tx.send(Cmd::Trace(n, tx)).map_err(|_| anyhow::anyhow!("worker gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("worker gone"))
+    }
+
+    /// Prometheus text exposition of the serving metrics (the
+    /// `metrics` op). The JSON `stats` snapshot is unchanged by this.
+    pub fn prometheus(&self) -> Result<String> {
+        let (tx, rx) = channel();
+        self.tx.send(Cmd::Prometheus(tx)).map_err(|_| anyhow::anyhow!("worker gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("worker gone"))
+    }
+
+    /// Snapshot the process-global flight recorder (the `dump` op).
+    /// Reads the ring directly rather than round-tripping through the
+    /// worker: the black box must stay readable even when the worker
+    /// is wedged mid-round — which is exactly when it matters.
+    pub fn dump(&self) -> Json {
+        flight::dump_json()
+    }
+
     /// Drop all cached (unreferenced) prefix blocks. Live sequences are
     /// unaffected; used by leak audits to assert `in_use == 0` after a
     /// workload fully drains.
@@ -394,8 +458,15 @@ fn deliver_and_resolve(
 /// Finish bookkeeping shared by every retirement site. Marks the
 /// sequence `done` so a panic between here and retirement cannot
 /// requeue it for a second terminal.
-fn finish(seq: &mut ActiveSeq, metrics: &mut metrics::Metrics, reason: FinishReason) {
-    seq.send_done(reason);
+fn finish(
+    seq: &mut ActiveSeq,
+    metrics: &mut metrics::Metrics,
+    traces: &mut TraceStore,
+    reason: FinishReason,
+) {
+    if let Some(timeline) = seq.send_done(reason) {
+        traces.push(timeline);
+    }
     seq.state.done = true;
     metrics.requests_finished += 1;
     if reason == FinishReason::Cancelled {
@@ -428,6 +499,14 @@ fn retry_after_hint(metrics: &metrics::Metrics, depth: usize) -> u64 {
     (per_slot_ms * depth.max(1) as f64).clamp(1.0, 60_000.0) as u64
 }
 
+/// Worker-local observability state: the completed-timeline ring the
+/// `trace` op serves, and a monotone round counter stamped into the
+/// flight recorder's per-round summaries.
+struct Obs {
+    traces: TraceStore,
+    round: u64,
+}
+
 fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
     let model_cfg = engine.config().clone();
     let mut pool = kvpool::KvPool::new(
@@ -445,6 +524,7 @@ fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
     // probe), so shutdown never truncates an accepted stream.
     let mut draining = false;
     let mut admit_counter: u64 = 0;
+    let mut obs = Obs { traces: TraceStore::new(64), round: 0 };
 
     loop {
         // ---- 0. intake ----------------------------------------------
@@ -475,7 +555,11 @@ fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
             match cmd {
                 Cmd::Generate(req, tx) => {
                     metrics.requests_submitted += 1;
+                    // Request ids are 1-based submission order — the
+                    // handle the flight recorder and log lines use.
+                    let id = metrics.requests_submitted;
                     if draining {
+                        flight::record("shed", format!("req={id} reason=shutting_down"));
                         let _ = tx.send(Event::Error(ServeError::ShuttingDown));
                     } else if waiting.len() >= cfg.max_queue_depth {
                         // Bounded admission: the round's own shed order
@@ -484,15 +568,27 @@ fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
                         // last resort and the only shed clients see.
                         metrics.rejected_overload += 1;
                         let hint = retry_after_hint(&metrics, waiting.len());
+                        flight::record(
+                            "shed",
+                            format!("req={id} reason=overloaded retry_after_ms={hint}"),
+                        );
+                        log::warn(
+                            "coordinator",
+                            "queue full; shedding request",
+                            &[("req", id.to_string()), ("retry_after_ms", hint.to_string())],
+                        );
                         let _ = tx.send(Event::Error(ServeError::Overloaded {
                             retry_after_ms: hint,
                         }));
                     } else {
+                        let trace = req.trace.then(|| Box::new(RequestTrace::new(id)));
                         waiting.push_back(WaitingReq {
                             req,
                             events: tx,
                             enqueued: Instant::now(),
                             state: None,
+                            id,
+                            trace,
                         });
                     }
                 }
@@ -513,6 +609,14 @@ fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
                 }
                 Cmd::ConnError => {
                     metrics.conn_errors += 1;
+                }
+                Cmd::Trace(n, tx) => {
+                    let _ = tx.send(obs.traces.recent(n));
+                }
+                Cmd::Prometheus(tx) => {
+                    metrics.kv_peak_bytes = metrics.kv_peak_bytes.max(pool.peak_bytes());
+                    metrics.kv_pool = pool.stats_json();
+                    let _ = tx.send(metrics.prometheus());
                 }
                 Cmd::Shutdown => {
                     draining = true;
@@ -545,9 +649,11 @@ fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
                 &mut waiting,
                 &mut active,
                 &mut admit_counter,
+                &mut obs,
             )
         }));
         if round.is_err() {
+            flight::record("panic", format!("round={} scheduling round panicked", obs.round));
             restart_after_panic(
                 engine.as_ref(),
                 &cfg,
@@ -556,7 +662,12 @@ fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
                 &mut metrics,
                 &mut waiting,
                 &mut active,
+                &mut obs.traces,
             );
+            // Dump the black box *after* the restart record so the
+            // post-mortem shows the rounds leading up to the crash and
+            // which requests the recovery implicated.
+            flight::dump_to_log();
         }
     }
 }
@@ -576,7 +687,9 @@ fn run_round(
     waiting: &mut VecDeque<WaitingReq>,
     active: &mut Vec<ActiveSeq>,
     admit_counter: &mut u64,
+    obs: &mut Obs,
 ) {
+    obs.round += 1;
     {
         // ---- 0.5 queued-deadline sweep ------------------------------
         // Expire waiting requests before spending admission work on
@@ -585,7 +698,7 @@ fn run_round(
         // partial-result `Done{DeadlineExceeded}` terminal that
         // mid-generation expiry produces.
         let now = Instant::now();
-        waiting.retain(|w| {
+        waiting.retain_mut(|w| {
             let deadline = match &w.state {
                 Some(s) => s.deadline,
                 None => effective_deadline(&w.req, cfg, w.enqueued),
@@ -595,6 +708,20 @@ fn run_round(
             }
             metrics.deadline_expired += 1;
             metrics.requests_finished += 1;
+            flight::record("deadline", format!("req={} expired while queued", w.id));
+            // The request is terminal: consume its trace (held by `w`
+            // before the first admission, by `state` after).
+            let mut tr = w.trace.take();
+            if tr.is_none() {
+                tr = w.state.as_mut().and_then(|s| s.trace.take());
+            }
+            let timing = tr.as_mut().map(|t| {
+                t.record(TraceEventKind::Terminal);
+                t.timing_json()
+            });
+            if let Some(t) = &tr {
+                obs.traces.push(t.timeline_json(FinishReason::DeadlineExceeded.as_str()));
+            }
             let (text, prompt_tokens, gen_tokens, ttft_ms) = match &w.state {
                 Some(s) => (
                     tokenizer::decode(&s.generated),
@@ -611,6 +738,7 @@ fn run_round(
                 gen_tokens,
                 ttft_ms,
                 total_ms: w.enqueued.elapsed().as_secs_f64() * 1000.0,
+                timing,
             });
             false
         });
@@ -618,7 +746,7 @@ fn run_round(
 
     // ---- 1. admission -------------------------------------------
     while active.len() < cfg.max_batch {
-        let Some(w) = waiting.pop_front() else { break };
+        let Some(mut w) = waiting.pop_front() else { break };
         // Probe the client before paying for tokenize/map/prefill.
         if w.events.send(Event::Heartbeat).is_err() {
             metrics.requests_cancelled += 1;
@@ -627,7 +755,7 @@ fn run_round(
         }
         // First attempt tokenizes; requeues and preemptions carry
         // their state back so nothing is recomputed or restarted.
-        let state = match w.state {
+        let state = match w.state.take() {
             Some(s) => s,
             None => {
                 let mut prompt = tokenizer::encode(&w.req.prompt);
@@ -659,6 +787,8 @@ fn run_round(
                     deadline: effective_deadline(&w.req, cfg, w.enqueued),
                     faults: 0,
                     done: false,
+                    id: w.id,
+                    trace: w.trace.take(),
                 }
             }
         };
@@ -667,6 +797,18 @@ fn run_round(
         // forever. Reject it outright.
         if !pool.fits_ever(state.prefill.len()) {
             metrics.requests_rejected += 1;
+            flight::record(
+                "reject",
+                format!("req={} span={} can never fit the pool", state.id, state.prefill.len()),
+            );
+            let mut state = state;
+            let timing = state.trace.as_mut().map(|t| {
+                t.record(TraceEventKind::Terminal);
+                t.timing_json()
+            });
+            if let Some(t) = &state.trace {
+                obs.traces.push(t.timeline_json(FinishReason::ContextFull.as_str()));
+            }
             let _ = w.events.send(Event::Done {
                 reason: FinishReason::ContextFull,
                 text: tokenizer::decode(&state.generated),
@@ -674,6 +816,7 @@ fn run_round(
                 gen_tokens: state.generated.len(),
                 ttft_ms: state.ttft_ms.unwrap_or(0.0),
                 total_ms: state.submitted.elapsed().as_secs_f64() * 1000.0,
+                timing,
             });
             continue;
         }
@@ -682,6 +825,13 @@ fn run_round(
                 metrics.prefix_reused_tokens += mapped as u64;
                 *admit_counter += 1;
                 let mut state = state;
+                if let Some(t) = state.trace.as_mut() {
+                    t.record(TraceEventKind::Admitted { prefix_reused: mapped });
+                }
+                flight::record(
+                    "admit",
+                    format!("req={} mapped={} batch={}", state.id, mapped, active.len() + 1),
+                );
                 // Cache-mapped prompt tokens are accounted as prefix
                 // reuse, not as ingested prompt input.
                 state.counted_prompt =
@@ -702,6 +852,8 @@ fn run_round(
                     req: w.req,
                     events: w.events,
                     enqueued: w.enqueued,
+                    id: w.id,
+                    trace: None, // `state` owns the trace now
                     state: Some(state),
                 });
                 break;
@@ -726,6 +878,10 @@ fn run_round(
         if active[i].events.send(Event::Heartbeat).is_err() {
             let mut seq = active.swap_remove(i);
             seq.state.done = true; // receiver gone; no terminal to send
+            if let Some(t) = seq.state.trace.as_mut() {
+                t.record(TraceEventKind::Terminal);
+                obs.traces.push(t.timeline_json(FinishReason::Cancelled.as_str()));
+            }
             pool.release(seq.seq);
             metrics.requests_cancelled += 1;
             metrics.requests_finished += 1;
@@ -733,7 +889,8 @@ fn run_round(
         }
         if active[i].state.deadline.is_some_and(|d| now >= d) {
             let mut seq = active.swap_remove(i);
-            finish(&mut seq, metrics, FinishReason::DeadlineExceeded);
+            flight::record("deadline", format!("req={} expired while active", seq.state.id));
+            finish(&mut seq, metrics, &mut obs.traces, FinishReason::DeadlineExceeded);
             pool.release(seq.seq);
             continue;
         }
@@ -848,7 +1005,7 @@ fn run_round(
                 // Nothing to preempt and the pool cannot hold this
                 // sequence's next step: finish it, not livelock.
                 let mut seq = active.swap_remove(0);
-                finish(&mut seq, metrics, FinishReason::ContextFull);
+                finish(&mut seq, metrics, &mut obs.traces, FinishReason::ContextFull);
                 pool.release(seq.seq);
                 break;
             }
@@ -874,13 +1031,28 @@ fn run_round(
             let v = active.swap_remove(victim);
             pool.release(v.seq);
             metrics.preemptions += 1;
+            flight::record(
+                "preempt",
+                format!(
+                    "req={} prio={} generated={}",
+                    v.state.id,
+                    v.req.priority,
+                    v.state.generated.len()
+                ),
+            );
             let mut state = v.state;
+            if let Some(t) = state.trace.as_mut() {
+                t.record(TraceEventKind::Preempted);
+                t.record(TraceEventKind::Queued); // queue wait resumes accruing
+            }
             state.prefill.truncate(state.prompt_tokens);
             state.prefill.extend_from_slice(&state.generated);
             waiting.push_front(WaitingReq {
                 req: v.req,
                 events: v.events,
                 enqueued: state.submitted,
+                id: state.id,
+                trace: None, // `state` owns the trace
                 state: Some(state),
             });
             break; // replan with the survivor set
@@ -896,6 +1068,17 @@ fn run_round(
     // (post-preemption), so the §7.3 acceptance comparison is honest.
     metrics.batch_occupancy.push(active.len() as f64);
 
+    // Flight-recorder round summary: who computes this round. Recorded
+    // *before* the engine calls so a panicked round's participants are
+    // already in the black box when the post-mortem dump fires.
+    {
+        let ids: Vec<String> = active.iter().map(|a| a.state.id.to_string()).collect();
+        flight::record(
+            "round",
+            format!("n={} active=[{}] waiting={}", obs.round, ids.join(","), waiting.len()),
+        );
+    }
+
     // ---- 3. chunked prefill -------------------------------------
     for seq in active.iter_mut() {
         if seq.prefilled < seq.state.prefill.len() {
@@ -906,7 +1089,12 @@ fn run_round(
             if crate::util::failpoint::should_fail("engine.prefill") {
                 panic!("failpoint 'engine.prefill': injected engine failure");
             }
+            let span = Span::begin();
             let logits = engine.prefill(&mut pool.seq_view(seq.seq), chunk);
+            if let Some(t) = seq.state.trace.as_mut() {
+                t.add_prefill_ms(span.ms());
+                t.record(TraceEventKind::PrefillChunk { tokens: chunk.len() });
+            }
             // Count only first-time ingestion of *client prompt*
             // tokens — re-prefill after preemption (including the
             // regenerated decode history) is work, not prompt input.
@@ -923,6 +1111,7 @@ fn run_round(
                 // (unless resuming with one already sampled).
                 pool.cache_prefix(seq.seq);
                 if seq.state.pending.is_none() {
+                    let _p = profile::scope(profile::Phase::Sampler);
                     let tok = seq.state.sampler.sample(logits.row(chunk.len() - 1));
                     seq.state.pending = Some(tok);
                 }
@@ -930,6 +1119,7 @@ fn run_round(
                     let ttft = seq.state.submitted.elapsed().as_secs_f64() * 1000.0;
                     seq.state.ttft_ms = Some(ttft);
                     metrics.ttft_ms.push(ttft);
+                    metrics.ttft_hist.push(ttft);
                 }
             }
         }
@@ -943,6 +1133,7 @@ fn run_round(
     // one multi-position verify pass over the same fused GEMMs —
     // accepting a whole run of tokens per pass and rolling the
     // rejected suffix's KV back.
+    let round_span = Span::begin(); // true decode-round wall time
     let mut finished: Vec<usize> = Vec::new();
     let mut spec_idx: Vec<usize> = Vec::new();
     let mut step_idx: Vec<usize> = Vec::new();
@@ -959,7 +1150,7 @@ fn run_round(
         if let Some(reason) =
             deliver_and_resolve(seq, metrics, tok, ctx, model_cfg.max_seq)
         {
-            finish(seq, metrics, reason);
+            finish(seq, metrics, &mut obs.traces, reason);
             finished.push(i);
             continue;
         }
@@ -991,7 +1182,7 @@ fn run_round(
         if crate::util::failpoint::should_fail("engine.decode") {
             panic!("failpoint 'engine.decode': injected engine failure");
         }
-        let t0 = Instant::now();
+        let span = Span::begin();
         let outcome = spec::spec_step_sampled(
             engine,
             &mut pool.seq_view(seq.seq),
@@ -999,10 +1190,18 @@ fn run_round(
             &drafts,
             &mut seq.state.sampler,
         );
+        let verify_ms = span.ms();
+        if let Some(t) = seq.state.trace.as_mut() {
+            t.add_decode_ms(verify_ms);
+            t.record(TraceEventKind::SpecVerify {
+                drafted: drafts.len(),
+                accepted: outcome.accepted,
+            });
+        }
         // The pass produced `accepted` verified tokens plus the
         // next pending one; amortize its wall time over those.
         let produced = outcome.accepted + 1;
-        let per_tok_ms = t0.elapsed().as_secs_f64() * 1000.0 / produced as f64;
+        let per_tok_ms = verify_ms / produced as f64;
         for _ in 0..produced {
             metrics.decode_step_ms.push(per_tok_ms);
         }
@@ -1042,7 +1241,7 @@ fn run_round(
             }
         }
         if let Some(r) = reason {
-            finish(seq, metrics, r);
+            finish(seq, metrics, &mut obs.traces, r);
             finished.push(i);
         } else {
             seq.state.pending = Some(outcome.next);
@@ -1058,16 +1257,32 @@ fn run_round(
         if crate::util::failpoint::should_fail("engine.decode") {
             panic!("failpoint 'engine.decode': injected engine failure");
         }
-        let t0 = Instant::now();
+        let span = Span::begin();
         let logits = engine.decode_batch(&mut pool.batch_view(&ids), &step_toks);
-        let per_tok_ms =
-            t0.elapsed().as_secs_f64() * 1000.0 / step_idx.len() as f64;
+        let wall_ms = span.ms();
+        let per_tok_ms = wall_ms / step_idx.len() as f64;
         metrics.decode_batch_size.push(step_idx.len() as f64);
         for (j, &i) in step_idx.iter().enumerate() {
             metrics.decode_step_ms.push(per_tok_ms);
             let seq = &mut active[i];
+            if let Some(t) = seq.state.trace.as_mut() {
+                // Traced participants are attributed the fused pass's
+                // whole wall time — it is the latency they experienced.
+                t.add_decode_ms(wall_ms);
+                t.record(TraceEventKind::DecodeRound { batch: step_idx.len() });
+            }
+            let _p = profile::scope(profile::Phase::Sampler);
             seq.state.pending = Some(seq.state.sampler.sample(&logits[j]));
         }
+    }
+
+    // True per-round decode wall time, alongside the amortized
+    // `decode_step_ms`: everything from token delivery through the
+    // verify passes and the fused batch.
+    if !spec_idx.is_empty() || !step_idx.is_empty() {
+        let round_ms = round_span.ms();
+        metrics.decode_round_ms.push(round_ms);
+        metrics.decode_round_hist.push(round_ms);
     }
 
     // ---- 5. retire finished -------------------------------------
@@ -1086,6 +1301,18 @@ fn run_round(
     for seq in active.iter_mut() {
         seq.state.faults = 0;
     }
+
+    // Drain the phase profiler into per-round distributions. Compiles
+    // to nothing without `--features profiling` (`ENABLED` is a
+    // compile-time constant and `take()` is an inlined no-op).
+    if profile::ENABLED {
+        let ms = profile::take();
+        for (i, v) in ms.into_iter().enumerate() {
+            if v > 0.0 {
+                metrics.phase_ms[i].push(v);
+            }
+        }
+    }
 }
 
 /// Recover from a panicked round: rebuild everything the panic may
@@ -1101,6 +1328,7 @@ fn run_round(
 /// implicated in [`MAX_SEQ_FAULTS`] consecutive panics is failed with
 /// a typed [`ServeError::EngineFailure`] instead of being requeued, so
 /// a poison-pill request cannot crash-loop the worker forever.
+#[allow(clippy::too_many_arguments)]
 fn restart_after_panic(
     engine: &dyn Engine,
     cfg: &CoordinatorConfig,
@@ -1109,8 +1337,30 @@ fn restart_after_panic(
     metrics: &mut metrics::Metrics,
     waiting: &mut VecDeque<WaitingReq>,
     active: &mut Vec<ActiveSeq>,
+    traces: &mut TraceStore,
 ) {
     metrics.worker_restarts += 1;
+    let implicated: Vec<String> = active
+        .iter()
+        .filter(|a| !a.state.done)
+        .map(|a| a.state.id.to_string())
+        .collect();
+    flight::record(
+        "restart",
+        format!(
+            "worker restart {} implicated=[{}]",
+            metrics.worker_restarts,
+            implicated.join(",")
+        ),
+    );
+    log::error(
+        "coordinator",
+        "engine panic: rebuilding engine scratch and KV pool",
+        &[
+            ("restarts", metrics.worker_restarts.to_string()),
+            ("implicated", format!("[{}]", implicated.join(","))),
+        ],
+    );
     // The old pool's high-water mark would vanish with it.
     metrics.kv_peak_bytes = metrics.kv_peak_bytes.max(pool.peak_bytes());
     engine.reset();
@@ -1131,8 +1381,15 @@ fn restart_after_panic(
         }
         let mut state = v.state;
         state.faults += 1;
+        if let Some(t) = state.trace.as_mut() {
+            t.record(TraceEventKind::RestartImplicated);
+        }
         if state.faults >= MAX_SEQ_FAULTS {
             metrics.requests_finished += 1;
+            if let Some(t) = state.trace.as_mut() {
+                t.record(TraceEventKind::Terminal);
+                traces.push(t.timeline_json("engine_failure"));
+            }
             let _ = v.events.send(Event::Error(ServeError::EngineFailure(format!(
                 "request implicated in {} consecutive engine panics",
                 state.faults
@@ -1146,10 +1403,15 @@ fn restart_after_panic(
         state.round_drafts.clear();
         state.prefill.truncate(state.prompt_tokens);
         state.prefill.extend_from_slice(&state.generated);
+        if let Some(t) = state.trace.as_mut() {
+            t.record(TraceEventKind::Queued); // queue wait resumes accruing
+        }
         waiting.push_front(WaitingReq {
             req: v.req,
             events: v.events,
             enqueued: state.submitted,
+            id: state.id,
+            trace: None, // `state` owns the trace
             state: Some(state),
         });
     }
@@ -1771,6 +2033,140 @@ mod tests {
         assert_eq!(stats.get("rejected_overload").unwrap().as_u64(), Some(shed));
         assert!(stats.get("queue_depth_p50").is_some());
         assert!(stats.get("queue_depth_p99").is_some());
+        c.shutdown();
+    }
+
+    #[test]
+    fn untraced_done_carries_no_timing() {
+        let c = coordinator(2, 64 << 20);
+        let (_, done) = c.generate_collect(GenRequest {
+            prompt: "plain".into(),
+            max_new_tokens: 3,
+            ..Default::default()
+        });
+        let Some(Event::Done { timing, .. }) = done else { panic!("no done") };
+        assert!(timing.is_none(), "timing is opt-in");
+        c.shutdown();
+    }
+
+    #[test]
+    fn traced_request_timing_sums_to_total_within_slack() {
+        let c = coordinator(2, 64 << 20);
+        let (_, done) = c.generate_collect(GenRequest {
+            prompt: "trace me please".into(),
+            max_new_tokens: 8,
+            trace: true,
+            ..Default::default()
+        });
+        let Some(Event::Done { timing: Some(t), total_ms, gen_tokens, .. }) = done else {
+            panic!("traced request must carry a timing object")
+        };
+        assert_eq!(gen_tokens, 8);
+        let phase =
+            |k: &str| t.get(k).and_then(|v| v.as_f64()).unwrap_or_else(|| panic!("missing {k}"));
+        let sum = phase("queue_ms") + phase("prefill_ms") + phase("decode_ms");
+        // The three phases partition disjoint wall-time intervals of
+        // the request's life, so their sum is bounded by the
+        // end-to-end latency (small slack for clock-read skew) and —
+        // engine calls dominating scheduler bookkeeping — covers most
+        // of it.
+        assert!(
+            sum <= total_ms + 2.0,
+            "phase sum {sum:.3} ms must not exceed end-to-end {total_ms:.3} ms"
+        );
+        assert!(
+            sum >= 0.2 * total_ms,
+            "phases must cover most of the latency: {sum:.3} of {total_ms:.3} ms"
+        );
+        assert!(phase("prefill_rounds") >= 1.0, "prefill rounds counted");
+        assert!(phase("decode_rounds") >= 1.0, "decode rounds counted");
+        c.shutdown();
+    }
+
+    #[test]
+    fn trace_op_returns_completed_timelines_newest_first() {
+        let c = coordinator(2, 64 << 20);
+        for i in 0..3 {
+            let (_, done) = c.generate_collect(GenRequest {
+                prompt: format!("traced {i}"),
+                max_new_tokens: 2,
+                trace: true,
+                ..Default::default()
+            });
+            assert!(matches!(done, Some(Event::Done { .. })));
+        }
+        let timelines = c.trace(2).unwrap();
+        let arr = timelines.as_arr().unwrap();
+        assert_eq!(arr.len(), 2, "n bounds the response");
+        let newest = &arr[0];
+        // ids are 1-based submission order; newest first.
+        assert_eq!(newest.get("id").unwrap().as_u64(), Some(3));
+        assert_eq!(arr[1].get("id").unwrap().as_u64(), Some(2));
+        assert_eq!(newest.get("reason").unwrap().as_str(), Some("max_tokens"));
+        let events = newest.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(events[0].get("what").unwrap().as_str(), Some("queued"));
+        assert!(
+            events.iter().any(|e| e.get("what").unwrap().as_str() == Some("admitted")),
+            "lifecycle must include admission"
+        );
+        assert_eq!(
+            events.last().unwrap().get("what").unwrap().as_str(),
+            Some("terminal")
+        );
+        assert!(newest.get("timing").unwrap().get("queue_ms").is_some());
+        c.shutdown();
+    }
+
+    #[test]
+    fn tracing_does_not_change_tokens() {
+        // Bit-identity with observability on: a traced sampled request
+        // must stream the same text as the identical untraced one.
+        let run = |trace: bool| {
+            let c = coordinator(2, 64 << 20);
+            let (text, _) = c.generate_collect(GenRequest {
+                prompt: "identical either way".into(),
+                max_new_tokens: 10,
+                temperature: 0.8,
+                top_k: Some(12),
+                seed: 99,
+                trace,
+                ..Default::default()
+            });
+            c.shutdown();
+            text
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn decode_round_wall_time_is_recorded() {
+        let c = coordinator(2, 64 << 20);
+        let (_, done) = c.generate_collect(GenRequest {
+            prompt: "round times".into(),
+            max_new_tokens: 6,
+            ..Default::default()
+        });
+        assert!(matches!(done, Some(Event::Done { .. })));
+        let stats = c.stats().unwrap();
+        for k in ["decode_round_ms_mean", "decode_round_ms_p50", "decode_round_ms_p99"] {
+            assert!(stats.get(k).is_some(), "missing {k}");
+        }
+        assert!(stats.get("decode_round_ms_mean").unwrap().as_f64().unwrap() >= 0.0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn prometheus_op_round_trips_through_the_worker() {
+        let c = coordinator(2, 64 << 20);
+        let (_, done) = c.generate_collect(GenRequest {
+            prompt: "expose me".into(),
+            max_new_tokens: 3,
+            ..Default::default()
+        });
+        assert!(matches!(done, Some(Event::Done { .. })));
+        let text = c.prometheus().unwrap();
+        assert!(text.contains("itq3s_requests_finished_total 1"));
+        assert!(text.contains("# TYPE itq3s_ttft_ms_hist histogram"));
         c.shutdown();
     }
 

@@ -39,6 +39,12 @@ pub struct GenRequest {
     /// is tighter. Expiry mid-generation returns the partial text under
     /// `Done{reason: DeadlineExceeded}`.
     pub deadline_ms: Option<u64>,
+    /// Opt into per-request trace timelines (`util/trace.rs`): the
+    /// coordinator records lifecycle events and phase timings for this
+    /// request, the terminal `Done` carries a `timing` breakdown, and
+    /// the finished timeline becomes queryable via the `trace` op.
+    /// Tracing never changes the generated tokens.
+    pub trace: bool,
 }
 
 impl Default for GenRequest {
@@ -54,6 +60,7 @@ impl Default for GenRequest {
             stop_at_sentence: false,
             priority: 0,
             deadline_ms: None,
+            trace: false,
         }
     }
 }
@@ -99,6 +106,9 @@ impl GenRequest {
             if d > 0 {
                 r.deadline_ms = Some(d);
             }
+        }
+        if let Some(t) = j.get("trace").and_then(|v| v.as_bool()) {
+            r.trace = t;
         }
         r
     }
@@ -148,6 +158,12 @@ pub enum Event {
         gen_tokens: usize,
         ttft_ms: f64,
         total_ms: f64,
+        /// Phase breakdown for traced requests (`GenRequest::trace`):
+        /// the `timing` object from `util/trace.rs` (`queue_ms`,
+        /// `prefill_ms`, `decode_ms`, `spec_saved_tokens`,
+        /// `preemptions`, per-phase round counts). `None` when the
+        /// request did not opt in.
+        timing: Option<Json>,
     },
     /// The request failed before producing a normal terminal: shed at
     /// admission (overloaded / shutting down), expired while still
@@ -196,6 +212,14 @@ mod tests {
         assert_eq!(r.deadline_ms, None);
         let r = GenRequest::from_json(&Json::parse("{}").unwrap());
         assert_eq!(r.deadline_ms, None);
+    }
+
+    #[test]
+    fn trace_parses_and_defaults_off() {
+        let r = GenRequest::from_json(&Json::parse(r#"{"trace":true}"#).unwrap());
+        assert!(r.trace);
+        let r = GenRequest::from_json(&Json::parse("{}").unwrap());
+        assert!(!r.trace, "tracing is opt-in");
     }
 
     #[test]

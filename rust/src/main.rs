@@ -12,6 +12,9 @@
 //!                   [--kv-budget BYTES] [--kv-block-tokens N] [--kv-quant f32|q8]
 //!                   [--spec-draft-len K] [--spec-drafter ngram|self]
 //!                   [--request-timeout-ms MS] [--max-queue-depth N]
+//!
+//! Every subcommand accepts `--log-level off|error|warn|info|debug`
+//! (default info) controlling the structured stderr logger.
 //! itq3s table1|table2|table3                       paper-table harnesses
 //! itq3s e2e                                        end-to-end pipeline check
 //! ```
@@ -52,6 +55,11 @@ fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else { usage() };
     let (_pos, flags) = parse_flags(&args[1..]);
+    if let Some(lvl) = flags.get("log-level") {
+        let level = itq3s::util::log::Level::parse(lvl)
+            .with_context(|| format!("unknown --log-level '{lvl}' (off|error|warn|info|debug)"))?;
+        itq3s::util::log::set_level(level);
+    }
     match cmd.as_str() {
         "gen-corpus" => gen_corpus(&flags),
         "quantize" => quantize(&flags),

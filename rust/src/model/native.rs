@@ -30,6 +30,7 @@ use super::{
 };
 use crate::quant::matmul::MatvecScratch;
 use crate::tensor::{matvec_accum, Tensor};
+use crate::util::profile;
 use std::sync::Mutex;
 
 /// Engine abstraction shared by the native and PJRT backends.
@@ -191,6 +192,7 @@ impl<'a> Lin<'a> {
     fn matvec(&self, x: &[f32], y: &mut [f32], scratch: &mut MatvecScratch, act_quant: bool) {
         match self {
             Lin::Dense(t) => {
+                let _p = profile::scope(profile::Phase::Gemm);
                 y.fill(0.0);
                 matvec_accum(t, x, y);
             }
@@ -206,7 +208,12 @@ impl<'a> Lin<'a> {
 
     fn matmul(&self, x: &Tensor) -> Tensor {
         match self {
-            Lin::Dense(t) => x.matmul(&t.transpose()),
+            Lin::Dense(t) => {
+                let _p = profile::scope(profile::Phase::Gemm);
+                x.matmul(&t.transpose())
+            }
+            // Quantized prefill scopes itself inside `matmul_sharded`
+            // (rotation → RotQuant, accumulation → Gemm).
             Lin::Quant(q) => q.matmul(x),
         }
     }
@@ -397,19 +404,24 @@ impl Engine for NativeEngine {
             rope(&mut k, pos, nh, hd, cfg.rope_theta);
             cache.write_kv(li, pos, &k, &v);
             let scale = 1.0 / (hd as f32).sqrt();
-            for hh in 0..nh {
-                let qh = &q[hh * hd..(hh + 1) * hd];
-                for (t, s) in scores.iter_mut().enumerate() {
-                    let kh = &cache.k_at(li, t)[hh * hd..(hh + 1) * hd];
-                    *s = crate::quant::matmul::dot(qh, kh) * scale;
-                }
-                softmax(&mut scores);
-                let out = &mut attn[hh * hd..(hh + 1) * hd];
-                out.fill(0.0);
-                for (t, &p) in scores.iter().enumerate() {
-                    let vh = &cache.v_at(li, t)[hh * hd..(hh + 1) * hd];
-                    for (oj, &vj) in out.iter_mut().zip(vh) {
-                        *oj += p * vj;
+            {
+                // Profiler: score/softmax/weighted-sum only — the QKV and
+                // Wo linears above/below carry their own Gemm scopes.
+                let _p = profile::scope(profile::Phase::Attention);
+                for hh in 0..nh {
+                    let qh = &q[hh * hd..(hh + 1) * hd];
+                    for (t, s) in scores.iter_mut().enumerate() {
+                        let kh = &cache.k_at(li, t)[hh * hd..(hh + 1) * hd];
+                        *s = crate::quant::matmul::dot(qh, kh) * scale;
+                    }
+                    softmax(&mut scores);
+                    let out = &mut attn[hh * hd..(hh + 1) * hd];
+                    out.fill(0.0);
+                    for (t, &p) in scores.iter().enumerate() {
+                        let vh = &cache.v_at(li, t)[hh * hd..(hh + 1) * hd];
+                        for (oj, &vj) in out.iter_mut().zip(vh) {
+                            *oj += p * vj;
+                        }
                     }
                 }
             }
@@ -502,21 +514,26 @@ impl Engine for NativeEngine {
                 batch.write_kv(s, li, pos[s], ks, vs);
             }
             let scale = 1.0 / (hd as f32).sqrt();
-            for s in 0..nb {
-                scores.resize(pos[s] + 1, 0.0);
-                for hh in 0..nh {
-                    let qh = &q[s * dim + hh * hd..s * dim + (hh + 1) * hd];
-                    for (t, sc) in scores.iter_mut().enumerate() {
-                        let kh = &batch.k_at(s, li, t)[hh * hd..(hh + 1) * hd];
-                        *sc = crate::quant::matmul::dot(qh, kh) * scale;
-                    }
-                    softmax(&mut scores[..]);
-                    let out = &mut attn[s * dim + hh * hd..s * dim + (hh + 1) * hd];
-                    out.fill(0.0);
-                    for (t, &p) in scores.iter().enumerate() {
-                        let vh = &batch.v_at(s, li, t)[hh * hd..(hh + 1) * hd];
-                        for (oj, &vj) in out.iter_mut().zip(vh) {
-                            *oj += p * vj;
+            {
+                // Profiler: ragged per-sequence attention only (see the
+                // matching scope in `decode_step`).
+                let _p = profile::scope(profile::Phase::Attention);
+                for s in 0..nb {
+                    scores.resize(pos[s] + 1, 0.0);
+                    for hh in 0..nh {
+                        let qh = &q[s * dim + hh * hd..s * dim + (hh + 1) * hd];
+                        for (t, sc) in scores.iter_mut().enumerate() {
+                            let kh = &batch.k_at(s, li, t)[hh * hd..(hh + 1) * hd];
+                            *sc = crate::quant::matmul::dot(qh, kh) * scale;
+                        }
+                        softmax(&mut scores[..]);
+                        let out = &mut attn[s * dim + hh * hd..s * dim + (hh + 1) * hd];
+                        out.fill(0.0);
+                        for (t, &p) in scores.iter().enumerate() {
+                            let vh = &batch.v_at(s, li, t)[hh * hd..(hh + 1) * hd];
+                            for (oj, &vj) in out.iter_mut().zip(vh) {
+                                *oj += p * vj;
+                            }
                         }
                     }
                 }
@@ -598,21 +615,25 @@ impl Engine for NativeEngine {
             let scale = 1.0 / (hd as f32).sqrt();
             let mut attn = Tensor::zeros(vec![seq, dim]);
             let mut scores = Vec::new();
-            for t in 0..seq {
-                let ctx = pos0 + t + 1;
-                scores.resize(ctx, 0.0);
-                for hh in 0..nh {
-                    let qh = &q.row(t)[hh * hd..(hh + 1) * hd];
-                    for (u, s) in scores.iter_mut().enumerate() {
-                        let kh = &cache.k_at(li, u)[hh * hd..(hh + 1) * hd];
-                        *s = crate::quant::matmul::dot(qh, kh) * scale;
-                    }
-                    softmax(&mut scores);
-                    let out = &mut attn.row_mut(t)[hh * hd..(hh + 1) * hd];
-                    for (u, &p) in scores.iter().enumerate() {
-                        let vh = &cache.v_at(li, u)[hh * hd..(hh + 1) * hd];
-                        for (oj, &vj) in out.iter_mut().zip(vh) {
-                            *oj += p * vj;
+            {
+                // Profiler: causal attention only (see `decode_step`).
+                let _p = profile::scope(profile::Phase::Attention);
+                for t in 0..seq {
+                    let ctx = pos0 + t + 1;
+                    scores.resize(ctx, 0.0);
+                    for hh in 0..nh {
+                        let qh = &q.row(t)[hh * hd..(hh + 1) * hd];
+                        for (u, s) in scores.iter_mut().enumerate() {
+                            let kh = &cache.k_at(li, u)[hh * hd..(hh + 1) * hd];
+                            *s = crate::quant::matmul::dot(qh, kh) * scale;
+                        }
+                        softmax(&mut scores);
+                        let out = &mut attn.row_mut(t)[hh * hd..(hh + 1) * hd];
+                        for (u, &p) in scores.iter().enumerate() {
+                            let vh = &cache.v_at(li, u)[hh * hd..(hh + 1) * hd];
+                            for (oj, &vj) in out.iter_mut().zip(vh) {
+                                *oj += p * vj;
+                            }
                         }
                     }
                 }

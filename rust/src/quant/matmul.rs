@@ -45,6 +45,7 @@
 use super::act::{QuantizedActs, QuantizedBatch};
 use super::{Format, QuantizedMatrix};
 use crate::tensor::Tensor;
+use crate::util::profile;
 use crate::util::threadpool;
 use std::sync::Arc;
 
@@ -204,7 +205,11 @@ impl QuantizedLinear {
         assert_eq!(x.len(), self.in_dim());
         assert_eq!(y.len(), self.out_dim());
         let mut xr = x.to_vec();
-        self.rotate_activations(&mut xr);
+        {
+            let _p = profile::scope(profile::Phase::RotQuant);
+            self.rotate_activations(&mut xr);
+        }
+        let _p = profile::scope(profile::Phase::Gemm);
         let xsums = self.block_sums(&xr);
         threadpool::parallel_rows(y, shards, |row0, ys| {
             let mut tmp = Vec::new();
@@ -228,11 +233,15 @@ impl QuantizedLinear {
     ) {
         assert_eq!(x.len(), self.in_dim());
         assert_eq!(y.len(), self.out_dim());
-        scratch.x_rot.clear();
-        scratch.x_rot.extend_from_slice(x);
-        self.rotate_activations(&mut scratch.x_rot);
-        let be = self.w.fmt.block_elems();
-        scratch.acts.quantize(&scratch.x_rot, be);
+        {
+            // Profiler: FWHT rotation + Q8 activation quantization.
+            let _p = profile::scope(profile::Phase::RotQuant);
+            scratch.x_rot.clear();
+            scratch.x_rot.extend_from_slice(x);
+            self.rotate_activations(&mut scratch.x_rot);
+            let be = self.w.fmt.block_elems();
+            scratch.acts.quantize(&scratch.x_rot, be);
+        }
         self.matvec_q8_acts(&scratch.acts, y, &mut scratch.tmp, shards);
     }
 
@@ -249,6 +258,10 @@ impl QuantizedLinear {
         assert_eq!(acts.len(), self.in_dim());
         assert_eq!(acts.block(), self.w.fmt.block_elems());
         assert_eq!(y.len(), self.out_dim());
+        // Profiler: the integer kernel proper (wall time of the whole
+        // sharded call). Scoped here, in the innermost entry point, so
+        // every caller is covered and scopes never nest.
+        let _p = profile::scope(profile::Phase::Gemm);
         if shards <= 1 {
             for (r, yo) in y.iter_mut().enumerate() {
                 *yo = self.q8_row(r, acts, tmp);
@@ -301,13 +314,17 @@ impl QuantizedLinear {
         assert!(batch > 0, "batch must be positive");
         assert_eq!(x.len(), batch * self.in_dim());
         assert_eq!(y.len(), batch * self.out_dim());
-        scratch.x_rot.clear();
-        scratch.x_rot.extend_from_slice(x);
-        for row in scratch.x_rot.chunks_exact_mut(self.in_dim()) {
-            self.rotate_activations(row);
+        {
+            // Profiler: FWHT rotation + Q8 quantization of the batch.
+            let _p = profile::scope(profile::Phase::RotQuant);
+            scratch.x_rot.clear();
+            scratch.x_rot.extend_from_slice(x);
+            for row in scratch.x_rot.chunks_exact_mut(self.in_dim()) {
+                self.rotate_activations(row);
+            }
+            let be = self.w.fmt.block_elems();
+            scratch.bacts.quantize(&scratch.x_rot, batch, be);
         }
-        let be = self.w.fmt.block_elems();
-        scratch.bacts.quantize(&scratch.x_rot, batch, be);
         let mut yt = std::mem::take(&mut scratch.yt);
         let mut tmp = std::mem::take(&mut scratch.tmp);
         self.gemm_q8_acts(&scratch.bacts, y, &mut yt, &mut tmp, shards);
@@ -331,6 +348,9 @@ impl QuantizedLinear {
         assert_eq!(acts.seq_len(), self.in_dim());
         assert_eq!(acts.block(), self.w.fmt.block_elems());
         assert_eq!(y.len(), batch * self.out_dim());
+        // Profiler: the batched integer kernel (innermost entry point —
+        // see `matvec_q8_acts`).
+        let _p = profile::scope(profile::Phase::Gemm);
         let rows = self.w.rows;
         yt.clear();
         yt.resize(rows * batch, 0.0);
@@ -404,11 +424,15 @@ impl QuantizedLinear {
         let be = self.w.fmt.block_elems();
         // Rotate all activation rows once.
         let mut xr = x.clone();
-        for t in 0..batch {
-            self.rotate_activations(xr.row_mut(t));
+        {
+            let _p = profile::scope(profile::Phase::RotQuant);
+            for t in 0..batch {
+                self.rotate_activations(xr.row_mut(t));
+            }
         }
         // Accumulate transposed — (rows, batch) — so each weight-row
         // shard owns a contiguous slab; transpose once at the end.
+        let _p = profile::scope(profile::Phase::Gemm);
         let mut yt = vec![0.0f32; rows * batch];
         threadpool::parallel_chunks(&mut yt, batch, shards, |r0, slab| {
             let mut buf = vec![0.0f32; be];

@@ -14,6 +14,7 @@
 use crate::coordinator::{Coordinator, CoordinatorConfig, Event, GenRequest, ServeError};
 use crate::model::native::Engine;
 use crate::util::json::Json;
+use crate::util::log;
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -57,7 +58,7 @@ fn serve_on(
                     // misbehaving clients and broken pipes. Log once
                     // per connection and count it in stats.
                     if let Err(e) = handle_conn(stream, &coord, &stop) {
-                        eprintln!("itq3s-server: connection error: {e:#}");
+                        log::warn("server", "connection error", &[("error", format!("{e:#}"))]);
                         coord.note_conn_error();
                     }
                 }));
@@ -124,19 +125,23 @@ fn handle_conn(
                             gen_tokens,
                             ttft_ms,
                             total_ms,
+                            timing,
                         } => {
-                            send(
-                                &mut stream,
-                                &Json::obj(vec![
-                                    ("done", Json::Bool(true)),
-                                    ("reason", Json::str(reason.as_str())),
-                                    ("text", Json::str(text)),
-                                    ("prompt_tokens", Json::num(prompt_tokens as f64)),
-                                    ("gen_tokens", Json::num(gen_tokens as f64)),
-                                    ("ttft_ms", Json::num(ttft_ms)),
-                                    ("total_ms", Json::num(total_ms)),
-                                ]),
-                            )?;
+                            let mut fields = vec![
+                                ("done", Json::Bool(true)),
+                                ("reason", Json::str(reason.as_str())),
+                                ("text", Json::str(text)),
+                                ("prompt_tokens", Json::num(prompt_tokens as f64)),
+                                ("gen_tokens", Json::num(gen_tokens as f64)),
+                                ("ttft_ms", Json::num(ttft_ms)),
+                                ("total_ms", Json::num(total_ms)),
+                            ];
+                            // Only traced requests carry the breakdown —
+                            // untraced output stays byte-identical.
+                            if let Some(t) = timing {
+                                fields.push(("timing", t));
+                            }
+                            send(&mut stream, &Json::obj(fields))?;
                             break;
                         }
                         // Typed terminal failure (shed, expired while
@@ -169,6 +174,23 @@ fn handle_conn(
             "stats" => {
                 let s = coord.stats().unwrap_or(Json::Null);
                 send(&mut stream, &s)?;
+            }
+            "trace" => {
+                let n = msg.get("n").and_then(|v| v.as_u64()).unwrap_or(16) as usize;
+                let t = coord.trace(n).unwrap_or(Json::Arr(Vec::new()));
+                send(&mut stream, &Json::obj(vec![("timelines", t)]))?;
+            }
+            "dump" => {
+                // Flight-recorder dump is read lock-free of the worker
+                // loop, so it answers even when the engine is wedged.
+                send(&mut stream, &Json::obj(vec![("events", coord.dump())]))?;
+            }
+            "metrics" => {
+                // Prometheus text exposition, carried as one string in
+                // the line-framed JSON envelope (the transport is JSON
+                // lines; a scrape sidecar unwraps the field).
+                let text = coord.prometheus().unwrap_or_default();
+                send(&mut stream, &Json::obj(vec![("metrics", Json::str(text))]))?;
             }
             "shutdown" => {
                 send(&mut stream, &Json::obj(vec![("ok", Json::Bool(true))]))?;
@@ -373,6 +395,62 @@ mod tests {
         // The server keeps serving.
         let ok = c.generate("after", 2).unwrap();
         assert_eq!(ok.get("reason").unwrap().as_str(), Some("max_tokens"));
+        c.send(&Json::obj(vec![("op", Json::str("shutdown"))])).unwrap();
+        let _ = c.recv();
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn trace_dump_metrics_ops_roundtrip() {
+        let (addr, handle) = spawn_test_server();
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+
+        // A traced generate carries the timing breakdown on the wire...
+        c.send(&Json::obj(vec![
+            ("op", Json::str("generate")),
+            ("prompt", Json::str("traced request")),
+            ("max_tokens", Json::num(3.0)),
+            ("trace", Json::Bool(true)),
+        ]))
+        .unwrap();
+        let done = loop {
+            let msg = c.recv().unwrap();
+            if msg.get("done").is_some() {
+                break msg;
+            }
+        };
+        let timing = done.get("timing").expect("traced done carries timing");
+        assert!(timing.get("queue_ms").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(timing.get("prefill_ms").unwrap().as_f64().unwrap() >= 0.0);
+
+        // ...an untraced one does not.
+        let plain = c.generate("untraced", 2).unwrap();
+        assert!(plain.get("timing").is_none(), "timing is opt-in");
+
+        // trace op: newest-first completed timelines.
+        c.send(&Json::obj(vec![("op", Json::str("trace")), ("n", Json::num(8.0))]))
+            .unwrap();
+        let t = c.recv().unwrap();
+        let lines = t.get("timelines").unwrap().as_arr().unwrap();
+        assert_eq!(lines.len(), 1, "only the traced request recorded a timeline");
+        assert_eq!(lines[0].get("reason").unwrap().as_str(), Some("max_tokens"));
+
+        // dump op: flight-recorder ring (admit/round events at minimum).
+        c.send(&Json::obj(vec![("op", Json::str("dump"))])).unwrap();
+        let d = c.recv().unwrap();
+        let events = d.get("events").unwrap().as_arr().unwrap();
+        assert!(
+            events.iter().any(|e| e.get("kind").unwrap().as_str() == Some("admit")),
+            "flight recorder saw an admission"
+        );
+
+        // metrics op: Prometheus text exposition.
+        c.send(&Json::obj(vec![("op", Json::str("metrics"))])).unwrap();
+        let m = c.recv().unwrap();
+        let text = m.get("metrics").unwrap().as_str().unwrap();
+        assert!(text.contains("itq3s_requests_finished_total 2"), "{text}");
+        assert!(text.contains("# TYPE itq3s_ttft_ms_hist histogram"), "{text}");
+
         c.send(&Json::obj(vec![("op", Json::str("shutdown"))])).unwrap();
         let _ = c.recv();
         handle.join().unwrap().unwrap();

@@ -67,6 +67,7 @@ pub use drafter::{DraftDist, Drafter, DrafterKind, NgramDrafter, SelfDraft};
 use crate::coordinator::sampler::{argmax, Sampler};
 use crate::model::native::Engine;
 use crate::model::KvStore;
+use crate::util::profile;
 
 /// Result of one draft-and-verify round.
 pub struct SpecOutcome {
@@ -126,6 +127,10 @@ pub fn spec_step_sampled(
     debug_assert_eq!(logits.len(), feed.len());
     let verify_argmax: Vec<u32> = logits.iter().map(|l| argmax(l)).collect();
 
+    // Profiler: everything from here to the rollback is sampler replay
+    // (dist/draw/residual arithmetic) — the engine pass above carries
+    // its own phase scopes, so this never nests.
+    let sampler_scope = profile::scope(profile::Phase::Sampler);
     let mut accepted = 0usize;
     let mut next = None;
     let mut resampled = false;
@@ -184,6 +189,7 @@ pub fn spec_step_sampled(
         let target = sampler.dist(&logits[drafts.len()]);
         sampler.draw(&target)
     });
+    drop(sampler_scope);
     // Rollback: keep `pending` plus the accepted run, discard the
     // rejected suffix's tokens and KV.
     store.truncate(base + 1 + accepted);

@@ -1,0 +1,165 @@
+//! Flight recorder: a process-global bounded ring of recent
+//! coordinator events (admissions, round summaries, preemptions,
+//! sheds, deadline expiries, restarts).
+//!
+//! The point is post-mortems: when the scheduling round panics and the
+//! PR 6 `catch_unwind` fires, the coordinator dumps this ring through
+//! the structured logger ([`dump_to_log`]) so the rounds *leading up
+//! to* the crash are visible, not just the restart counter. The same
+//! ring is queryable live over the wire via the `dump` op
+//! ([`dump_json`], see `docs/PROTOCOL.md`).
+//!
+//! Recording is a short mutex-guarded push — microseconds against
+//! millisecond-scale scheduling rounds — and the ring is capacity
+//! bounded ([`CAP`]), so memory stays flat forever. The ring is
+//! process-global on purpose (one serving process, one black box);
+//! tests that assert on contents take `failpoint::exclusive()` and
+//! [`clear`] first so concurrent coordinators cannot interleave.
+
+use crate::util::json::Json;
+use crate::util::log;
+use std::collections::VecDeque;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+/// Maximum retained events; older entries are evicted FIFO.
+pub const CAP: usize = 256;
+
+#[derive(Clone, Debug)]
+struct FlightEvent {
+    /// Milliseconds since the recorder first ticked (monotonic).
+    at_ms: f64,
+    /// Coarse event class: `admit`, `round`, `preempt`, `shed`,
+    /// `deadline`, `restart`, `panic`, ...
+    kind: &'static str,
+    /// Free-form `key=value` detail, including request ids.
+    detail: String,
+}
+
+static RING: Mutex<VecDeque<FlightEvent>> = Mutex::new(VecDeque::new());
+static T0: OnceLock<Instant> = OnceLock::new();
+
+/// Injected panics can poison the mutex mid-unwind; the ring is plain
+/// data, so poison is noise.
+fn ring() -> MutexGuard<'static, VecDeque<FlightEvent>> {
+    RING.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn now_ms() -> f64 {
+    T0.get_or_init(Instant::now).elapsed().as_secs_f64() * 1e3
+}
+
+/// Append one event, evicting the oldest when full.
+pub fn record(kind: &'static str, detail: String) {
+    let ev = FlightEvent { at_ms: now_ms(), kind, detail };
+    let mut r = ring();
+    if r.len() == CAP {
+        r.pop_front();
+    }
+    r.push_back(ev);
+}
+
+/// Number of retained events.
+pub fn len() -> usize {
+    ring().len()
+}
+
+/// Drop every retained event (tests).
+pub fn clear() {
+    ring().clear();
+}
+
+/// Snapshot the ring, oldest first, as an array of
+/// `{"at_ms", "kind", "detail"}` objects (the `dump` op payload).
+pub fn dump_json() -> Json {
+    let r = ring();
+    Json::Arr(
+        r.iter()
+            .map(|ev| {
+                Json::obj(vec![
+                    ("at_ms", Json::num((ev.at_ms * 10.0).round() / 10.0)),
+                    ("kind", Json::str(ev.kind)),
+                    ("detail", Json::str(&ev.detail)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Dump the ring through the structured logger at error level — called
+/// by the coordinator when `catch_unwind` traps a scheduling-round
+/// panic, so the black box lands in stderr next to the panic message.
+pub fn dump_to_log() {
+    let events: Vec<FlightEvent> = ring().iter().cloned().collect();
+    log::error(
+        "flight",
+        "flight recorder dump (oldest first)",
+        &[("events", events.len().to_string())],
+    );
+    for ev in &events {
+        log::error(
+            "flight",
+            ev.kind,
+            &[("at_ms", format!("{:.1}", ev.at_ms)), ("detail", ev.detail.clone())],
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The ring is process-global and other tests' coordinators record
+    // into it concurrently, so these tests only assert properties that
+    // survive interleaving: capacity bounds and the presence of their
+    // own uniquely-tagged events immediately after recording.
+
+    #[test]
+    fn ring_is_bounded_and_keeps_the_newest() {
+        for i in 0..(CAP + 50) {
+            record("test.flood", format!("i={i}"));
+        }
+        assert!(len() <= CAP);
+        let Json::Arr(evs) = dump_json() else { panic!("dump is an array") };
+        assert!(evs.len() <= CAP);
+        // The newest flood entry survived eviction.
+        let last_detail = format!("i={}", CAP + 49);
+        assert!(
+            evs.iter().any(|e| {
+                e.get("kind").and_then(|k| k.as_str()) == Some("test.flood")
+                    && e.get("detail").and_then(|d| d.as_str()) == Some(last_detail.as_str())
+            }),
+            "newest event must be retained"
+        );
+    }
+
+    #[test]
+    fn dump_carries_timestamps_and_details() {
+        record("test.shape", "req=42 note=shape-check".to_string());
+        let Json::Arr(evs) = dump_json() else { panic!("dump is an array") };
+        let mine = evs
+            .iter()
+            .rev()
+            .find(|e| e.get("kind").and_then(|k| k.as_str()) == Some("test.shape"))
+            .expect("just-recorded event present");
+        assert!(mine.get("at_ms").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+        assert!(mine
+            .get("detail")
+            .and_then(|d| d.as_str())
+            .unwrap()
+            .contains("req=42"));
+    }
+
+    #[test]
+    fn clear_empties_only_until_someone_records_again() {
+        record("test.clear", "x".into());
+        clear();
+        // Concurrent tests may push immediately after; assert only that
+        // our own pre-clear event is gone.
+        let Json::Arr(evs) = dump_json() else { panic!("dump is an array") };
+        assert!(
+            !evs.iter().any(|e| e.get("kind").and_then(|k| k.as_str()) == Some("test.clear")),
+            "cleared events must not reappear"
+        );
+    }
+}

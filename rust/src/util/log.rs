@@ -1,0 +1,182 @@
+//! Minimal leveled structured logger: `key=value` lines to stderr.
+//!
+//! The serving stack used to scatter ad-hoc `eprintln!` calls; this
+//! module replaces them with one consistent line shape so operators
+//! can grep restarts, connection errors, and flight-recorder dumps
+//! mechanically:
+//!
+//! ```text
+//! ts_ms=1523.4 level=warn target=server msg="connection error" err="broken pipe"
+//! ```
+//!
+//! The global level is an atomic (default [`Level::Info`]); `itq3s
+//! serve --log-level debug|info|warn|error|off` sets it at startup and
+//! tests may flip it at will. Values containing whitespace, `"`, or
+//! `=` are quoted with `{:?}`; bare tokens stay unquoted so the lines
+//! stay terse. There is no timestamp formatting or output routing —
+//! stderr only, milliseconds since the first log call — deliberately
+//! small enough to never be the thing being debugged.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Log severity, ordered so `Error < Warn < Info < Debug`: a message
+/// is emitted when its level is *at or above* the global threshold in
+/// severity (i.e. numerically `<=`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Nothing is emitted (threshold only; messages cannot be `Off`).
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Off => "off",
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    /// Parse a `--log-level` value (case-insensitive).
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "none" => Some(Level::Off),
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static T0: OnceLock<Instant> = OnceLock::new();
+
+/// Set the global log threshold.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current global log threshold.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Off,
+        1 => Level::Error,
+        2 => Level::Warn,
+        3 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// Would a message at `l` be emitted right now?
+pub fn enabled(l: Level) -> bool {
+    l != Level::Off && (l as u8) <= (level() as u8)
+}
+
+/// Milliseconds since the logger first ticked (monotonic).
+fn ts_ms() -> f64 {
+    T0.get_or_init(Instant::now).elapsed().as_secs_f64() * 1e3
+}
+
+/// Quote a value only when it would break `key=value` tokenization.
+fn fmt_value(v: &str) -> String {
+    let bare = !v.is_empty()
+        && v.chars().all(|c| !c.is_whitespace() && c != '"' && c != '=' && c != '\n');
+    if bare {
+        v.to_string()
+    } else {
+        format!("{v:?}")
+    }
+}
+
+/// Emit one structured line (already level-checked by the callers).
+fn emit(l: Level, target: &str, msg: &str, kv: &[(&str, String)]) {
+    let mut line = format!("ts_ms={:.1} level={} target={} msg={:?}", ts_ms(), l.as_str(), target, msg);
+    for (k, v) in kv {
+        line.push(' ');
+        line.push_str(k);
+        line.push('=');
+        line.push_str(&fmt_value(v));
+    }
+    eprintln!("{line}");
+}
+
+/// Log at `l` from component `target` with structured `kv` pairs.
+pub fn log(l: Level, target: &str, msg: &str, kv: &[(&str, String)]) {
+    if enabled(l) {
+        emit(l, target, msg, kv);
+    }
+}
+
+pub fn error(target: &str, msg: &str, kv: &[(&str, String)]) {
+    log(Level::Error, target, msg, kv);
+}
+
+pub fn warn(target: &str, msg: &str, kv: &[(&str, String)]) {
+    log(Level::Warn, target, msg, kv);
+}
+
+pub fn info(target: &str, msg: &str, kv: &[(&str, String)]) {
+    log(Level::Info, target, msg, kv);
+}
+
+pub fn debug(target: &str, msg: &str, kv: &[(&str, String)]) {
+    log(Level::Debug, target, msg, kv);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_documented_spellings() {
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("INFO"), Some(Level::Info));
+        assert_eq!(Level::parse("Warn"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("error"), Some(Level::Error));
+        assert_eq!(Level::parse("off"), Some(Level::Off));
+        assert_eq!(Level::parse("none"), Some(Level::Off));
+        assert_eq!(Level::parse("verbose"), None);
+    }
+
+    #[test]
+    fn threshold_ordering_gates_messages() {
+        // Pure predicate check against explicit thresholds — does not
+        // depend on (or race with) the process-global level.
+        let gate = |msg: Level, thr: Level| msg != Level::Off && (msg as u8) <= (thr as u8);
+        assert!(gate(Level::Error, Level::Info));
+        assert!(gate(Level::Info, Level::Info));
+        assert!(!gate(Level::Debug, Level::Info));
+        assert!(!gate(Level::Error, Level::Off));
+        assert!(gate(Level::Debug, Level::Debug));
+    }
+
+    #[test]
+    fn values_quote_only_when_needed() {
+        assert_eq!(fmt_value("plain-token_7"), "plain-token_7");
+        assert_eq!(fmt_value("has space"), "\"has space\"");
+        assert_eq!(fmt_value("k=v"), "\"k=v\"");
+        assert_eq!(fmt_value(""), "\"\"");
+    }
+
+    #[test]
+    fn round_trips_through_the_global_level() {
+        let before = level();
+        set_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+        set_level(Level::Error);
+        assert!(!enabled(Level::Warn));
+        assert!(enabled(Level::Error));
+        set_level(before);
+    }
+}

@@ -6,11 +6,15 @@
 //! (see DESIGN.md §6 "Substitutions").
 
 pub mod failpoint;
+pub mod flight;
 pub mod json;
+pub mod log;
 pub mod prng;
+pub mod profile;
 pub mod prop;
 pub mod stats;
 pub mod threadpool;
+pub mod trace;
 
 pub use prng::XorShift;
 

@@ -204,6 +204,113 @@ impl RingStats {
     }
 }
 
+/// Fixed log-bucketed histogram: exact bounded-memory counts with
+/// geometrically growing bucket bounds.
+///
+/// Complements [`RingStats`]: the ring gives exact percentiles over a
+/// *recent window*, the histogram gives process-lifetime quantile
+/// *estimates* (within one bucket-growth factor) plus the cumulative
+/// bucket counts Prometheus histograms want. Bucket `0` holds
+/// `x <= base`; bucket `i` holds `base·growth^(i-1) < x <=
+/// base·growth^i`; the last bucket is the `+Inf` overflow. Memory is
+/// `O(buckets)` forever.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    base: f64,
+    growth: f64,
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl LogHistogram {
+    pub fn new(base: f64, growth: f64, buckets: usize) -> Self {
+        assert!(base > 0.0 && growth > 1.0 && buckets >= 2);
+        LogHistogram { base, growth, counts: vec![0; buckets], sum: 0.0, count: 0 }
+    }
+
+    /// The serving-latency default: bounds at `2^-10 ms ≈ 1 µs` up
+    /// through `2^24 ms ≈ 4.7 h`, doubling — all bounds are exact
+    /// binary floats, so their decimal rendering is stable.
+    pub fn latency_ms() -> Self {
+        LogHistogram::new(1.0 / 1024.0, 2.0, 36)
+    }
+
+    /// Upper bound of bucket `i` (`+Inf` for the overflow bucket).
+    pub fn upper_bound(&self, i: usize) -> f64 {
+        if i + 1 >= self.counts.len() {
+            f64::INFINITY
+        } else {
+            self.base * self.growth.powi(i as i32)
+        }
+    }
+
+    fn bucket_for(&self, x: f64) -> usize {
+        let mut b = 0;
+        let mut ub = self.base;
+        while x > ub && b + 1 < self.counts.len() {
+            b += 1;
+            ub *= self.growth;
+        }
+        b
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let b = self.bucket_for(x);
+        self.counts[b] += 1;
+        self.sum += x;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Cumulative `(le, count)` pairs in Prometheus order; the final
+    /// entry's bound is `+Inf` and its count equals [`Self::count`].
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut acc = 0;
+        self.counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                acc += c;
+                (self.upper_bound(i), acc)
+            })
+            .collect()
+    }
+
+    /// Nearest-rank quantile estimate (`p` in `[0, 100]`): the upper
+    /// bound of the bucket holding the ranked sample, so the estimate
+    /// is always `>=` the exact value and overshoots by at most one
+    /// `growth` factor. The overflow bucket reports its (finite)
+    /// lower bound instead.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * (self.count as f64 - 1.0)).floor() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc > rank {
+                return if i + 1 >= self.counts.len() {
+                    // Overflow bucket: no finite upper bound; report
+                    // the largest finite bound as a floor.
+                    self.base * self.growth.powi((i as i32) - 1)
+                } else {
+                    self.upper_bound(i)
+                };
+            }
+        }
+        self.base * self.growth.powi(self.counts.len() as i32 - 2)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -279,5 +386,87 @@ mod tests {
         assert_eq!(w.max(), 9.0);
         // sample variance of xs is 32/7
         assert!((w.variance() - 32.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_histogram_bucket_edges_are_inclusive_upper() {
+        let mut h = LogHistogram::new(1.0, 2.0, 5); // bounds 1, 2, 4, 8, +Inf
+        assert_eq!(h.upper_bound(0), 1.0);
+        assert_eq!(h.upper_bound(3), 8.0);
+        assert_eq!(h.upper_bound(4), f64::INFINITY);
+        for x in [0.5, 1.0, 1.5, 2.0, 7.9, 8.0, 9.0, 1e9] {
+            h.push(x);
+        }
+        // Boundary values land in the bucket they bound (inclusive
+        // upper): 1.0 → bucket 0, 2.0 → bucket 1, 8.0 → bucket 3.
+        let cum = h.cumulative();
+        assert_eq!(cum[0], (1.0, 2)); // 0.5, 1.0
+        assert_eq!(cum[1], (2.0, 4)); // + 1.5, 2.0
+        assert_eq!(cum[2], (4.0, 4));
+        assert_eq!(cum[3], (8.0, 6)); // + 7.9, 8.0
+        assert_eq!(cum[4].1, 8); // overflow holds 9.0 and 1e9
+        assert_eq!(cum[4].0, f64::INFINITY);
+        assert_eq!(h.count(), 8);
+        assert!((h.sum() - (0.5 + 1.0 + 1.5 + 2.0 + 7.9 + 8.0 + 9.0 + 1e9)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prop_log_histogram_quantiles_within_one_growth_factor() {
+        // Seeded random latency-looking samples, kept inside the
+        // finite bucket range so the +Inf overflow bucket stays empty.
+        let mut r = crate::util::XorShift::new(0xA11CE);
+        for case in 0..8usize {
+            let mut h = LogHistogram::latency_ms();
+            let mut xs = Vec::new();
+            let n = 50 + case * 137;
+            for _ in 0..n {
+                // Log-uniform over ~[0.002, 2000] ms: exercises many
+                // buckets, avoids bucket 0's unbounded-below edge.
+                let x = 10f64.powf(r.range_f64(-2.7, 3.3));
+                h.push(x);
+                xs.push(x);
+            }
+            for p in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+                let exact = percentile(&xs, p);
+                let est = h.quantile(p);
+                assert!(
+                    est >= exact * (1.0 - 1e-12),
+                    "case {case} p{p}: estimate {est} below exact {exact}"
+                );
+                assert!(
+                    est <= exact * 2.0 * (1.0 + 1e-12),
+                    "case {case} p{p}: estimate {est} beyond one growth factor of {exact}"
+                );
+            }
+            assert_eq!(h.count(), n as u64);
+        }
+    }
+
+    #[test]
+    fn prop_ring_window_percentiles_match_exact_sort() {
+        let mut r = crate::util::XorShift::new(7_654_321);
+        for case in 0..8usize {
+            let cap = 32 + (case % 3) * 61;
+            let n = 10 + case * 73; // below and above capacity
+            let mut ring = RingStats::new(cap);
+            let mut all = Vec::new();
+            for _ in 0..n {
+                let x = r.range_f64(-50.0, 1500.0);
+                ring.push(x);
+                all.push(x);
+            }
+            // The ring's window is exactly the last `cap` samples.
+            let window = if all.len() > cap { &all[all.len() - cap..] } else { &all[..] };
+            for p in [0.0, 25.0, 50.0, 75.0, 99.0, 100.0] {
+                assert_eq!(
+                    ring.window_percentile(p),
+                    percentile(window, p),
+                    "case {case} cap {cap} n {n} p{p}"
+                );
+            }
+            assert_eq!(ring.count(), n as u64);
+            let exact_max = all.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            assert_eq!(ring.max(), exact_max);
+        }
     }
 }

@@ -1,0 +1,373 @@
+//! Per-request trace timelines: where did this request's latency go?
+//!
+//! A request that opts in (`"trace": true` on the wire, or
+//! `GenRequest::trace`) carries a [`RequestTrace`] through the
+//! scheduler. The coordinator records one [`TraceEventKind`] per
+//! lifecycle step — queued → admitted (with prefix-reuse count) → each
+//! prefill chunk (token count) → each decode round (batch size) → each
+//! spec verify round (drafted/accepted) → preemption/requeue →
+//! restart-implicated → terminal — and accumulates wall time into the
+//! phase buckets that make up the `timing` object on the terminal
+//! `done` line (`queue_ms` + `prefill_ms` + `decode_ms` ≈ `total_ms`;
+//! the remainder is scheduler bookkeeping between rounds).
+//!
+//! Completed timelines land in a bounded [`TraceStore`] ring owned by
+//! the coordinator worker and are served newest-first by the `trace`
+//! op (`docs/PROTOCOL.md`). Event lists are bounded ([`MAX_EVENTS`])
+//! so a 100k-token generation cannot grow a trace without limit —
+//! overflow is counted, not silently dropped.
+//!
+//! Everything here is monotonic-clock based ([`Span`]); tracing an
+//! individual request never perturbs its tokens (asserted by
+//! `tracing_does_not_change_tokens` in the coordinator tests).
+
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Maximum retained events per request; later events bump
+/// `dropped_events` instead of growing the list.
+pub const MAX_EVENTS: usize = 256;
+
+/// A monotonic scoped timer: `Span::begin()` … `span.ms()`.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    t0: Instant,
+}
+
+impl Span {
+    pub fn begin() -> Span {
+        Span { t0: Instant::now() }
+    }
+
+    /// Milliseconds elapsed since [`Span::begin`].
+    pub fn ms(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+impl Default for Span {
+    fn default() -> Self {
+        Span::begin()
+    }
+}
+
+/// One step in a request's lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceEventKind {
+    /// Entered (or re-entered, after preemption/restart) the admission
+    /// queue.
+    Queued,
+    /// Admitted into the running batch; `prefix_reused` prompt tokens
+    /// came from the paged prefix cache.
+    Admitted { prefix_reused: usize },
+    /// One prefill chunk of `tokens` prompt tokens ran.
+    PrefillChunk { tokens: usize },
+    /// One fused decode round ran with `batch` sequences.
+    DecodeRound { batch: usize },
+    /// One speculative verify pass: `drafted` proposed, `accepted` kept.
+    SpecVerify { drafted: usize, accepted: usize },
+    /// Preempted (KV pressure) and sent back to the queue.
+    Preempted,
+    /// Implicated in a scheduling-round panic; requeued (or failed).
+    RestartImplicated,
+    /// Terminal reached (`done` reason or error code).
+    Terminal,
+}
+
+impl TraceEventKind {
+    fn what(&self) -> &'static str {
+        match self {
+            TraceEventKind::Queued => "queued",
+            TraceEventKind::Admitted { .. } => "admitted",
+            TraceEventKind::PrefillChunk { .. } => "prefill_chunk",
+            TraceEventKind::DecodeRound { .. } => "decode_round",
+            TraceEventKind::SpecVerify { .. } => "spec_verify",
+            TraceEventKind::Preempted => "preempted",
+            TraceEventKind::RestartImplicated => "restart_implicated",
+            TraceEventKind::Terminal => "terminal",
+        }
+    }
+}
+
+fn round3(x: f64) -> f64 {
+    (x * 1e3).round() / 1e3
+}
+
+/// The per-request timeline + phase accumulators. Created at intake,
+/// carried inside the sequence state, finished into a [`TraceStore`].
+#[derive(Clone, Debug)]
+pub struct RequestTrace {
+    /// Coordinator-assigned request id (1-based, per process).
+    pub id: u64,
+    t0: Instant,
+    events: Vec<(f64, TraceEventKind)>,
+    dropped: u64,
+    /// Set while the request sits in the admission queue.
+    queued_at: Option<Instant>,
+    queue_ms: f64,
+    prefill_ms: f64,
+    decode_ms: f64,
+    spec_saved_tokens: u64,
+    preemptions: u64,
+    prefill_rounds: u64,
+    decode_rounds: u64,
+    spec_rounds: u64,
+}
+
+impl RequestTrace {
+    /// Start a trace at intake: the request is queued from birth.
+    pub fn new(id: u64) -> RequestTrace {
+        let mut t = RequestTrace {
+            id,
+            t0: Instant::now(),
+            events: Vec::new(),
+            dropped: 0,
+            queued_at: None,
+            queue_ms: 0.0,
+            prefill_ms: 0.0,
+            decode_ms: 0.0,
+            spec_saved_tokens: 0,
+            preemptions: 0,
+            prefill_rounds: 0,
+            decode_rounds: 0,
+            spec_rounds: 0,
+        };
+        t.record(TraceEventKind::Queued);
+        t
+    }
+
+    /// Record one lifecycle event (bounded) and fold it into the
+    /// phase accumulators.
+    pub fn record(&mut self, kind: TraceEventKind) {
+        match kind {
+            TraceEventKind::Queued => self.queued_at = Some(Instant::now()),
+            TraceEventKind::Admitted { .. } => {
+                if let Some(q) = self.queued_at.take() {
+                    self.queue_ms += q.elapsed().as_secs_f64() * 1e3;
+                }
+            }
+            TraceEventKind::PrefillChunk { .. } => self.prefill_rounds += 1,
+            TraceEventKind::DecodeRound { .. } => self.decode_rounds += 1,
+            TraceEventKind::SpecVerify { accepted, .. } => {
+                self.spec_rounds += 1;
+                self.spec_saved_tokens += accepted as u64;
+            }
+            TraceEventKind::Preempted => self.preemptions += 1,
+            TraceEventKind::RestartImplicated | TraceEventKind::Terminal => {}
+        }
+        if self.events.len() < MAX_EVENTS {
+            let at_ms = self.t0.elapsed().as_secs_f64() * 1e3;
+            self.events.push((at_ms, kind));
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// Add measured engine wall time to the prefill bucket.
+    pub fn add_prefill_ms(&mut self, ms: f64) {
+        self.prefill_ms += ms;
+    }
+
+    /// Add measured engine wall time to the decode bucket (fused
+    /// rounds and spec verify passes both land here — they are the
+    /// generation phase).
+    pub fn add_decode_ms(&mut self, ms: f64) {
+        self.decode_ms += ms;
+    }
+
+    /// The `timing` object carried by the terminal line. Queue time
+    /// still accruing (terminal reached while queued) is included.
+    pub fn timing_json(&self) -> Json {
+        let queue_ms =
+            self.queue_ms + self.queued_at.map_or(0.0, |q| q.elapsed().as_secs_f64() * 1e3);
+        Json::obj(vec![
+            ("queue_ms", Json::num(round3(queue_ms))),
+            ("prefill_ms", Json::num(round3(self.prefill_ms))),
+            ("decode_ms", Json::num(round3(self.decode_ms))),
+            ("spec_saved_tokens", Json::num(self.spec_saved_tokens as f64)),
+            ("preemptions", Json::num(self.preemptions as f64)),
+            ("prefill_rounds", Json::num(self.prefill_rounds as f64)),
+            ("decode_rounds", Json::num(self.decode_rounds as f64)),
+            ("spec_rounds", Json::num(self.spec_rounds as f64)),
+        ])
+    }
+
+    /// Render the full timeline (for the `trace` op); `reason` is the
+    /// terminal `done` reason or error code.
+    pub fn timeline_json(&self, reason: &str) -> Json {
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|(at_ms, kind)| {
+                let mut fields = vec![
+                    ("at_ms", Json::num(round3(*at_ms))),
+                    ("what", Json::str(kind.what())),
+                ];
+                match *kind {
+                    TraceEventKind::Admitted { prefix_reused } => {
+                        fields.push(("prefix_reused", Json::num(prefix_reused as f64)));
+                    }
+                    TraceEventKind::PrefillChunk { tokens } => {
+                        fields.push(("tokens", Json::num(tokens as f64)));
+                    }
+                    TraceEventKind::DecodeRound { batch } => {
+                        fields.push(("batch", Json::num(batch as f64)));
+                    }
+                    TraceEventKind::SpecVerify { drafted, accepted } => {
+                        fields.push(("drafted", Json::num(drafted as f64)));
+                        fields.push(("accepted", Json::num(accepted as f64)));
+                    }
+                    _ => {}
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("reason", Json::str(reason)),
+            ("total_ms", Json::num(round3(self.t0.elapsed().as_secs_f64() * 1e3))),
+            ("timing", self.timing_json()),
+            ("events", Json::Arr(events)),
+            ("dropped_events", Json::num(self.dropped as f64)),
+        ])
+    }
+}
+
+/// Bounded ring of completed timelines, owned by the coordinator
+/// worker and served newest-first by the `trace` op.
+#[derive(Debug, Default)]
+pub struct TraceStore {
+    ring: VecDeque<Json>,
+    cap: usize,
+}
+
+impl TraceStore {
+    pub fn new(cap: usize) -> TraceStore {
+        TraceStore { ring: VecDeque::new(), cap: cap.max(1) }
+    }
+
+    /// Retire a finished trace into the ring.
+    pub fn push(&mut self, timeline: Json) {
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(timeline);
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// The `n` most recent completed timelines, newest first.
+    pub fn recent(&self, n: usize) -> Json {
+        Json::Arr(self.ring.iter().rev().take(n).cloned().collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_is_monotonic() {
+        let s = Span::begin();
+        let a = s.ms();
+        let b = s.ms();
+        assert!(a >= 0.0 && b >= a);
+    }
+
+    #[test]
+    fn lifecycle_events_feed_the_accumulators() {
+        let mut t = RequestTrace::new(7);
+        t.record(TraceEventKind::Admitted { prefix_reused: 3 });
+        t.record(TraceEventKind::PrefillChunk { tokens: 8 });
+        t.add_prefill_ms(1.5);
+        t.record(TraceEventKind::DecodeRound { batch: 2 });
+        t.add_decode_ms(0.75);
+        t.record(TraceEventKind::SpecVerify { drafted: 4, accepted: 3 });
+        t.add_decode_ms(0.25);
+        t.record(TraceEventKind::Preempted);
+        t.record(TraceEventKind::Queued);
+        t.record(TraceEventKind::Admitted { prefix_reused: 11 });
+        t.record(TraceEventKind::Terminal);
+
+        let timing = t.timing_json();
+        assert_eq!(timing.get("prefill_ms").unwrap().as_f64(), Some(1.5));
+        assert_eq!(timing.get("decode_ms").unwrap().as_f64(), Some(1.0));
+        assert_eq!(timing.get("spec_saved_tokens").unwrap().as_u64(), Some(3));
+        assert_eq!(timing.get("preemptions").unwrap().as_u64(), Some(1));
+        assert_eq!(timing.get("prefill_rounds").unwrap().as_u64(), Some(1));
+        assert_eq!(timing.get("decode_rounds").unwrap().as_u64(), Some(1));
+        assert_eq!(timing.get("spec_rounds").unwrap().as_u64(), Some(1));
+        // Two queued→admitted stints, both captured.
+        assert!(timing.get("queue_ms").unwrap().as_f64().unwrap() >= 0.0);
+
+        let tl = t.timeline_json("max_tokens");
+        assert_eq!(tl.get("id").unwrap().as_u64(), Some(7));
+        assert_eq!(tl.get("reason").unwrap().as_str(), Some("max_tokens"));
+        let evs = tl.get("events").unwrap().as_arr().unwrap();
+        // Birth Queued + the 9 recorded above.
+        assert_eq!(evs.len(), 10);
+        assert_eq!(evs[0].get("what").unwrap().as_str(), Some("queued"));
+        assert_eq!(evs[1].get("prefix_reused").unwrap().as_u64(), Some(3));
+        let last = evs.last().unwrap();
+        assert_eq!(last.get("what").unwrap().as_str(), Some("terminal"));
+        // Timestamps are monotone non-decreasing.
+        let mut prev = -1.0;
+        for e in evs {
+            let at = e.get("at_ms").unwrap().as_f64().unwrap();
+            assert!(at >= prev);
+            prev = at;
+        }
+    }
+
+    #[test]
+    fn event_list_is_bounded_and_overflow_is_counted() {
+        let mut t = RequestTrace::new(1);
+        for _ in 0..(MAX_EVENTS + 100) {
+            t.record(TraceEventKind::DecodeRound { batch: 1 });
+        }
+        let tl = t.timeline_json("max_tokens");
+        assert_eq!(tl.get("events").unwrap().as_arr().unwrap().len(), MAX_EVENTS);
+        // +1: the birth Queued event occupied one slot.
+        assert_eq!(tl.get("dropped_events").unwrap().as_u64(), Some(101));
+        // Overflowed events still count toward the phase accumulators.
+        assert_eq!(
+            tl.get("timing").unwrap().get("decode_rounds").unwrap().as_u64(),
+            Some((MAX_EVENTS + 100) as u64)
+        );
+    }
+
+    #[test]
+    fn unadmitted_terminal_folds_outstanding_queue_time() {
+        let t = RequestTrace::new(2);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let timing = t.timing_json();
+        assert!(
+            timing.get("queue_ms").unwrap().as_f64().unwrap() >= 4.0,
+            "queue time must accrue until the terminal for never-admitted requests"
+        );
+    }
+
+    #[test]
+    fn store_is_a_bounded_newest_first_ring() {
+        let mut s = TraceStore::new(3);
+        for i in 0..5u64 {
+            let t = RequestTrace::new(i);
+            s.push(t.timeline_json("max_tokens"));
+        }
+        assert_eq!(s.len(), 3);
+        let recent = s.recent(2);
+        let arr = recent.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("id").unwrap().as_u64(), Some(4), "newest first");
+        assert_eq!(arr[1].get("id").unwrap().as_u64(), Some(3));
+        // Asking for more than retained returns what exists.
+        assert_eq!(s.recent(10).as_arr().unwrap().len(), 3);
+    }
+}

@@ -157,6 +157,74 @@ fn decode_phase_dead_client_cancelled_within_rounds() {
 }
 
 #[test]
+fn engine_panic_dumps_flight_recorder_with_implicated_trace() {
+    let _g = failpoint::exclusive();
+    // The flight ring is process-global; start from a clean slate so
+    // the dump below is exactly this test's story.
+    itq3s::util::flight::clear();
+    // Let prefill and one decode round run clean, then panic the
+    // second decode round — the traced request is mid-generation.
+    failpoint::arm_at("engine.decode", 2, FailAction::Panic);
+
+    let c = chaos_coordinator(2);
+    let rx = c.generate(GenRequest {
+        prompt: "watched by the flight recorder".into(),
+        max_new_tokens: 8,
+        trace: true,
+        ..Default::default()
+    });
+    assert_eq!(terminals(rx), 1, "the survivor is requeued and finishes");
+
+    // The dump tells the crash story in order: round summaries naming
+    // the active request precede the panic, and the restart event
+    // names it implicated.
+    let events = c.dump();
+    let arr = events.as_arr().unwrap();
+    let kind = |e: &Json| e.get("kind").unwrap().as_str().unwrap().to_string();
+    let detail = |e: &Json| e.get("detail").unwrap().as_str().unwrap().to_string();
+    let panic_pos = arr
+        .iter()
+        .position(|e| kind(e) == "panic")
+        .expect("the injected panic must be recorded");
+    let round_before = arr[..panic_pos]
+        .iter()
+        .rev()
+        .find(|e| kind(e) == "round")
+        .expect("round summaries must precede the panic");
+    assert!(
+        detail(round_before).contains("active=[1]"),
+        "the round summary names the active request: {}",
+        detail(round_before)
+    );
+    let restart = arr[panic_pos..]
+        .iter()
+        .find(|e| kind(e) == "restart")
+        .expect("the restart must be recorded after the panic");
+    assert!(
+        detail(restart).contains("implicated=[1]"),
+        "the restart names the implicated request: {}",
+        detail(restart)
+    );
+
+    // The request's own timeline records the implication, and the
+    // trace id matches the one the dump implicated.
+    let timelines = c.trace(4).unwrap();
+    let tl = timelines.as_arr().unwrap();
+    assert_eq!(tl.len(), 1);
+    assert_eq!(tl[0].get("id").unwrap().as_u64(), Some(1));
+    assert_eq!(tl[0].get("reason").unwrap().as_str(), Some("max_tokens"));
+    let evs = tl[0].get("events").unwrap().as_arr().unwrap();
+    assert!(
+        evs.iter().any(|e| e.get("what").unwrap().as_str() == Some("restart_implicated")),
+        "the timeline must record the restart implication"
+    );
+
+    let stats = c.stats().unwrap();
+    assert!(stats.get("worker_restarts").unwrap().as_u64().unwrap() >= 1);
+    c.shutdown();
+}
+
+#[test]
 fn server_conn_error_surfaces_and_server_survives() {
     let _g = failpoint::exclusive();
     // The very first wire send in the server process fails (a client
