@@ -1,0 +1,102 @@
+//! Replica-scaling bench: end-to-end throughput of one mixed serving
+//! workload (shared-prefix groups that exercise placement affinity
+//! plus fresh prompts) through the coordinator with N ∈ {1, 2, 4}
+//! data-parallel replicas of the same itq3_s W3A8 engine. All replicas
+//! share this host's physical cores, so the numbers price scheduler
+//! overhead and placement quality under contention rather than ideal
+//! N× scaling — the interesting signal is that N=1 matches the
+//! pre-replica coordinator and N>1 does not collapse. Writes
+//! `BENCH_replica.json` (schema in EXPERIMENTS.md §Replica scaling).
+
+use itq3s::bench::harness::bench;
+use itq3s::coordinator::{Coordinator, CoordinatorConfig, Event, GenRequest};
+use itq3s::model::native::Engine;
+use itq3s::model::{DenseModel, ModelConfig, NativeEngine, QuantizedModel};
+use itq3s::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Submit the whole mixed workload, drain every stream, and return the
+/// total generated-token count.
+fn drain_workload(c: &Coordinator) -> usize {
+    let mut rxs = Vec::new();
+    for group in 0..4 {
+        // Three requests per group share a long prompt prefix, so
+        // after the first completes the others should follow it to the
+        // replica that cached the prefix.
+        let prefix = format!("shared context for group {group}: the quick brown fox. ");
+        for j in 0..3 {
+            rxs.push(c.generate(GenRequest {
+                prompt: format!("{prefix}request {j}"),
+                max_new_tokens: 16,
+                ..Default::default()
+            }));
+        }
+    }
+    let mut total = 0;
+    for rx in rxs {
+        for ev in rx.iter() {
+            match ev {
+                Event::Done { gen_tokens, .. } => {
+                    total += gen_tokens;
+                    break;
+                }
+                Event::Error(e) => panic!("bench request failed: {e:?}"),
+                _ => {}
+            }
+        }
+    }
+    total
+}
+
+fn main() {
+    let cfg = ModelConfig::tiny();
+    let dense = DenseModel::random(&cfg, 42, Some(5.0));
+
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
+    report.insert("requests".into(), Json::num(12.0));
+    report.insert("gen_tokens_per_request".into(), Json::num(16.0));
+
+    let mut base_tps = 0.0f64;
+    for n in [1usize, 2, 4] {
+        let fmt = itq3s::quant::format_by_name("itq3_s").unwrap();
+        let engines: Vec<Box<dyn Engine>> = (0..n)
+            .map(|_| {
+                Box::new(NativeEngine::quantized(QuantizedModel::quantize(&dense, fmt.clone())))
+                    as Box<dyn Engine>
+            })
+            .collect();
+        let coord = Coordinator::new_replicated(
+            engines,
+            CoordinatorConfig {
+                max_batch: 4,
+                kv_budget_bytes: (64 << 20) * n,
+                ..Default::default()
+            },
+        );
+        let total = drain_workload(&coord); // warm pass primes prefix caches
+        assert_eq!(total, 12 * 16, "replicas={n}: short generation");
+        let r = bench(&format!("replicas_{n}"), 1, 5, || {
+            drain_workload(&coord);
+        });
+        let tps = (12 * 16) as f64 / r.mean_s;
+        if n == 1 {
+            base_tps = tps;
+        }
+        let speedup = tps / base_tps;
+        println!("replicas={n}: {tps:>8.1} tok/s ({speedup:.2}x vs N=1)");
+        report.insert(
+            format!("replicas_{n}"),
+            Json::obj(vec![
+                ("tokens_per_s", Json::num(tps)),
+                ("speedup_vs_1", Json::num(speedup)),
+            ]),
+        );
+        coord.shutdown();
+    }
+
+    let out = Json::Obj(report).to_string();
+    match std::fs::write("BENCH_replica.json", &out) {
+        Ok(()) => println!("wrote BENCH_replica.json"),
+        Err(e) => eprintln!("could not write BENCH_replica.json: {e}"),
+    }
+}

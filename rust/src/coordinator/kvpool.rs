@@ -91,6 +91,12 @@ impl KvPool {
         }
     }
 
+    /// Read-only placement probe: prompt tokens this pool's prefix
+    /// cache would serve at admission (no LRU bump, no stats).
+    pub fn cached_prefix_tokens(&self, prefill: &[u32]) -> usize {
+        self.pool.cached_prefix_tokens(prefill)
+    }
+
     /// Fresh blocks appending `n` tokens to `id` would allocate.
     pub fn blocks_needed(&self, id: SeqId, n: usize) -> usize {
         self.pool.blocks_needed(id, n)

@@ -12,7 +12,7 @@ use std::time::Instant;
 /// Retained samples per distribution (percentile window).
 const WINDOW: usize = 1024;
 
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct Metrics {
     started: Instant,
     pub requests_submitted: u64,
@@ -94,11 +94,52 @@ pub struct Metrics {
     pub ttft_hist: LogHistogram,
     /// Process-lifetime decode-round-time histogram (Prometheus).
     pub decode_round_hist: LogHistogram,
+    /// Number of data-parallel engine replicas behind this snapshot
+    /// (PR 8). 1 for a single-engine coordinator; [`Metrics::merge_from`]
+    /// never sums it — the dispatcher stamps the true count after
+    /// merging the per-replica accumulators.
+    pub replicas: usize,
 }
 
 impl Default for Metrics {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+/// Merge one paged-pool stats fragment into another: counter keys sum;
+/// configuration keys (`kv_block_tokens`, `kv_block_bytes`, `kv_quant`)
+/// keep the receiver's value (identical across replicas by
+/// construction); `prefix_hit_ratio` is recomputed from the merged
+/// `prefix_hit_tokens` / `prefix_lookup_tokens` so it stays a true
+/// ratio rather than a sum of ratios. A `Null` receiver (fragment never
+/// refreshed) takes the other side verbatim — the N=1 byte-identity
+/// path.
+fn merge_pool_fragment(dst: &mut Json, src: &Json) {
+    let Json::Obj(s) = src else { return };
+    match dst {
+        Json::Obj(d) => {
+            for (k, v) in s {
+                match k.as_str() {
+                    "kv_block_tokens" | "kv_block_bytes" | "kv_quant" | "prefix_hit_ratio" => {}
+                    _ => {
+                        if let (Some(a), Some(b)) =
+                            (d.get(k).and_then(|x| x.as_f64()), v.as_f64())
+                        {
+                            d.insert(k.clone(), Json::num(a + b));
+                        }
+                    }
+                }
+            }
+            let hit = d.get("prefix_hit_tokens").and_then(|x| x.as_f64()).unwrap_or(0.0);
+            let lookups = d
+                .get("prefix_lookup_tokens")
+                .and_then(|x| x.as_f64())
+                .unwrap_or(0.0)
+                .max(1.0);
+            d.insert("prefix_hit_ratio".to_string(), Json::num(hit / lookups));
+        }
+        _ => *dst = src.clone(),
     }
 }
 
@@ -137,7 +178,56 @@ impl Metrics {
             phase_ms: std::array::from_fn(|_| RingStats::new(WINDOW)),
             ttft_hist: LogHistogram::latency_ms(),
             decode_round_hist: LogHistogram::latency_ms(),
+            replicas: 1,
         }
+    }
+
+    /// Fold another accumulator into this one — the replica-aggregation
+    /// path (PR 8): the dispatcher clones its intake metrics, merges
+    /// each replica's accumulator, and snapshots the result. Counters
+    /// sum; rings and histograms combine via their own `merge_from`
+    /// (exact for counts/means, windows concatenate); `kv_peak_bytes`
+    /// sums (per-replica pools are disjoint slices of the budget); the
+    /// paged-pool fragment sums its counters and recomputes the hit
+    /// ratio. Because every counter has exactly one writer (intake vs.
+    /// replica round), merging a single replica into a fresh intake
+    /// clone reproduces today's single-worker snapshot byte for byte.
+    pub fn merge_from(&mut self, other: &Metrics) {
+        self.requests_submitted += other.requests_submitted;
+        self.requests_finished += other.requests_finished;
+        self.requests_rejected += other.requests_rejected;
+        self.requests_cancelled += other.requests_cancelled;
+        self.prompt_tokens += other.prompt_tokens;
+        self.gen_tokens += other.gen_tokens;
+        self.prefix_reused_tokens += other.prefix_reused_tokens;
+        self.preemptions += other.preemptions;
+        self.ttft_ms.merge_from(&other.ttft_ms);
+        self.decode_step_ms.merge_from(&other.decode_step_ms);
+        self.prefill_tokens_per_round.merge_from(&other.prefill_tokens_per_round);
+        self.batch_occupancy.merge_from(&other.batch_occupancy);
+        self.decode_batch_size.merge_from(&other.decode_batch_size);
+        self.spec_drafted += other.spec_drafted;
+        self.spec_accepted += other.spec_accepted;
+        self.spec_accept_rate.merge_from(&other.spec_accept_rate);
+        self.spec_accept_rate_greedy.merge_from(&other.spec_accept_rate_greedy);
+        self.spec_accept_rate_sampled.merge_from(&other.spec_accept_rate_sampled);
+        self.spec_resampled += other.spec_resampled;
+        self.spec_run_len.merge_from(&other.spec_run_len);
+        self.kv_peak_bytes += other.kv_peak_bytes;
+        merge_pool_fragment(&mut self.kv_pool, &other.kv_pool);
+        self.conn_errors += other.conn_errors;
+        self.rejected_overload += other.rejected_overload;
+        self.deadline_expired += other.deadline_expired;
+        self.worker_restarts += other.worker_restarts;
+        self.queue_depth.merge_from(&other.queue_depth);
+        self.decode_round_ms.merge_from(&other.decode_round_ms);
+        for (a, b) in self.phase_ms.iter_mut().zip(&other.phase_ms) {
+            a.merge_from(b);
+        }
+        self.ttft_hist.merge_from(&other.ttft_hist);
+        self.decode_round_hist.merge_from(&other.decode_round_hist);
+        // `started` and `replicas` stay: uptime is the receiver's, and
+        // the replica count is stamped by the dispatcher, not summed.
     }
 
     /// Aggregate decode throughput since start (tokens/sec).
@@ -230,6 +320,8 @@ impl Metrics {
         fields.push(("decode_round_ms_p50", Json::num(self.decode_round_ms.p50())));
         fields.push(("decode_round_ms_p99", Json::num(self.decode_round_ms.p99())));
         fields.push(("decode_round_ms_max", Json::num(self.decode_round_ms.max())));
+        // Replica keys (PR 8), appended last — append-only as always.
+        fields.push(("replicas", Json::num(self.replicas as f64)));
         let mut snap = Json::obj(fields);
         // Phase-profile keys exist only when the profiler is compiled
         // in: with default features the snapshot is byte-identical to
@@ -281,6 +373,7 @@ impl Metrics {
         gauge("uptime_seconds", "Seconds since the coordinator started.", self.started.elapsed().as_secs_f64());
         gauge("decode_tps", "Aggregate decode throughput (tokens/sec) since start.", self.decode_tps());
         gauge("kv_peak_bytes", "Peak KV pool bytes in use.", self.kv_peak_bytes as f64);
+        gauge("replicas", "Data-parallel engine replicas behind this coordinator.", self.replicas as f64);
         // Numeric paged-pool fragment keys ride along as gauges.
         if let Json::Obj(pool) = &self.kv_pool {
             for (k, v) in pool {
@@ -499,6 +592,8 @@ mod tests {
             "decode_round_ms_p50",
             "decode_round_ms_p99",
             "decode_round_ms_max",
+            // PR 8 replicas.
+            "replicas",
         ]
         .iter()
         .map(|s| s.to_string())
@@ -520,6 +615,97 @@ mod tests {
         // sorted key order — comparing the sorted lists pins the
         // serialized byte layout of the key set.
         assert_eq!(actual, expected, "snapshot keys changed; stats keys are append-only");
+    }
+
+    #[test]
+    fn merge_single_replica_into_fresh_intake_reproduces_the_snapshot() {
+        // The N=1 identity contract: dispatcher-side merging of one
+        // replica's metrics into a fresh intake clone must reproduce
+        // the single-worker snapshot exactly (uptime aside, which is
+        // the receiver's clock).
+        let mut replica = Metrics::new();
+        replica.requests_finished = 4;
+        replica.gen_tokens = 80;
+        replica.ttft_ms.push(3.5);
+        replica.decode_step_ms.push(1.25);
+        replica.spec_accept_rate.push(0.5);
+        replica.kv_peak_bytes = 4096;
+        replica.kv_pool = Json::obj(vec![
+            ("kv_block_tokens", Json::num(16.0)),
+            ("prefix_hit_tokens", Json::num(8.0)),
+            ("prefix_lookup_tokens", Json::num(32.0)),
+            ("prefix_hit_ratio", Json::num(0.25)),
+        ]);
+
+        let mut merged = Metrics::new();
+        merged.requests_submitted = 5; // intake-owned counter
+        merged.merge_from(&replica);
+        merged.replicas = 1;
+
+        let a = merged.snapshot();
+        let mut solo = replica.clone();
+        solo.requests_submitted = 5;
+        let b = solo.snapshot();
+        for key in [
+            "requests_submitted",
+            "requests_finished",
+            "gen_tokens",
+            "ttft_ms_p50",
+            "decode_step_ms_mean",
+            "spec_accept_rate_p99",
+            "kv_peak_bytes",
+            "kv_block_tokens",
+            "prefix_hit_tokens",
+            "prefix_hit_ratio",
+            "replicas",
+        ] {
+            assert_eq!(a.get(key), b.get(key), "merged N=1 differs on {key}");
+        }
+    }
+
+    #[test]
+    fn merge_two_replicas_sums_counters_and_recomputes_the_hit_ratio() {
+        let mut a = Metrics::new();
+        a.gen_tokens = 10;
+        a.worker_restarts = 1;
+        a.ttft_ms.push(2.0);
+        a.kv_peak_bytes = 100;
+        a.kv_pool = Json::obj(vec![
+            ("kv_block_tokens", Json::num(16.0)),
+            ("kv_blocks_in_use", Json::num(3.0)),
+            ("prefix_hit_tokens", Json::num(4.0)),
+            ("prefix_lookup_tokens", Json::num(8.0)),
+            ("prefix_hit_ratio", Json::num(0.5)),
+        ]);
+        let mut b = Metrics::new();
+        b.gen_tokens = 5;
+        b.ttft_ms.push(4.0);
+        b.kv_peak_bytes = 50;
+        b.kv_pool = Json::obj(vec![
+            ("kv_block_tokens", Json::num(16.0)),
+            ("kv_blocks_in_use", Json::num(2.0)),
+            ("prefix_hit_tokens", Json::num(0.0)),
+            ("prefix_lookup_tokens", Json::num(8.0)),
+            ("prefix_hit_ratio", Json::num(0.0)),
+        ]);
+
+        let mut merged = Metrics::new();
+        merged.merge_from(&a);
+        merged.merge_from(&b);
+        merged.replicas = 2;
+        let s = merged.snapshot();
+        assert_eq!(s.get("gen_tokens").unwrap().as_u64(), Some(15));
+        assert_eq!(s.get("worker_restarts").unwrap().as_u64(), Some(1));
+        assert_eq!(s.get("kv_peak_bytes").unwrap().as_u64(), Some(150));
+        assert_eq!(s.get("replicas").unwrap().as_u64(), Some(2));
+        // Config keys keep the first replica's value; counters sum.
+        assert_eq!(s.get("kv_block_tokens").unwrap().as_u64(), Some(16));
+        assert_eq!(s.get("kv_blocks_in_use").unwrap().as_u64(), Some(5));
+        // Ratio recomputed over the merged totals: 4 / 16, not 0.5 + 0.
+        assert_eq!(s.get("prefix_hit_ratio").unwrap().as_f64(), Some(0.25));
+        // Rings pooled both samples.
+        assert_eq!(merged.ttft_ms.count(), 2);
+        assert_eq!(s.get("ttft_ms_max").unwrap().as_f64(), Some(4.0));
     }
 
     #[test]

@@ -40,6 +40,24 @@
 //! Clients talk to the worker over channels; each request gets an
 //! unbounded event stream so a slow client never blocks the batch.
 //!
+//! **Data-parallel replicas.** The coordinator can drive several
+//! engine replicas ([`Coordinator::new_replicated`], `serve
+//! --replicas N`). One dispatcher thread owns intake, the shared
+//! admission queue, and placement: a new request lands on the replica
+//! whose prefix cache already holds the longest prefix of its prompt
+//! (a read-only probe — no LRU bump, no stats), falling back to the
+//! least-loaded replica. Each replica owns an equal share of the KV
+//! byte budget and runs its own scheduling round — concurrently under
+//! `std::thread::scope` when N > 1, inline on the dispatcher thread
+//! when N = 1 (exactly the single-engine behavior, token-identically).
+//! The round stays the panic isolation domain *per replica*: one
+//! replica's engine panic restarts only that replica, and its
+//! surviving sequences requeue through the shared queue, free to land
+//! on a healthy replica. Per-round prefill ingestion is bounded by
+//! [`CoordinatorConfig::prefill_round_budget`] so a flood of long
+//! fresh prompts cannot stretch a replica's round wall-clock and
+//! starve the decode latency of sequences already running.
+//!
 //! **Fault tolerance.** The scheduling round runs under `catch_unwind`:
 //! an engine panic fails only the sequences implicated in the poisoned
 //! state (after [`MAX_SEQ_FAULTS`] consecutive panics they get a typed
@@ -87,6 +105,7 @@ use anyhow::Result;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 pub use error::ServeError;
@@ -134,6 +153,16 @@ pub struct CoordinatorConfig {
     /// (preemption, panic recovery) re-enter at the queue front and
     /// are exempt — shedding admitted work would lose streamed tokens.
     pub max_queue_depth: usize,
+    /// Prompt tokens one replica's batch may ingest per scheduling
+    /// round, summed across its sequences (0 = unbounded). Chunked
+    /// prefill already interleaves with decode round-by-round; this
+    /// additionally bounds the *sum* of a round's chunks, so a flood
+    /// of long fresh prompts cannot stretch the round's wall clock and
+    /// starve decode latency on sequences already running. Shares are
+    /// handed out greedily in batch order and replanned every round,
+    /// so ingestion stays monotone even when the budget is smaller
+    /// than one `prefill_chunk` per waiting sequence.
+    pub prefill_round_budget: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -148,6 +177,7 @@ impl Default for CoordinatorConfig {
             spec_drafter: spec::DrafterKind::Ngram,
             request_timeout_ms: None,
             max_queue_depth: 256,
+            prefill_round_budget: 0,
         }
     }
 }
@@ -253,6 +283,11 @@ struct ActiveSeq {
     state: SeqState,
     /// Prefill tokens already resident (mapped from cache or ingested).
     prefilled: usize,
+    /// Prompt tokens this sequence ingests *this round* — its share of
+    /// [`CoordinatorConfig::prefill_round_budget`], replanned at the
+    /// top of every capacity pass (0 = the round's budget went to
+    /// sequences ahead of it, or nothing is left to ingest).
+    round_prefill: usize,
     /// Monotone admission stamp; preemption evicts the lowest priority,
     /// breaking ties toward the most recently admitted.
     admitted_order: u64,
@@ -288,7 +323,7 @@ impl ActiveSeq {
     /// KV position per planned draft before rollback, so those are
     /// demanded up front (rollback returns the rejected share within
     /// the same round).
-    fn round_demand(&self, prefill_chunk: usize) -> usize {
+    fn round_demand(&self) -> usize {
         let s = &self.state;
         let decode_writes = if s.generated.len() + 1 >= self.req.max_new_tokens {
             0
@@ -296,7 +331,13 @@ impl ActiveSeq {
             1 + s.round_drafts.len()
         };
         if self.prefilled < s.prefill.len() {
-            let chunk = (s.prefill.len() - self.prefilled).min(prefill_chunk);
+            // The planned budget share, not a flat chunk: 0 means the
+            // round's prefill budget went to sequences ahead of this
+            // one, so it neither ingests nor decodes this round.
+            let chunk = self.round_prefill;
+            if chunk == 0 {
+                return 0;
+            }
             // A chunk that completes the prompt also feeds the first
             // sampled token to decode within this same round.
             if self.prefilled + chunk == s.prefill.len() {
@@ -314,10 +355,21 @@ impl ActiveSeq {
 
 impl Coordinator {
     pub fn new(engine: Box<dyn Engine>, cfg: CoordinatorConfig) -> Self {
+        Self::new_replicated(vec![engine], cfg)
+    }
+
+    /// Drive `engines.len()` data-parallel replicas behind one shared
+    /// admission queue. Every engine must serve the same model (same
+    /// weights for token-identical results across placements); each
+    /// gets an equal share of `cfg.kv_budget_bytes` and its own
+    /// scheduling loop. One engine reproduces [`Coordinator::new`]
+    /// exactly — same thread layout, same token streams, same stats.
+    pub fn new_replicated(engines: Vec<Box<dyn Engine>>, cfg: CoordinatorConfig) -> Self {
+        assert!(!engines.is_empty(), "coordinator needs at least one engine replica");
         let (tx, rx) = channel::<Cmd>();
         let handle = std::thread::Builder::new()
             .name("itq3s-coordinator".into())
-            .spawn(move || worker(engine, cfg, rx))
+            .spawn(move || worker(engines, cfg, rx))
             .expect("spawn coordinator");
         Coordinator { tx, handle: Some(handle) }
     }
@@ -461,11 +513,11 @@ fn deliver_and_resolve(
 fn finish(
     seq: &mut ActiveSeq,
     metrics: &mut metrics::Metrics,
-    traces: &mut TraceStore,
+    traces: &Mutex<TraceStore>,
     reason: FinishReason,
 ) {
     if let Some(timeline) = seq.send_done(reason) {
-        traces.push(timeline);
+        lock(traces).push(timeline);
     }
     seq.state.done = true;
     metrics.requests_finished += 1;
@@ -493,46 +545,146 @@ fn effective_deadline(
 
 /// Backoff hint for shed requests: queue depth × observed decode p50,
 /// clamped to [1 ms, 60 s]. Crude but honest — it scales with how much
-/// work is ahead of the client at current service speed.
-fn retry_after_hint(metrics: &metrics::Metrics, depth: usize) -> u64 {
-    let per_slot_ms = metrics.decode_step_ms.p50().max(1.0);
+/// work is ahead of the client at current service speed. With several
+/// replicas the *slowest* replica's p50 is used, so the hint stays
+/// honest even when the retry lands on the busiest engine.
+fn retry_after_hint(replicas: &[Replica], depth: usize) -> u64 {
+    let per_slot_ms = replicas
+        .iter()
+        .map(|r| r.metrics.decode_step_ms.p50())
+        .fold(0.0f64, f64::max)
+        .max(1.0);
     (per_slot_ms * depth.max(1) as f64).clamp(1.0, 60_000.0) as u64
 }
 
-/// Worker-local observability state: the completed-timeline ring the
-/// `trace` op serves, and a monotone round counter stamped into the
-/// flight recorder's per-round summaries.
+/// Dispatcher-owned observability state: the completed-timeline ring
+/// the `trace` op serves (shared with replica rounds, which retire
+/// timelines into it), and a monotone round counter stamped into the
+/// flight recorder's per-round summaries — one tick per dispatcher
+/// iteration, shared by every replica's round of that iteration.
 struct Obs {
-    traces: TraceStore,
+    traces: Mutex<TraceStore>,
     round: u64,
 }
 
-fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
-    let model_cfg = engine.config().clone();
-    let mut pool = kvpool::KvPool::new(
-        &model_cfg,
-        cfg.kv_budget_bytes,
-        cfg.kv_block_tokens,
-        cfg.kv_quant,
-    );
-    let mut metrics = metrics::Metrics::new();
-    let mut waiting: VecDeque<WaitingReq> = VecDeque::new();
-    let mut active: Vec<ActiveSeq> = Vec::new();
+/// One data-parallel engine replica behind the shared admission queue:
+/// its own engine, paged KV pool (an equal share of the byte budget —
+/// KV is engine-local state, so a cached prefix lives on whichever
+/// replica ingested it), running batch, and metrics shard. Between
+/// rounds the dispatcher owns the whole struct; during rounds each
+/// replica is mutated only by its own round thread, so no lock guards
+/// the fields — only the waiting queue and trace store are shared.
+struct Replica {
+    id: usize,
+    engine: Box<dyn Engine>,
+    pool: kvpool::KvPool,
+    active: Vec<ActiveSeq>,
+    metrics: metrics::Metrics,
+}
+
+/// Poison-tolerant lock: a replica round that panics while holding the
+/// queue or trace lock must not wedge the dispatcher — both structures
+/// are valid after any interrupted operation, and panic recovery
+/// (`restart_after_panic`) requeues whatever the round half-scheduled.
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Refresh each replica's pool-derived gauges and merge every metrics
+/// shard (dispatcher intake + all replicas) into one [`Metrics`].
+/// Each counter has exactly one writer, so the merge is exact — and
+/// with a single replica it reproduces the pre-replica single-struct
+/// snapshot byte for byte.
+///
+/// [`Metrics`]: metrics::Metrics
+fn merged_metrics(replicas: &mut [Replica], intake: &metrics::Metrics) -> metrics::Metrics {
+    let mut merged = intake.clone();
+    for rep in replicas.iter_mut() {
+        // Max-accumulate: the pool is rebuilt (peak reset) on panic
+        // recovery, but the serving-lifetime peak must survive.
+        rep.metrics.kv_peak_bytes = rep.metrics.kv_peak_bytes.max(rep.pool.peak_bytes());
+        rep.metrics.kv_pool = rep.pool.stats_json();
+        merged.merge_from(&rep.metrics);
+    }
+    merged.replicas = replicas.len();
+    merged
+}
+
+/// The `stats` snapshot: the merged shards plus a `per_replica`
+/// breakdown (placement / load-balance visibility — the aggregate keys
+/// stay exactly what single-replica serving reports).
+fn stats_snapshot(replicas: &mut [Replica], intake: &metrics::Metrics) -> Json {
+    let mut snap = merged_metrics(replicas, intake).snapshot();
+    if let Json::Obj(m) = &mut snap {
+        let per: Vec<Json> = replicas
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("replica", Json::num(r.id as f64)),
+                    ("active", Json::num(r.active.len() as f64)),
+                    ("requests_finished", Json::num(r.metrics.requests_finished as f64)),
+                    ("gen_tokens", Json::num(r.metrics.gen_tokens as f64)),
+                    ("prompt_tokens", Json::num(r.metrics.prompt_tokens as f64)),
+                    ("preemptions", Json::num(r.metrics.preemptions as f64)),
+                    ("worker_restarts", Json::num(r.metrics.worker_restarts as f64)),
+                    (
+                        "kv_blocks_in_use",
+                        r.metrics
+                            .kv_pool
+                            .get("kv_blocks_in_use")
+                            .cloned()
+                            .unwrap_or(Json::num(0.0)),
+                    ),
+                ])
+            })
+            .collect();
+        m.insert("per_replica".into(), Json::Arr(per));
+    }
+    snap
+}
+
+fn worker(engines: Vec<Box<dyn Engine>>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
+    let model_cfg = engines[0].config().clone();
+    let n = engines.len();
+    let per_replica_budget = (cfg.kv_budget_bytes / n).max(1);
+    let mut replicas: Vec<Replica> = engines
+        .into_iter()
+        .enumerate()
+        .map(|(id, engine)| Replica {
+            id,
+            pool: kvpool::KvPool::new(
+                &model_cfg,
+                per_replica_budget,
+                cfg.kv_block_tokens,
+                cfg.kv_quant,
+            ),
+            active: Vec::new(),
+            metrics: metrics::Metrics::new(),
+            engine,
+        })
+        .collect();
+    // Dispatcher-owned metrics shard: intake, shedding, queue-side
+    // accounting, and the request-id source. `Cmd::Stats` merges it
+    // with every replica's shard; each counter has one writer.
+    let mut intake = metrics::Metrics::new();
+    let waiting: Mutex<VecDeque<WaitingReq>> = Mutex::new(VecDeque::new());
     // Drain-then-stop: once set, new work is shed with `ShuttingDown`
     // and the worker exits only when everything in flight has resolved
     // (bounded by `max_new_tokens`; dead clients fall to the heartbeat
     // probe), so shutdown never truncates an accepted stream.
     let mut draining = false;
     let mut admit_counter: u64 = 0;
-    let mut obs = Obs { traces: TraceStore::new(64), round: 0 };
+    let mut obs = Obs { traces: Mutex::new(TraceStore::new(64)), round: 0 };
 
     loop {
         // ---- 0. intake ----------------------------------------------
         loop {
-            if draining && active.is_empty() && waiting.is_empty() {
+            let idle = replicas.iter().all(|r| r.active.is_empty())
+                && lock(&waiting).is_empty();
+            if draining && idle {
                 return;
             }
-            let cmd = if active.is_empty() && waiting.is_empty() {
+            let cmd = if idle {
                 // Idle: block (with timeout so shutdown-by-drop works).
                 match rx.recv_timeout(Duration::from_millis(100)) {
                     Ok(c) => c,
@@ -554,20 +706,21 @@ fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
             };
             match cmd {
                 Cmd::Generate(req, tx) => {
-                    metrics.requests_submitted += 1;
+                    intake.requests_submitted += 1;
                     // Request ids are 1-based submission order — the
                     // handle the flight recorder and log lines use.
-                    let id = metrics.requests_submitted;
+                    let id = intake.requests_submitted;
+                    let depth = lock(&waiting).len();
                     if draining {
                         flight::record("shed", format!("req={id} reason=shutting_down"));
                         let _ = tx.send(Event::Error(ServeError::ShuttingDown));
-                    } else if waiting.len() >= cfg.max_queue_depth {
+                    } else if depth >= cfg.max_queue_depth {
                         // Bounded admission: the round's own shed order
                         // (drop drafts, then preempt) happens in the
                         // capacity loop; rejecting *new* work is the
                         // last resort and the only shed clients see.
-                        metrics.rejected_overload += 1;
-                        let hint = retry_after_hint(&metrics, waiting.len());
+                        intake.rejected_overload += 1;
+                        let hint = retry_after_hint(&replicas, depth);
                         flight::record(
                             "shed",
                             format!("req={id} reason=overloaded retry_after_ms={hint}"),
@@ -582,7 +735,7 @@ fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
                         }));
                     } else {
                         let trace = req.trace.then(|| Box::new(RequestTrace::new(id)));
-                        waiting.push_back(WaitingReq {
+                        lock(&waiting).push_back(WaitingReq {
                             req,
                             events: tx,
                             enqueued: Instant::now(),
@@ -593,169 +746,177 @@ fn worker(engine: Box<dyn Engine>, cfg: CoordinatorConfig, rx: Receiver<Cmd>) {
                     }
                 }
                 Cmd::Score(text, tx) => {
-                    let _ = tx.send(perplexity(engine.as_ref(), &text));
+                    let _ = tx.send(perplexity(replicas[0].engine.as_ref(), &text));
                 }
                 Cmd::Stats(tx) => {
-                    // Max-accumulate: the pool is rebuilt (peak reset)
-                    // on panic recovery, but the serving-lifetime peak
-                    // must survive the restart.
-                    metrics.kv_peak_bytes = metrics.kv_peak_bytes.max(pool.peak_bytes());
-                    metrics.kv_pool = pool.stats_json();
-                    let _ = tx.send(metrics.snapshot());
+                    let _ = tx.send(stats_snapshot(&mut replicas, &intake));
                 }
                 Cmd::ClearPrefixCache(tx) => {
-                    pool.clear_prefix_cache();
+                    for rep in replicas.iter_mut() {
+                        rep.pool.clear_prefix_cache();
+                    }
                     let _ = tx.send(());
                 }
                 Cmd::ConnError => {
-                    metrics.conn_errors += 1;
+                    intake.conn_errors += 1;
                 }
                 Cmd::Trace(n, tx) => {
-                    let _ = tx.send(obs.traces.recent(n));
+                    let _ = tx.send(lock(&obs.traces).recent(n));
                 }
                 Cmd::Prometheus(tx) => {
-                    metrics.kv_peak_bytes = metrics.kv_peak_bytes.max(pool.peak_bytes());
-                    metrics.kv_pool = pool.stats_json();
-                    let _ = tx.send(metrics.prometheus());
+                    let _ = tx.send(merged_metrics(&mut replicas, &intake).prometheus());
                 }
                 Cmd::Shutdown => {
                     draining = true;
                 }
             }
         }
-        if active.is_empty() && waiting.is_empty() {
+        if replicas.iter().all(|r| r.active.is_empty()) && lock(&waiting).is_empty() {
             if draining {
                 return;
             }
             continue;
         }
-        metrics.queue_depth.push(waiting.len() as f64);
+        intake.queue_depth.push(lock(&waiting).len() as f64);
+        obs.round += 1;
 
-        // The scheduling round is the panic isolation domain: an engine
-        // panic (poisoned scratch, failpoint, kernel bug) unwinds to
-        // here, and recovery rebuilds the engine scratch + KV pool and
-        // requeues the survivors. The `AssertUnwindSafe` is justified
-        // by that recovery: everything the closure mutates is either
-        // rebuilt wholesale (pool, engine scratch) or restored from
-        // per-sequence snapshots designed to survive interruption at
-        // any point (the same ones preemption uses).
-        let round = catch_unwind(AssertUnwindSafe(|| {
-            run_round(
-                engine.as_ref(),
-                &cfg,
-                &model_cfg,
-                &mut pool,
-                &mut metrics,
-                &mut waiting,
-                &mut active,
-                &mut admit_counter,
-                &mut obs,
-            )
-        }));
-        if round.is_err() {
-            flight::record("panic", format!("round={} scheduling round panicked", obs.round));
-            restart_after_panic(
-                engine.as_ref(),
-                &cfg,
-                &model_cfg,
-                &mut pool,
-                &mut metrics,
-                &mut waiting,
-                &mut active,
-                &mut obs.traces,
-            );
-            // Dump the black box *after* the restart record so the
-            // post-mortem shows the rounds leading up to the crash and
-            // which requests the recovery implicated.
-            flight::dump_to_log();
+        // ---- 0.5 queued-deadline sweep ------------------------------
+        sweep_queued_deadlines(&cfg, &waiting, &mut intake, &obs.traces);
+
+        // ---- 1. admission & placement -------------------------------
+        admit_waiting(
+            &cfg,
+            &model_cfg,
+            &mut replicas,
+            &waiting,
+            &mut intake,
+            &obs.traces,
+            &mut admit_counter,
+        );
+
+        // ---- 2..5 replica rounds ------------------------------------
+        // With one replica the round runs inline on the dispatcher
+        // thread — no scope, no spawn, exactly the single-engine
+        // scheduling loop this refactor grew out of. With several,
+        // replica 0 still runs inline while the rest round on scoped
+        // threads, so N replicas cost N-1 spawns per iteration.
+        let round_no = obs.round;
+        let traces = &obs.traces;
+        let (first, rest) = replicas.split_at_mut(1);
+        if rest.is_empty() {
+            round_on(&mut first[0], &cfg, &model_cfg, &waiting, traces, round_no);
+        } else {
+            std::thread::scope(|s| {
+                for rep in rest.iter_mut() {
+                    if rep.active.is_empty() {
+                        continue;
+                    }
+                    let (cfg, model_cfg, waiting) = (&cfg, &model_cfg, &waiting);
+                    std::thread::Builder::new()
+                        .name(format!("itq3s-replica-{}", rep.id))
+                        .spawn_scoped(s, move || {
+                            round_on(rep, cfg, model_cfg, waiting, traces, round_no)
+                        })
+                        .expect("spawn replica round");
+                }
+                round_on(&mut first[0], &cfg, &model_cfg, &waiting, traces, round_no);
+            });
         }
     }
 }
 
-/// One scheduling round: deadline sweep, admission, liveness probe,
-/// draft planning, capacity/preemption, chunked prefill, decode, and
-/// retirement. Extracted from the worker loop so the whole round runs
-/// under one `catch_unwind` — see `restart_after_panic` for what
-/// happens when it unwinds.
+/// Expire waiting requests before spending admission work on them (the
+/// pre-replica round's phase 0.5, now dispatcher-side so one sweep
+/// covers the shared queue for every replica). A requeued sequence
+/// keeps its partial text; a request that never ran reports empty
+/// counters. Both get the same partial-result `Done{DeadlineExceeded}`
+/// terminal that mid-generation expiry produces.
+fn sweep_queued_deadlines(
+    cfg: &CoordinatorConfig,
+    waiting: &Mutex<VecDeque<WaitingReq>>,
+    intake: &mut metrics::Metrics,
+    traces: &Mutex<TraceStore>,
+) {
+    let now = Instant::now();
+    lock(waiting).retain_mut(|w| {
+        let deadline = match &w.state {
+            Some(s) => s.deadline,
+            None => effective_deadline(&w.req, cfg, w.enqueued),
+        };
+        if !deadline.is_some_and(|d| now >= d) {
+            return true;
+        }
+        intake.deadline_expired += 1;
+        intake.requests_finished += 1;
+        flight::record("deadline", format!("req={} expired while queued", w.id));
+        // The request is terminal: consume its trace (held by `w`
+        // before the first admission, by `state` after).
+        let mut tr = w.trace.take();
+        if tr.is_none() {
+            tr = w.state.as_mut().and_then(|s| s.trace.take());
+        }
+        let timing = tr.as_mut().map(|t| {
+            t.record(TraceEventKind::Terminal);
+            t.timing_json()
+        });
+        if let Some(t) = &tr {
+            lock(traces).push(t.timeline_json(FinishReason::DeadlineExceeded.as_str()));
+        }
+        let (text, prompt_tokens, gen_tokens, ttft_ms) = match &w.state {
+            Some(s) => (
+                tokenizer::decode(&s.generated),
+                s.prompt_tokens,
+                s.generated.len(),
+                s.ttft_ms.unwrap_or(0.0),
+            ),
+            None => (String::new(), 0, 0, 0.0),
+        };
+        let _ = w.events.send(Event::Done {
+            reason: FinishReason::DeadlineExceeded,
+            text,
+            prompt_tokens,
+            gen_tokens,
+            ttft_ms,
+            total_ms: w.enqueued.elapsed().as_secs_f64() * 1000.0,
+            timing,
+        });
+        false
+    });
+}
+
+/// Pull waiting requests into replica batches until every replica is
+/// full or the queue is empty (the pre-replica round's phase 1, now
+/// dispatcher-side with a placement step). Placement probes every
+/// replica's prefix cache read-only and tries candidates best-first:
+/// longest cached prefix, then lightest load, then lowest id.
+/// Admission can still fail on the preferred replica (its blocks are
+/// exhausted until its next round reclaims), so the candidate list is
+/// walked before giving up; when no replica can hold the request it
+/// returns to the queue front and admission stops for this iteration.
 #[allow(clippy::too_many_arguments)]
-fn run_round(
-    engine: &dyn Engine,
+fn admit_waiting(
     cfg: &CoordinatorConfig,
     model_cfg: &ModelConfig,
-    pool: &mut kvpool::KvPool,
-    metrics: &mut metrics::Metrics,
-    waiting: &mut VecDeque<WaitingReq>,
-    active: &mut Vec<ActiveSeq>,
+    replicas: &mut [Replica],
+    waiting: &Mutex<VecDeque<WaitingReq>>,
+    intake: &mut metrics::Metrics,
+    traces: &Mutex<TraceStore>,
     admit_counter: &mut u64,
-    obs: &mut Obs,
 ) {
-    obs.round += 1;
-    {
-        // ---- 0.5 queued-deadline sweep ------------------------------
-        // Expire waiting requests before spending admission work on
-        // them. A requeued sequence keeps its partial text; a request
-        // that never ran reports empty counters. Both get the same
-        // partial-result `Done{DeadlineExceeded}` terminal that
-        // mid-generation expiry produces.
-        let now = Instant::now();
-        waiting.retain_mut(|w| {
-            let deadline = match &w.state {
-                Some(s) => s.deadline,
-                None => effective_deadline(&w.req, cfg, w.enqueued),
-            };
-            if !deadline.is_some_and(|d| now >= d) {
-                return true;
-            }
-            metrics.deadline_expired += 1;
-            metrics.requests_finished += 1;
-            flight::record("deadline", format!("req={} expired while queued", w.id));
-            // The request is terminal: consume its trace (held by `w`
-            // before the first admission, by `state` after).
-            let mut tr = w.trace.take();
-            if tr.is_none() {
-                tr = w.state.as_mut().and_then(|s| s.trace.take());
-            }
-            let timing = tr.as_mut().map(|t| {
-                t.record(TraceEventKind::Terminal);
-                t.timing_json()
-            });
-            if let Some(t) = &tr {
-                obs.traces.push(t.timeline_json(FinishReason::DeadlineExceeded.as_str()));
-            }
-            let (text, prompt_tokens, gen_tokens, ttft_ms) = match &w.state {
-                Some(s) => (
-                    tokenizer::decode(&s.generated),
-                    s.prompt_tokens,
-                    s.generated.len(),
-                    s.ttft_ms.unwrap_or(0.0),
-                ),
-                None => (String::new(), 0, 0, 0.0),
-            };
-            let _ = w.events.send(Event::Done {
-                reason: FinishReason::DeadlineExceeded,
-                text,
-                prompt_tokens,
-                gen_tokens,
-                ttft_ms,
-                total_ms: w.enqueued.elapsed().as_secs_f64() * 1000.0,
-                timing,
-            });
-            false
-        });
-    }
-
-    // ---- 1. admission -------------------------------------------
-    while active.len() < cfg.max_batch {
-        let Some(mut w) = waiting.pop_front() else { break };
+    loop {
+        if !replicas.iter().any(|r| r.active.len() < cfg.max_batch) {
+            break;
+        }
+        let Some(mut w) = lock(waiting).pop_front() else { break };
         // Probe the client before paying for tokenize/map/prefill.
         if w.events.send(Event::Heartbeat).is_err() {
-            metrics.requests_cancelled += 1;
-            metrics.requests_finished += 1;
+            intake.requests_cancelled += 1;
+            intake.requests_finished += 1;
             continue;
         }
         // First attempt tokenizes; requeues and preemptions carry
         // their state back so nothing is recomputed or restarted.
-        let state = match w.state.take() {
+        let mut state = match w.state.take() {
             Some(s) => s,
             None => {
                 let mut prompt = tokenizer::encode(&w.req.prompt);
@@ -792,22 +953,23 @@ fn run_round(
                 }
             }
         };
-        // A prompt whose span exceeds the whole pool can never be
+        // A prompt whose span exceeds a whole pool can never be
         // admitted; queueing it would head-of-line-block and spin
-        // forever. Reject it outright.
-        if !pool.fits_ever(state.prefill.len()) {
-            metrics.requests_rejected += 1;
+        // forever. Reject it outright. (All pools share geometry, so
+        // with the even budget split they agree; `any` stays correct
+        // if the split ever becomes uneven.)
+        if !replicas.iter().any(|r| r.pool.fits_ever(state.prefill.len())) {
+            intake.requests_rejected += 1;
             flight::record(
                 "reject",
                 format!("req={} span={} can never fit the pool", state.id, state.prefill.len()),
             );
-            let mut state = state;
             let timing = state.trace.as_mut().map(|t| {
                 t.record(TraceEventKind::Terminal);
                 t.timing_json()
             });
             if let Some(t) = &state.trace {
-                obs.traces.push(t.timeline_json(FinishReason::ContextFull.as_str()));
+                lock(traces).push(t.timeline_json(FinishReason::ContextFull.as_str()));
             }
             let _ = w.events.send(Event::Done {
                 reason: FinishReason::ContextFull,
@@ -820,49 +982,119 @@ fn run_round(
             });
             continue;
         }
-        match pool.admit(&state.prefill) {
-            Some((seq, mapped)) => {
-                metrics.prefix_reused_tokens += mapped as u64;
-                *admit_counter += 1;
-                let mut state = state;
-                if let Some(t) = state.trace.as_mut() {
-                    t.record(TraceEventKind::Admitted { prefix_reused: mapped });
-                }
-                flight::record(
-                    "admit",
-                    format!("req={} mapped={} batch={}", state.id, mapped, active.len() + 1),
-                );
-                // Cache-mapped prompt tokens are accounted as prefix
-                // reuse, not as ingested prompt input.
-                state.counted_prompt =
-                    state.counted_prompt.max(mapped.min(state.prompt_tokens));
-                active.push(ActiveSeq {
-                    req: w.req,
-                    events: w.events,
-                    seq,
-                    state,
-                    prefilled: mapped,
-                    admitted_order: *admit_counter,
-                });
-            }
-            None => {
-                // No blocks free right now: requeue and stop
-                // admitting this round.
-                waiting.push_front(WaitingReq {
-                    req: w.req,
-                    events: w.events,
-                    enqueued: w.enqueued,
-                    id: w.id,
-                    trace: None, // `state` owns the trace now
-                    state: Some(state),
-                });
+        // ---- placement ---------------------------------------------
+        let mut cands: Vec<(usize, usize, usize)> = replicas
+            .iter()
+            .filter(|r| r.active.len() < cfg.max_batch)
+            .map(|r| (r.pool.cached_prefix_tokens(&state.prefill), r.active.len(), r.id))
+            .collect();
+        cands.sort_by_key(|&(hit, load, id)| (std::cmp::Reverse(hit), load, id));
+        let mut placed: Option<(usize, SeqId, usize)> = None;
+        for &(_, _, rid) in &cands {
+            if let Some((seq, mapped)) = replicas[rid].pool.admit(&state.prefill) {
+                placed = Some((rid, seq, mapped));
                 break;
             }
         }
+        let Some((rid, seq, mapped)) = placed else {
+            // No replica has blocks free right now: requeue and stop
+            // admitting this iteration.
+            lock(waiting).push_front(WaitingReq {
+                req: w.req,
+                events: w.events,
+                enqueued: w.enqueued,
+                id: w.id,
+                trace: None, // `state` owns the trace now
+                state: Some(state),
+            });
+            break;
+        };
+        intake.prefix_reused_tokens += mapped as u64;
+        *admit_counter += 1;
+        if let Some(t) = state.trace.as_mut() {
+            t.record(TraceEventKind::Admitted { prefix_reused: mapped, replica: rid });
+        }
+        let rep = &mut replicas[rid];
+        flight::record(
+            "admit",
+            format!(
+                "req={} r={} mapped={} batch={}",
+                state.id,
+                rid,
+                mapped,
+                rep.active.len() + 1
+            ),
+        );
+        // Cache-mapped prompt tokens are accounted as prefix
+        // reuse, not as ingested prompt input.
+        state.counted_prompt = state.counted_prompt.max(mapped.min(state.prompt_tokens));
+        rep.active.push(ActiveSeq {
+            req: w.req,
+            events: w.events,
+            seq,
+            state,
+            prefilled: mapped,
+            round_prefill: 0,
+            admitted_order: *admit_counter,
+        });
     }
-    if active.is_empty() {
+}
+
+/// Run one replica's scheduling round under `catch_unwind` — the
+/// per-replica panic isolation domain. An engine panic (poisoned
+/// scratch, failpoint, kernel bug) unwinds to here, and recovery
+/// rebuilds *this replica's* engine scratch and KV pool and requeues
+/// its survivors through the shared queue; other replicas round on
+/// undisturbed. The `AssertUnwindSafe` is justified by that recovery:
+/// everything the closure mutates is either rebuilt wholesale (pool,
+/// engine scratch) or restored from per-sequence snapshots designed to
+/// survive interruption at any point (the same ones preemption uses).
+fn round_on(
+    rep: &mut Replica,
+    cfg: &CoordinatorConfig,
+    model_cfg: &ModelConfig,
+    waiting: &Mutex<VecDeque<WaitingReq>>,
+    traces: &Mutex<TraceStore>,
+    round_no: u64,
+) {
+    if rep.active.is_empty() {
         return;
     }
+    let round = catch_unwind(AssertUnwindSafe(|| {
+        run_round(rep, cfg, model_cfg, waiting, traces, round_no)
+    }));
+    if round.is_err() {
+        flight::record(
+            "panic",
+            format!("round={} r={} scheduling round panicked", round_no, rep.id),
+        );
+        restart_after_panic(rep, cfg, model_cfg, waiting, traces);
+        // Dump the black box *after* the restart record so the
+        // post-mortem shows the rounds leading up to the crash and
+        // which requests the recovery implicated.
+        flight::dump_to_log();
+    }
+}
+
+/// One replica's scheduling round: liveness probe, draft planning,
+/// prefill-budget planning, capacity/preemption, chunked prefill,
+/// decode, and retirement. (Queued-deadline sweeping and admission
+/// live on the dispatcher now — see `sweep_queued_deadlines` and
+/// `admit_waiting`.) Runs under `round_on`'s `catch_unwind`; see
+/// `restart_after_panic` for what happens when it unwinds.
+fn run_round(
+    rep: &mut Replica,
+    cfg: &CoordinatorConfig,
+    model_cfg: &ModelConfig,
+    waiting: &Mutex<VecDeque<WaitingReq>>,
+    traces: &Mutex<TraceStore>,
+    round_no: u64,
+) {
+    let rid = rep.id;
+    let engine: &dyn Engine = rep.engine.as_ref();
+    let pool = &mut rep.pool;
+    let metrics = &mut rep.metrics;
+    let active = &mut rep.active;
 
     // ---- 1.5 liveness & deadline sweep --------------------------
     // Probe every active client before spending the round — a
@@ -880,7 +1112,7 @@ fn run_round(
             seq.state.done = true; // receiver gone; no terminal to send
             if let Some(t) = seq.state.trace.as_mut() {
                 t.record(TraceEventKind::Terminal);
-                obs.traces.push(t.timeline_json(FinishReason::Cancelled.as_str()));
+                lock(traces).push(t.timeline_json(FinishReason::Cancelled.as_str()));
             }
             pool.release(seq.seq);
             metrics.requests_cancelled += 1;
@@ -889,8 +1121,11 @@ fn run_round(
         }
         if active[i].state.deadline.is_some_and(|d| now >= d) {
             let mut seq = active.swap_remove(i);
-            flight::record("deadline", format!("req={} expired while active", seq.state.id));
-            finish(&mut seq, metrics, &mut obs.traces, FinishReason::DeadlineExceeded);
+            flight::record(
+                "deadline",
+                format!("req={} r={} expired while active", seq.state.id, rid),
+            );
+            finish(&mut seq, metrics, traces, FinishReason::DeadlineExceeded);
             pool.release(seq.seq);
             continue;
         }
@@ -982,10 +1217,28 @@ fn run_round(
     // and-requeue the lowest-priority sequence (ties: most recently
     // admitted first) and replan from scratch.
     'capacity: loop {
+        // Plan the round's prefill shares before sizing block demand:
+        // each mid-prefill sequence gets up to `prefill_chunk` tokens
+        // from the round's shared `prefill_round_budget` (0 config =
+        // unbounded, which hands every sequence its full chunk — the
+        // pre-budget behavior). Greedy in batch order; replanned after
+        // every preemption so a victim's share flows to the survivors.
+        let mut budget = if cfg.prefill_round_budget == 0 {
+            usize::MAX
+        } else {
+            cfg.prefill_round_budget
+        };
+        for seq in active.iter_mut() {
+            let want =
+                seq.state.prefill.len().saturating_sub(seq.prefilled).min(cfg.prefill_chunk);
+            let planned = want.min(budget);
+            budget -= planned;
+            seq.round_prefill = planned;
+        }
         let mut planned = 0usize;
         let mut satisfied = true;
         for i in 0..active.len() {
-            let demand = active[i].round_demand(cfg.prefill_chunk);
+            let demand = active[i].round_demand();
             if demand == 0 {
                 continue;
             }
@@ -1005,7 +1258,7 @@ fn run_round(
                 // Nothing to preempt and the pool cannot hold this
                 // sequence's next step: finish it, not livelock.
                 let mut seq = active.swap_remove(0);
-                finish(&mut seq, metrics, &mut obs.traces, FinishReason::ContextFull);
+                finish(&mut seq, metrics, traces, FinishReason::ContextFull);
                 pool.release(seq.seq);
                 break;
             }
@@ -1034,8 +1287,9 @@ fn run_round(
             flight::record(
                 "preempt",
                 format!(
-                    "req={} prio={} generated={}",
+                    "req={} r={} prio={} generated={}",
                     v.state.id,
+                    rid,
                     v.req.priority,
                     v.state.generated.len()
                 ),
@@ -1047,7 +1301,7 @@ fn run_round(
             }
             state.prefill.truncate(state.prompt_tokens);
             state.prefill.extend_from_slice(&state.generated);
-            waiting.push_front(WaitingReq {
+            lock(waiting).push_front(WaitingReq {
                 req: v.req,
                 events: v.events,
                 enqueued: state.submitted,
@@ -1073,16 +1327,20 @@ fn run_round(
     // already in the black box when the post-mortem dump fires.
     {
         let ids: Vec<String> = active.iter().map(|a| a.state.id.to_string()).collect();
+        let depth = lock(waiting).len();
         flight::record(
             "round",
-            format!("n={} active=[{}] waiting={}", obs.round, ids.join(","), waiting.len()),
+            format!("n={} r={} active=[{}] waiting={}", round_no, rid, ids.join(","), depth),
         );
     }
 
     // ---- 3. chunked prefill -------------------------------------
+    // Each sequence ingests exactly its planned share of the round's
+    // prefill-token budget (its full chunk when the budget is
+    // unbounded); a zero share skips the round entirely.
     for seq in active.iter_mut() {
-        if seq.prefilled < seq.state.prefill.len() {
-            let end = (seq.prefilled + cfg.prefill_chunk).min(seq.state.prefill.len());
+        if seq.prefilled < seq.state.prefill.len() && seq.round_prefill > 0 {
+            let end = (seq.prefilled + seq.round_prefill).min(seq.state.prefill.len());
             let chunk = &seq.state.prefill[seq.prefilled..end];
             // Chaos site: an engine failure mid-prefill (the round
             // is the isolation domain — see `restart_after_panic`).
@@ -1139,6 +1397,17 @@ fn run_round(
     let mut step_idx: Vec<usize> = Vec::new();
     let mut step_toks: Vec<u32> = Vec::new();
     for (i, seq) in active.iter_mut().enumerate() {
+        // A sequence resumed after preemption/restart carries its
+        // already-sampled pending token *through* re-admission, while
+        // its consumed history re-prefills over several rounds. That
+        // token must not be delivered (or fed to decode) until the
+        // history is resident again — feeding it against a partial KV
+        // prefix would diverge from the pre-preemption stream. The
+        // same guard covers sequences whose prefill share was deferred
+        // by the round's prefill-token budget.
+        if seq.prefilled < seq.state.prefill.len() {
+            continue;
+        }
         let Some(tok) = seq.state.pending else { continue };
         // Consume the pending token at delivery: a panic later this
         // round then cannot re-deliver it after restart (the token
@@ -1150,7 +1419,7 @@ fn run_round(
         if let Some(reason) =
             deliver_and_resolve(seq, metrics, tok, ctx, model_cfg.max_seq)
         {
-            finish(seq, metrics, &mut obs.traces, reason);
+            finish(seq, metrics, traces, reason);
             finished.push(i);
             continue;
         }
@@ -1208,15 +1477,21 @@ fn run_round(
         metrics.spec_drafted += drafts.len() as u64;
         metrics.spec_accepted += outcome.accepted as u64;
         metrics.spec_resampled += outcome.resampled as u64;
-        let rate = outcome.accepted as f64 / drafts.len() as f64;
-        metrics.spec_accept_rate.push(rate);
-        // Per-mode acceptance: sampled drafts face a stochastic
-        // accept rule, greedy ones an exact match — aggregating
-        // them hides drafter regressions in either mode.
-        if seq.req.temperature > 0.0 {
-            metrics.spec_accept_rate_sampled.push(rate);
-        } else {
-            metrics.spec_accept_rate_greedy.push(rate);
+        // `spec_idx` only holds sequences with planned drafts, so the
+        // denominator is nonzero today — but a 0/0 here would push NaN
+        // into the acceptance rings and poison every percentile
+        // downstream, so the ratio is gated, not trusted.
+        if !drafts.is_empty() {
+            let rate = outcome.accepted as f64 / drafts.len() as f64;
+            metrics.spec_accept_rate.push(rate);
+            // Per-mode acceptance: sampled drafts face a stochastic
+            // accept rule, greedy ones an exact match — aggregating
+            // them hides drafter regressions in either mode.
+            if seq.req.temperature > 0.0 {
+                metrics.spec_accept_rate_sampled.push(rate);
+            } else {
+                metrics.spec_accept_rate_greedy.push(rate);
+            }
         }
         metrics.spec_run_len.push(outcome.accepted as f64);
         if let Some(d) = seq.state.drafter.as_mut() {
@@ -1241,7 +1516,7 @@ fn run_round(
             }
         }
         if let Some(r) = reason {
-            finish(seq, metrics, &mut obs.traces, r);
+            finish(seq, metrics, traces, r);
             finished.push(i);
         } else {
             seq.state.pending = Some(outcome.next);
@@ -1260,6 +1535,8 @@ fn run_round(
         let span = Span::begin();
         let logits = engine.decode_batch(&mut pool.batch_view(&ids), &step_toks);
         let wall_ms = span.ms();
+        // `step_idx` is non-empty here (guarded above), so the
+        // per-token amortization cannot divide by zero.
         let per_tok_ms = wall_ms / step_idx.len() as f64;
         metrics.decode_batch_size.push(step_idx.len() as f64);
         for (j, &i) in step_idx.iter().enumerate() {
@@ -1304,7 +1581,12 @@ fn run_round(
 
     // Drain the phase profiler into per-round distributions. Compiles
     // to nothing without `--features profiling` (`ENABLED` is a
-    // compile-time constant and `take()` is an inlined no-op).
+    // compile-time constant and `take()` is an inlined no-op). The
+    // accumulators are process-global: with several replicas, rounds
+    // that overlap in time may attribute a phase slice to whichever
+    // replica drains first. Every slice is drained exactly once, so
+    // the *merged* phase totals stay exact; only the per-replica split
+    // is approximate under N > 1 (and exact at N = 1).
     if profile::ENABLED {
         let ms = profile::take();
         for (i, v) in ms.into_iter().enumerate() {
@@ -1315,32 +1597,31 @@ fn run_round(
     }
 }
 
-/// Recover from a panicked round: rebuild everything the panic may
-/// have poisoned and requeue the surviving sequences.
+/// Recover a replica from a panicked round: rebuild everything the
+/// panic may have poisoned and requeue the surviving sequences.
 ///
 /// The engine's interior-mutable scratch is restored via
-/// [`Engine::reset`], and the KV pool is rebuilt wholesale — zero
-/// leaked blocks by construction, at the cost of the prefix cache
+/// [`Engine::reset`], and the replica's KV pool is rebuilt wholesale —
+/// zero leaked blocks by construction, at the cost of its prefix cache
 /// (survivors re-prefill their history, exactly as after preemption).
 /// Sequences whose terminal already went out (`state.done`) are
 /// dropped; the rest are snapshotted like preemption victims and
-/// pushed back at the queue front in admission order. A sequence
+/// pushed back at the front of the *shared* queue in admission order —
+/// placement is free to re-admit them on a healthy replica. A sequence
 /// implicated in [`MAX_SEQ_FAULTS`] consecutive panics is failed with
 /// a typed [`ServeError::EngineFailure`] instead of being requeued, so
-/// a poison-pill request cannot crash-loop the worker forever.
-#[allow(clippy::too_many_arguments)]
+/// a poison-pill request cannot crash-loop a replica forever.
 fn restart_after_panic(
-    engine: &dyn Engine,
+    rep: &mut Replica,
     cfg: &CoordinatorConfig,
     model_cfg: &ModelConfig,
-    pool: &mut kvpool::KvPool,
-    metrics: &mut metrics::Metrics,
-    waiting: &mut VecDeque<WaitingReq>,
-    active: &mut Vec<ActiveSeq>,
-    traces: &mut TraceStore,
+    waiting: &Mutex<VecDeque<WaitingReq>>,
+    traces: &Mutex<TraceStore>,
 ) {
+    let metrics = &mut rep.metrics;
     metrics.worker_restarts += 1;
-    let implicated: Vec<String> = active
+    let implicated: Vec<String> = rep
+        .active
         .iter()
         .filter(|a| !a.state.done)
         .map(|a| a.state.id.to_string())
@@ -1348,8 +1629,9 @@ fn restart_after_panic(
     flight::record(
         "restart",
         format!(
-            "worker restart {} implicated=[{}]",
+            "worker restart {} r={} implicated=[{}]",
             metrics.worker_restarts,
+            rep.id,
             implicated.join(",")
         ),
     );
@@ -1357,23 +1639,23 @@ fn restart_after_panic(
         "coordinator",
         "engine panic: rebuilding engine scratch and KV pool",
         &[
+            ("replica", rep.id.to_string()),
             ("restarts", metrics.worker_restarts.to_string()),
             ("implicated", format!("[{}]", implicated.join(","))),
         ],
     );
     // The old pool's high-water mark would vanish with it.
-    metrics.kv_peak_bytes = metrics.kv_peak_bytes.max(pool.peak_bytes());
-    engine.reset();
-    *pool = kvpool::KvPool::new(
-        model_cfg,
-        cfg.kv_budget_bytes,
-        cfg.kv_block_tokens,
-        cfg.kv_quant,
-    );
+    metrics.kv_peak_bytes = metrics.kv_peak_bytes.max(rep.pool.peak_bytes());
+    rep.engine.reset();
+    let budget = rep.pool.budget();
+    rep.pool = kvpool::KvPool::new(model_cfg, budget, cfg.kv_block_tokens, cfg.kv_quant);
     // drain(..).rev() + push_front re-enters survivors in admission
     // order at the head of the queue, ahead of never-admitted work.
-    active.sort_by_key(|a| a.admitted_order);
-    for v in active.drain(..).rev() {
+    // The lock is held across the drain so the whole survivor block
+    // lands contiguously even if another replica requeues concurrently.
+    rep.active.sort_by_key(|a| a.admitted_order);
+    let mut waiting = lock(waiting);
+    for v in rep.active.drain(..).rev() {
         if v.state.done {
             // Terminal already sent (the panic hit between finish()
             // and retirement) — dropping the sender is all that's left.
@@ -1388,7 +1670,7 @@ fn restart_after_panic(
             metrics.requests_finished += 1;
             if let Some(t) = state.trace.as_mut() {
                 t.record(TraceEventKind::Terminal);
-                traces.push(t.timeline_json("engine_failure"));
+                lock(traces).push(t.timeline_json("engine_failure"));
             }
             let _ = v.events.send(Event::Error(ServeError::EngineFailure(format!(
                 "request implicated in {} consecutive engine panics",
@@ -1608,6 +1890,79 @@ mod tests {
         assert_eq!(run(), run());
     }
 
+    fn replicated_coordinator(n: usize, max_batch: usize) -> Coordinator {
+        let cfg = ModelConfig::test();
+        let engines: Vec<Box<dyn Engine>> = (0..n)
+            .map(|_| {
+                Box::new(NativeEngine::dense(DenseModel::random(&cfg, 3, None)))
+                    as Box<dyn Engine>
+            })
+            .collect();
+        Coordinator::new_replicated(
+            engines,
+            CoordinatorConfig {
+                max_batch,
+                kv_budget_bytes: 64 << 20,
+                prefill_chunk: 8,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn two_replicas_serve_and_aggregate_stats() {
+        let c = replicated_coordinator(2, 2);
+        let rxs: Vec<_> = (0..6)
+            .map(|i| {
+                c.generate(GenRequest {
+                    prompt: format!("replica spread {i}"),
+                    max_new_tokens: 4,
+                    ..Default::default()
+                })
+            })
+            .collect();
+        for rx in rxs {
+            let done = rx.iter().find(|e| matches!(e, Event::Done { .. }));
+            let Some(Event::Done { reason, gen_tokens, .. }) = done else {
+                panic!("no done event")
+            };
+            assert_eq!(reason, FinishReason::MaxTokens);
+            assert_eq!(gen_tokens, 4);
+        }
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.get("replicas").unwrap().as_u64(), Some(2));
+        assert_eq!(stats.get("requests_finished").unwrap().as_u64(), Some(6));
+        assert_eq!(stats.get("gen_tokens").unwrap().as_u64(), Some(24));
+        let per = stats.get("per_replica").unwrap().as_arr().unwrap();
+        assert_eq!(per.len(), 2);
+        let finished: u64 = per
+            .iter()
+            .map(|p| p.get("requests_finished").unwrap().as_u64().unwrap())
+            .sum();
+        assert_eq!(finished, 6, "per-replica finishes must sum to the aggregate");
+        for (i, p) in per.iter().enumerate() {
+            assert_eq!(p.get("replica").unwrap().as_u64(), Some(i as u64));
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn single_replica_stats_report_replicas_one_and_per_replica() {
+        let c = coordinator(2, 64 << 20);
+        let (_, done) = c.generate_collect(GenRequest {
+            prompt: "one replica".into(),
+            max_new_tokens: 3,
+            ..Default::default()
+        });
+        assert!(matches!(done, Some(Event::Done { .. })));
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.get("replicas").unwrap().as_u64(), Some(1));
+        let per = stats.get("per_replica").unwrap().as_arr().unwrap();
+        assert_eq!(per.len(), 1);
+        assert_eq!(per[0].get("requests_finished").unwrap().as_u64(), Some(1));
+        c.shutdown();
+    }
+
     fn spec_coordinator(draft_len: usize, drafter: spec::DrafterKind) -> Coordinator {
         let cfg = ModelConfig::test();
         let engine = NativeEngine::dense(DenseModel::random(&cfg, 3, None));
@@ -1664,6 +2019,46 @@ mod tests {
         }
         let Some(Event::Done { gen_tokens, .. }) = done_v else { panic!() };
         assert_eq!(gen_tokens, 16);
+    }
+
+    #[test]
+    fn wide_batch_sheds_draft_budget_to_zero_without_nan_stats() {
+        // draft_len 1 across a batch of four: once all four decode
+        // together the per-sequence share floors to 0 and the rounds
+        // fall back to the fused vanilla pass. Everything must still
+        // complete, and any acceptance-rate stats from the narrow early
+        // rounds must be finite — a 0/0 rate would poison the
+        // percentile rings.
+        let c = spec_coordinator(1, spec::DrafterKind::SelfDraft);
+        let rxs: Vec<_> = (0..4)
+            .map(|_| {
+                c.generate(GenRequest {
+                    prompt: "abcabcabcabc".into(),
+                    max_new_tokens: 8,
+                    ..Default::default()
+                })
+            })
+            .collect();
+        for rx in rxs {
+            let done = rx.iter().find(|e| matches!(e, Event::Done { .. }));
+            let Some(Event::Done { reason, gen_tokens, .. }) = done else {
+                panic!("no done event")
+            };
+            assert_eq!(reason, FinishReason::MaxTokens);
+            assert_eq!(gen_tokens, 8);
+        }
+        let stats = c.stats().unwrap();
+        for k in [
+            "spec_accept_rate_mean",
+            "spec_accept_rate_p50",
+            "spec_accept_rate_greedy_mean",
+            "spec_run_len_mean",
+        ] {
+            if let Some(v) = stats.get(k).and_then(|v| v.as_f64()) {
+                assert!(v.is_finite(), "{k} must stay finite, got {v}");
+            }
+        }
+        c.shutdown();
     }
 
     #[test]

@@ -152,6 +152,17 @@ impl PagedKvPool {
         mapped
     }
 
+    /// Read-only placement probe: how many of `prompt`'s tokens this
+    /// pool's prefix cache could serve at admission (same whole-block
+    /// walk and last-token cap as [`Self::map_cached_prefix`], but no
+    /// LRU bump and no stats). The replica scheduler probes every
+    /// candidate pool and admits where the hit is largest.
+    pub fn cached_prefix_tokens(&self, prompt: &[u32]) -> usize {
+        let bt = self.pool.block_tokens();
+        let cap = prompt.len().saturating_sub(1);
+        self.prefix.probe_tokens(prompt, bt, cap)
+    }
+
     /// Fresh blocks required to append `n` tokens to `id` (new logical
     /// blocks plus a COW fork of a shared tail).
     pub fn blocks_needed(&self, id: SeqId, n: usize) -> usize {
@@ -340,6 +351,10 @@ impl PagedKvPool {
             ("prefix_hit_ratio", Json::num(hit_tokens as f64 / lookup_tokens as f64)),
             ("prefix_evictions", Json::num(evictions as f64)),
             ("prefix_invalidations", Json::num(self.prefix.invalidations as f64)),
+            // Appended (PR 8): the raw denominator of the hit ratio, so
+            // merged multi-replica fragments can recompute the ratio
+            // exactly instead of averaging per-replica ratios.
+            ("prefix_lookup_tokens", Json::num(self.prefix.lookup_tokens as f64)),
         ])
     }
 }

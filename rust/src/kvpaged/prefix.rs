@@ -99,6 +99,31 @@ impl PrefixCache {
         out
     }
 
+    /// Read-only variant of [`PrefixCache::lookup`]: how many tokens of
+    /// `tokens` (whole blocks, capped at `max_tokens`) this cache could
+    /// serve right now. No LRU bump, no stats counted — the replica
+    /// placement probe calls this on every candidate replica, and only
+    /// the winner's real `lookup` should age the cache or feed the hit
+    /// counters.
+    pub fn probe_tokens(&self, tokens: &[u32], block_tokens: usize, max_tokens: usize) -> usize {
+        let mut parent = 0u64;
+        let mut blocks = 0usize;
+        for chunk in tokens.chunks_exact(block_tokens) {
+            if (blocks + 1) * block_tokens > max_tokens {
+                break;
+            }
+            let key = chain_hash(parent, chunk);
+            match self.entries.get(&key) {
+                Some(e) if e.parent == parent && e.tokens == chunk => {
+                    blocks += 1;
+                    parent = key;
+                }
+                _ => break,
+            }
+        }
+        blocks * block_tokens
+    }
+
     /// Register the whole-block prefix of `tokens` backed by `blocks`
     /// (one physical block per logical block, `blocks.len() >=
     /// tokens.len() / block_tokens`). Existing entries are kept (their
@@ -248,6 +273,28 @@ mod tests {
         // max_tokens caps the run to whole blocks.
         assert_eq!(c.lookup(&toks, 4, 11), blocks[..2]);
         assert_eq!(c.hit_tokens, 12 + 8 + 0 + 8);
+    }
+
+    #[test]
+    fn probe_matches_lookup_without_touching_stats_or_lru() {
+        let mut p = pool(4, 8);
+        let mut c = PrefixCache::new();
+        let toks: Vec<u32> = (0..12).collect();
+        let blocks = alloc_n(&mut p, 3);
+        c.insert(&mut p, &toks, 4, &blocks);
+
+        assert_eq!(c.probe_tokens(&toks, 4, usize::MAX), 12);
+        assert_eq!(c.probe_tokens(&toks, 4, 11), 8, "cap rounds down to whole blocks");
+        let mut other = toks.clone();
+        other[9] = 99;
+        assert_eq!(c.probe_tokens(&other, 4, usize::MAX), 8);
+        other[0] = 99;
+        assert_eq!(c.probe_tokens(&other, 4, usize::MAX), 0);
+        // Probing is invisible: no lookups counted, no hit tokens.
+        assert_eq!(c.lookups, 0);
+        assert_eq!(c.hit_tokens, 0);
+        // And it agrees with the real lookup it predicts.
+        assert_eq!(c.lookup(&toks, 4, usize::MAX).len() * 4, 12);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //!                   [--kv-budget BYTES] [--kv-block-tokens N] [--kv-quant f32|q8]
 //!                   [--spec-draft-len K] [--spec-drafter ngram|self]
 //!                   [--request-timeout-ms MS] [--max-queue-depth N]
+//!                   [--replicas N] [--prefill-round-budget TOKENS]
 //!
 //! Every subcommand accepts `--log-level off|error|warn|info|debug`
 //! (default info) controlling the structured stderr logger.
@@ -167,7 +168,17 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
     let addr = flag_or(flags, "addr", "127.0.0.1:8090");
     let engine = flag_or(flags, "engine", "native");
     let artifacts = flag_or(flags, "artifacts", "artifacts");
-    let eng = load_engine(&model, &engine, &artifacts)?;
+    // Data-parallel engine replicas behind one shared admission queue
+    // (1 = the single-engine path, exactly as before). Each replica is
+    // a full engine instance loaded from the same weights, so N
+    // replicas cost N× the weight memory.
+    let replicas: usize = flag_or(flags, "replicas", "1").parse()?;
+    if replicas == 0 {
+        bail!("--replicas must be positive");
+    }
+    let engines: Vec<Box<dyn itq3s::model::native::Engine>> = (0..replicas)
+        .map(|_| load_engine(&model, &engine, &artifacts))
+        .collect::<Result<_>>()?;
     let kv_quant_name = flag_or(flags, "kv-quant", "f32");
     let kv_quant = itq3s::kvpaged::KvQuant::parse(&kv_quant_name)
         .with_context(|| format!("unknown --kv-quant '{kv_quant_name}' (f32|q8)"))?;
@@ -190,6 +201,9 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
     if max_queue_depth == 0 {
         bail!("--max-queue-depth must be positive");
     }
+    // Per-round prefill-token ceiling per replica (0 = unbounded): see
+    // CoordinatorConfig::prefill_round_budget.
+    let prefill_round_budget: usize = flag_or(flags, "prefill-round-budget", "0").parse()?;
     let cfg = itq3s::coordinator::CoordinatorConfig {
         max_batch: flag_or(flags, "max-batch", "8").parse()?,
         kv_budget_bytes: flag_or(flags, "kv-budget", "268435456").parse()?,
@@ -199,10 +213,11 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         spec_drafter,
         request_timeout_ms: (request_timeout_ms > 0).then_some(request_timeout_ms),
         max_queue_depth,
+        prefill_round_budget,
         ..Default::default()
     };
     println!(
-        "serving {} on {addr} [{engine}] (kv: {} budget, {}-token blocks, {}; spec: {})",
+        "serving {} on {addr} [{engine} x{replicas}] (kv: {} budget, {}-token blocks, {}; spec: {})",
         model.display(),
         itq3s::util::human_bytes(cfg.kv_budget_bytes as u64),
         cfg.kv_block_tokens,
@@ -213,7 +228,7 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
             format!("{spec_drafter_name} x{spec_draft_len}")
         },
     );
-    itq3s::server::run(&addr, eng, cfg)
+    itq3s::server::run_replicated(&addr, engines, cfg)
 }
 
 fn e2e(flags: &HashMap<String, String>) -> Result<()> {

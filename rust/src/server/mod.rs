@@ -1,7 +1,10 @@
 //! TCP front-end: JSON-lines protocol over `std::net` (tokio is not in
 //! the offline vendor set; a thread-per-connection model with the
-//! single-worker coordinator behind channels gives the same separation
-//! of IO and compute).
+//! coordinator's dispatcher behind channels gives the same separation
+//! of IO and compute). The coordinator may drive one engine or N
+//! data-parallel replicas (`run_replicated` / `--replicas`); either
+//! way the wire protocol is unchanged — `stats`/`metrics` aggregate
+//! across replicas and `trace`/`dump` stamp replica ids.
 //!
 //! The complete wire-protocol reference below is included verbatim
 //! from `docs/PROTOCOL.md` — the single source of truth for every op,
@@ -23,8 +26,18 @@ use std::sync::Arc;
 
 /// Run the server until a client sends `{"op":"shutdown"}`.
 pub fn run(addr: &str, engine: Box<dyn Engine>, cfg: CoordinatorConfig) -> Result<()> {
+    run_replicated(addr, vec![engine], cfg)
+}
+
+/// Run the server over N data-parallel engine replicas (one element =
+/// today's single-engine behavior; see `Coordinator::new_replicated`).
+pub fn run_replicated(
+    addr: &str,
+    engines: Vec<Box<dyn Engine>>,
+    cfg: CoordinatorConfig,
+) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
-    serve_on(listener, engine, cfg)
+    serve_on(listener, engines, cfg)
 }
 
 /// Bind to an OS-assigned port; returns the bound address (tests, e2e).
@@ -32,24 +45,50 @@ pub fn spawn_ephemeral(
     engine: Box<dyn Engine>,
     cfg: CoordinatorConfig,
 ) -> Result<(std::net::SocketAddr, std::thread::JoinHandle<Result<()>>)> {
+    spawn_ephemeral_replicated(vec![engine], cfg)
+}
+
+/// [`spawn_ephemeral`] over N engine replicas.
+pub fn spawn_ephemeral_replicated(
+    engines: Vec<Box<dyn Engine>>,
+    cfg: CoordinatorConfig,
+) -> Result<(std::net::SocketAddr, std::thread::JoinHandle<Result<()>>)> {
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
-    let h = std::thread::spawn(move || serve_on(listener, engine, cfg));
+    let h = std::thread::spawn(move || serve_on(listener, engines, cfg));
     Ok((addr, h))
+}
+
+/// Join (and drop) every finished connection handler. Called on each
+/// accept and idle tick so `conns` holds live connections only —
+/// before this, one `JoinHandle` accumulated per connection for the
+/// whole server lifetime, an unbounded leak under sustained traffic.
+fn reap_finished(conns: &mut Vec<std::thread::JoinHandle<()>>) {
+    let mut i = 0;
+    while i < conns.len() {
+        if conns[i].is_finished() {
+            // Finished: join() returns immediately. A panicked handler
+            // is already logged by the panic hook; the Err is noise.
+            let _ = conns.swap_remove(i).join();
+        } else {
+            i += 1;
+        }
+    }
 }
 
 fn serve_on(
     listener: TcpListener,
-    engine: Box<dyn Engine>,
+    engines: Vec<Box<dyn Engine>>,
     cfg: CoordinatorConfig,
 ) -> Result<()> {
-    let coord = Arc::new(Coordinator::new(engine, cfg));
+    let coord = Arc::new(Coordinator::new_replicated(engines, cfg));
     let stop = Arc::new(AtomicBool::new(false));
     listener.set_nonblocking(true)?;
     let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _)) => {
+                reap_finished(&mut conns);
                 let coord = coord.clone();
                 let stop = stop.clone();
                 conns.push(std::thread::spawn(move || {
@@ -64,6 +103,7 @@ fn serve_on(
                 }));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                reap_finished(&mut conns);
                 std::thread::sleep(std::time::Duration::from_millis(10));
             }
             Err(e) => return Err(e.into()),
@@ -451,6 +491,99 @@ mod tests {
         assert!(text.contains("itq3s_requests_finished_total 2"), "{text}");
         assert!(text.contains("# TYPE itq3s_ttft_ms_hist histogram"), "{text}");
 
+        c.send(&Json::obj(vec![("op", Json::str("shutdown"))])).unwrap();
+        let _ = c.recv();
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn reap_joins_finished_handles_and_keeps_live_ones() {
+        use std::sync::mpsc;
+        // 100 short-lived handlers all finish; one long-lived handler
+        // stays. Reaping must drop exactly the finished 100 — the
+        // regression was never reaping at all, so `conns` grew one
+        // handle per connection forever.
+        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        for _ in 0..100 {
+            conns.push(std::thread::spawn(|| {}));
+        }
+        let (tx, rx) = mpsc::channel::<()>();
+        conns.push(std::thread::spawn(move || {
+            let _ = rx.recv(); // blocks until the test releases it
+        }));
+        // Wait for the short handlers to finish (join-free: poll).
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        loop {
+            reap_finished(&mut conns);
+            if conns.len() == 1 {
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "{} handles unreaped", conns.len());
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(conns.len(), 1, "the live handler must not be reaped");
+        tx.send(()).unwrap();
+        let h = conns.pop().unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while !h.is_finished() {
+            assert!(std::time::Instant::now() < deadline);
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn many_short_connections_cycle_cleanly() {
+        // Drive the real accept loop through dozens of short
+        // connections: every handler exits, the server keeps accepting,
+        // and shutdown still drains cleanly (the reap path runs on
+        // every accept, so the handle list stays bounded — the bound
+        // itself is pinned by `reap_joins_finished_handles...` above).
+        let (addr, handle) = spawn_test_server();
+        let addrs = addr.to_string();
+        for i in 0..40 {
+            let mut c = Client::connect(&addrs).unwrap();
+            if i % 2 == 0 {
+                c.send(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+                let _ = c.recv().unwrap();
+            }
+            // Dropping the client closes the socket; the handler exits.
+        }
+        let mut c = Client::connect(&addrs).unwrap();
+        let done = c.generate("still alive", 2).unwrap();
+        assert_eq!(done.get("done"), Some(&Json::Bool(true)));
+        c.send(&Json::obj(vec![("op", Json::str("shutdown"))])).unwrap();
+        let _ = c.recv();
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn replicated_server_roundtrip_aggregates_stats() {
+        let cfg = ModelConfig::test();
+        let engines: Vec<Box<dyn Engine>> = (0..2)
+            .map(|_| {
+                Box::new(NativeEngine::dense(DenseModel::random(&cfg, 5, None)))
+                    as Box<dyn Engine>
+            })
+            .collect();
+        let (addr, handle) = spawn_ephemeral_replicated(
+            engines,
+            CoordinatorConfig {
+                max_batch: 4,
+                kv_budget_bytes: 64 << 20,
+                prefill_chunk: 16,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        let done = c.generate("replicated hello", 4).unwrap();
+        assert_eq!(done.get("gen_tokens").unwrap().as_u64(), Some(4));
+        c.send(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+        let stats = c.recv().unwrap();
+        assert_eq!(stats.get("replicas").unwrap().as_u64(), Some(2));
+        assert_eq!(stats.get("requests_finished").unwrap().as_u64(), Some(1));
+        assert!(stats.get("per_replica").unwrap().as_arr().unwrap().len() == 2);
         c.send(&Json::obj(vec![("op", Json::str("shutdown"))])).unwrap();
         let _ = c.recv();
         handle.join().unwrap().unwrap();

@@ -81,12 +81,15 @@ pub fn rel_l2_err(reference: &[f32], approx: &[f32]) -> f64 {
 }
 
 /// Percentile over a pre-sorted-or-not sample (nearest-rank, p in [0,100]).
+/// Total order via `f64::total_cmp`: a NaN that slips into a metrics
+/// ring (e.g. a 0/0 rate) sorts after +Inf instead of panicking the
+/// whole metrics path mid-`sort_by`.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).floor() as usize;
     v[rank.min(v.len() - 1)]
 }
@@ -142,6 +145,29 @@ impl Welford {
 
     pub fn max(&self) -> f64 {
         if self.n == 0 { 0.0 } else { self.max }
+    }
+
+    /// Fold another accumulator into this one (Chan et al. parallel
+    /// combine). Exact for count/mean/min/max and the usual numerically
+    /// stable merge for m2 — used to aggregate per-replica serving
+    /// metrics into one snapshot.
+    pub fn merge_from(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let n = n1 + n2;
+        let delta = other.mean - self.mean;
+        self.mean += delta * n2 / n;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.n += other.n;
     }
 }
 
@@ -201,6 +227,37 @@ impl RingStats {
 
     pub fn p99(&self) -> f64 {
         self.window_percentile(99.0)
+    }
+
+    /// The retained window in chronological (push) order.
+    fn window(&self) -> impl Iterator<Item = f64> + '_ {
+        let split = if self.ring.len() < self.cap { 0 } else { self.next };
+        self.ring[split..].iter().chain(self.ring[..split].iter()).copied()
+    }
+
+    /// Fold another ring into this one: the Welford halves combine
+    /// exactly; the window absorbs the other's retained samples in
+    /// chronological order (oldest evicted first, as if pushed here).
+    /// An empty receiver becomes a verbatim clone, so merging N=1
+    /// replica metrics into a fresh accumulator is byte-identical to
+    /// the unmerged original.
+    pub fn merge_from(&mut self, other: &RingStats) {
+        if other.w.count() == 0 {
+            return;
+        }
+        if self.w.count() == 0 && self.cap == other.cap {
+            *self = other.clone();
+            return;
+        }
+        self.w.merge_from(&other.w);
+        for x in other.window() {
+            if self.ring.len() < self.cap {
+                self.ring.push(x);
+            } else {
+                self.ring[self.next] = x;
+            }
+            self.next = (self.next + 1) % self.cap;
+        }
     }
 }
 
@@ -309,6 +366,19 @@ impl LogHistogram {
         }
         self.base * self.growth.powi(self.counts.len() as i32 - 2)
     }
+
+    /// Fold another histogram (same base/growth/bucket layout) into
+    /// this one: bucket counts, sum, and count add elementwise — exact,
+    /// since the bucket bounds are identical.
+    pub fn merge_from(&mut self, other: &LogHistogram) {
+        assert_eq!(self.counts.len(), other.counts.len(), "histogram layout mismatch");
+        debug_assert!(self.base == other.base && self.growth == other.growth);
+        for (a, &b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.sum += other.sum;
+        self.count += other.count;
+    }
 }
 
 #[cfg(test)]
@@ -356,6 +426,96 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 100.0);
         assert_eq!(percentile(&xs, 99.0), 99.0);
+    }
+
+    #[test]
+    fn percentile_survives_nan_and_inf_samples() {
+        // Regression: the old `partial_cmp(..).unwrap()` sort panicked
+        // on the first NaN (e.g. a 0/0 accept rate) — through the
+        // public ring path, one poisoned sample killed every later
+        // stats/metrics call. total_cmp sorts NaN after +Inf instead.
+        let mut r = RingStats::new(8);
+        for x in [1.0, f64::NAN, 2.0, f64::INFINITY, 3.0, f64::NEG_INFINITY] {
+            r.push(x);
+        }
+        let p0 = r.window_percentile(0.0);
+        assert_eq!(p0, f64::NEG_INFINITY);
+        // Finite ranks stay meaningful: the median of the window sits
+        // among the finite samples.
+        let p50 = r.p50();
+        assert!(p50 >= 1.0 && p50 <= 3.0, "p50={p50}");
+        // The top rank is NaN (sorted last) — returned, not panicked.
+        assert!(r.window_percentile(100.0).is_nan());
+        // Direct slice path too.
+        assert!(percentile(&[f64::NAN, f64::NAN], 50.0).is_nan());
+        assert_eq!(percentile(&[f64::NAN, 7.0], 0.0), 7.0);
+    }
+
+    #[test]
+    fn welford_merge_matches_single_stream() {
+        let xs: Vec<f64> = (0..37).map(|i| (i as f64) * 1.7 - 9.0).collect();
+        let mut whole = Welford::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        for (i, &x) in xs.iter().enumerate() {
+            if i % 3 == 0 { a.push(x) } else { b.push(x) }
+        }
+        a.merge_from(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.variance() - whole.variance()).abs() < 1e-9);
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+        // Merging into an empty accumulator is a verbatim copy.
+        let mut empty = Welford::new();
+        empty.merge_from(&whole);
+        assert_eq!(empty.count(), whole.count());
+        assert_eq!(empty.mean(), whole.mean());
+        // Merging an empty one is a no-op.
+        let before = whole.mean();
+        whole.merge_from(&Welford::new());
+        assert_eq!(whole.mean(), before);
+    }
+
+    #[test]
+    fn ring_merge_into_empty_is_identity_and_windows_concatenate() {
+        let mut src = RingStats::new(8);
+        for i in 0..5 {
+            src.push(i as f64);
+        }
+        let mut dst = RingStats::new(8);
+        dst.merge_from(&src);
+        assert_eq!(dst.count(), src.count());
+        assert_eq!(dst.p50(), src.p50());
+        assert_eq!(dst.max(), src.max());
+        // Non-empty receiver: windows concatenate chronologically.
+        let mut more = RingStats::new(8);
+        more.push(100.0);
+        more.push(200.0);
+        dst.merge_from(&more);
+        assert_eq!(dst.count(), 7);
+        assert_eq!(dst.window_percentile(100.0), 200.0);
+        assert_eq!(dst.max(), 200.0);
+    }
+
+    #[test]
+    fn log_histogram_merge_adds_counts_exactly() {
+        let mut a = LogHistogram::new(1.0, 2.0, 5);
+        let mut b = LogHistogram::new(1.0, 2.0, 5);
+        for x in [0.5, 3.0, 9.0] {
+            a.push(x);
+        }
+        for x in [1.5, 3.5] {
+            b.push(x);
+        }
+        a.merge_from(&b);
+        assert_eq!(a.count(), 5);
+        assert!((a.sum() - (0.5 + 3.0 + 9.0 + 1.5 + 3.5)).abs() < 1e-12);
+        let cum = a.cumulative();
+        assert_eq!(cum.last().unwrap().1, 5);
     }
 
     #[test]

@@ -58,9 +58,10 @@ pub enum TraceEventKind {
     /// Entered (or re-entered, after preemption/restart) the admission
     /// queue.
     Queued,
-    /// Admitted into the running batch; `prefix_reused` prompt tokens
-    /// came from the paged prefix cache.
-    Admitted { prefix_reused: usize },
+    /// Admitted into the running batch of engine replica `replica`;
+    /// `prefix_reused` prompt tokens came from the paged prefix cache.
+    /// Replica ids are 0-based; a single-engine coordinator stamps 0.
+    Admitted { prefix_reused: usize, replica: usize },
     /// One prefill chunk of `tokens` prompt tokens ran.
     PrefillChunk { tokens: usize },
     /// One fused decode round ran with `batch` sequences.
@@ -205,8 +206,9 @@ impl RequestTrace {
                     ("what", Json::str(kind.what())),
                 ];
                 match *kind {
-                    TraceEventKind::Admitted { prefix_reused } => {
+                    TraceEventKind::Admitted { prefix_reused, replica } => {
                         fields.push(("prefix_reused", Json::num(prefix_reused as f64)));
+                        fields.push(("replica", Json::num(replica as f64)));
                     }
                     TraceEventKind::PrefillChunk { tokens } => {
                         fields.push(("tokens", Json::num(tokens as f64)));
@@ -284,7 +286,7 @@ mod tests {
     #[test]
     fn lifecycle_events_feed_the_accumulators() {
         let mut t = RequestTrace::new(7);
-        t.record(TraceEventKind::Admitted { prefix_reused: 3 });
+        t.record(TraceEventKind::Admitted { prefix_reused: 3, replica: 0 });
         t.record(TraceEventKind::PrefillChunk { tokens: 8 });
         t.add_prefill_ms(1.5);
         t.record(TraceEventKind::DecodeRound { batch: 2 });
@@ -292,8 +294,9 @@ mod tests {
         t.record(TraceEventKind::SpecVerify { drafted: 4, accepted: 3 });
         t.add_decode_ms(0.25);
         t.record(TraceEventKind::Preempted);
+        t.record(TraceEventKind::RestartImplicated);
         t.record(TraceEventKind::Queued);
-        t.record(TraceEventKind::Admitted { prefix_reused: 11 });
+        t.record(TraceEventKind::Admitted { prefix_reused: 11, replica: 1 });
         t.record(TraceEventKind::Terminal);
 
         let timing = t.timing_json();
@@ -315,6 +318,9 @@ mod tests {
         assert_eq!(evs.len(), 10);
         assert_eq!(evs[0].get("what").unwrap().as_str(), Some("queued"));
         assert_eq!(evs[1].get("prefix_reused").unwrap().as_u64(), Some(3));
+        assert_eq!(evs[1].get("replica").unwrap().as_u64(), Some(0));
+        // The re-admission after preemption landed on replica 1.
+        assert_eq!(evs[8].get("replica").unwrap().as_u64(), Some(1));
         let last = evs.last().unwrap();
         assert_eq!(last.get("what").unwrap().as_str(), Some("terminal"));
         // Timestamps are monotone non-decreasing.

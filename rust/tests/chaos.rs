@@ -225,6 +225,88 @@ fn engine_panic_dumps_flight_recorder_with_implicated_trace() {
 }
 
 #[test]
+fn replica_panic_restarts_one_replica_and_the_pool_keeps_serving() {
+    let _g = failpoint::exclusive();
+    itq3s::util::flight::clear();
+    // Panic the second decode call in the process. Failpoint counters
+    // are process-global and replica rounds run concurrently, so the
+    // test does not know (or assert) WHICH replica draws the panic —
+    // only that exactly one restart happens, it is replica-stamped,
+    // and every request still resolves.
+    failpoint::arm_at("engine.decode", 2, FailAction::Panic);
+
+    let engines: Vec<Box<dyn itq3s::model::native::Engine>> = (0..2)
+        .map(|_| Box::new(common::dense_engine(7)) as Box<dyn itq3s::model::native::Engine>)
+        .collect();
+    let c = Coordinator::new_replicated(
+        engines,
+        CoordinatorConfig {
+            max_batch: 2,
+            kv_budget_bytes: 64 << 20,
+            prefill_chunk: 8,
+            ..Default::default()
+        },
+    );
+    let rxs: Vec<_> = (0..4)
+        .map(|i| {
+            c.generate(GenRequest {
+                prompt: format!("replica chaos request {i}"),
+                max_new_tokens: 6,
+                ..Default::default()
+            })
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        assert_eq!(terminals(rx), 1, "request {i}: exactly one terminal event");
+    }
+
+    // The pool as a whole keeps serving after the restart.
+    let (_, done) = c.generate_collect(GenRequest {
+        prompt: "after the replica storm".into(),
+        max_new_tokens: 4,
+        ..Default::default()
+    });
+    assert!(
+        matches!(done, Some(Event::Done { reason: FinishReason::MaxTokens, .. })),
+        "fresh request after a replica restart must complete: {done:?}"
+    );
+
+    // Merged stats see the restart, and the per-replica breakdown
+    // attributes it: restarts sum to the aggregate, and at least one
+    // replica reports zero (the panic stayed in its blast radius).
+    let stats = c.stats().unwrap();
+    let merged_restarts = stats.get("worker_restarts").unwrap().as_u64().unwrap();
+    assert!(merged_restarts >= 1, "the injected panic must restart a replica");
+    assert_eq!(stats.get("replicas").unwrap().as_u64(), Some(2));
+    let per = stats.get("per_replica").unwrap().as_arr().unwrap();
+    assert_eq!(per.len(), 2);
+    let per_restarts: Vec<u64> =
+        per.iter().map(|p| p.get("worker_restarts").unwrap().as_u64().unwrap()).collect();
+    assert_eq!(per_restarts.iter().sum::<u64>(), merged_restarts);
+    assert!(
+        per_restarts.iter().any(|&r| r == 0),
+        "a panic in one replica must not restart the other: {per_restarts:?}"
+    );
+
+    // The flight recorder's restart record names its replica.
+    let dump = c.dump();
+    let restart = dump
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|e| e.get("kind").unwrap().as_str() == Some("restart"))
+        .expect("the restart must be recorded");
+    let detail = restart.get("detail").unwrap().as_str().unwrap();
+    assert!(detail.contains(" r="), "restart record is replica-stamped: {detail}");
+
+    // Leak audit across both pools.
+    c.clear_prefix_cache().unwrap();
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get("kv_blocks_in_use").unwrap().as_u64(), Some(0));
+    c.shutdown();
+}
+
+#[test]
 fn server_conn_error_surfaces_and_server_survives() {
     let _g = failpoint::exclusive();
     // The very first wire send in the server process fails (a client

@@ -1,0 +1,320 @@
+//! Data-parallel replica serving: same-seed token identity against the
+//! single-engine coordinator, prefix-affinity placement, and bounded
+//! per-round prefill under a flood of long prompts.
+//!
+//! Replicas must be *invisible* in the token stream: a request's output
+//! depends only on its own sampler and the (shared) weights, never on
+//! which replica ran it or who shared its batch. These tests pin that
+//! end to end for greedy, sampled, and speculative decoding.
+
+mod common;
+
+use itq3s::coordinator::{
+    Coordinator, CoordinatorConfig, Event, FinishReason, GenRequest,
+};
+use itq3s::model::native::Engine;
+use itq3s::util::json::Json;
+
+fn replicated(n: usize, cfg: CoordinatorConfig) -> Coordinator {
+    // Same seed per replica: identical weights, so placement cannot
+    // change tokens (the real deployment shape — one checkpoint,
+    // N engine instances).
+    let engines: Vec<Box<dyn Engine>> = (0..n)
+        .map(|_| Box::new(common::dense_engine(5)) as Box<dyn Engine>)
+        .collect();
+    Coordinator::new_replicated(engines, cfg)
+}
+
+/// Stream every request to completion, returning (text, gen_tokens)
+/// per request in submission order.
+fn collect_all(rxs: Vec<std::sync::mpsc::Receiver<Event>>) -> Vec<(String, usize)> {
+    rxs.into_iter()
+        .map(|rx| {
+            let mut text = String::new();
+            for ev in rx.iter() {
+                match ev {
+                    Event::Heartbeat => {}
+                    Event::Token { text: t, .. } => text.push_str(&t),
+                    Event::Done { gen_tokens, reason, .. } => {
+                        assert_eq!(reason, FinishReason::MaxTokens);
+                        return (text, gen_tokens);
+                    }
+                    Event::Error(e) => panic!("unexpected error: {e}"),
+                }
+            }
+            panic!("stream ended without a terminal");
+        })
+        .collect()
+}
+
+/// A mixed greedy/sampled workload (fixed seeds) through an N-replica
+/// coordinator; `spec_draft` switches speculative decoding on.
+fn run_workload(n: usize, spec_draft: usize) -> Vec<(String, usize)> {
+    let c = replicated(
+        n,
+        CoordinatorConfig {
+            max_batch: 2,
+            kv_budget_bytes: 64 << 20,
+            prefill_chunk: 8,
+            spec_draft_len: spec_draft,
+            ..Default::default()
+        },
+    );
+    let rxs: Vec<_> = (0..6)
+        .map(|i| {
+            c.generate(GenRequest {
+                prompt: format!("determinism workload {i} abcabcabc"),
+                max_new_tokens: 10,
+                temperature: if i % 2 == 0 { 0.0 } else { 0.8 },
+                top_k: if i % 2 == 0 { None } else { Some(12) },
+                seed: 1000 + i as u64,
+                ..Default::default()
+            })
+        })
+        .collect();
+    let out = collect_all(rxs);
+    c.shutdown();
+    out
+}
+
+#[test]
+fn replica_count_is_invisible_in_the_token_streams() {
+    // N=1 is the reference (the pre-replica coordinator, bit for bit);
+    // N=2 and N=4 must stream the same text per request across greedy,
+    // sampled, and speculative decoding.
+    for spec_draft in [0usize, 4] {
+        let want = run_workload(1, spec_draft);
+        assert_eq!(want.len(), 6);
+        for n in [2usize, 4] {
+            let got = run_workload(n, spec_draft);
+            assert_eq!(
+                got, want,
+                "replicas={n} spec_draft={spec_draft}: token streams diverged from N=1"
+            );
+        }
+    }
+}
+
+/// Fish the completed timeline with `id` out of the `trace` op result.
+fn timeline_by_id(timelines: &Json, id: u64) -> Json {
+    timelines
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|t| t.get("id").unwrap().as_u64() == Some(id))
+        .unwrap_or_else(|| panic!("no timeline for request {id}"))
+        .clone()
+}
+
+/// The replica stamped into a timeline's (last) admitted event.
+fn admitted_replica(timeline: &Json) -> u64 {
+    timeline
+        .get("events")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .rev()
+        .find(|e| e.get("what").unwrap().as_str() == Some("admitted"))
+        .expect("timeline has an admitted event")
+        .get("replica")
+        .unwrap()
+        .as_u64()
+        .unwrap()
+}
+
+#[test]
+fn placement_prefers_the_replica_holding_the_cached_prefix() {
+    let c = replicated(
+        2,
+        CoordinatorConfig {
+            max_batch: 4,
+            kv_budget_bytes: 64 << 20,
+            prefill_chunk: 16,
+            ..Default::default()
+        },
+    );
+    let warm_prompt = "w".repeat(300); // truncated to ~62 tokens
+    // Request 1: first ever, both replicas idle and cold -> replica 0
+    // (lowest id tie-break). Its prefix is cached there on release.
+    let (_, done) = c.generate_collect(GenRequest {
+        prompt: warm_prompt.clone(),
+        max_new_tokens: 2,
+        trace: true,
+        ..Default::default()
+    });
+    assert!(matches!(done, Some(Event::Done { .. })));
+    // Request 2: distinct prompt, lands on replica 0 too (idle again).
+    // It runs long, so replica 0 is *busier* when request 3 arrives.
+    let busy = c.generate(GenRequest {
+        prompt: "completely different busy work".into(),
+        max_new_tokens: 40,
+        trace: true,
+        ..Default::default()
+    });
+    // Request 3: shares the warm prefix. Affinity must beat load:
+    // replica 0 (prefix hit, one active) over replica 1 (idle, cold).
+    let (_, done) = c.generate_collect(GenRequest {
+        prompt: warm_prompt,
+        max_new_tokens: 2,
+        trace: true,
+        ..Default::default()
+    });
+    assert!(matches!(done, Some(Event::Done { .. })));
+    for _ in busy.iter() {} // drain request 2
+    let timelines = c.trace(16).unwrap();
+    let warm = timeline_by_id(&timelines, 1);
+    let repeat = timeline_by_id(&timelines, 3);
+    assert_eq!(admitted_replica(&warm), 0, "first request seeds replica 0");
+    assert_eq!(
+        admitted_replica(&repeat),
+        0,
+        "prefix affinity must outrank the load tie-break"
+    );
+    let reused = repeat
+        .get("events")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|e| e.get("what").unwrap().as_str() == Some("admitted"))
+        .unwrap()
+        .get("prefix_reused")
+        .unwrap()
+        .as_u64()
+        .unwrap();
+    assert!(reused > 0, "repeat prompt must map cached prefix blocks, got {reused}");
+    c.shutdown();
+}
+
+#[test]
+fn prefill_flood_is_budgeted_while_decode_continues_elsewhere() {
+    // Budget 6 < chunk 8: with the budget on, NO prefill chunk may
+    // exceed 6 tokens, and two co-resident prefilling sequences cannot
+    // both ingest in one round (6 < 2 chunks) — the flood serializes
+    // on its replica while short requests decode on the other one.
+    let c = replicated(
+        2,
+        CoordinatorConfig {
+            max_batch: 4,
+            kv_budget_bytes: 64 << 20,
+            prefill_chunk: 8,
+            prefill_round_budget: 6,
+            ..Default::default()
+        },
+    );
+    // ~41 prompt tokens: long enough to cache whole prefix blocks and
+    // need several budgeted rounds, short enough that the ` tail {i}`
+    // suffixes and 3 decode tokens fit under the 64-token context cap.
+    let flood_prompt = "f".repeat(40);
+    // Warm replica 0 so the flood has prefix affinity to it.
+    let (_, done) = c.generate_collect(GenRequest {
+        prompt: flood_prompt.clone(),
+        max_new_tokens: 1,
+        ..Default::default()
+    });
+    assert!(matches!(done, Some(Event::Done { .. })));
+    // The flood: three long warm-prefixed prompts (requests 2-4), all
+    // placed on replica 0 by the prefix probe...
+    let flood: Vec<_> = (0..3)
+        .map(|i| {
+            c.generate(GenRequest {
+                prompt: format!("{flood_prompt} tail {i}"),
+                max_new_tokens: 3,
+                trace: true,
+                ..Default::default()
+            })
+        })
+        .collect();
+    // ...while short fresh prompts (requests 5-6) go to replica 1 (no
+    // prefix hit anywhere -> least loaded) and keep decoding there.
+    let shorts: Vec<_> = (0..2)
+        .map(|i| {
+            c.generate(GenRequest {
+                prompt: format!("short decode {i}"),
+                max_new_tokens: 6,
+                trace: true,
+                ..Default::default()
+            })
+        })
+        .collect();
+    for rx in shorts {
+        let done = rx.iter().find(|e| matches!(e, Event::Done { .. }));
+        let Some(Event::Done { reason, gen_tokens, .. }) = done else { panic!("no done") };
+        assert_eq!(reason, FinishReason::MaxTokens);
+        assert_eq!(gen_tokens, 6, "short requests must decode to completion");
+    }
+    for rx in flood {
+        let done = rx.iter().find(|e| matches!(e, Event::Done { .. }));
+        assert!(
+            matches!(done, Some(Event::Done { reason: FinishReason::MaxTokens, .. })),
+            "flooded prefills must still finish"
+        );
+    }
+    let timelines = c.trace(16).unwrap();
+    for id in 2..=4u64 {
+        let t = timeline_by_id(&timelines, id);
+        assert_eq!(admitted_replica(&t), 0, "flood request {id} must follow its prefix");
+        for ev in t.get("events").unwrap().as_arr().unwrap() {
+            if ev.get("what").unwrap().as_str() == Some("prefill_chunk") {
+                let tokens = ev.get("tokens").unwrap().as_u64().unwrap();
+                assert!(
+                    tokens <= 6,
+                    "request {id}: prefill chunk of {tokens} exceeds the round budget of 6"
+                );
+            }
+        }
+    }
+    for id in 5..=6u64 {
+        let t = timeline_by_id(&timelines, id);
+        assert_eq!(
+            admitted_replica(&t),
+            1,
+            "short request {id} must land on the unflooded replica"
+        );
+    }
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get("replicas").unwrap().as_u64(), Some(2));
+    let per = stats.get("per_replica").unwrap().as_arr().unwrap();
+    assert_eq!(per.len(), 2);
+    let finished: u64 =
+        per.iter().map(|p| p.get("requests_finished").unwrap().as_u64().unwrap()).sum();
+    assert_eq!(finished, 6, "per-replica finishes must cover all six requests");
+    c.shutdown();
+}
+
+#[test]
+fn prefill_round_budget_is_inert_on_one_replica_by_default() {
+    // Defaults (budget 0 = unbounded) must reproduce the pre-budget
+    // chunking exactly: a ~62-token prompt with chunk 16 ingests
+    // 16/16/16/14 — visible in its trace timeline.
+    let c = replicated(
+        1,
+        CoordinatorConfig {
+            max_batch: 2,
+            kv_budget_bytes: 64 << 20,
+            prefill_chunk: 16,
+            ..Default::default()
+        },
+    );
+    let (_, done) = c.generate_collect(GenRequest {
+        prompt: "p".repeat(300),
+        max_new_tokens: 2,
+        trace: true,
+        ..Default::default()
+    });
+    assert!(matches!(done, Some(Event::Done { .. })));
+    let timelines = c.trace(4).unwrap();
+    let t = timeline_by_id(&timelines, 1);
+    let chunks: Vec<u64> = t
+        .get("events")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|e| e.get("what").unwrap().as_str() == Some("prefill_chunk"))
+        .map(|e| e.get("tokens").unwrap().as_u64().unwrap())
+        .collect();
+    assert_eq!(chunks, vec![16, 16, 16, 14], "unbudgeted chunking must be flat");
+    c.shutdown();
+}
