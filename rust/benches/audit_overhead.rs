@@ -1,0 +1,87 @@
+//! Numerics-audit overhead bench: decode throughput through the full
+//! coordinator on the itq3_s W3A8 engine as the shadow-probe sample
+//! rate sweeps 0 -> 1. Each sampled round replays one active sequence
+//! through the f32 reference path, so the cost scales with the rate:
+//! R=0 must price at zero (the hook is a single branch), R=1 roughly
+//! doubles per-round model work for one sequence. Audit sampling must
+//! never change the generated tokens (enforced by tests/replicas.rs);
+//! this bench prices what the observability *costs*. Writes
+//! `BENCH_audit.json` (schema in EXPERIMENTS.md §Benchmark artifacts).
+
+use itq3s::bench::harness::bench;
+use itq3s::coordinator::{Coordinator, CoordinatorConfig, Event, GenRequest};
+use itq3s::model::{DenseModel, ModelConfig, NativeEngine, QuantizedModel};
+use itq3s::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Run one generation to completion, returning generated-token count.
+fn run_one(c: &Coordinator, prompt: &str, n: usize) -> usize {
+    let rx = c.generate(GenRequest {
+        prompt: prompt.to_string(),
+        max_new_tokens: n,
+        ..Default::default()
+    });
+    for ev in rx.iter() {
+        match ev {
+            Event::Done { gen_tokens, .. } => return gen_tokens,
+            Event::Error(e) => panic!("bench request failed: {e:?}"),
+            _ => {}
+        }
+    }
+    panic!("stream ended without a terminal event");
+}
+
+fn main() {
+    let cfg = ModelConfig::tiny();
+    let dense = DenseModel::random(&cfg, 42, Some(5.0));
+
+    let prompt = "the quick brown fox jumps over the lazy dog. ".repeat(3);
+    let gen_tokens = 48usize;
+
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
+    report.insert("gen_tokens".into(), Json::num(gen_tokens as f64));
+    report.insert("prompt_bytes".into(), Json::num(prompt.len() as f64));
+
+    let rates = [0.0f64, 0.01, 0.1, 1.0];
+    let mut baseline_tps = 0.0f64;
+    let mut rows = Vec::new();
+    for (i, &rate) in rates.iter().enumerate() {
+        let fmt = itq3s::quant::format_by_name("itq3_s").unwrap();
+        let eng = NativeEngine::quantized(QuantizedModel::quantize(&dense, fmt));
+        let coord = Coordinator::new(
+            Box::new(eng),
+            CoordinatorConfig {
+                max_batch: 4,
+                kv_budget_bytes: 64 << 20,
+                audit_sample_rate: rate,
+                ..Default::default()
+            },
+        );
+        let label = format!("audit_rate_{rate}");
+        let got = run_one(&coord, &prompt, gen_tokens);
+        assert_eq!(got, gen_tokens, "{label}: short generation");
+        let r = bench(&label, 1, 5, || {
+            run_one(&coord, &prompt, gen_tokens);
+        });
+        let tps = gen_tokens as f64 / r.mean_s;
+        if i == 0 {
+            baseline_tps = tps;
+        }
+        let overhead_pct = (baseline_tps / tps - 1.0) * 100.0;
+        println!(
+            "rate {rate:<5}: {tps:>8.1} tok/s ({overhead_pct:+.1}% vs unaudited)"
+        );
+        rows.push(Json::obj(vec![
+            ("audit_sample_rate", Json::num(rate)),
+            ("tokens_per_s", Json::num(tps)),
+            ("overhead_pct", Json::num(overhead_pct)),
+        ]));
+    }
+    report.insert("rates".into(), Json::Arr(rows));
+
+    let out = Json::Obj(report).to_string();
+    match std::fs::write("BENCH_audit.json", &out) {
+        Ok(()) => println!("wrote BENCH_audit.json"),
+        Err(e) => eprintln!("could not write BENCH_audit.json: {e}"),
+    }
+}

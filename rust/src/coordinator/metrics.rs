@@ -99,6 +99,24 @@ pub struct Metrics {
     /// never sums it — the dispatcher stamps the true count after
     /// merging the per-replica accumulators.
     pub replicas: usize,
+    /// Logit-drift shadow probes run (`--audit-sample-rate` decode
+    /// rounds re-scored through the f32 reference path).
+    pub audit_rounds: u64,
+    /// Probes whose KL divergence exceeded `--audit-drift-warn` (each
+    /// also lands a flight-recorder event naming the request).
+    pub audit_drift_events: u64,
+    /// KL(quantized ‖ reference) per probe, in nats.
+    pub audit_logit_kl: RingStats,
+    /// Greedy top-1 agreement per probe (1.0 agree / 0.0 disagree, so
+    /// the windowed mean is the agreement rate).
+    pub audit_top1_agree: RingStats,
+    /// Largest absolute per-logit deviation per probe.
+    pub audit_max_logit_delta: RingStats,
+    /// Per-layer residual-stream rel-L2 per probe — the
+    /// error-accumulation profile. Sized to the engine's layer count on
+    /// first probe (empty until then), surfaced as one JSON array key so
+    /// the snapshot key set stays model-independent.
+    pub audit_layer_rel_l2: Vec<RingStats>,
 }
 
 impl Default for Metrics {
@@ -179,6 +197,27 @@ impl Metrics {
             ttft_hist: LogHistogram::latency_ms(),
             decode_round_hist: LogHistogram::latency_ms(),
             replicas: 1,
+            audit_rounds: 0,
+            audit_drift_events: 0,
+            audit_logit_kl: RingStats::new(WINDOW),
+            audit_top1_agree: RingStats::new(WINDOW),
+            audit_max_logit_delta: RingStats::new(WINDOW),
+            audit_layer_rel_l2: Vec::new(),
+        }
+    }
+
+    /// Record one logit-drift shadow probe (the caller decides
+    /// separately whether it also counts as a drift event).
+    pub fn record_audit(&mut self, kl: f64, top1: bool, max_delta: f64, layer_rel_l2: &[f64]) {
+        self.audit_rounds += 1;
+        self.audit_logit_kl.push(kl);
+        self.audit_top1_agree.push(if top1 { 1.0 } else { 0.0 });
+        self.audit_max_logit_delta.push(max_delta);
+        while self.audit_layer_rel_l2.len() < layer_rel_l2.len() {
+            self.audit_layer_rel_l2.push(RingStats::new(WINDOW));
+        }
+        for (ring, &v) in self.audit_layer_rel_l2.iter_mut().zip(layer_rel_l2) {
+            ring.push(v);
         }
     }
 
@@ -226,6 +265,17 @@ impl Metrics {
         }
         self.ttft_hist.merge_from(&other.ttft_hist);
         self.decode_round_hist.merge_from(&other.decode_round_hist);
+        self.audit_rounds += other.audit_rounds;
+        self.audit_drift_events += other.audit_drift_events;
+        self.audit_logit_kl.merge_from(&other.audit_logit_kl);
+        self.audit_top1_agree.merge_from(&other.audit_top1_agree);
+        self.audit_max_logit_delta.merge_from(&other.audit_max_logit_delta);
+        while self.audit_layer_rel_l2.len() < other.audit_layer_rel_l2.len() {
+            self.audit_layer_rel_l2.push(RingStats::new(WINDOW));
+        }
+        for (a, b) in self.audit_layer_rel_l2.iter_mut().zip(&other.audit_layer_rel_l2) {
+            a.merge_from(b);
+        }
         // `started` and `replicas` stay: uptime is the receiver's, and
         // the replica count is stamped by the dispatcher, not summed.
     }
@@ -322,6 +372,26 @@ impl Metrics {
         fields.push(("decode_round_ms_max", Json::num(self.decode_round_ms.max())));
         // Replica keys (PR 8), appended last — append-only as always.
         fields.push(("replicas", Json::num(self.replicas as f64)));
+        // Numerics-audit keys (PR 9), appended after everything above —
+        // append-only as always. The per-layer profile is one array key
+        // (windowed mean per layer) so the key *set* stays independent
+        // of the model's layer count.
+        fields.push(("audit_rounds", Json::num(self.audit_rounds as f64)));
+        fields.push(("audit_drift_events", Json::num(self.audit_drift_events as f64)));
+        fields.push(("audit_logit_kl_mean", Json::num(self.audit_logit_kl.mean())));
+        fields.push(("audit_logit_kl_p50", Json::num(self.audit_logit_kl.p50())));
+        fields.push(("audit_logit_kl_p99", Json::num(self.audit_logit_kl.p99())));
+        fields.push(("audit_logit_kl_max", Json::num(self.audit_logit_kl.max())));
+        fields.push(("audit_top1_agree_mean", Json::num(self.audit_top1_agree.mean())));
+        fields.push((
+            "audit_max_logit_delta_mean",
+            Json::num(self.audit_max_logit_delta.mean()),
+        ));
+        fields.push(("audit_max_logit_delta_max", Json::num(self.audit_max_logit_delta.max())));
+        fields.push((
+            "audit_layer_rel_l2",
+            Json::Arr(self.audit_layer_rel_l2.iter().map(|r| Json::num(r.mean())).collect()),
+        ));
         let mut snap = Json::obj(fields);
         // Phase-profile keys exist only when the profiler is compiled
         // in: with default features the snapshot is byte-identical to
@@ -364,6 +434,8 @@ impl Metrics {
         counter("rejected_overload_total", "Requests shed at the admission-queue bound.", self.rejected_overload as f64);
         counter("deadline_expired_total", "Requests whose deadline expired.", self.deadline_expired as f64);
         counter("worker_restarts_total", "Panic-isolated scheduler restarts.", self.worker_restarts as f64);
+        counter("audit_rounds_total", "Logit-drift shadow probes run.", self.audit_rounds as f64);
+        counter("audit_drift_events_total", "Shadow probes whose KL exceeded --audit-drift-warn.", self.audit_drift_events as f64);
 
         let mut gauge = |name: &str, help: &str, v: f64| {
             out.push_str(&format!(
@@ -374,6 +446,7 @@ impl Metrics {
         gauge("decode_tps", "Aggregate decode throughput (tokens/sec) since start.", self.decode_tps());
         gauge("kv_peak_bytes", "Peak KV pool bytes in use.", self.kv_peak_bytes as f64);
         gauge("replicas", "Data-parallel engine replicas behind this coordinator.", self.replicas as f64);
+        gauge("audit_top1_agree_rate", "Windowed greedy top-1 agreement rate of shadow probes.", self.audit_top1_agree.mean());
         // Numeric paged-pool fragment keys ride along as gauges.
         if let Json::Obj(pool) = &self.kv_pool {
             for (k, v) in pool {
@@ -398,6 +471,8 @@ impl Metrics {
         summary("spec_accept_rate", "Per-verify-round draft acceptance rate.", &self.spec_accept_rate);
         summary("spec_run_len", "Accepted-run length per verify round.", &self.spec_run_len);
         summary("queue_depth", "Admission-queue depth per scheduling round.", &self.queue_depth);
+        summary("audit_logit_kl", "KL(quantized vs reference) per shadow probe (nats).", &self.audit_logit_kl);
+        summary("audit_max_logit_delta", "Largest per-logit deviation per shadow probe.", &self.audit_max_logit_delta);
         if crate::util::profile::ENABLED {
             for (i, name) in PHASE_NAMES.iter().enumerate() {
                 summary(
@@ -419,6 +494,17 @@ impl Metrics {
         };
         histogram("ttft_ms_hist", "Submit-to-first-token latency (ms; lifetime histogram).", &self.ttft_hist);
         histogram("decode_round_ms_hist", "True wall time per decode round (ms; lifetime histogram).", &self.decode_round_hist);
+        // Per-layer error-accumulation profile as a labelled gauge
+        // family — absent entirely until the first probe runs, so an
+        // audit-off exposition is unchanged.
+        if !self.audit_layer_rel_l2.is_empty() {
+            out.push_str(
+                "# HELP itq3s_audit_layer_rel_l2 Windowed mean residual-stream rel-L2 drift per layer (shadow probes).\n# TYPE itq3s_audit_layer_rel_l2 gauge\n",
+            );
+            for (i, r) in self.audit_layer_rel_l2.iter().enumerate() {
+                out.push_str(&format!("itq3s_audit_layer_rel_l2{{layer=\"{i}\"}} {}\n", r.mean()));
+            }
+        }
         out
     }
 }
@@ -594,6 +680,17 @@ mod tests {
             "decode_round_ms_max",
             // PR 8 replicas.
             "replicas",
+            // PR 9 numerics audit.
+            "audit_rounds",
+            "audit_drift_events",
+            "audit_logit_kl_mean",
+            "audit_logit_kl_p50",
+            "audit_logit_kl_p99",
+            "audit_logit_kl_max",
+            "audit_top1_agree_mean",
+            "audit_max_logit_delta_mean",
+            "audit_max_logit_delta_max",
+            "audit_layer_rel_l2",
         ]
         .iter()
         .map(|s| s.to_string())
@@ -706,6 +803,59 @@ mod tests {
         // Rings pooled both samples.
         assert_eq!(merged.ttft_ms.count(), 2);
         assert_eq!(s.get("ttft_ms_max").unwrap().as_f64(), Some(4.0));
+    }
+
+    #[test]
+    fn audit_keys_surface_without_touching_old_keys() {
+        let mut m = Metrics::new();
+        m.record_audit(0.01, true, 0.3, &[0.001, 0.002]);
+        m.record_audit(0.05, false, 0.9, &[0.002, 0.004]);
+        m.audit_drift_events = 1;
+        let s = m.snapshot();
+        assert_eq!(s.get("audit_rounds").unwrap().as_u64(), Some(2));
+        assert_eq!(s.get("audit_drift_events").unwrap().as_u64(), Some(1));
+        assert!((s.get("audit_logit_kl_mean").unwrap().as_f64().unwrap() - 0.03).abs() < 1e-12);
+        assert_eq!(s.get("audit_logit_kl_max").unwrap().as_f64(), Some(0.05));
+        assert_eq!(s.get("audit_top1_agree_mean").unwrap().as_f64(), Some(0.5));
+        assert_eq!(s.get("audit_max_logit_delta_max").unwrap().as_f64(), Some(0.9));
+        // One array key with a windowed mean per layer.
+        let layers = s.get("audit_layer_rel_l2").unwrap().as_arr().unwrap();
+        assert_eq!(layers.len(), 2);
+        assert!((layers[0].as_f64().unwrap() - 0.0015).abs() < 1e-12);
+        assert!((layers[1].as_f64().unwrap() - 0.003).abs() < 1e-12);
+        // Pre-existing key families keep their old names.
+        for key in ["replicas", "decode_round_ms_max", "queue_depth_p99", "gen_tokens"] {
+            assert!(s.get(key).is_some(), "missing {key}");
+        }
+        // Prometheus exposition carries the new families, including the
+        // per-layer labelled gauge.
+        let text = m.prometheus();
+        assert!(text.contains("itq3s_audit_rounds_total 2\n"));
+        assert!(text.contains("itq3s_audit_drift_events_total 1\n"));
+        assert!(text.contains("# TYPE itq3s_audit_logit_kl summary"));
+        assert!(text.contains("itq3s_audit_top1_agree_rate 0.5\n"));
+        assert!(text.contains("itq3s_audit_layer_rel_l2{layer=\"1\"}"));
+        // No probes -> no per-layer family at all.
+        assert!(!Metrics::new().prometheus().contains("audit_layer_rel_l2{"));
+    }
+
+    #[test]
+    fn audit_rings_merge_across_replicas() {
+        let mut a = Metrics::new();
+        a.record_audit(0.02, true, 0.1, &[0.001]);
+        a.audit_drift_events = 2;
+        let mut b = Metrics::new();
+        b.record_audit(0.04, false, 0.5, &[0.003]);
+        let mut merged = Metrics::new();
+        merged.merge_from(&a);
+        merged.merge_from(&b);
+        assert_eq!(merged.audit_rounds, 2);
+        assert_eq!(merged.audit_drift_events, 2);
+        assert_eq!(merged.audit_logit_kl.count(), 2);
+        assert_eq!(merged.audit_top1_agree.count(), 2);
+        assert_eq!(merged.audit_layer_rel_l2.len(), 1);
+        assert_eq!(merged.audit_layer_rel_l2[0].count(), 2);
+        assert!((merged.audit_layer_rel_l2[0].mean() - 0.002).abs() < 1e-12);
     }
 
     #[test]

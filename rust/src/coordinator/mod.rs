@@ -85,6 +85,15 @@
 //! engine's internal phases can be profiled under
 //! `--features profiling` ([`crate::util::profile`]). See
 //! `docs/ARCHITECTURE.md` § "Observability".
+//!
+//! **Numerics audit.** The `audit` op runs a static weight audit
+//! (per-tensor reconstruction error vs the Theorem-2 bound —
+//! [`crate::quant::audit`]), and `audit_sample_rate > 0` shadow-scores
+//! a sampled fraction of decode rounds against the f32 activation
+//! reference ([`Engine::audit_probe`]), feeding the `audit_*` stats
+//! keys, Prometheus `itq3s_audit_*` families, and — past
+//! `audit_drift_warn` — flight-recorder `audit` events. Both paths are
+//! read-only over serving state: enabling them never changes tokens.
 
 pub mod error;
 pub mod kvpool;
@@ -163,6 +172,25 @@ pub struct CoordinatorConfig {
     /// so ingestion stays monotone even when the budget is smaller
     /// than one `prefill_chunk` per waiting sequence.
     pub prefill_round_budget: usize,
+    /// Probability that a decode round is shadow-scored for numerics
+    /// drift (`serve --audit-sample-rate`). On a sampled round one
+    /// decoding sequence's full token history is replayed twice
+    /// through the engine on fresh scratch KV — once on the serving
+    /// path, once with activation quantization off — and
+    /// KL(quantized‖reference), top-1 agreement, the max logit delta,
+    /// and per-layer residual drift land in the `audit_*` stats keys.
+    /// The probe reads nothing but the engine weights and perturbs
+    /// neither the live KV pool nor the sampler RNG (its schedule has
+    /// its own per-replica RNG), so serving stays same-seed
+    /// token-identical at any rate. 0.0 (default) disables sampling
+    /// and skips even the schedule draw.
+    pub audit_sample_rate: f64,
+    /// Shadow-probe drift threshold (`serve --audit-drift-warn`, in
+    /// nats of KL): a sampled round whose KL(quantized‖reference)
+    /// exceeds this bumps `audit_drift_events` and drops an `audit`
+    /// event naming the request and worst layer into the flight
+    /// recorder.
+    pub audit_drift_warn: f64,
 }
 
 impl Default for CoordinatorConfig {
@@ -178,6 +206,8 @@ impl Default for CoordinatorConfig {
             request_timeout_ms: None,
             max_queue_depth: 256,
             prefill_round_budget: 0,
+            audit_sample_rate: 0.0,
+            audit_drift_warn: 0.05,
         }
     }
 }
@@ -197,6 +227,11 @@ enum Cmd {
     Trace(usize, Sender<Json>),
     /// Prometheus text exposition of the serving metrics.
     Prometheus(Sender<String>),
+    /// Static weight audit: walk every quantized tensor of replica 0's
+    /// engine and report per-tensor reconstruction error against the
+    /// Theorem-2 bound (all replicas serve the same weights, so one
+    /// engine's verdict covers the fleet).
+    Audit(Sender<Json>),
     Shutdown,
 }
 
@@ -428,6 +463,16 @@ impl Coordinator {
         rx.recv().map_err(|_| anyhow::anyhow!("worker gone"))
     }
 
+    /// Static weight audit of the serving engine (the `audit` op):
+    /// per-tensor reconstruction error vs the Theorem-2 bound, as a
+    /// JSON [`crate::quant::audit::AuditReport`]. Synchronous through
+    /// the worker so it never races a scheduling round's scratch use.
+    pub fn audit(&self) -> Result<Json> {
+        let (tx, rx) = channel();
+        self.tx.send(Cmd::Audit(tx)).map_err(|_| anyhow::anyhow!("worker gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("worker gone"))
+    }
+
     /// Snapshot the process-global flight recorder (the `dump` op).
     /// Reads the ring directly rather than round-tripping through the
     /// worker: the black box must stay readable even when the worker
@@ -580,6 +625,11 @@ struct Replica {
     pool: kvpool::KvPool,
     active: Vec<ActiveSeq>,
     metrics: metrics::Metrics,
+    /// Dedicated RNG for the shadow-audit sampling schedule, seeded
+    /// from the replica id. Deliberately separate from every
+    /// sequence's sampler RNG: drawing the schedule must never shift
+    /// a sampler's stream, or enabling audit would change tokens.
+    audit_rng: crate::util::XorShift,
 }
 
 /// Poison-tolerant lock: a replica round that panics while holding the
@@ -660,6 +710,10 @@ fn worker(engines: Vec<Box<dyn Engine>>, cfg: CoordinatorConfig, rx: Receiver<Cm
             ),
             active: Vec::new(),
             metrics: metrics::Metrics::new(),
+            // Fixed per-replica seed: the audit schedule is
+            // deterministic for a given replica count and round
+            // sequence, so audit-overhead runs are reproducible.
+            audit_rng: crate::util::XorShift::new(0x5EED_A0D1 ^ id as u64),
             engine,
         })
         .collect();
@@ -765,6 +819,9 @@ fn worker(engines: Vec<Box<dyn Engine>>, cfg: CoordinatorConfig, rx: Receiver<Cm
                 }
                 Cmd::Prometheus(tx) => {
                     let _ = tx.send(merged_metrics(&mut replicas, &intake).prometheus());
+                }
+                Cmd::Audit(tx) => {
+                    let _ = tx.send(replicas[0].engine.audit_weights().to_json());
                 }
                 Cmd::Shutdown => {
                     draining = true;
@@ -1095,6 +1152,7 @@ fn run_round(
     let pool = &mut rep.pool;
     let metrics = &mut rep.metrics;
     let active = &mut rep.active;
+    let audit_rng = &mut rep.audit_rng;
 
     // ---- 1.5 liveness & deadline sweep --------------------------
     // Probe every active client before spending the round — a
@@ -1560,6 +1618,61 @@ fn run_round(
         let round_ms = round_span.ms();
         metrics.decode_round_ms.push(round_ms);
         metrics.decode_round_hist.push(round_ms);
+    }
+
+    // ---- 4c. sampled logit-drift shadow probe -------------------
+    // On a sampled fraction of decode rounds, replay one
+    // still-running sequence's full consumed history through the
+    // engine twice on fresh scratch KV — serving path vs the f32
+    // activation reference — and fold KL(quantized‖reference),
+    // top-1 agreement, the max logit delta, and the per-layer
+    // residual drift profile into the `audit_*` metrics. The probe
+    // is strictly read-only with respect to serving state: it
+    // touches neither the live KV pool nor any sampler, and its
+    // schedule draws from the replica's own `audit_rng`, so
+    // enabling audit never changes tokens (`audit_serving_is_token_
+    // identical_and_records_drift` pins this). Rate 0.0 skips even
+    // the schedule draw — audit-off rounds are byte-identical.
+    if cfg.audit_sample_rate > 0.0
+        && !step_idx.is_empty()
+        && audit_rng.next_f64() < cfg.audit_sample_rate
+    {
+        let i = step_idx[0];
+        let history = {
+            let s = &active[i].state;
+            let mut h = Vec::with_capacity(s.prompt_tokens + s.generated.len());
+            h.extend_from_slice(&s.prefill[..s.prompt_tokens]);
+            h.extend_from_slice(&s.generated);
+            h
+        };
+        if let Some(probe) = engine.audit_probe(&history) {
+            let kl = probe.kl_divergence();
+            let top1 = probe.top1_agree();
+            let delta = probe.max_logit_delta();
+            metrics.record_audit(kl, top1, delta, &probe.layer_rel_l2);
+            let seq = &mut active[i];
+            if let Some(t) = seq.state.trace.as_mut() {
+                t.note_audit(kl, top1, delta);
+            }
+            if kl > cfg.audit_drift_warn {
+                metrics.audit_drift_events += 1;
+                let worst = probe
+                    .layer_rel_l2
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(li, _)| li)
+                    .unwrap_or(0);
+                flight::record(
+                    "audit",
+                    format!(
+                        "req={} r={} kl={kl:.4} top1={top1} max_delta={delta:.4} \
+                         worst_layer={worst} drift exceeds warn threshold",
+                        seq.state.id, rid
+                    ),
+                );
+            }
+        }
     }
 
     // ---- 5. retire finished -------------------------------------
@@ -2531,6 +2644,113 @@ mod tests {
             text
         };
         assert_eq!(run(false), run(true));
+    }
+
+    /// An itq3_s coordinator with the numerics-audit knobs exposed —
+    /// the shadow-probe tests need a quantized engine so the
+    /// quantized-vs-reference drift is real, not identically zero.
+    fn quant_coordinator(audit_sample_rate: f64, audit_drift_warn: f64) -> Coordinator {
+        let cfg = ModelConfig::test();
+        let dense = DenseModel::random(&cfg, 3, None);
+        let q = crate::model::QuantizedModel::quantize(
+            &dense,
+            crate::quant::format_by_name("itq3_s").unwrap(),
+        );
+        Coordinator::new(
+            Box::new(NativeEngine::quantized(q)),
+            CoordinatorConfig {
+                max_batch: 2,
+                kv_budget_bytes: 64 << 20,
+                prefill_chunk: 8,
+                audit_sample_rate,
+                audit_drift_warn,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn audit_op_reports_through_the_worker() {
+        let c = quant_coordinator(0.0, 0.05);
+        let rep = c.audit().unwrap();
+        assert_eq!(rep.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(rep.get("fmt").unwrap().as_str(), Some("itq3_s"));
+        let expected = ModelConfig::test().n_layers * 7;
+        assert_eq!(rep.get("tensors").unwrap().as_arr().unwrap().len(), expected);
+        c.shutdown();
+
+        // A dense engine has no quantized tensors: trivially ok, empty.
+        let d = coordinator(2, 64 << 20);
+        let rep = d.audit().unwrap();
+        assert_eq!(rep.get("ok").unwrap().as_bool(), Some(true));
+        assert!(rep.get("tensors").unwrap().as_arr().unwrap().is_empty());
+        d.shutdown();
+    }
+
+    #[test]
+    fn audit_serving_is_token_identical_and_records_drift() {
+        // The audit-on/audit-off byte-identity contract: the same
+        // seeded sampled request streams the same text at rate 0.0
+        // (no probes), rate 1.0 (every decode round probed), and with
+        // the drift warning forced on every probe — while the audited
+        // runs actually record probe stats.
+        let run = |rate: f64, warn: f64| {
+            let c = quant_coordinator(rate, warn);
+            let (text, _) = c.generate_collect(GenRequest {
+                prompt: "identical either way".into(),
+                max_new_tokens: 10,
+                temperature: 0.8,
+                top_k: Some(12),
+                seed: 99,
+                ..Default::default()
+            });
+            let stats = c.stats().unwrap();
+            c.shutdown();
+            (text, stats)
+        };
+        let (off_text, off_stats) = run(0.0, 0.05);
+        let (on_text, on_stats) = run(1.0, 0.05);
+        let (warn_text, warn_stats) = run(1.0, -1.0);
+        assert_eq!(off_text, on_text, "audit probes must not change tokens");
+        assert_eq!(off_text, warn_text, "drift warnings must not change tokens");
+
+        assert_eq!(off_stats.get("audit_rounds").unwrap().as_u64(), Some(0));
+        let on_rounds = on_stats.get("audit_rounds").unwrap().as_u64().unwrap();
+        assert!(on_rounds >= 1, "rate 1.0 must probe every decode round");
+        let kl = on_stats.get("audit_logit_kl_mean").unwrap().as_f64().unwrap();
+        assert!(kl.is_finite() && kl >= 0.0);
+        let layers = on_stats.get("audit_layer_rel_l2").unwrap().as_arr().unwrap();
+        assert_eq!(layers.len(), ModelConfig::test().n_layers);
+        for l in layers {
+            assert!(l.as_f64().unwrap().is_finite());
+        }
+
+        // KL >= 0 always exceeds a -1.0 threshold: every probe warns.
+        let events = warn_stats.get("audit_drift_events").unwrap().as_u64().unwrap();
+        assert!(events >= 1, "forced threshold must record drift events");
+    }
+
+    #[test]
+    fn audit_drift_warning_reaches_the_flight_recorder() {
+        let _x = crate::util::failpoint::exclusive();
+        flight::clear();
+        let c = quant_coordinator(1.0, -1.0);
+        let (_, done) = c.generate_collect(GenRequest {
+            prompt: "drift into the black box".into(),
+            max_new_tokens: 4,
+            ..Default::default()
+        });
+        assert!(matches!(done, Some(Event::Done { .. })));
+        let dump = c.dump();
+        let evs = dump.as_arr().unwrap();
+        let audit = evs
+            .iter()
+            .find(|e| e.get("kind").and_then(|k| k.as_str()) == Some("audit"))
+            .expect("audit drift event in the flight recorder");
+        let detail = audit.get("detail").unwrap().as_str().unwrap();
+        assert!(detail.contains("req=1"), "event names the request: {detail}");
+        assert!(detail.contains("worst_layer="), "event names the layer: {detail}");
+        c.shutdown();
     }
 
     #[test]

@@ -508,6 +508,70 @@ mod tests {
     }
 
     #[test]
+    fn audit_flags_a_corrupted_artifact_and_passes_a_clean_one() {
+        let cfg = ModelConfig::test();
+        let dense = DenseModel::random(&cfg, 6, None);
+        let qm = QuantizedModel::quantize(&dense, fbn("itq3_s").unwrap());
+        let path = tmp("audit-clean.iguf");
+        save_quantized(&qm, &path).unwrap();
+
+        // A clean artifact passes every tensor with headroom.
+        let clean = load_quantized(&path).unwrap().audit();
+        assert!(clean.ok());
+        assert_eq!(clean.tensors.len(), cfg.n_layers * 7);
+        for t in &clean.tensors {
+            assert!(t.margin > 0.0, "{}: margin {}", t.name, t.margin);
+        }
+
+        // Corrupt one block's stored f16 scale (d -> +Inf, word at byte
+        // offset 96) inside the packed payload of layers.0.wq. Payload
+        // bytes are opaque to the parser — the file still loads clean —
+        // so only the audit can see the damage.
+        let mut f = IgufFile::load(&path).unwrap();
+        let t = f.tensors.iter_mut().find(|t| t.name == "layers.0.wq").unwrap();
+        t.data[96] = 0x00;
+        t.data[97] = 0x7C;
+        let bad_path = tmp("audit-corrupt.iguf");
+        f.save(&bad_path).unwrap();
+
+        let qm2 = load_quantized(&bad_path).unwrap();
+        let report = qm2.audit();
+        assert!(!report.ok(), "corrupted scale must violate the audit");
+        assert_eq!(report.violations(), vec!["layers.0.wq"]);
+        let bad = report.tensors.iter().find(|t| t.name == "layers.0.wq").unwrap();
+        assert_eq!(bad.worst_block, 0);
+        assert!(bad.detail.contains("non-finite"), "{}", bad.detail);
+
+        // The `audit` op on a server unknowingly serving that artifact
+        // answers with a typed error naming the tensor (the serve CLI
+        // additionally refuses to start on it — same `ok()` gate).
+        let (addr, handle) = crate::server::spawn_ephemeral(
+            Box::new(crate::model::NativeEngine::quantized(qm2)),
+            crate::coordinator::CoordinatorConfig {
+                max_batch: 2,
+                kv_budget_bytes: 64 << 20,
+                prefill_chunk: 8,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut c = crate::server::Client::connect(&addr.to_string()).unwrap();
+        c.send(&Json::obj(vec![("op", Json::str("audit"))])).unwrap();
+        let resp = c.recv().unwrap();
+        let err = resp.get("error").expect("typed error for a violated audit");
+        assert_eq!(err.get("code").unwrap().as_str(), Some("bad_request"));
+        assert!(err.get("message").unwrap().as_str().unwrap().contains("layers.0.wq"));
+        // The full report rides along for forensics.
+        assert_eq!(
+            resp.get("audit").unwrap().get("ok").unwrap().as_bool(),
+            Some(false)
+        );
+        c.send(&Json::obj(vec![("op", Json::str("shutdown"))])).unwrap();
+        let _ = c.recv();
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
     fn implausible_sizes_are_rejected_not_overflowed() {
         // meta_len = u64::MAX is a truncation error, not an OOM or a
         // wrapped bounds check.

@@ -7,12 +7,15 @@
 //! itq3s gen-corpus  [--out DIR] [--bytes N]        synthetic corpus splits
 //! itq3s quantize    --model M.iguf --fmt F --out Q.iguf
 //! itq3s inspect     --model M.iguf                 distribution + Thm1/2 stats
+//! itq3s audit       --model Q.iguf                 per-tensor rel-L2 vs Thm-2 bound
+//!                                                  (exit 1 on a violated artifact)
 //! itq3s eval-ppl    --model M.iguf [--split valid|web] [--engine native|pjrt]
 //! itq3s serve       --model M.iguf [--addr A] [--engine native|pjrt]
 //!                   [--kv-budget BYTES] [--kv-block-tokens N] [--kv-quant f32|q8]
 //!                   [--spec-draft-len K] [--spec-drafter ngram|self]
 //!                   [--request-timeout-ms MS] [--max-queue-depth N]
 //!                   [--replicas N] [--prefill-round-budget TOKENS]
+//!                   [--audit-sample-rate R] [--audit-drift-warn KL]
 //!
 //! Every subcommand accepts `--log-level off|error|warn|info|debug`
 //! (default info) controlling the structured stderr logger.
@@ -47,7 +50,7 @@ fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: itq3s <gen-corpus|quantize|inspect|eval-ppl|serve|table1|table2|table3|e2e> [flags]"
+        "usage: itq3s <gen-corpus|quantize|inspect|audit|eval-ppl|serve|table1|table2|table3|e2e> [flags]"
     );
     std::process::exit(2);
 }
@@ -65,6 +68,7 @@ fn main() -> Result<()> {
         "gen-corpus" => gen_corpus(&flags),
         "quantize" => quantize(&flags),
         "inspect" => inspect(&flags),
+        "audit" => audit(&flags),
         "eval-ppl" => eval_ppl(&flags),
         "serve" => serve(&flags),
         "table1" => itq3s::bench::tables::table1(&flag_or(&flags, "artifacts", "artifacts")),
@@ -118,6 +122,23 @@ fn inspect(flags: &HashMap<String, String>) -> Result<()> {
     let model = PathBuf::from(flags.get("model").context("--model required")?);
     let dense = itq3s::gguf::load_dense(&model)?;
     itq3s::bench::tables::inspect_model(&dense);
+    Ok(())
+}
+
+fn audit(flags: &HashMap<String, String>) -> Result<()> {
+    let model = PathBuf::from(flags.get("model").context("--model required")?);
+    let engine = flag_or(flags, "engine", "native");
+    let artifacts = flag_or(flags, "artifacts", "artifacts");
+    let eng = load_engine(&model, &engine, &artifacts)?;
+    let report = eng.audit_weights();
+    print!("{}", report.render_table());
+    if !report.ok() {
+        bail!(
+            "weight audit FAILED for {}: [{}] violate the Theorem-2 reconstruction bound",
+            model.display(),
+            report.violations().join(", ")
+        );
+    }
     Ok(())
 }
 
@@ -204,6 +225,25 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
     // Per-round prefill-token ceiling per replica (0 = unbounded): see
     // CoordinatorConfig::prefill_round_budget.
     let prefill_round_budget: usize = flag_or(flags, "prefill-round-budget", "0").parse()?;
+    // Sampled logit-drift shadow scoring (0 = off) and its warning
+    // threshold in nats of KL: see CoordinatorConfig::audit_sample_rate.
+    let audit_sample_rate: f64 = flag_or(flags, "audit-sample-rate", "0").parse()?;
+    if !(0.0..=1.0).contains(&audit_sample_rate) {
+        bail!("--audit-sample-rate must be in [0, 1]");
+    }
+    let audit_drift_warn: f64 = flag_or(flags, "audit-drift-warn", "0.05").parse()?;
+    // Refuse to serve a corrupted artifact: static weight audit before
+    // binding the socket (the `audit` op re-checks live on demand).
+    // All replicas load the same file, so auditing one engine suffices.
+    let report = engines[0].audit_weights();
+    if !report.ok() {
+        eprint!("{}", report.render_table());
+        bail!(
+            "refusing to serve {}: weight audit failed ([{}] violate the Theorem-2 bound)",
+            model.display(),
+            report.violations().join(", ")
+        );
+    }
     let cfg = itq3s::coordinator::CoordinatorConfig {
         max_batch: flag_or(flags, "max-batch", "8").parse()?,
         kv_budget_bytes: flag_or(flags, "kv-budget", "268435456").parse()?,
@@ -214,6 +254,8 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         request_timeout_ms: (request_timeout_ms > 0).then_some(request_timeout_ms),
         max_queue_depth,
         prefill_round_budget,
+        audit_sample_rate,
+        audit_drift_warn,
         ..Default::default()
     };
     println!(

@@ -25,9 +25,10 @@
 //! integration tests in `rust/tests/pjrt_parity.rs`.
 
 use super::{
-    weights::PaddedLinear, BatchSlot, DenseModel, KvBatchStore, KvStore, ModelConfig,
+    weights::PaddedLinear, BatchSlot, DenseModel, KvBatchStore, KvCache, KvStore, ModelConfig,
     QuantizedModel,
 };
+use crate::quant::audit::{AuditProbe, AuditReport};
 use crate::quant::matmul::MatvecScratch;
 use crate::tensor::{matvec_accum, Tensor};
 use crate::util::profile;
@@ -89,6 +90,24 @@ pub trait Engine: Send + Sync {
     /// weights are immutable, so for most engines this is a no-op; the
     /// native engine clears and rebuilds its poisoned scratch mutexes.
     fn reset(&self) {}
+    /// Static weight audit: walk every quantized tensor, check the
+    /// reconstruction against the Theorem-2 bound (see
+    /// [`crate::quant::audit`]). Engines without packed weights have
+    /// nothing to audit and report trivially clean.
+    fn audit_weights(&self) -> AuditReport {
+        AuditReport::empty("dense")
+    }
+    /// Logit-drift shadow probe: re-score the position after `tokens`
+    /// through both the production decode path and the f32 reference
+    /// path (`act_quant = false`), in **fresh** KV caches — the live KV
+    /// state, sampler RNG and scratch numerics are untouched, so probing
+    /// can never perturb what it measures (test-enforced byte-identity
+    /// of served tokens at any sample rate). `None` means the engine has
+    /// no reference path to shadow against; the coordinator then skips
+    /// the probe.
+    fn audit_probe(&self, _tokens: &[u32]) -> Option<AuditProbe> {
+        None
+    }
 }
 
 /// Weight storage variants the native engine can run.
@@ -352,25 +371,22 @@ impl NativeEngine {
         matvec_accum(self.embed(), &hn, &mut logits);
         logits
     }
-}
 
-impl Engine for NativeEngine {
-    fn config(&self) -> &ModelConfig {
-        self.cfg()
-    }
-
-    fn reset(&self) {
-        // A panic while a scratch lock was held poisons it; both locks
-        // hold plain staging buffers with no cross-call invariants, so
-        // recovery is: un-poison, then restore the pristine (empty)
-        // state rather than trust buffers a forward pass died in.
-        self.scratch.clear_poison();
-        *self.scratch.lock().expect("just cleared") = MatvecScratch::new();
-        self.batch_scratch.clear_poison();
-        *self.batch_scratch.lock().expect("just cleared") = BatchScratch::default();
-    }
-
-    fn decode_step(&self, cache: &mut dyn KvStore, token: u32) -> Vec<f32> {
+    /// Single-token MMVQ forward with the act-quant routing made an
+    /// explicit parameter and an optional per-layer residual tee.
+    /// [`Engine::decode_step`] is exactly `self.decode_step_at(cache,
+    /// token, self.act_quant, None)` — when `capture` is `None` no code
+    /// path differs, which is what keeps the audit machinery out of the
+    /// production numerics. With `capture` set, the residual stream is
+    /// cloned after each layer (quantized vs reference comparison points
+    /// for the shadow probe's error-accumulation profile).
+    fn decode_step_at(
+        &self,
+        cache: &mut dyn KvStore,
+        token: u32,
+        aq: bool,
+        mut capture: Option<&mut Vec<Vec<f32>>>,
+    ) -> Vec<f32> {
         let cfg = self.cfg().clone();
         let pos = cache.len();
         assert!(pos < cfg.max_seq.min(cache.capacity()), "sequence overflows max_seq");
@@ -391,7 +407,6 @@ impl Engine for NativeEngine {
         // padding buffer — warm after the first step, so the per-token
         // MMVQ loop allocates nothing.
         let mut mv = self.scratch.lock().expect("matvec scratch poisoned");
-        let aq = self.act_quant;
 
         for li in 0..cfg.n_layers {
             let l = self.layer(li);
@@ -440,10 +455,71 @@ impl Engine for NativeEngine {
             for (xi, fi) in x.iter_mut().zip(&ff) {
                 *xi += fi;
             }
+            if let Some(cap) = capture.as_mut() {
+                cap.push(x.clone());
+            }
         }
         drop(mv);
         cache.push_token(token);
         self.logits_for(&x)
+    }
+}
+
+impl Engine for NativeEngine {
+    fn config(&self) -> &ModelConfig {
+        self.cfg()
+    }
+
+    fn reset(&self) {
+        // A panic while a scratch lock was held poisons it; both locks
+        // hold plain staging buffers with no cross-call invariants, so
+        // recovery is: un-poison, then restore the pristine (empty)
+        // state rather than trust buffers a forward pass died in.
+        self.scratch.clear_poison();
+        *self.scratch.lock().expect("just cleared") = MatvecScratch::new();
+        self.batch_scratch.clear_poison();
+        *self.batch_scratch.lock().expect("just cleared") = BatchScratch::default();
+    }
+
+    fn decode_step(&self, cache: &mut dyn KvStore, token: u32) -> Vec<f32> {
+        self.decode_step_at(cache, token, self.act_quant, None)
+    }
+
+    fn audit_weights(&self) -> AuditReport {
+        match &self.weights {
+            Weights::Dense(_) => AuditReport::empty("dense"),
+            Weights::Quant(m) => m.audit(),
+        }
+    }
+
+    /// Replay `tokens` twice through [`NativeEngine::decode_step_at`] in
+    /// fresh [`KvCache`]s — once on the production path (`self.act_quant`
+    /// routing, so the probe shadows exactly what serving runs) and once
+    /// on the f32 reference path — teeing the residual stream at the last
+    /// position. O(len²) attention per replay, which is why the
+    /// coordinator *samples* probes instead of running one per round.
+    fn audit_probe(&self, tokens: &[u32]) -> Option<AuditProbe> {
+        if tokens.is_empty() {
+            return None;
+        }
+        let run = |aq: bool| {
+            let mut cache = KvCache::new(self.cfg());
+            let mut layers = Vec::new();
+            let mut logits = Vec::new();
+            for (i, &t) in tokens.iter().enumerate() {
+                let cap = if i + 1 == tokens.len() { Some(&mut layers) } else { None };
+                logits = self.decode_step_at(&mut cache, t, aq, cap);
+            }
+            (layers, logits)
+        };
+        let (layers_q, logits_quant) = run(self.act_quant);
+        let (layers_r, logits_ref) = run(false);
+        let layer_rel_l2 = layers_q
+            .iter()
+            .zip(&layers_r)
+            .map(|(q, r)| crate::util::stats::rel_l2_err(r, q))
+            .collect();
+        Some(AuditProbe { layer_rel_l2, logits_quant, logits_ref })
     }
 
     /// Fused multi-sequence decode: one forward pass advances every
@@ -815,6 +891,66 @@ mod tests {
             let b = e2.decode_step(&mut c2, t);
             assert_eq!(a, b);
         }
+    }
+
+    #[test]
+    fn audit_weights_walks_every_linear() {
+        let (dense, quant) = engine_pair();
+        let rep = quant.audit_weights();
+        assert!(rep.ok(), "clean q8_0 artifact must audit clean");
+        assert_eq!(rep.tensors.len(), quant.config().n_layers * 7);
+        assert_eq!(rep.fmt, "q8_0");
+        // Dense engines have no packed tensors: trivially clean.
+        let rep_d = dense.audit_weights();
+        assert!(rep_d.ok());
+        assert!(rep_d.tensors.is_empty());
+    }
+
+    #[test]
+    fn audit_probe_measures_drift_without_perturbing_decode() {
+        // Twin engines on the same quantized weights: one is probed
+        // after every decode step, the control never is. Served logits
+        // must stay bitwise identical — the probe runs in fresh caches
+        // and may not touch live state.
+        let cfg = ModelConfig::test();
+        let dense = DenseModel::random(&cfg, 77, Some(5.0));
+        let fmt = format_by_name("itq3_s").unwrap();
+        let probed = NativeEngine::quantized(QuantizedModel::quantize(&dense, fmt.clone()));
+        let control = NativeEngine::quantized(QuantizedModel::quantize(&dense, fmt));
+        let toks = [0u32, 104, 101, 108, 108, 111];
+        let mut c1 = KvCache::new(probed.config());
+        let mut c2 = KvCache::new(control.config());
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        for (i, &t) in toks.iter().enumerate() {
+            a = probed.decode_step(&mut c1, t);
+            let p = probed.audit_probe(&toks[..=i]).expect("native engine has a probe");
+            assert_eq!(p.layer_rel_l2.len(), cfg.n_layers);
+            assert!(
+                p.layer_rel_l2.iter().all(|r| r.is_finite() && *r < 5e-2),
+                "per-layer drift {:?}",
+                p.layer_rel_l2
+            );
+            assert!(p.kl_divergence().is_finite());
+            // The probe's quantized side replays the decode path bit for
+            // bit (same weights, same deterministic kernels).
+            assert_eq!(p.logits_quant, a, "probe replay diverged at step {i}");
+            b = control.decode_step(&mut c2, t);
+        }
+        assert_eq!(a, b, "probing must not change served logits");
+    }
+
+    #[test]
+    fn audit_probe_on_dense_engine_reports_zero_drift() {
+        // No quantized path to drift from: both probe passes run the
+        // same f32 math, so every metric is exactly quiet.
+        let (dense, _) = engine_pair();
+        let p = dense.audit_probe(&[1, 2, 3]).expect("probe runs on dense too");
+        assert!(p.layer_rel_l2.iter().all(|&r| r == 0.0));
+        assert_eq!(p.kl_divergence(), 0.0);
+        assert!(p.top1_agree());
+        assert_eq!(p.max_logit_delta(), 0.0);
+        // Empty history: nothing to probe.
+        assert!(dense.audit_probe(&[]).is_none());
     }
 
     #[test]

@@ -264,6 +264,31 @@ impl QuantizedModel {
         }
     }
 
+    /// Static weight audit: every packed linear through
+    /// [`crate::quant::audit::audit_matrix`], in GGUF tensor-name order
+    /// (`layers.{i}.{wq,wk,wv,wo,w1,w3,w2}` — norms and embeddings stay
+    /// dense and have nothing to audit).
+    pub fn audit(&self) -> crate::quant::audit::AuditReport {
+        let mut tensors = Vec::new();
+        for (i, l) in self.layers.iter().enumerate() {
+            for (suffix, pl) in [
+                ("wq", &l.wq),
+                ("wk", &l.wk),
+                ("wv", &l.wv),
+                ("wo", &l.wo),
+                ("w1", &l.w1),
+                ("w3", &l.w3),
+                ("w2", &l.w2),
+            ] {
+                tensors.push(crate::quant::audit::audit_matrix(
+                    &format!("layers.{i}.{suffix}"),
+                    &pl.lin.w,
+                ));
+            }
+        }
+        crate::quant::audit::AuditReport { fmt: self.fmt_name.clone(), tensors }
+    }
+
     /// Packed bytes of all quantized linears (the Table 1 "Mem" column,
     /// measured rather than modeled).
     pub fn linear_nbytes(&self) -> usize {

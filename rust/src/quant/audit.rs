@@ -1,0 +1,402 @@
+//! Static weight audit — runtime evidence for the paper's Theorem-2
+//! reconstruction claim on the *deployed* artifact, not just on unit-test
+//! blocks (`itq3s audit`, the server's `audit` op, and the load-time
+//! check before a replicated server starts serving).
+//!
+//! At serve time the original f32 weights are gone; the packed blocks
+//! *are* the ground truth. What the audit can and does verify per block:
+//!
+//! 1. **Finiteness** — `dequantize_block` must reconstruct finite
+//!    values. The detectable corruption class for the f16-scaled formats
+//!    is precisely a scale word with an all-ones exponent (`d` or `z`
+//!    becoming ±Inf/NaN), which poisons the whole block and, untrapped,
+//!    every logit downstream.
+//! 2. **Theorem-2 self-consistency** (formats exposing
+//!    [`Format::grid_step`], i.e. the rotated dual-ternary family):
+//!    requantizing the reconstruction ŵ and decoding again must land
+//!    within `thm2_bound_l2sq(ŵ, d₂, n)` — the bound holds for *any*
+//!    finite input block, so a violation means the encode/decode pair
+//!    itself is broken (format mismatch, layout drift, scale corruption
+//!    that survived finiteness).
+//! 3. **Requantization smoke ceiling** (all other formats): the
+//!    round-trip error must not exceed the reconstruction's own norm —
+//!    a generous ceiling that still catches NaN propagation (NaN fails
+//!    every comparison) and runaway scales.
+//!
+//! A flipped *code* bit is undetectable by construction — every bit
+//! pattern in the ternary planes decodes to a legal grid point — which
+//! is exactly why the serve path pairs this static audit with sampled
+//! logit-drift shadow scoring (`--audit-sample-rate`).
+
+use super::{Format, QuantizedMatrix};
+use crate::util::json::Json;
+
+/// Multiplicative slack on the Theorem-2 comparison, absorbing the FWHT
+/// rounding term ε_FWHT — the same idiom the offline bound test uses
+/// (`quant::itq3s::tests::thm2_bound_holds`).
+const THM2_SLACK: f64 = 1.01;
+
+/// Audit verdict for one quantized tensor.
+pub struct TensorAudit {
+    /// GGUF-style tensor name, e.g. `layers.0.wq`.
+    pub name: String,
+    pub blocks: usize,
+    /// Requantization round-trip error over the whole tensor, relative
+    /// to the reconstruction norm: ‖ŵ₂−ŵ‖₂ / ‖ŵ‖₂.
+    pub rel_l2: f64,
+    /// The audit ceiling in the same normalization (Theorem-2 bound for
+    /// `grid_step` formats, the smoke ceiling of 1.0 otherwise).
+    pub bound_rel_l2: f64,
+    /// `bound_rel_l2 − rel_l2`: how much headroom the artifact has.
+    pub margin: f64,
+    /// Block ordinal (row-major) with the worst err²/bound ratio.
+    pub worst_block: usize,
+    /// That block's err²/bound ratio (≤ 1 on a clean artifact).
+    pub worst_ratio: f64,
+    pub ok: bool,
+    /// Human-readable reason when `!ok` (empty otherwise).
+    pub detail: String,
+}
+
+impl TensorAudit {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("blocks", Json::num(self.blocks as f64)),
+            ("rel_l2", Json::num(self.rel_l2)),
+            ("bound_rel_l2", Json::num(self.bound_rel_l2)),
+            ("margin", Json::num(self.margin)),
+            ("worst_block", Json::num(self.worst_block as f64)),
+            ("worst_ratio", Json::num(self.worst_ratio)),
+            ("ok", Json::Bool(self.ok)),
+            ("detail", Json::str(self.detail.clone())),
+        ])
+    }
+}
+
+/// Whole-model audit report (built by `QuantizedModel::audit` /
+/// `Engine::audit_weights`; rendered by the CLI and the `audit` op).
+pub struct AuditReport {
+    /// Format name, or a marker like `"dense"` for engines with no
+    /// quantized tensors (trivially ok).
+    pub fmt: String,
+    pub tensors: Vec<TensorAudit>,
+}
+
+impl AuditReport {
+    /// Report for an engine with nothing to audit.
+    pub fn empty(fmt: &str) -> Self {
+        AuditReport { fmt: fmt.to_string(), tensors: Vec::new() }
+    }
+
+    pub fn ok(&self) -> bool {
+        self.tensors.iter().all(|t| t.ok)
+    }
+
+    /// Names of the violated tensors (empty on a clean artifact).
+    pub fn violations(&self) -> Vec<&str> {
+        self.tensors.iter().filter(|t| !t.ok).map(|t| t.name.as_str()).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("fmt", Json::str(self.fmt.clone())),
+            ("ok", Json::Bool(self.ok())),
+            ("tensors", Json::Arr(self.tensors.iter().map(|t| t.to_json()).collect())),
+        ])
+    }
+
+    /// Fixed-width per-tensor table for the `itq3s audit` CLI.
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<24} {:>7} {:>10} {:>10} {:>10} {:>11} {:>6}\n",
+            "tensor", "blocks", "rel_l2", "bound", "margin", "worst", "ok"
+        ));
+        for t in &self.tensors {
+            out.push_str(&format!(
+                "{:<24} {:>7} {:>10.3e} {:>10.3e} {:>10.3e} {:>5}:{:<5.2} {:>6}\n",
+                t.name,
+                t.blocks,
+                t.rel_l2,
+                t.bound_rel_l2,
+                t.margin,
+                t.worst_block,
+                t.worst_ratio,
+                if t.ok { "ok" } else { "FAIL" },
+            ));
+            if !t.ok {
+                out.push_str(&format!("  ^ {}\n", t.detail));
+            }
+        }
+        out.push_str(&format!(
+            "[{}] {} tensors, {}\n",
+            self.fmt,
+            self.tensors.len(),
+            if self.ok() { "all within bound".to_string() } else { format!("{} VIOLATED", self.violations().len()) },
+        ));
+        out
+    }
+}
+
+/// Result of one logit-drift shadow probe: the same token history scored
+/// through the quantized decode path and the f32 reference path
+/// (`act_quant = false`), with the per-layer residual stream captured at
+/// the probed position. Built by `Engine::audit_probe`; the drift
+/// summaries below are what the coordinator feeds into the
+/// `audit_logit_kl` / `audit_top1_agree` / `audit_max_logit_delta`
+/// rings.
+pub struct AuditProbe {
+    /// Per-layer rel-L2 between the quantized and reference residual
+    /// streams after each transformer layer (length = `n_layers`) — the
+    /// error-accumulation profile of the probed position.
+    pub layer_rel_l2: Vec<f64>,
+    pub logits_quant: Vec<f32>,
+    pub logits_ref: Vec<f32>,
+}
+
+/// Numerically stable log-softmax in f64 (drift metrics must not add
+/// their own rounding noise to the drift they measure).
+fn log_softmax(xs: &[f32]) -> Vec<f64> {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lse = xs.iter().map(|&x| (x as f64 - m).exp()).sum::<f64>().ln() + m;
+    xs.iter().map(|&x| x as f64 - lse).collect()
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+impl AuditProbe {
+    /// KL(quantized ‖ reference) over the softmaxed logits, in nats.
+    /// Clamped at 0 so f64 rounding can never report a negative
+    /// divergence.
+    pub fn kl_divergence(&self) -> f64 {
+        if self.logits_quant.is_empty() {
+            return 0.0;
+        }
+        let lq = log_softmax(&self.logits_quant);
+        let lr = log_softmax(&self.logits_ref);
+        lq.iter().zip(&lr).map(|(&a, &b)| a.exp() * (a - b)).sum::<f64>().max(0.0)
+    }
+
+    /// Whether greedy decoding would pick the same token on both paths
+    /// (ties break to the lowest index on both sides, so the comparison
+    /// is well defined).
+    pub fn top1_agree(&self) -> bool {
+        self.logits_quant.is_empty() || argmax(&self.logits_quant) == argmax(&self.logits_ref)
+    }
+
+    /// Largest absolute per-logit deviation between the two paths.
+    pub fn max_logit_delta(&self) -> f64 {
+        self.logits_quant
+            .iter()
+            .zip(&self.logits_ref)
+            .map(|(&a, &b)| ((a - b) as f64).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Audit one packed matrix block by block (see the module docs for what
+/// each check proves). `name` is the tensor name carried into the
+/// report.
+pub fn audit_matrix(name: &str, m: &QuantizedMatrix) -> TensorAudit {
+    let fmt: &dyn Format = m.fmt.as_ref();
+    let n = fmt.block_elems();
+    let mut recon = vec![0.0f32; n];
+    let mut recon2 = vec![0.0f32; n];
+    let mut repacked: Vec<u8> = Vec::with_capacity(fmt.block_bytes());
+    let (mut err_sq, mut bound_sq, mut ref_sq) = (0.0f64, 0.0f64, 0.0f64);
+    let (mut worst_block, mut worst_ratio) = (0usize, 0.0f64);
+    let mut detail = String::new();
+    let mut ok = true;
+    for r in 0..m.rows {
+        for b in 0..m.blocks_per_row() {
+            let idx = m.block_idx(r, b);
+            let bytes = m.block_bytes(r, b);
+            fmt.dequantize_block(idx, bytes, &mut recon);
+            let ordinal = r * m.blocks_per_row() + b;
+            if let Some(bad) = recon.iter().find(|v| !v.is_finite()) {
+                if ok {
+                    detail = format!("block {ordinal}: non-finite reconstruction ({bad})");
+                }
+                ok = false;
+                worst_block = ordinal;
+                worst_ratio = f64::INFINITY;
+                continue;
+            }
+            ref_sq += recon.iter().map(|&v| (v as f64).powi(2)).sum::<f64>();
+            repacked.clear();
+            fmt.quantize_block(idx, &recon, &mut repacked);
+            fmt.dequantize_block(idx, &repacked, &mut recon2);
+            let block_err: f64 = recon
+                .iter()
+                .zip(&recon2)
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum();
+            let block_bound = match fmt.grid_step(&repacked) {
+                Some(d2) => {
+                    super::error::thm2_bound_l2sq(&recon, d2 as f64, n) * THM2_SLACK + 1e-9
+                }
+                // Smoke ceiling: round-trip error may not exceed the
+                // signal itself (catches NaN propagation and runaway
+                // scales, nothing subtler).
+                None => recon.iter().map(|&v| (v as f64).powi(2)).sum::<f64>() + 1e-9,
+            };
+            err_sq += block_err;
+            bound_sq += block_bound;
+            let ratio = block_err / block_bound;
+            // A NaN ratio (NaN scale that stayed "finite" through decode
+            // cannot happen, but belt and braces) fails the comparison.
+            if !(block_err <= block_bound) {
+                if ok {
+                    detail = format!(
+                        "block {ordinal}: err²={block_err:.3e} exceeds bound {block_bound:.3e}"
+                    );
+                }
+                ok = false;
+            }
+            if ratio > worst_ratio {
+                worst_ratio = ratio;
+                worst_block = ordinal;
+            }
+        }
+    }
+    let ref_norm = ref_sq.sqrt();
+    let (rel_l2, bound_rel_l2) = if ref_norm > 0.0 {
+        (err_sq.sqrt() / ref_norm, bound_sq.sqrt() / ref_norm)
+    } else {
+        (err_sq.sqrt(), bound_sq.sqrt())
+    };
+    TensorAudit {
+        name: name.to_string(),
+        blocks: m.rows * m.blocks_per_row(),
+        rel_l2,
+        bound_rel_l2,
+        margin: bound_rel_l2 - rel_l2,
+        worst_block,
+        worst_ratio,
+        ok,
+        detail,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::format_by_name;
+    use crate::tensor::Tensor;
+    use crate::util::XorShift;
+
+    fn heavy_matrix(fmt_name: &str, rows: usize, cols: usize, seed: u64) -> QuantizedMatrix {
+        let mut rng = XorShift::new(seed);
+        let mut t = Tensor::zeros(vec![rows, cols]);
+        for x in t.data_mut() {
+            *x = (rng.next_student_t(4.0) as f32) * 0.02;
+        }
+        QuantizedMatrix::quantize(format_by_name(fmt_name).unwrap(), &t)
+    }
+
+    #[test]
+    fn clean_itq3s_matrix_passes_with_margin() {
+        let m = heavy_matrix("itq3_s", 4, 512, 11);
+        let a = audit_matrix("t", &m);
+        assert!(a.ok, "{}", a.detail);
+        assert_eq!(a.blocks, 8);
+        assert!(a.margin > 0.0, "margin {}", a.margin);
+        assert!(a.worst_ratio <= 1.0, "worst {}", a.worst_ratio);
+        assert!(a.rel_l2.is_finite() && a.rel_l2 >= 0.0);
+    }
+
+    #[test]
+    fn clean_fallback_formats_pass_the_smoke_ceiling() {
+        // Formats without a grid_step go through the generic ceiling.
+        for name in ["q8_0", "q4_k_m", "itq3_s_sub", "fp16"] {
+            let m = heavy_matrix(name, 2, 512, 13);
+            let a = audit_matrix("t", &m);
+            assert!(a.ok, "{name}: {}", a.detail);
+        }
+    }
+
+    #[test]
+    fn corrupted_scale_word_is_flagged() {
+        // Force an itq3_s block's stored d to +Inf (f16 0x7C00): the
+        // reconstruction goes non-finite and the audit must name the
+        // block. d sits at byte offset n*3/8 = 96, little-endian.
+        let mut m = heavy_matrix("itq3_s", 2, 512, 17);
+        let bb = m.fmt.block_bytes();
+        let victim = 3; // row 1, block 1 at 512 cols -> ordinal 3
+        m.data[victim * bb + 96] = 0x00;
+        m.data[victim * bb + 97] = 0x7C;
+        let a = audit_matrix("t", &m);
+        assert!(!a.ok);
+        assert_eq!(a.worst_block, victim);
+        assert!(a.worst_ratio.is_infinite());
+        assert!(a.detail.contains("block 3"), "{}", a.detail);
+        // The report machinery agrees.
+        let rep = AuditReport { fmt: "itq3_s".into(), tensors: vec![a] };
+        assert!(!rep.ok());
+        assert_eq!(rep.violations(), vec!["t"]);
+        assert!(rep.render_table().contains("FAIL"));
+        assert_eq!(rep.to_json().get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn probe_drift_metrics() {
+        // Identical logits: zero drift on every metric.
+        let same = AuditProbe {
+            layer_rel_l2: vec![0.0],
+            logits_quant: vec![1.0, 2.0, 3.0],
+            logits_ref: vec![1.0, 2.0, 3.0],
+        };
+        assert_eq!(same.kl_divergence(), 0.0);
+        assert!(same.top1_agree());
+        assert_eq!(same.max_logit_delta(), 0.0);
+
+        // Shifted argmax: KL positive, top-1 disagrees, delta exact.
+        let drift = AuditProbe {
+            layer_rel_l2: vec![0.1],
+            logits_quant: vec![3.0, 2.0, 1.0],
+            logits_ref: vec![1.0, 2.0, 3.0],
+        };
+        assert!(drift.kl_divergence() > 0.1, "kl {}", drift.kl_divergence());
+        assert!(!drift.top1_agree());
+        assert!((drift.max_logit_delta() - 2.0).abs() < 1e-12);
+
+        // A uniform logit shift is softmax-invariant: KL stays ~0 even
+        // though the raw delta is large — the metrics really do measure
+        // the distribution, not the raw vectors.
+        let shifted = AuditProbe {
+            layer_rel_l2: vec![],
+            logits_quant: vec![11.0, 12.0, 13.0],
+            logits_ref: vec![1.0, 2.0, 3.0],
+        };
+        assert!(shifted.kl_divergence() < 1e-9);
+        assert!(shifted.top1_agree());
+        assert!((shifted.max_logit_delta() - 10.0).abs() < 1e-12);
+
+        // Empty probe (engine without shadow support) is all-quiet.
+        let empty = AuditProbe {
+            layer_rel_l2: vec![],
+            logits_quant: vec![],
+            logits_ref: vec![],
+        };
+        assert_eq!(empty.kl_divergence(), 0.0);
+        assert!(empty.top1_agree());
+        assert_eq!(empty.max_logit_delta(), 0.0);
+    }
+
+    #[test]
+    fn empty_report_is_trivially_ok() {
+        let rep = AuditReport::empty("dense");
+        assert!(rep.ok());
+        assert!(rep.violations().is_empty());
+        assert!(rep.render_table().contains("0 tensors"));
+    }
+}

@@ -147,6 +147,11 @@ impl Format for Itq3S {
         true
     }
 
+    fn grid_step(&self, bytes: &[u8]) -> Option<f32> {
+        debug_assert_eq!(bytes.len(), self.block_bytes());
+        Some(read_f16(bytes, self.n * 3 / 8))
+    }
+
     /// Single-pass fused dot: unpack -> LUT -> FMA without materializing
     /// the block (the MMVQ hot loop; paper §5.4). The zero-point term
     /// factors out: `dot = Σ lut[c_i]·x_i + z·Σ x_i`.
@@ -441,6 +446,24 @@ mod tests {
             let bound = thm2_bound_l2sq(&w, d, 256);
             assert!(err_sq <= bound * 1.01 + 1e-9, "err²={err_sq} bound={bound}");
         });
+    }
+
+    #[test]
+    fn grid_step_reads_the_stored_d() {
+        // The weight audit reads `d` back out of packed blocks through
+        // `Format::grid_step`; it must agree with the layout the bound
+        // test above reads by offset. The sub-scale variant opts out
+        // (its per-sub-block refinement voids the single-step bound).
+        let mut rng = XorShift::new(6);
+        let w: Vec<f32> = (0..256).map(|_| rng.next_gaussian() as f32 * 0.02).collect();
+        let fmt = Itq3S::new(256);
+        let mut bytes = Vec::new();
+        fmt.quantize_block(0, &w, &mut bytes);
+        assert_eq!(fmt.grid_step(&bytes), Some(read_f16(&bytes, 96)));
+        assert!(fmt.grid_step(&bytes).unwrap() > 0.0);
+        let mut sub_bytes = Vec::new();
+        Itq3SSub::new().quantize_block(0, &w, &mut sub_bytes);
+        assert_eq!(Format::grid_step(&Itq3SSub::new(), &sub_bytes), None);
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! handled by [`pad_cols`]).
 
 pub mod act;
+pub mod audit;
 pub mod error;
 pub mod fp16q;
 pub mod iq3s;
@@ -177,6 +178,16 @@ pub trait Format: Send + Sync {
     /// Effective bits per weight, including metadata.
     fn bits_per_weight(&self) -> f64 {
         self.block_bytes() as f64 * 8.0 / self.block_elems() as f64
+    }
+
+    /// Grid step `d` stored in one packed block, for formats whose
+    /// reconstruction error is governed by the paper's Theorem-2 bound
+    /// (the rotated dual-ternary family). `None` for formats without a
+    /// single per-block step — the weight audit (`quant::audit`) then
+    /// falls back to a generic requantization-consistency check instead
+    /// of the analytic bound.
+    fn grid_step(&self, _bytes: &[u8]) -> Option<f32> {
+        None
     }
 }
 

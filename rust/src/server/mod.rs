@@ -225,6 +225,51 @@ fn handle_conn(
                 // loop, so it answers even when the engine is wedged.
                 send(&mut stream, &Json::obj(vec![("events", coord.dump())]))?;
             }
+            "audit" => {
+                // Static weight audit: per-tensor reconstruction error
+                // vs the Theorem-2 bound. A clean artifact answers with
+                // the report; a violated one answers with a typed error
+                // naming the offending tensors, the full report riding
+                // along for forensics.
+                match coord.audit() {
+                    Ok(rep) => {
+                        let ok = rep.get("ok").and_then(|b| b.as_bool()).unwrap_or(false);
+                        if ok {
+                            send(&mut stream, &Json::obj(vec![("audit", rep)]))?;
+                        } else {
+                            let bad: Vec<&str> = rep
+                                .get("tensors")
+                                .and_then(|t| t.as_arr())
+                                .map(|ts| {
+                                    ts.iter()
+                                        .filter(|t| {
+                                            t.get("ok").and_then(|b| b.as_bool())
+                                                == Some(false)
+                                        })
+                                        .filter_map(|t| {
+                                            t.get("name").and_then(|n| n.as_str())
+                                        })
+                                        .collect()
+                                })
+                                .unwrap_or_default();
+                            let err = ServeError::BadRequest(format!(
+                                "weight audit failed: [{}] violate the Theorem-2 \
+                                 reconstruction bound",
+                                bad.join(", ")
+                            ));
+                            let mut j = err.to_json();
+                            if let Json::Obj(m) = &mut j {
+                                m.insert("audit".into(), rep);
+                            }
+                            send(&mut stream, &j)?;
+                        }
+                    }
+                    Err(e) => send(
+                        &mut stream,
+                        &ServeError::EngineFailure(e.to_string()).to_json(),
+                    )?,
+                }
+            }
             "metrics" => {
                 // Prometheus text exposition, carried as one string in
                 // the line-framed JSON envelope (the transport is JSON
@@ -491,6 +536,43 @@ mod tests {
         assert!(text.contains("itq3s_requests_finished_total 2"), "{text}");
         assert!(text.contains("# TYPE itq3s_ttft_ms_hist histogram"), "{text}");
 
+        c.send(&Json::obj(vec![("op", Json::str("shutdown"))])).unwrap();
+        let _ = c.recv();
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn audit_op_reports_clean_quantized_weights() {
+        let cfg = ModelConfig::test();
+        let dense = DenseModel::random(&cfg, 5, None);
+        let q = crate::model::QuantizedModel::quantize(
+            &dense,
+            crate::quant::format_by_name("itq3_s").unwrap(),
+        );
+        let (addr, handle) = spawn_ephemeral(
+            Box::new(NativeEngine::quantized(q)),
+            CoordinatorConfig {
+                max_batch: 2,
+                kv_budget_bytes: 64 << 20,
+                prefill_chunk: 16,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        c.send(&Json::obj(vec![("op", Json::str("audit"))])).unwrap();
+        let rep = c.recv().unwrap();
+        let audit = rep.get("audit").expect("clean artifact answers with the report");
+        assert_eq!(audit.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(audit.get("fmt").unwrap().as_str(), Some("itq3_s"));
+        let tensors = audit.get("tensors").unwrap().as_arr().unwrap();
+        assert_eq!(tensors.len(), cfg.n_layers * 7);
+        for t in tensors {
+            assert!(
+                t.get("margin").unwrap().as_f64().unwrap() > 0.0,
+                "clean tensors pass with headroom: {t}"
+            );
+        }
         c.send(&Json::obj(vec![("op", Json::str("shutdown"))])).unwrap();
         let _ = c.recv();
         handle.join().unwrap().unwrap();

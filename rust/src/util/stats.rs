@@ -69,15 +69,26 @@ pub fn mse(a: &[f32], b: &[f32]) -> f64 {
 }
 
 /// Relative ℓ2 reconstruction error ‖a−b‖₂ / ‖a‖₂.
+///
+/// A zero-norm `reference` has no meaningful relative error: dividing
+/// by the old `1e-30` clamp turned any nonzero `approx` into a ~1e30
+/// garbage value that would poison an audit ring the same way the
+/// pre-`total_cmp` percentile NaN did. Instead the absolute difference
+/// norm is returned in that case (0 when both sides are zero), so the
+/// result is always finite and never NaN.
 pub fn rel_l2_err(reference: &[f32], approx: &[f32]) -> f64 {
-    let denom = l2(reference).max(1e-30);
+    let denom = l2(reference);
     let num = reference
         .iter()
         .zip(approx)
         .map(|(&x, &y)| ((x - y) as f64).powi(2))
         .sum::<f64>()
         .sqrt();
-    num / denom
+    if denom == 0.0 {
+        num
+    } else {
+        num / denom
+    }
 }
 
 /// Percentile over a pre-sorted-or-not sample (nearest-rank, p in [0,100]).
@@ -417,6 +428,21 @@ mod tests {
         assert_eq!(rel_l2_err(&a, &b), 0.0);
         let c = [1.0f32, 2.0, 4.0];
         assert!((mse(&a, &c) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_l2_err_zero_norm_reference_is_finite() {
+        // Regression: an all-zero reference divided by the 1e-30 clamp
+        // used to yield ~1e30 garbage (and NaN once squared into a
+        // Welford accumulator). Zero-norm now means absolute error.
+        let z = [0.0f32; 4];
+        let y = [3.0f32, 0.0, -4.0, 0.0];
+        assert_eq!(rel_l2_err(&z, &z), 0.0);
+        let e = rel_l2_err(&z, &y);
+        assert!((e - 5.0).abs() < 1e-12, "absolute diff norm, got {e}");
+        assert!(e.is_finite() && !e.is_nan());
+        // Normal path unchanged.
+        assert!((rel_l2_err(&y, &z) - 1.0).abs() < 1e-12);
     }
 
     #[test]

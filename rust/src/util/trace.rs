@@ -114,6 +114,10 @@ pub struct RequestTrace {
     prefill_rounds: u64,
     decode_rounds: u64,
     spec_rounds: u64,
+    audit_rounds: u64,
+    audit_kl_max: f64,
+    audit_max_logit_delta: f64,
+    audit_top1_disagreements: u64,
 }
 
 impl RequestTrace {
@@ -133,6 +137,10 @@ impl RequestTrace {
             prefill_rounds: 0,
             decode_rounds: 0,
             spec_rounds: 0,
+            audit_rounds: 0,
+            audit_kl_max: 0.0,
+            audit_max_logit_delta: 0.0,
+            audit_top1_disagreements: 0,
         };
         t.record(TraceEventKind::Queued);
         t
@@ -177,12 +185,25 @@ impl RequestTrace {
         self.decode_ms += ms;
     }
 
+    /// Fold one numerics-audit shadow probe that sampled this request
+    /// into the trace (PR 9). The `timing` object grows an `audit`
+    /// section once at least one probe landed; un-audited requests are
+    /// byte-identical to their pre-PR-9 shape.
+    pub fn note_audit(&mut self, kl: f64, top1_agree: bool, max_logit_delta: f64) {
+        self.audit_rounds += 1;
+        self.audit_kl_max = self.audit_kl_max.max(kl);
+        self.audit_max_logit_delta = self.audit_max_logit_delta.max(max_logit_delta);
+        if !top1_agree {
+            self.audit_top1_disagreements += 1;
+        }
+    }
+
     /// The `timing` object carried by the terminal line. Queue time
     /// still accruing (terminal reached while queued) is included.
     pub fn timing_json(&self) -> Json {
         let queue_ms =
             self.queue_ms + self.queued_at.map_or(0.0, |q| q.elapsed().as_secs_f64() * 1e3);
-        Json::obj(vec![
+        let mut fields = vec![
             ("queue_ms", Json::num(round3(queue_ms))),
             ("prefill_ms", Json::num(round3(self.prefill_ms))),
             ("decode_ms", Json::num(round3(self.decode_ms))),
@@ -191,7 +212,22 @@ impl RequestTrace {
             ("prefill_rounds", Json::num(self.prefill_rounds as f64)),
             ("decode_rounds", Json::num(self.decode_rounds as f64)),
             ("spec_rounds", Json::num(self.spec_rounds as f64)),
-        ])
+        ];
+        if self.audit_rounds > 0 {
+            fields.push((
+                "audit",
+                Json::obj(vec![
+                    ("rounds", Json::num(self.audit_rounds as f64)),
+                    ("kl_max", Json::num(self.audit_kl_max)),
+                    ("max_logit_delta", Json::num(self.audit_max_logit_delta)),
+                    (
+                        "top1_disagreements",
+                        Json::num(self.audit_top1_disagreements as f64),
+                    ),
+                ]),
+            ));
+        }
+        Json::obj(fields)
     }
 
     /// Render the full timeline (for the `trace` op); `reason` is the
@@ -330,6 +366,23 @@ mod tests {
             assert!(at >= prev);
             prev = at;
         }
+    }
+
+    #[test]
+    fn audit_section_appears_only_after_a_probe() {
+        let mut t = RequestTrace::new(9);
+        assert!(
+            t.timing_json().get("audit").is_none(),
+            "un-audited requests keep the pre-audit timing shape"
+        );
+        t.note_audit(0.01, true, 0.5);
+        t.note_audit(0.25, false, 0.125);
+        let timing = t.timing_json();
+        let audit = timing.get("audit").expect("audit section after probes");
+        assert_eq!(audit.get("rounds").unwrap().as_u64(), Some(2));
+        assert_eq!(audit.get("kl_max").unwrap().as_f64(), Some(0.25));
+        assert_eq!(audit.get("max_logit_delta").unwrap().as_f64(), Some(0.5));
+        assert_eq!(audit.get("top1_disagreements").unwrap().as_u64(), Some(1));
     }
 
     #[test]

@@ -48,8 +48,9 @@ fn collect_all(rxs: Vec<std::sync::mpsc::Receiver<Event>>) -> Vec<(String, usize
 }
 
 /// A mixed greedy/sampled workload (fixed seeds) through an N-replica
-/// coordinator; `spec_draft` switches speculative decoding on.
-fn run_workload(n: usize, spec_draft: usize) -> Vec<(String, usize)> {
+/// coordinator; `spec_draft` switches speculative decoding on and
+/// `audit_rate` switches sampled logit-drift shadow scoring on.
+fn run_workload(n: usize, spec_draft: usize, audit_rate: f64) -> Vec<(String, usize)> {
     let c = replicated(
         n,
         CoordinatorConfig {
@@ -57,6 +58,7 @@ fn run_workload(n: usize, spec_draft: usize) -> Vec<(String, usize)> {
             kv_budget_bytes: 64 << 20,
             prefill_chunk: 8,
             spec_draft_len: spec_draft,
+            audit_sample_rate: audit_rate,
             ..Default::default()
         },
     );
@@ -83,16 +85,68 @@ fn replica_count_is_invisible_in_the_token_streams() {
     // N=2 and N=4 must stream the same text per request across greedy,
     // sampled, and speculative decoding.
     for spec_draft in [0usize, 4] {
-        let want = run_workload(1, spec_draft);
+        let want = run_workload(1, spec_draft, 0.0);
         assert_eq!(want.len(), 6);
         for n in [2usize, 4] {
-            let got = run_workload(n, spec_draft);
+            let got = run_workload(n, spec_draft, 0.0);
             assert_eq!(
                 got, want,
                 "replicas={n} spec_draft={spec_draft}: token streams diverged from N=1"
             );
         }
     }
+}
+
+#[test]
+fn audit_sampling_is_invisible_in_the_token_streams() {
+    // Audit-off (rate 0.0, the default) must reproduce the pre-audit
+    // baseline byte for byte, and audit-on (rate 1.0 — every decode
+    // round shadow-scored) must too: the probe replays histories on
+    // fresh scratch KV with its own schedule RNG, never touching a
+    // sampler. Both across N∈{1, 2} replicas.
+    let baseline = run_workload(1, 0, 0.0);
+    assert_eq!(baseline.len(), 6);
+    for n in [1usize, 2] {
+        assert_eq!(
+            run_workload(n, 0, 0.0),
+            baseline,
+            "replicas={n}: audit-off streams diverged from the baseline"
+        );
+        assert_eq!(
+            run_workload(n, 0, 1.0),
+            baseline,
+            "replicas={n}: audit-on streams diverged — the shadow probe leaked state"
+        );
+    }
+
+    // And audit-on really probes: the merged stats of a replicated
+    // audited run accumulate shadow rounds from the replica shards.
+    let c = replicated(
+        2,
+        CoordinatorConfig {
+            max_batch: 2,
+            kv_budget_bytes: 64 << 20,
+            prefill_chunk: 8,
+            audit_sample_rate: 1.0,
+            ..Default::default()
+        },
+    );
+    let rxs: Vec<_> = (0..4)
+        .map(|i| {
+            c.generate(GenRequest {
+                prompt: format!("audited workload {i}"),
+                max_new_tokens: 6,
+                ..Default::default()
+            })
+        })
+        .collect();
+    collect_all(rxs);
+    let stats = c.stats().unwrap();
+    assert!(
+        stats.get("audit_rounds").unwrap().as_u64().unwrap() >= 1,
+        "rate 1.0 must record shadow probes"
+    );
+    c.shutdown();
 }
 
 /// Fish the completed timeline with `id` out of the `trace` op result.
