@@ -17,6 +17,7 @@ use itq3s::model::{
 };
 use itq3s::quant::format_by_name;
 use itq3s::quant::matmul::{MatvecScratch, QuantizedLinear};
+use itq3s::quant::simd;
 use itq3s::tensor::Tensor;
 use itq3s::util::json::Json;
 use itq3s::util::XorShift;
@@ -26,6 +27,8 @@ const BATCHES: [usize; 4] = [1, 4, 8, 16];
 
 fn main() {
     let mut report: BTreeMap<String, Json> = BTreeMap::new();
+    println!("simd tier: {}", simd::active_tier().name());
+    report.insert("simd_tier".to_string(), Json::str(simd::active_tier().name()));
 
     // --- 1. kernel level: fused GEMM vs per-row matvec loop ----------
     let (rows, cols) = (1024usize, 2048usize);
@@ -56,14 +59,22 @@ fn main() {
             let r_gemm = bench("gemm", 1, 5, || {
                 lin.gemm_q8(&x, b, &mut y, &mut scratch, 1);
             });
+            // Same GEMM with dispatch pinned to the scalar oracle — the
+            // per-batch SIMD speedup on bit-identical outputs.
+            simd::set_enabled(false);
+            let r_scalar = bench("gemm scalar", 1, 5, || {
+                lin.gemm_q8(&x, b, &mut y, &mut scratch, 1);
+            });
+            simd::set_enabled(true);
             let tps = b as f64 / r_gemm.mean_s;
             if b == 1 {
                 base_tps = tps;
             }
             let speedup = r_loop.mean_s / r_gemm.mean_s;
+            let simd_speedup = r_scalar.mean_s / r_gemm.mean_s;
             println!(
                 "kernel {fmt_name:<7} {rows}x{cols} B={b:<2} {:>9.1} matvec-eq/s  \
-                 ({speedup:.2}x vs per-row matvec loop)",
+                 ({speedup:.2}x vs per-row matvec loop, {simd_speedup:.2}x vs scalar)",
                 tps
             );
             per_fmt.insert(
@@ -71,6 +82,8 @@ fn main() {
                 Json::obj(vec![
                     ("matvecs_per_s", Json::num(tps)),
                     ("speedup_vs_matvec_loop", Json::num(speedup)),
+                    ("scalar_matvecs_per_s", Json::num(b as f64 / r_scalar.mean_s)),
+                    ("simd_speedup_vs_scalar", Json::num(simd_speedup)),
                     ("scaling_vs_b1", Json::num(if base_tps > 0.0 { tps / base_tps } else { 0.0 })),
                 ]),
             );

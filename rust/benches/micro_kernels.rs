@@ -6,6 +6,7 @@
 use itq3s::bench::harness::bench;
 use itq3s::quant::format_by_name;
 use itq3s::quant::matmul::{MatvecScratch, QuantizedLinear};
+use itq3s::quant::simd;
 use itq3s::tensor::Tensor;
 use itq3s::util::json::Json;
 use itq3s::util::XorShift;
@@ -14,6 +15,8 @@ use std::collections::BTreeMap;
 fn main() {
     let mut rng = XorShift::new(1);
     let mut report: BTreeMap<String, Json> = BTreeMap::new();
+    println!("simd tier: {}", simd::active_tier().name());
+    report.insert("simd_tier".to_string(), Json::str(simd::active_tier().name()));
 
     // --- FWHT variants ----------------------------------------------
     let mut block = [0.0f32; 256];
@@ -57,25 +60,37 @@ fn main() {
         let rq = bench("q8", 3, 10, || {
             lin.matvec_q8(std::hint::black_box(&x), &mut y, &mut scratch, 1);
         });
+        // Same kernel with dispatch pinned to the scalar oracle — the
+        // SIMD speedup is q8_scalar/q8 on identical inputs (bit-identical
+        // outputs, so the ratio is pure throughput).
+        simd::set_enabled(false);
+        let rqs = bench("q8 scalar", 3, 10, || {
+            lin.matvec_q8(std::hint::black_box(&x), &mut y, &mut scratch, 1);
+        });
+        simd::set_enabled(true);
         let rn = bench("naive", 3, 10, || {
             lin.matvec_naive(std::hint::black_box(&x), &mut y);
         });
         println!(
-            "matvec {name:<8} f32 {:>7.1} us ({:>6.2} GMAC/s)   q8 {:>7.1} us ({:>6.2} GMAC/s)   naive {:>7.1} us   q8-vs-f32 {:.2}x",
+            "matvec {name:<8} f32 {:>7.1} us ({:>6.2} GMAC/s)   q8 {:>7.1} us ({:>6.2} GMAC/s)   q8-scalar {:>7.1} us   naive {:>7.1} us   q8-vs-f32 {:.2}x   simd {:.2}x",
             rf.mean_s * 1e6,
             macs / rf.mean_s / 1e9,
             rq.mean_s * 1e6,
             macs / rq.mean_s / 1e9,
+            rqs.mean_s * 1e6,
             rn.mean_s * 1e6,
-            rf.mean_s / rq.mean_s
+            rf.mean_s / rq.mean_s,
+            rqs.mean_s / rq.mean_s
         );
         formats_json.insert(
             name.to_string(),
             Json::obj(vec![
                 ("fused_f32_us", Json::num(rf.mean_s * 1e6)),
                 ("q8_us", Json::num(rq.mean_s * 1e6)),
+                ("q8_scalar_us", Json::num(rqs.mean_s * 1e6)),
                 ("naive_us", Json::num(rn.mean_s * 1e6)),
                 ("q8_speedup_vs_f32", Json::num(rf.mean_s / rq.mean_s)),
+                ("simd_speedup", Json::num(rqs.mean_s / rq.mean_s)),
                 ("fused_speedup_vs_naive", Json::num(rn.mean_s / rf.mean_s)),
             ]),
         );

@@ -18,7 +18,10 @@
 //!                   [--audit-sample-rate R] [--audit-drift-warn KL]
 //!
 //! Every subcommand accepts `--log-level off|error|warn|info|debug`
-//! (default info) controlling the structured stderr logger.
+//! (default info) controlling the structured stderr logger, and
+//! `--no-simd` pinning the integer kernels to the scalar tier (the
+//! `ITQ3S_NO_SIMD` env var does the same and wins over the flag; both
+//! are A/B switches — all tiers are bit-identical by contract).
 //! itq3s table1|table2|table3                       paper-table harnesses
 //! itq3s e2e                                        end-to-end pipeline check
 //! ```
@@ -63,6 +66,9 @@ fn main() -> Result<()> {
         let level = itq3s::util::log::Level::parse(lvl)
             .with_context(|| format!("unknown --log-level '{lvl}' (off|error|warn|info|debug)"))?;
         itq3s::util::log::set_level(level);
+    }
+    if flags.get("no-simd").map(|v| v != "false").unwrap_or(false) {
+        itq3s::quant::simd::set_enabled(false);
     }
     match cmd.as_str() {
         "gen-corpus" => gen_corpus(&flags),
@@ -259,7 +265,7 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         ..Default::default()
     };
     println!(
-        "serving {} on {addr} [{engine} x{replicas}] (kv: {} budget, {}-token blocks, {}; spec: {})",
+        "serving {} on {addr} [{engine} x{replicas}] (kv: {} budget, {}-token blocks, {}; spec: {}; kernels: {})",
         model.display(),
         itq3s::util::human_bytes(cfg.kv_budget_bytes as u64),
         cfg.kv_block_tokens,
@@ -269,6 +275,7 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         } else {
             format!("{spec_drafter_name} x{spec_draft_len}")
         },
+        itq3s::quant::simd::active_tier().name(),
     );
     itq3s::server::run_replicated(&addr, engines, cfg)
 }

@@ -397,10 +397,17 @@ mod tests {
                 let x: Vec<f32> =
                     (0..batch * cols).map(|_| rng.next_f32() - 0.5).collect();
                 let mut y = vec![0.0f32; batch * 9];
+                // NaN-poison the staging buffers (including the padding
+                // region x_pad re-stages) before every call: a kernel
+                // lane reading past the logical row end would drag NaN
+                // into the output and fail the bitwise compare below.
+                scratch.poison();
                 pl.matmul_q8(&x, batch, &mut y, &mut scratch);
                 for t in 0..batch {
                     let mut yt = vec![0.0f32; 9];
+                    scratch.poison();
                     pl.matvec_q8(&x[t * cols..(t + 1) * cols], &mut yt, &mut scratch);
+                    assert!(yt.iter().all(|v| v.is_finite()), "poison leaked");
                     assert_eq!(
                         &y[t * 9..(t + 1) * 9],
                         &yt[..],

@@ -255,6 +255,12 @@ pub fn quantize_block_q8(x: &[f32], codes: &mut [i8]) -> (f32, i32) {
 
 /// i8·i8 → i32 dot product, 4-way split accumulators (autovectorizes to
 /// the widening multiply-add SIMD pattern — the DP4A analog).
+///
+/// This is the **scalar oracle** of the runtime-dispatched SIMD tiers in
+/// [`super::simd`]: the explicit AVX2/NEON kernels are required to match
+/// it bit-for-bit (i32 sums are regrouping-invariant), and
+/// `tests/simd_parity.rs` enforces that differentially. Keep this body
+/// as-is — changing it redefines the contract for every tier.
 #[inline]
 pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
     debug_assert_eq!(a.len(), b.len());

@@ -125,8 +125,12 @@ impl Format for Iq3S {
     /// W3A8 integer fused dot: same ternary-level unpack as ITQ3_S but
     /// with the per-sub-block scale applied at the i32→f32 boundary of
     /// each 32-element sub-block; the global zero-point term reuses the
-    /// precomputed activation code sum. |acc| ≤ 32·3·127 ≈ 1.2e4 per
-    /// sub-block: no overflow.
+    /// precomputed activation code sum. Levels are unpacked once into
+    /// an aligned i8 block and each sub-block runs through the
+    /// runtime-dispatched [`super::simd::dot_i8`] — the i32 sub-sums
+    /// and the f32 combination order match the original inline loop
+    /// exactly (integer sums are regrouping-invariant).
+    /// |acc| ≤ 32·3·127 ≈ 1.2e4 per sub-block: no overflow.
     fn dot_block_q8(
         &self,
         _idx: u64,
@@ -139,24 +143,16 @@ impl Format for Iq3S {
         debug_assert_eq!(act.codes.len(), n);
         let planes = n * 3 / 8;
         let z = read_f16(bytes, planes);
-        let base = &bytes[..n / 4];
-        let sel = &bytes[n / 4..planes];
-        const LUT: [i8; 8] = [-1, 0, 1, 0, -3, 0, 3, 0];
-        let gsub = self.sub / 8;
+        let mut lv = crate::util::align::AlignedBlockI8::zeroed();
+        let lv = &mut lv.0[..n];
+        ternary::unpack_dual_ternary_levels(&bytes[..n / 4], &bytes[n / 4..planes], lv);
         let mut total = 0.0f32;
         for s in 0..self.nsub() {
             let ds = read_f16(bytes, planes + 2 + 2 * s);
-            let mut acc = 0i32;
-            for g in 0..gsub {
-                let gi = s * gsub + g;
-                let codes = u16::from_le_bytes([base[2 * gi], base[2 * gi + 1]]) as usize;
-                let sb = sel[gi] as usize;
-                let xs = &act.codes[gi * 8..gi * 8 + 8];
-                for (j, &xj) in xs.iter().enumerate() {
-                    let idx = ((codes >> (2 * j)) & 3) | (((sb >> j) & 1) << 2);
-                    acc += LUT[idx] as i32 * xj as i32;
-                }
-            }
+            let acc = super::simd::dot_i8(
+                &lv[s * self.sub..(s + 1) * self.sub],
+                &act.codes[s * self.sub..(s + 1) * self.sub],
+            );
             total += ds * acc as f32;
         }
         (total + z * act.sum as f32) * act.scale
@@ -182,8 +178,8 @@ impl Format for Iq3S {
         debug_assert_eq!(y.len(), acts.cols());
         let planes = n * 3 / 8;
         let z = read_f16(bytes, planes);
-        let mut lv = [0i8; 512];
-        let lv = &mut lv[..n];
+        let mut lv = crate::util::align::AlignedBlockI8::zeroed();
+        let lv = &mut lv.0[..n];
         ternary::unpack_dual_ternary_levels(&bytes[..n / 4], &bytes[n / 4..planes], lv);
         let mut ds = [0.0f32; 16];
         let nsub = self.nsub();
@@ -194,7 +190,7 @@ impl Format for Iq3S {
             let ab = acts.col(t);
             let mut total = 0.0f32;
             for s in 0..nsub {
-                let acc = super::act::dot_i8(
+                let acc = super::simd::dot_i8(
                     &lv[s * self.sub..(s + 1) * self.sub],
                     &ab.codes[s * self.sub..(s + 1) * self.sub],
                 );

@@ -195,8 +195,9 @@ impl Format for Itq3S {
     /// multiply-accumulate in i32 against the i8 activation codes; the
     /// grid step `d` and activation scale fold into one final f32
     /// multiply, and the zero-point term reuses the precomputed code
-    /// sum. Two phases — scalar unpack into an i8 register block, then
-    /// [`super::act::dot_i8`] — so the MAC loop autovectorizes.
+    /// sum. Two phases — scalar unpack into an aligned i8 block, then
+    /// the runtime-dispatched [`super::simd::dot_i8`] (scalar tier =
+    /// [`super::act::dot_i8`] verbatim; all tiers bit-identical).
     /// Worst-case |acc| = n·3·127·127 ≈ 2.5e7 at n=512: no i32 overflow.
     fn dot_block_q8(
         &self,
@@ -210,10 +211,10 @@ impl Format for Itq3S {
         debug_assert_eq!(act.codes.len(), n);
         let d = read_f16(bytes, n * 3 / 8);
         let z = read_f16(bytes, n * 3 / 8 + 2);
-        let mut lv = [0i8; 512];
-        let lv = &mut lv[..n];
+        let mut lv = crate::util::align::AlignedBlockI8::zeroed();
+        let lv = &mut lv.0[..n];
         ternary::unpack_dual_ternary_levels(&bytes[..n / 4], &bytes[n / 4..n * 3 / 8], lv);
-        let acc = super::act::dot_i8(lv, act.codes);
+        let acc = super::simd::dot_i8(lv, act.codes);
         acc as f32 * (d * act.scale) + z * (act.scale * act.sum as f32)
     }
 
@@ -237,12 +238,12 @@ impl Format for Itq3S {
         debug_assert_eq!(y.len(), acts.cols());
         let d = read_f16(bytes, n * 3 / 8);
         let z = read_f16(bytes, n * 3 / 8 + 2);
-        let mut lv = [0i8; 512];
-        let lv = &mut lv[..n];
+        let mut lv = crate::util::align::AlignedBlockI8::zeroed();
+        let lv = &mut lv.0[..n];
         ternary::unpack_dual_ternary_levels(&bytes[..n / 4], &bytes[n / 4..n * 3 / 8], lv);
         for (t, yo) in y.iter_mut().enumerate() {
             let ab = acts.col(t);
-            let acc = super::act::dot_i8(lv, ab.codes);
+            let acc = super::simd::dot_i8(lv, ab.codes);
             *yo += acc as f32 * (d * ab.scale) + z * (ab.scale * ab.sum as f32);
         }
     }

@@ -74,6 +74,29 @@ impl MatvecScratch {
     pub fn new() -> Self {
         MatvecScratch::default()
     }
+
+    /// Poison every f32 staging buffer — live contents *and* spare
+    /// `Vec` capacity — with NaN. The differential harness calls this
+    /// between runs so that any kernel lane reading past the logical
+    /// end of a staged buffer (e.g. a SIMD tail overrunning the
+    /// zero-padded region a `PaddedLinear` stages into `x_pad`) drags a
+    /// NaN into the output instead of silently consuming stale zeros.
+    /// Every consumer of these buffers clears/overwrites the region it
+    /// reads before use, so poisoning is invisible to correct kernels.
+    pub fn poison(&mut self) {
+        fn p(v: &mut Vec<f32>) {
+            let len = v.len();
+            v.resize(v.capacity(), 0.0);
+            for x in v.iter_mut() {
+                *x = f32::NAN;
+            }
+            v.truncate(len);
+        }
+        p(&mut self.x_rot);
+        p(&mut self.x_pad);
+        p(&mut self.yt);
+        p(&mut self.tmp);
+    }
 }
 
 /// Dot product with 4-way accumulator splitting (helps the autovectorizer
@@ -460,21 +483,30 @@ impl QuantizedLinear {
 mod tests {
     use super::*;
     use crate::quant::format_by_name;
-    use crate::util::prop::forall;
+    use crate::util::prop::{forall, forall_kernel_cases, heavy_tailed_tensor};
     use crate::util::{stats, XorShift};
 
+    // dof=5 keeps the exact RNG stream these tests' tolerances were
+    // calibrated on (previously a local generator; now the shared one
+    // in util::prop).
     fn test_weight(rows: usize, cols: usize, seed: u64) -> Tensor {
-        let mut rng = XorShift::new(seed);
-        let mut t = Tensor::zeros(vec![rows, cols]);
-        for x in t.data_mut() {
-            *x = (rng.next_student_t(5.0) as f32) * 0.02;
-        }
-        t
+        heavy_tailed_tensor(rows, cols, seed, 5.0)
     }
 
     /// Tolerance of the W3A8 path vs the fused f32 path, per format.
-    /// The only error source is int8 activation resolution (~0.5% per
-    /// dot on rotated/Gaussianized blocks), so these are generous.
+    ///
+    /// Derivation (by inspection — ROADMAP's statistical-triage item):
+    /// the only error source the W3A8 path adds over the fused f32 path
+    /// is int8 activation resolution. Per block, codes round within
+    /// ±0.5·(amax/127), so the activation's relative L2 error is about
+    /// `(amax/254)·√n / ‖x‖₂ ≈ √3/254 ≈ 0.7%` for roughly-uniform
+    /// blocks (‖x‖₂ ≈ amax·√(n/3)); heavy-tailed blocks concentrate
+    /// mass in few coordinates and land *below* that. A matvec row
+    /// inherits ~0.7% amplified by cancellation in the weight row —
+    /// empirically ≤ 2-3× on these fixtures. Budgets are that estimate
+    /// with ~3× headroom: 2% where weights are near-lossless (the
+    /// activation term dominates), 3% for the 4-bit formats (weight
+    /// error adds cancellation), 5% for the 3-bit formats.
     fn w3a8_tol(name: &str) -> f64 {
         match name {
             "fp16" | "q8_0" => 0.02,
@@ -535,6 +567,14 @@ mod tests {
     fn prop_w3a8_tracks_f32_on_heavy_tails() {
         // Property form of the parity check: heavy-tailed weights and
         // varied activations, all Table-1 formats, shared scratch.
+        //
+        // Tolerance audit (by inspection): `w3a8_tol` (see its
+        // derivation comment) is a per-*draw* bound with ~3× headroom
+        // over the analytic activation-resolution estimate, and every
+        // draw here is seeded (`forall` runs a fixed deterministic seed
+        // sequence), so this is 12 fixed cases × 8 formats, not a
+        // sampling experiment — no additional multiple-comparison slack
+        // is needed on top of the per-draw headroom.
         forall("W3A8 matches fused f32 per format", 12, |g| {
             let rows = 4;
             let cols = 512;
@@ -621,46 +661,23 @@ mod tests {
         }
     }
 
-    /// Weight blocks that historically break packed kernels: zeros,
-    /// saturating magnitudes, and sign-alternation (maximum cancellation).
-    fn adversarial_weight_blocks(n: usize, rng: &mut XorShift) -> Vec<Vec<f32>> {
-        vec![
-            vec![0.0f32; n],
-            (0..n).map(|i| if i % 2 == 0 { 1.0e3 } else { -1.0e3 }).collect(),
-            (0..n).map(|i| if i % 2 == 0 { 0.05 } else { -0.05 }).collect(),
-            (0..n).map(|_| rng.next_student_t(4.0) as f32 * 0.02).collect(),
-            (0..n).map(|_| rng.next_f32() - 0.5).collect(),
-        ]
-    }
-
-    /// Activation batches with the same adversarial shapes plus randoms.
-    fn adversarial_act_rows(n: usize, rng: &mut XorShift) -> Vec<Vec<f32>> {
-        vec![
-            vec![0.0f32; n],
-            (0..n).map(|i| if i % 2 == 0 { 8.0 } else { -8.0 }).collect(),
-            (0..n).map(|_| rng.next_gaussian() as f32).collect(),
-            (0..n).map(|_| rng.next_f32() - 0.5).collect(),
-            (0..n).map(|_| rng.next_gaussian() as f32 * 1e-3).collect(),
-        ]
-    }
-
     #[test]
     fn gemm_block_q8_increments_match_dot_block_q8_all_formats() {
         // The batched-kernel contract, column by column: for EVERY
         // format (specialized or defaulted), gemm_block_q8's y[t]
         // increment is bit-identical to dot_block_q8 on that column —
-        // on random AND adversarial weight/activation blocks.
-        let mut rng = XorShift::new(51);
+        // driven by the shared seeded kernel fuzz loop (fixed
+        // adversarial shapes first, then seeded randoms; failing seeds
+        // replay via ITQ3S_PROP_SEED).
         let mut formats: Vec<&str> = crate::quant::TABLE1_FORMATS.to_vec();
         formats.push("itq3_s_sub");
         for name in formats {
-            let fmt = format_by_name(name).unwrap();
-            let be = fmt.block_elems();
-            for (wi, w) in adversarial_weight_blocks(be, &mut rng).iter().enumerate() {
-                let idx = wi as u64;
+            let be = format_by_name(name).unwrap().block_elems();
+            let prop = format!("gemm_block_q8 == dot_block_q8 per column [{name}]");
+            forall_kernel_cases(&prop, be, 12, |case, w, rows| {
+                let fmt = format_by_name(name).unwrap();
                 let mut bytes = Vec::new();
-                fmt.quantize_block(idx, w, &mut bytes);
-                let rows = adversarial_act_rows(be, &mut rng);
+                fmt.quantize_block(case, w, &mut bytes);
                 let cols = rows.len();
                 let flat: Vec<f32> = rows.concat();
                 let mut batch = crate::quant::act::QuantizedBatch::new();
@@ -668,18 +685,18 @@ mod tests {
                 let bb = batch.block_at(0);
                 let mut y = vec![0.0f32; cols];
                 let mut tmp = Vec::new();
-                fmt.gemm_block_q8(idx, &bytes, bb, &mut y, &mut tmp);
+                fmt.gemm_block_q8(case, &bytes, bb, &mut y, &mut tmp);
                 for t in 0..cols {
                     let mut tmp2 = Vec::new();
-                    let want = fmt.dot_block_q8(idx, &bytes, bb.col(t), &mut tmp2);
+                    let want = fmt.dot_block_q8(case, &bytes, bb.col(t), &mut tmp2);
                     assert_eq!(
                         y[t].to_bits(),
                         want.to_bits(),
-                        "{name} w-case {wi} col {t}: {} vs {want}",
+                        "{name} case {case} col {t}: {} vs {want}",
                         y[t]
                     );
                 }
-            }
+            });
         }
     }
 
@@ -687,21 +704,22 @@ mod tests {
     fn specialized_q8_kernels_track_generic_fallback() {
         // Differential test: the hand-specialized integer kernels vs the
         // trait-default f32 reconstruction path, on the same packed
-        // bytes — random and adversarial blocks. They compute the same
-        // mathematical value along different float paths, so agreement
-        // is bounded by accumulation error (scaled to the block's
-        // absolute term mass), not bitwise.
-        let mut rng = XorShift::new(52);
+        // bytes — the shared kernel fuzz loop's random and adversarial
+        // blocks. They compute the same mathematical value along
+        // different float paths, so agreement is bounded by accumulation
+        // error (scaled to the block's absolute term mass), not bitwise.
         for name in ["itq3_s", "iq3_s", "q4_k_m", "q8_0"] {
-            let fmt = format_by_name(name).unwrap();
-            assert!(fmt.has_q8_kernel(), "{name} must be specialized");
-            let generic = GenericOnly(fmt.clone());
-            let be = fmt.block_elems();
-            for (wi, w) in adversarial_weight_blocks(be, &mut rng).iter().enumerate() {
-                let idx = wi as u64;
+            assert!(
+                format_by_name(name).unwrap().has_q8_kernel(),
+                "{name} must be specialized"
+            );
+            let be = format_by_name(name).unwrap().block_elems();
+            let prop = format!("specialized q8 kernel tracks generic [{name}]");
+            forall_kernel_cases(&prop, be, 12, |case, w, rows| {
+                let fmt = format_by_name(name).unwrap();
+                let generic = GenericOnly(fmt.clone());
                 let mut bytes = Vec::new();
-                fmt.quantize_block(idx, w, &mut bytes);
-                let rows = adversarial_act_rows(be, &mut rng);
+                fmt.quantize_block(case, w, &mut bytes);
                 let cols = rows.len();
                 let flat: Vec<f32> = rows.concat();
                 let mut batch = crate::quant::act::QuantizedBatch::new();
@@ -710,12 +728,12 @@ mod tests {
                 // Absolute term mass |ŵ|·|x̂| per column bounds the
                 // accumulation-order error of either path.
                 let mut wbuf = vec![0.0f32; be];
-                fmt.dequantize_block_raw(idx, &bytes, &mut wbuf);
+                fmt.dequantize_block_raw(case, &bytes, &mut wbuf);
                 let mut y_spec = vec![0.0f32; cols];
                 let mut y_gen = vec![0.0f32; cols];
                 let mut tmp = Vec::new();
-                fmt.gemm_block_q8(idx, &bytes, bb, &mut y_spec, &mut tmp);
-                generic.gemm_block_q8(idx, &bytes, bb, &mut y_gen, &mut tmp);
+                fmt.gemm_block_q8(case, &bytes, bb, &mut y_spec, &mut tmp);
+                generic.gemm_block_q8(case, &bytes, bb, &mut y_gen, &mut tmp);
                 for t in 0..cols {
                     let ab = bb.col(t);
                     let mass: f64 = wbuf
@@ -727,18 +745,18 @@ mod tests {
                     let (a, b) = (y_spec[t] as f64, y_gen[t] as f64);
                     assert!(
                         (a - b).abs() <= tol,
-                        "{name} w-case {wi} col {t}: {a} vs {b} (tol {tol})"
+                        "{name} case {case} col {t}: {a} vs {b} (tol {tol})"
                     );
                     // And the single-column kernels agree the same way.
                     let mut tmp2 = Vec::new();
-                    let ds = fmt.dot_block_q8(idx, &bytes, ab, &mut tmp2) as f64;
-                    let dg = generic.dot_block_q8(idx, &bytes, ab, &mut tmp2) as f64;
+                    let ds = fmt.dot_block_q8(case, &bytes, ab, &mut tmp2) as f64;
+                    let dg = generic.dot_block_q8(case, &bytes, ab, &mut tmp2) as f64;
                     assert!(
                         (ds - dg).abs() <= tol,
-                        "{name} w-case {wi} col {t} dot: {ds} vs {dg} (tol {tol})"
+                        "{name} case {case} col {t} dot: {ds} vs {dg} (tol {tol})"
                     );
                 }
-            }
+            });
         }
     }
 
@@ -794,6 +812,16 @@ mod tests {
 
     #[test]
     fn quantized_matvec_approximates_dense() {
+        // Tolerance derivation (by inspection): here the *weight*
+        // reconstruction error dominates (the reference is the dense
+        // f32 matvec, not the fused path), so budgets scale with each
+        // format's per-element RMSE on Student-t(5) weights — ≈ 0.03%
+        // fp16, ≈ 0.4% q8_0, ≈ 5% q4_k_m, ≈ 30-50% for the 3-bit grid —
+        // amplified by row cancellation on Gaussian activations (rows
+        // sum 512 terms; relative error grows when the sum is small).
+        // Budgets are ~2-3× the observed fixture margins: 0.01, 0.02,
+        // 0.2, 0.8. The W3A8 leg adds the ≤ 0.7% activation-resolution
+        // term (see `w3a8_tol`), covered by the flat +0.02.
         let w = test_weight(32, 512, 4);
         let mut rng = XorShift::new(5);
         let x: Vec<f32> = (0..512).map(|_| rng.next_gaussian() as f32).collect();

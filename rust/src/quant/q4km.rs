@@ -140,7 +140,11 @@ impl Format for Q4KM {
     /// W4A8 integer fused dot. Per sub-block `s` the reconstruction is
     /// `sc_s·code − m_s`, so the dot factors into two integer sums per
     /// sub-block: `Σ code_i·x_i` and `Σ x_i` (the min term), combined in
-    /// f32 with the activation scale folded in once at the end.
+    /// f32 with the activation scale folded in once at the end. Nibbles
+    /// are unpacked once into an aligned i8 block and both sums come
+    /// from the runtime-dispatched fused [`super::simd::dot_i8_xsum`]
+    /// (i32 sums are regrouping-invariant, f32 expressions unchanged —
+    /// bit-identical to the original inline loop).
     /// |dotc| ≤ 32·15·127 ≈ 6.1e4 per sub-block: no overflow.
     fn dot_block_q8(
         &self,
@@ -149,26 +153,28 @@ impl Format for Q4KM {
         act: super::act::ActBlock<'_>,
         _scratch: &mut Vec<f32>,
     ) -> f32 {
+        let n = self.n;
         debug_assert_eq!(bytes.len(), self.block_bytes());
-        debug_assert_eq!(act.codes.len(), self.n);
+        debug_assert_eq!(act.codes.len(), n);
         let d = read_f16(bytes, 0);
         let dmin = read_f16(bytes, 2);
         let six = &bytes[4..16];
         let codes = &bytes[16..];
+        let mut wv = crate::util::align::AlignedBlockI8::zeroed();
+        let wv = &mut wv.0[..n];
+        for i in (0..n).step_by(2) {
+            let byte = codes[i / 2];
+            wv[i] = (byte & 0xF) as i8;
+            wv[i + 1] = (byte >> 4) as i8;
+        }
         let mut total = 0.0f32;
         for s in 0..self.nsub() {
             let sc = get_6bit(six, s) as f32;
             let mc = get_6bit(six, 8 + s) as f32;
-            let mut dotc = 0i32;
-            let mut xsum = 0i32;
-            for j in 0..self.sub / 2 {
-                let i = s * self.sub + 2 * j;
-                let byte = codes[i / 2];
-                let x0 = act.codes[i] as i32;
-                let x1 = act.codes[i + 1] as i32;
-                dotc += (byte & 0xF) as i32 * x0 + (byte >> 4) as i32 * x1;
-                xsum += x0 + x1;
-            }
+            let (dotc, xsum) = super::simd::dot_i8_xsum(
+                &wv[s * self.sub..(s + 1) * self.sub],
+                &act.codes[s * self.sub..(s + 1) * self.sub],
+            );
             total += (d * sc) * dotc as f32 - (dmin * mc) * xsum as f32;
         }
         total * act.scale
@@ -195,8 +201,8 @@ impl Format for Q4KM {
         let dmin = read_f16(bytes, 2);
         let six = &bytes[4..16];
         let codes = &bytes[16..];
-        let mut wv = [0i8; 512];
-        let wv = &mut wv[..n];
+        let mut wv = crate::util::align::AlignedBlockI8::zeroed();
+        let wv = &mut wv.0[..n];
         for i in (0..n).step_by(2) {
             let byte = codes[i / 2];
             wv[i] = (byte & 0xF) as i8;
@@ -213,9 +219,10 @@ impl Format for Q4KM {
             let ab = acts.col(t);
             let mut total = 0.0f32;
             for s in 0..nsub {
-                let xs = &ab.codes[s * self.sub..(s + 1) * self.sub];
-                let dotc = super::act::dot_i8(&wv[s * self.sub..(s + 1) * self.sub], xs);
-                let xsum: i32 = xs.iter().map(|&x| x as i32).sum();
+                let (dotc, xsum) = super::simd::dot_i8_xsum(
+                    &wv[s * self.sub..(s + 1) * self.sub],
+                    &ab.codes[s * self.sub..(s + 1) * self.sub],
+                );
                 total += dsc[s] * dotc as f32 - dmm[s] * xsum as f32;
             }
             *yo += total * ab.scale;

@@ -80,8 +80,11 @@ impl Format for Q8_0 {
     }
 
     /// W8A8 integer fused dot: the packed bytes *are* the i8 weight
-    /// codes, so this is a direct i8·i8→i32 dot with `d·s_act` folded
-    /// into one final multiply. |acc| ≤ 32·127² ≈ 5.2e5: no overflow.
+    /// codes (reinterpreted in place, no copy), so this is one
+    /// runtime-dispatched i8·i8→i32 dot ([`super::simd::dot_i8`]) with
+    /// `d·s_act` folded into one final multiply — the i32 sum is exact,
+    /// so every tier is bit-identical to the original 4-accumulator
+    /// loop. |acc| ≤ 32·127² ≈ 5.2e5: no overflow.
     fn dot_block_q8(
         &self,
         _idx: u64,
@@ -92,22 +95,15 @@ impl Format for Q8_0 {
         debug_assert_eq!(bytes.len(), self.block_bytes());
         debug_assert_eq!(act.codes.len(), self.n);
         let d = read_f16(bytes, 0);
-        let wq = &bytes[2..2 + self.n];
-        let mut acc = [0i32; 4];
-        for i in 0..self.n / 4 {
-            let j = 4 * i;
-            acc[0] += (wq[j] as i8 as i32) * act.codes[j] as i32;
-            acc[1] += (wq[j + 1] as i8 as i32) * act.codes[j + 1] as i32;
-            acc[2] += (wq[j + 2] as i8 as i32) * act.codes[j + 2] as i32;
-            acc[3] += (wq[j + 3] as i8 as i32) * act.codes[j + 3] as i32;
-        }
-        (acc[0] + acc[1] + acc[2] + acc[3]) as f32 * (d * act.scale)
+        let wq = super::simd::bytes_as_i8(&bytes[2..2 + self.n]);
+        let acc = super::simd::dot_i8(wq, act.codes);
+        acc as f32 * (d * act.scale)
     }
 
     /// Batched W8A8 fused dot: the packed weight codes are reinterpreted
     /// as i8 once, then one i8·i8→i32 dot per column with `d·s_t` folded
     /// in at the end. The i32 accumulation is exact, so regrouping it
-    /// through [`super::act::dot_i8`] leaves each `y[t]` increment
+    /// through [`super::simd::dot_i8`] leaves each `y[t]` increment
     /// bit-identical to [`Format::dot_block_q8`].
     fn gemm_block_q8(
         &self,
@@ -121,14 +117,10 @@ impl Format for Q8_0 {
         debug_assert_eq!(acts.block, self.n);
         debug_assert_eq!(y.len(), acts.cols());
         let d = read_f16(bytes, 0);
-        let mut wv = [0i8; 64];
-        let wv = &mut wv[..self.n];
-        for (o, &b) in wv.iter_mut().zip(&bytes[2..2 + self.n]) {
-            *o = b as i8;
-        }
+        let wq = super::simd::bytes_as_i8(&bytes[2..2 + self.n]);
         for (t, yo) in y.iter_mut().enumerate() {
             let ab = acts.col(t);
-            let acc = super::act::dot_i8(wv, ab.codes);
+            let acc = super::simd::dot_i8(wq, ab.codes);
             *yo += acc as f32 * (d * ab.scale);
         }
     }

@@ -1,0 +1,108 @@
+//! AVX2 backend: exact 32-lane i8·i8 → i32 dot products.
+//!
+//! Exactness argument (why `maddubs`' saturating i16 adds never
+//! saturate, making the whole pipeline bit-identical to the scalar
+//! oracle):
+//!
+//! * `_mm256_maddubs_epi16(a, b)` computes `a[2j]·b[2j] + a[2j+1]·b[2j+1]`
+//!   per i16 lane with **unsigned** `a` and signed `b`, saturating. We
+//!   feed it `a = |w|` (via `_mm256_sign_epi8(w, w)`, so `a ≤ 128`) and
+//!   `b = sign(w)·x` (via `_mm256_sign_epi8(x, w)`). Activation codes
+//!   are clamped to ±127 by `quantize_block_q8`, so `|b| ≤ 127` always
+//!   (sign-flipping x never overflows because x is never -128), and each
+//!   pair sum is bounded by `2·128·127 = 32512 < i16::MAX` — no
+//!   saturation, every lane exact. A weight lane of -128 maps to
+//!   `a = 128` (the unsigned side, where 128 is representable) and its
+//!   product term `128·|x| ≤ 16256`, still inside the bound.
+//! * `_mm256_madd_epi16(·, 1)` widens the exact i16 pairs to i32 with a
+//!   non-saturating add; i32 accumulation is exact by the kernels'
+//!   documented magnitude bounds (≤ n·3·127·127 ≈ 2.5e7 for the widest
+//!   block — 77x under i32::MAX).
+//! * Lane regrouping changes only the order of exact i32 additions,
+//!   which is associative — same bits as the scalar loop.
+//!
+//! The `xsum` companion feeds `maddubs` the constant `1` as its unsigned
+//! side (pair sums bounded by 254), same argument.
+use std::arch::x86_64::*;
+
+/// Horizontal i32 sum of one 256-bit accumulator (exact adds only).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_epi32(v: __m256i) -> i32 {
+    let lo = _mm256_castsi256_si128(v);
+    let hi = _mm256_extracti128_si256::<1>(v);
+    let s = _mm_add_epi32(lo, hi);
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0x4E>(s)); // swap 64-bit halves
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0xB1>(s)); // swap 32-bit pairs
+    _mm_cvtsi128_si32(s)
+}
+
+/// Exact i8 dot product; bit-identical to
+/// [`crate::quant::act::dot_i8`].
+///
+/// # Safety
+/// Caller must ensure AVX2 is available (the dispatch table in
+/// [`super`] guarantees it) and that `x` holds activation codes in
+/// ±127 (see module docs).
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_i8(w: &[i8], x: &[i8]) -> i32 {
+    debug_assert_eq!(w.len(), x.len());
+    debug_assert!(
+        x.iter().all(|&v| v != i8::MIN),
+        "activation codes must be clamped to ±127"
+    );
+    let n = w.len();
+    let chunks = n / 32;
+    let mut acc = _mm256_setzero_si256();
+    let ones = _mm256_set1_epi16(1);
+    for i in 0..chunks {
+        let vw = _mm256_loadu_si256(w.as_ptr().add(32 * i) as *const __m256i);
+        let vx = _mm256_loadu_si256(x.as_ptr().add(32 * i) as *const __m256i);
+        let aw = _mm256_sign_epi8(vw, vw); // |w| as u8 lanes
+        let sx = _mm256_sign_epi8(vx, vw); // sign(w)·x, |·| ≤ 127
+        let p16 = _mm256_maddubs_epi16(aw, sx); // exact: pairs ≤ 32512
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(p16, ones));
+    }
+    let mut s = hsum_epi32(acc);
+    for j in 32 * chunks..n {
+        s += w[j] as i32 * x[j] as i32;
+    }
+    s
+}
+
+/// Exact fused `(Σ w·x, Σ x)`; bit-identical to
+/// [`super::dot_i8_xsum_scalar`].
+///
+/// # Safety
+/// Same preconditions as [`dot_i8`].
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_i8_xsum(w: &[i8], x: &[i8]) -> (i32, i32) {
+    debug_assert_eq!(w.len(), x.len());
+    debug_assert!(
+        x.iter().all(|&v| v != i8::MIN),
+        "activation codes must be clamped to ±127"
+    );
+    let n = w.len();
+    let chunks = n / 32;
+    let mut acc_dot = _mm256_setzero_si256();
+    let mut acc_sum = _mm256_setzero_si256();
+    let ones16 = _mm256_set1_epi16(1);
+    let ones8 = _mm256_set1_epi8(1);
+    for i in 0..chunks {
+        let vw = _mm256_loadu_si256(w.as_ptr().add(32 * i) as *const __m256i);
+        let vx = _mm256_loadu_si256(x.as_ptr().add(32 * i) as *const __m256i);
+        let aw = _mm256_sign_epi8(vw, vw);
+        let sx = _mm256_sign_epi8(vx, vw);
+        let p16 = _mm256_maddubs_epi16(aw, sx);
+        acc_dot = _mm256_add_epi32(acc_dot, _mm256_madd_epi16(p16, ones16));
+        let s16 = _mm256_maddubs_epi16(ones8, vx); // x[2j]+x[2j+1], ≤ 254
+        acc_sum = _mm256_add_epi32(acc_sum, _mm256_madd_epi16(s16, ones16));
+    }
+    let mut d = hsum_epi32(acc_dot);
+    let mut s = hsum_epi32(acc_sum);
+    for j in 32 * chunks..n {
+        d += w[j] as i32 * x[j] as i32;
+        s += x[j] as i32;
+    }
+    (d, s)
+}

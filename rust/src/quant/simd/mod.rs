@@ -1,0 +1,404 @@
+//! Runtime-dispatched SIMD integer kernels (§5.4 DP4A analog, CPU side).
+//!
+//! The W3A8 hot loop is integer end-to-end: decoded i8 weight lanes ×
+//! clamped i8 activation codes accumulated in i32, with every f32 scale
+//! folded into a single epilogue multiply *outside* this module. Integer
+//! addition is associative, so any lane-width regrouping of the i32
+//! multiply-accumulate is **bit-identical** to the scalar loop — which is
+//! the repo's contract: the SIMD tiers below are not "close to" the
+//! scalar kernel, they are required to produce the same bits, and
+//! `tests/simd_parity.rs` plus the in-module property tests enforce it
+//! differentially (scalar kernel = oracle, exactly as the generic f32
+//! fallback is the oracle for the scalar kernels one level up).
+//!
+//! Dispatch model:
+//! * [`detected_tier`] probes the CPU once (`OnceLock`): AVX2 on x86_64
+//!   via `is_x86_feature_detected!`, NEON on aarch64 (baseline,
+//!   mandatory), scalar otherwise.
+//! * `ITQ3S_NO_SIMD` (set and not `"0"`/empty) is a hard kill switch: it
+//!   makes every non-scalar tier unavailable, so both the detection and
+//!   [`try_force`] land on scalar — the CI matrix runs the whole suite
+//!   once with it set and the suite must pass identically.
+//! * `--no-simd` (CLI) routes to [`set_enabled`], an in-process override
+//!   on top of detection.
+//! * [`try_force`] / [`clear_force`] are the test hooks the differential
+//!   harness uses to pin a tier; forcing an unavailable tier fails
+//!   instead of silently falling back, so a bad probe cannot hide.
+//! * Probe counters (enabled only between [`probe_begin`] /
+//!   [`probe_end`]) count dispatched calls per tier, letting the harness
+//!   assert that the tier it forced is the tier that actually ran.
+//!
+//! Because the tiers are bit-identical, flipping the override while
+//! other threads compute cannot change any result — only the probe
+//! counters are order-sensitive, and the harness serializes around them.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+
+/// One dispatch tier of the integer kernels. All tiers are bit-identical
+/// by contract; they differ only in throughput.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(u8)]
+pub enum SimdTier {
+    /// The scalar i32 loops in [`crate::quant::act::dot_i8`] — the
+    /// differential oracle, kept verbatim from the original kernels.
+    Scalar = 0,
+    /// x86_64 AVX2 (`maddubs`/`madd` 32-lane i8 dot).
+    Avx2 = 1,
+    /// aarch64 NEON (`smull`/`sadalp` 16-lane i8 dot).
+    Neon = 2,
+}
+
+impl SimdTier {
+    pub const ALL: [SimdTier; 3] = [SimdTier::Scalar, SimdTier::Avx2, SimdTier::Neon];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdTier::Scalar => "scalar",
+            SimdTier::Avx2 => "avx2",
+            SimdTier::Neon => "neon",
+        }
+    }
+
+    /// Stable index into the probe-counter array ([`probe_end`]).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// `ITQ3S_NO_SIMD` kill switch, read once. Any non-empty value other
+/// than `"0"` disables every non-scalar tier for the whole process.
+fn env_disabled() -> bool {
+    static ENV_DISABLED: OnceLock<bool> = OnceLock::new();
+    *ENV_DISABLED.get_or_init(|| {
+        matches!(std::env::var("ITQ3S_NO_SIMD"), Ok(v) if !v.is_empty() && v != "0")
+    })
+}
+
+/// Whether `tier` can run on this host *right now* (CPU capability and
+/// the `ITQ3S_NO_SIMD` kill switch both considered). Scalar is
+/// always available.
+pub fn tier_available(tier: SimdTier) -> bool {
+    match tier {
+        SimdTier::Scalar => true,
+        SimdTier::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                !env_disabled() && std::arch::is_x86_feature_detected!("avx2")
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            {
+                false
+            }
+        }
+        SimdTier::Neon => {
+            // NEON (ASIMD) is mandatory in AArch64; presence of the
+            // target_arch is the feature probe.
+            #[cfg(target_arch = "aarch64")]
+            {
+                !env_disabled()
+            }
+            #[cfg(not(target_arch = "aarch64"))]
+            {
+                false
+            }
+        }
+    }
+}
+
+/// Best available tier, probed once and cached.
+pub fn detected_tier() -> SimdTier {
+    static DETECTED: OnceLock<SimdTier> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        if tier_available(SimdTier::Avx2) {
+            SimdTier::Avx2
+        } else if tier_available(SimdTier::Neon) {
+            SimdTier::Neon
+        } else {
+            SimdTier::Scalar
+        }
+    })
+}
+
+// In-process override on top of detection: 0 = follow detected tier,
+// 1/2/3 = force scalar/avx2/neon. Relaxed ordering is sufficient —
+// whichever tier a racing reader picks, the numerics are identical.
+const FOLLOW: u8 = 0;
+static OVERRIDE: AtomicU8 = AtomicU8::new(FOLLOW);
+
+fn force_code(tier: SimdTier) -> u8 {
+    tier as u8 + 1
+}
+
+/// The tier the next dispatched call will take.
+pub fn active_tier() -> SimdTier {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        1 => SimdTier::Scalar,
+        2 => SimdTier::Avx2,
+        3 => SimdTier::Neon,
+        _ => detected_tier(),
+    }
+}
+
+/// CLI plumbing for `--no-simd`: `false` pins the scalar tier, `true`
+/// returns to detection.
+pub fn set_enabled(enabled: bool) {
+    OVERRIDE.store(
+        if enabled { FOLLOW } else { force_code(SimdTier::Scalar) },
+        Ordering::Relaxed,
+    );
+}
+
+/// Pin dispatch to `tier`. Returns `false` (and changes nothing) if the
+/// tier is unavailable on this host — the differential harness uses that
+/// to self-skip instead of silently testing scalar against itself.
+pub fn try_force(tier: SimdTier) -> bool {
+    if !tier_available(tier) {
+        return false;
+    }
+    OVERRIDE.store(force_code(tier), Ordering::Relaxed);
+    true
+}
+
+/// Undo [`try_force`] / [`set_enabled`]: follow detection again.
+pub fn clear_force() {
+    OVERRIDE.store(FOLLOW, Ordering::Relaxed);
+}
+
+// Probe counters: per-tier dispatched-call counts, live only while a
+// probe window is open. The flag check is one relaxed load on the hot
+// path when no probe is running.
+static PROBING: AtomicBool = AtomicBool::new(false);
+static CALLS: [AtomicU64; 3] = [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+
+/// Reset the per-tier call counters and start counting.
+pub fn probe_begin() {
+    for c in &CALLS {
+        c.store(0, Ordering::Relaxed);
+    }
+    PROBING.store(true, Ordering::Relaxed);
+}
+
+/// Stop counting and return calls per tier, indexed by
+/// [`SimdTier::index`].
+pub fn probe_end() -> [u64; 3] {
+    PROBING.store(false, Ordering::Relaxed);
+    [
+        CALLS[0].load(Ordering::Relaxed),
+        CALLS[1].load(Ordering::Relaxed),
+        CALLS[2].load(Ordering::Relaxed),
+    ]
+}
+
+#[inline]
+fn note(tier: SimdTier) {
+    if PROBING.load(Ordering::Relaxed) {
+        CALLS[tier.index()].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Reinterpret packed weight bytes as i8 lanes (same size/alignment;
+/// two's-complement reinterpret is exactly the `byte as i8` the scalar
+/// kernels perform per element). Lets `q8_0` feed its stored codes to
+/// the dispatched dot without a copy.
+#[inline]
+pub fn bytes_as_i8(bytes: &[u8]) -> &[i8] {
+    // SAFETY: u8 and i8 have identical size, alignment, and validity.
+    unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const i8, bytes.len()) }
+}
+
+/// Dispatched exact i8·i8 → i32 dot product. Bit-identical across tiers
+/// (i32 accumulation is exact; see module docs), scalar tier is
+/// [`crate::quant::act::dot_i8`] verbatim.
+///
+/// `x` must hold activation codes clamped to ±127 (guaranteed by
+/// `quantize_block_q8`); the AVX2 tier's `maddubs` exactness bound
+/// depends on it.
+#[inline]
+pub fn dot_i8(w: &[i8], x: &[i8]) -> i32 {
+    let tier = active_tier();
+    note(tier);
+    match tier {
+        SimdTier::Scalar => super::act::dot_i8(w, x),
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { avx2::dot_i8(w, x) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { neon::dot_i8(w, x) },
+        // A tier this build has no backend for can only be reached if
+        // the probe lied; fall back to the oracle rather than UB.
+        #[allow(unreachable_patterns)]
+        _ => super::act::dot_i8(w, x),
+    }
+}
+
+/// Dispatched fused `(Σ w·x, Σ x)` in one pass — the q4_k_m inner loop,
+/// which needs the raw activation-code sum per sub-block for its minima
+/// term. Same bit-identity contract as [`dot_i8`].
+#[inline]
+pub fn dot_i8_xsum(w: &[i8], x: &[i8]) -> (i32, i32) {
+    let tier = active_tier();
+    note(tier);
+    match tier {
+        SimdTier::Scalar => dot_i8_xsum_scalar(w, x),
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { avx2::dot_i8_xsum(w, x) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { neon::dot_i8_xsum(w, x) },
+        #[allow(unreachable_patterns)]
+        _ => dot_i8_xsum_scalar(w, x),
+    }
+}
+
+/// Scalar oracle for [`dot_i8_xsum`]: the exact integer arithmetic the
+/// q4_k_m kernels performed inline before dispatch existed (i32 sums are
+/// order-insensitive, so the 4-accumulator layout mirrors
+/// [`crate::quant::act::dot_i8`] without changing any result).
+#[inline]
+pub fn dot_i8_xsum_scalar(w: &[i8], x: &[i8]) -> (i32, i32) {
+    debug_assert_eq!(w.len(), x.len());
+    let mut dot = [0i32; 4];
+    let mut sum = [0i32; 4];
+    let chunks = w.len() / 4;
+    for i in 0..chunks {
+        let j = 4 * i;
+        dot[0] += w[j] as i32 * x[j] as i32;
+        dot[1] += w[j + 1] as i32 * x[j + 1] as i32;
+        dot[2] += w[j + 2] as i32 * x[j + 2] as i32;
+        dot[3] += w[j + 3] as i32 * x[j + 3] as i32;
+        sum[0] += x[j] as i32;
+        sum[1] += x[j + 1] as i32;
+        sum[2] += x[j + 2] as i32;
+        sum[3] += x[j + 3] as i32;
+    }
+    let mut d = dot[0] + dot[1] + dot[2] + dot[3];
+    let mut s = sum[0] + sum[1] + sum[2] + sum[3];
+    for j in chunks * 4..w.len() {
+        d += w[j] as i32 * x[j] as i32;
+        s += x[j] as i32;
+    }
+    (d, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall_indexed;
+    use std::sync::Mutex;
+
+    // In-module tests that pin a tier serialize among themselves; tests
+    // elsewhere in the lib binary may race a tier flip, but bit-identity
+    // makes that observationally irrelevant (probe counters, the only
+    // order-sensitive state, are asserted solely in tests/simd_parity.rs,
+    // a separate process).
+    static FORCE: Mutex<()> = Mutex::new(());
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        FORCE.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    struct Restore;
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            clear_force();
+        }
+    }
+
+    /// Adversarial i8 lane patterns: zeros, ±127 alternation (max
+    /// cancellation), all +127 vs all ±127 (monotone accumulator — the
+    /// maddubs pair bound 2·127² and the i16-widening worst case), and
+    /// a -128 weight edge (activations never hold -128, weights may).
+    fn lanes(case: u64, n: usize, g: &mut crate::util::prop::Gen) -> (Vec<i8>, Vec<i8>) {
+        let w: Vec<i8> = match case % 5 {
+            0 => vec![0; n],
+            1 => (0..n).map(|i| if i % 2 == 0 { 127 } else { -127 }).collect(),
+            2 => vec![127; n],
+            3 => (0..n).map(|i| if i % 3 == 0 { -128 } else { 127 }).collect(),
+            _ => (0..n).map(|_| g.usize_in(0, 255) as i64 as i8).collect(),
+        };
+        let x: Vec<i8> = match case % 3 {
+            0 => (0..n).map(|i| if i % 2 == 0 { 127 } else { -127 }).collect(),
+            1 => vec![127; n],
+            _ => (0..n)
+                .map(|_| (g.usize_in(0, 254) as i64 - 127) as i8)
+                .collect(),
+        };
+        (w, x)
+    }
+
+    #[test]
+    fn scalar_xsum_matches_naive_reference() {
+        forall_indexed("xsum scalar == naive", 32, |case, g| {
+            let n = g.usize_in(0, 96);
+            let (w, x) = lanes(case, n, g);
+            let (d, s) = dot_i8_xsum_scalar(&w, &x);
+            let dn: i32 = w.iter().zip(&x).map(|(&a, &b)| a as i32 * b as i32).sum();
+            let sn: i32 = x.iter().map(|&b| b as i32).sum();
+            assert_eq!((d, s), (dn, sn));
+        });
+    }
+
+    #[test]
+    fn every_available_tier_is_bitwise_equal_to_scalar() {
+        let _g = lock();
+        let _r = Restore;
+        let tiers: Vec<SimdTier> = [SimdTier::Avx2, SimdTier::Neon]
+            .into_iter()
+            .filter(|&t| tier_available(t))
+            .collect();
+        if tiers.is_empty() {
+            eprintln!("no SIMD tier available on this host; scalar-only — skipping");
+            return;
+        }
+        // Lengths straddle every vector width boundary (32-lane AVX2,
+        // 16-lane NEON) plus the scalar tail.
+        for n in [0usize, 1, 3, 7, 15, 16, 17, 31, 32, 33, 63, 64, 96, 255, 256, 512] {
+            forall_indexed(&format!("simd dot == scalar [n={n}]"), 12, |case, g| {
+                let (w, x) = lanes(case, n, g);
+                assert!(try_force(SimdTier::Scalar));
+                let want = dot_i8(&w, &x);
+                let want2 = dot_i8_xsum(&w, &x);
+                for &t in &tiers {
+                    assert!(try_force(t));
+                    assert_eq!(dot_i8(&w, &x), want, "{t:?} dot n={n} case={case}");
+                    assert_eq!(dot_i8_xsum(&w, &x), want2, "{t:?} xsum n={n} case={case}");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn force_and_enable_override_detection() {
+        let _g = lock();
+        let _r = Restore;
+        assert!(try_force(SimdTier::Scalar), "scalar must always force");
+        assert_eq!(active_tier(), SimdTier::Scalar);
+        clear_force();
+        assert_eq!(active_tier(), detected_tier());
+        set_enabled(false);
+        assert_eq!(active_tier(), SimdTier::Scalar);
+        set_enabled(true);
+        assert_eq!(active_tier(), detected_tier());
+        // Forcing an unavailable tier must fail and leave dispatch alone.
+        for t in SimdTier::ALL {
+            if !tier_available(t) {
+                assert!(!try_force(t));
+                assert_eq!(active_tier(), detected_tier());
+            }
+        }
+    }
+
+    #[test]
+    fn bytes_reinterpret_matches_per_element_cast() {
+        let bytes: Vec<u8> = (0..=255u8).collect();
+        let lanes = bytes_as_i8(&bytes);
+        assert_eq!(lanes.len(), bytes.len());
+        for (i, &b) in bytes.iter().enumerate() {
+            assert_eq!(lanes[i], b as i8);
+        }
+    }
+}

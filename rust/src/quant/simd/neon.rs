@@ -1,0 +1,68 @@
+//! NEON backend: exact 16-lane i8·i8 → i32 dot products.
+//!
+//! Exactness argument: `vmull_s8` widens i8×i8 products to i16 with no
+//! rounding (|p| ≤ 128·127 < i16::MAX per lane), and `vpadalq_s16`
+//! pairwise-adds those i16 lanes into i32 accumulators with a
+//! non-saturating widening add. Every operation is an exact integer op,
+//! so any regrouping matches the scalar oracle bit-for-bit (i32 sums
+//! stay ≤ ~2.5e7 by the kernels' documented block bounds). The `xsum`
+//! companion widens activation codes alone via `vpaddlq_s8` — same
+//! argument with smaller magnitudes.
+use std::arch::aarch64::*;
+
+/// Exact i8 dot product; bit-identical to
+/// [`crate::quant::act::dot_i8`].
+///
+/// # Safety
+/// Caller must ensure NEON is available (mandatory on aarch64; the
+/// dispatch table in [`super`] only routes here on that arch).
+#[target_feature(enable = "neon")]
+pub unsafe fn dot_i8(w: &[i8], x: &[i8]) -> i32 {
+    debug_assert_eq!(w.len(), x.len());
+    let n = w.len();
+    let chunks = n / 16;
+    let mut acc = vdupq_n_s32(0);
+    for i in 0..chunks {
+        let vw = vld1q_s8(w.as_ptr().add(16 * i));
+        let vx = vld1q_s8(x.as_ptr().add(16 * i));
+        let lo = vmull_s8(vget_low_s8(vw), vget_low_s8(vx)); // exact i16
+        let hi = vmull_high_s8(vw, vx);
+        acc = vpadalq_s16(acc, lo); // widening pairwise add, exact
+        acc = vpadalq_s16(acc, hi);
+    }
+    let mut s = vaddvq_s32(acc);
+    for j in 16 * chunks..n {
+        s += w[j] as i32 * x[j] as i32;
+    }
+    s
+}
+
+/// Exact fused `(Σ w·x, Σ x)`; bit-identical to
+/// [`super::dot_i8_xsum_scalar`].
+///
+/// # Safety
+/// Same precondition as [`dot_i8`].
+#[target_feature(enable = "neon")]
+pub unsafe fn dot_i8_xsum(w: &[i8], x: &[i8]) -> (i32, i32) {
+    debug_assert_eq!(w.len(), x.len());
+    let n = w.len();
+    let chunks = n / 16;
+    let mut acc_dot = vdupq_n_s32(0);
+    let mut acc_sum = vdupq_n_s32(0);
+    for i in 0..chunks {
+        let vw = vld1q_s8(w.as_ptr().add(16 * i));
+        let vx = vld1q_s8(x.as_ptr().add(16 * i));
+        let lo = vmull_s8(vget_low_s8(vw), vget_low_s8(vx));
+        let hi = vmull_high_s8(vw, vx);
+        acc_dot = vpadalq_s16(acc_dot, lo);
+        acc_dot = vpadalq_s16(acc_dot, hi);
+        acc_sum = vpadalq_s16(acc_sum, vpaddlq_s8(vx)); // Σx, exact widening
+    }
+    let mut d = vaddvq_s32(acc_dot);
+    let mut s = vaddvq_s32(acc_sum);
+    for j in 16 * chunks..n {
+        d += w[j] as i32 * x[j] as i32;
+        s += x[j] as i32;
+    }
+    (d, s)
+}

@@ -212,7 +212,16 @@ fn handle_conn(
                 }
             }
             "stats" => {
-                let s = coord.stats().unwrap_or(Json::Null);
+                let mut s = coord.stats().unwrap_or(Json::Null);
+                // Which integer-kernel tier this process dispatches to
+                // (scalar/avx2/neon) — an A/B observability field, since
+                // all tiers are bit-identical by contract.
+                if let Json::Obj(ref mut m) = s {
+                    m.insert(
+                        "simd_tier".to_string(),
+                        Json::str(crate::quant::simd::active_tier().name()),
+                    );
+                }
                 send(&mut stream, &s)?;
             }
             "trace" => {

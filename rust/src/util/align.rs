@@ -1,0 +1,41 @@
+//! Cache-line-aligned fixed scratch for the unpack-once kernel path.
+//!
+//! The SIMD kernels (`quant::simd`) use unaligned loads, so alignment
+//! is a throughput concern (no split-line loads, clean prefetch), not a
+//! correctness one — but the hot GEMM decodes one weight block into
+//! this scratch and then streams every batch column over it, so keeping
+//! it on one set of cache lines is worth the fixed footprint.
+
+/// Largest block any [`crate::quant::Format`] decodes (the itq3_s@512
+/// ablation block; every other format is ≤ 256).
+pub const MAX_BLOCK: usize = 512;
+
+/// 64-byte-aligned i8 scratch for one decoded weight block.
+#[repr(C, align(64))]
+pub struct AlignedBlockI8(pub [i8; MAX_BLOCK]);
+
+impl AlignedBlockI8 {
+    #[inline]
+    pub fn zeroed() -> Self {
+        AlignedBlockI8([0; MAX_BLOCK])
+    }
+}
+
+impl Default for AlignedBlockI8 {
+    fn default() -> Self {
+        Self::zeroed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_scratch_is_cache_line_aligned() {
+        assert_eq!(std::mem::align_of::<AlignedBlockI8>(), 64);
+        let b = AlignedBlockI8::zeroed();
+        assert_eq!(b.0.as_ptr() as usize % 64, 0);
+        assert!(b.0.iter().all(|&v| v == 0));
+    }
+}

@@ -5,6 +5,7 @@
 //! `half`, `criterion`, or `proptest` is implemented here from scratch
 //! (see DESIGN.md §6 "Substitutions").
 
+pub mod align;
 pub mod failpoint;
 pub mod flight;
 pub mod json;

@@ -17,6 +17,7 @@
 //! ```
 
 use super::prng::XorShift;
+use crate::tensor::Tensor;
 
 /// A test-case generator handed to each property invocation.
 pub struct Gen {
@@ -48,6 +49,12 @@ impl Gen {
 
     pub fn gaussian_f32(&mut self, sigma: f32) -> f32 {
         (self.rng.next_gaussian() as f32) * sigma
+    }
+
+    /// Student-t draw (heavy tails; `dof` degrees of freedom) — the
+    /// transformer-weight-like marginal the kernel fuzz loop uses.
+    pub fn student_t_f32(&mut self, dof: f64) -> f32 {
+        self.rng.next_student_t(dof) as f32
     }
 
     /// A weight-like vector: mostly Gaussian with occasional heavy
@@ -84,21 +91,38 @@ impl Gen {
 /// failing seed is printed and the panic is re-raised, so the case can be
 /// replayed with `ITQ3S_PROP_SEED=<seed>`.
 pub fn forall(name: &str, cases: u64, f: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    forall_indexed(name, cases, move |_i, g| f(g));
+}
+
+/// Like [`forall`] but hands `f` the case ordinal alongside the
+/// generator. Fixed-pattern fuzz loops (e.g. [`kernel_weight_block`])
+/// use the ordinal to cycle adversarial shapes deterministically before
+/// seeded randoms; under `ITQ3S_PROP_SEED` replay the ordinal is
+/// re-derived from the seed so the replayed case builds the same inputs.
+pub fn forall_indexed(
+    name: &str,
+    cases: u64,
+    f: impl Fn(u64, &mut Gen) + std::panic::RefUnwindSafe,
+) {
     // Base seed: env override for replay, otherwise a fixed default so CI
     // is deterministic.
+    const BASE: u64 = 0xC0FFEE;
     let base = std::env::var("ITQ3S_PROP_SEED")
         .ok()
         .and_then(|s| s.parse::<u64>().ok());
     let (start, count) = match base {
-        Some(s) => (s, 1),       // replay exactly one case
-        None => (0xC0FFEE, cases),
+        Some(s) => (s, 1), // replay exactly one case
+        None => (BASE, cases),
     };
     for i in 0..count {
         let seed = start.wrapping_add(i);
+        // Ordinal: `i` normally; under replay, recovered from the seed
+        // (seed = BASE + ordinal when the default base was in effect).
+        let ordinal = seed.wrapping_sub(BASE);
         let size = 1 + (i as usize * 64) / cases.max(1) as usize;
         let result = std::panic::catch_unwind(|| {
             let mut g = Gen::new(seed, size);
-            f(&mut g);
+            f(ordinal, &mut g);
         });
         if let Err(e) = result {
             eprintln!(
@@ -107,6 +131,81 @@ pub fn forall(name: &str, cases: u64, f: impl Fn(&mut Gen) + std::panic::RefUnwi
             std::panic::resume_unwind(e);
         }
     }
+}
+
+/// One weight block for the cross-format kernel fuzz loop. The ordinal
+/// cycles through the fixed shapes that historically break packed
+/// integer kernels — so every bounded run covers each at least once —
+/// before seeded randoms:
+/// `0` all-zero, `1` ±1e3 alternation (max magnitude, max cancellation),
+/// `2` ±0.05 alternation (sign-alternating at ordinary scale), `3`
+/// constant 1e3 (monotone accumulator: quantizes to max-magnitude codes
+/// of one sign, driving the i32 partial sums toward the per-kernel
+/// bounds each kernel documents as unreachable), `4` heavy-tailed
+/// Student-t, `5` uniform.
+pub fn kernel_weight_block(n: usize, case: u64, g: &mut Gen) -> Vec<f32> {
+    match case % 6 {
+        0 => vec![0.0; n],
+        1 => (0..n)
+            .map(|i| if i % 2 == 0 { 1.0e3 } else { -1.0e3 })
+            .collect(),
+        2 => (0..n).map(|i| if i % 2 == 0 { 0.05 } else { -0.05 }).collect(),
+        3 => vec![1.0e3; n],
+        4 => (0..n).map(|_| g.student_t_f32(4.0) * 0.02).collect(),
+        _ => (0..n).map(|_| g.f32_in(-0.5, 0.5)).collect(),
+    }
+}
+
+/// The activation batch paired with [`kernel_weight_block`]: the same
+/// adversarial shapes on the activation side. The ±8 alternation
+/// quantizes to sign-alternating ±127 codes; the constant row to all
+/// +127 codes (pairing with weight case 3 to maximize every partial
+/// sum); then Gaussian, uniform, and near-denormal-scale rows.
+pub fn kernel_act_rows(n: usize, g: &mut Gen) -> Vec<Vec<f32>> {
+    vec![
+        vec![0.0; n],
+        (0..n).map(|i| if i % 2 == 0 { 8.0 } else { -8.0 }).collect(),
+        vec![8.0; n],
+        (0..n).map(|_| g.gaussian_f32(1.0)).collect(),
+        (0..n).map(|_| g.f32_in(-0.5, 0.5)).collect(),
+        (0..n).map(|_| g.gaussian_f32(1e-3)).collect(),
+    ]
+}
+
+/// Seeded cross-format kernel fuzz loop — the shared driver of the
+/// scalar differential tests in `quant::matmul` and the SIMD parity
+/// harness in `tests/simd_parity.rs`. Runs `cases` deterministic
+/// iterations; each builds one weight block of `n` elements (fixed
+/// adversarial shapes first, then seeded randoms — see
+/// [`kernel_weight_block`]) plus the full adversarial activation batch,
+/// and hands `f` `(ordinal, weight_block, act_rows)`. Failing seeds
+/// replay via `ITQ3S_PROP_SEED` exactly like [`forall`].
+pub fn forall_kernel_cases(
+    name: &str,
+    n: usize,
+    cases: u64,
+    f: impl Fn(u64, &[f32], &[Vec<f32>]) + std::panic::RefUnwindSafe,
+) {
+    forall_indexed(name, cases, move |ordinal, g| {
+        let w = kernel_weight_block(n, ordinal, g);
+        let rows = kernel_act_rows(n, g);
+        f(ordinal, &w, &rows);
+    });
+}
+
+/// Deterministic heavy-tailed `(rows, cols)` weight tensor — Student-t
+/// marginals scaled like transformer weights (the paper's §1
+/// "heavy-tailed weight distributions"). The single generator behind
+/// every tensor-level differential test and bench; `dof` = 4 for the
+/// fidelity-ordering fixtures, 5 for the linear-level ones (the streams
+/// the tests' tolerances were calibrated on).
+pub fn heavy_tailed_tensor(rows: usize, cols: usize, seed: u64, dof: f64) -> Tensor {
+    let mut rng = XorShift::new(seed);
+    let mut t = Tensor::zeros(vec![rows, cols]);
+    for x in t.data_mut() {
+        *x = (rng.next_student_t(dof) as f32) * 0.02;
+    }
+    t
 }
 
 #[cfg(test)]
@@ -141,6 +240,33 @@ mod tests {
             }
         }
         assert!(saw_outlier);
+    }
+
+    #[test]
+    fn kernel_fuzz_cases_have_fixed_shapes_and_batch_layout() {
+        forall_kernel_cases("kernel case layout", 64, 8, |case, w, rows| {
+            assert_eq!(w.len(), 64);
+            assert_eq!(rows.len(), 6, "adversarial batch is 6 activation rows");
+            assert!(rows.iter().all(|r| r.len() == 64));
+            match case % 6 {
+                0 => assert!(w.iter().all(|&v| v == 0.0)),
+                1 => assert!(w.iter().enumerate().all(|(i, &v)| v.abs() == 1.0e3
+                    && (v > 0.0) == (i % 2 == 0))),
+                3 => assert!(w.iter().all(|&v| v == 1.0e3)),
+                _ => {}
+            }
+            assert!(rows[0].iter().all(|&v| v == 0.0));
+            assert!(rows[2].iter().all(|&v| v == 8.0));
+        });
+    }
+
+    #[test]
+    fn heavy_tailed_tensor_is_deterministic_per_seed() {
+        let a = heavy_tailed_tensor(5, 7, 13, 4.0);
+        let b = heavy_tailed_tensor(5, 7, 13, 4.0);
+        let c = heavy_tailed_tensor(5, 7, 14, 4.0);
+        assert_eq!(a.data(), b.data());
+        assert_ne!(a.data(), c.data());
     }
 
     #[test]

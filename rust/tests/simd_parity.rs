@@ -1,0 +1,324 @@
+//! SIMD-vs-scalar differential harness (the tier-dispatch acceptance
+//! suite).
+//!
+//! The scalar integer kernels (`quant::act::dot_i8` and the inline
+//! epilogues they feed) are the **oracle**; every runtime-dispatched
+//! tier in `quant::simd` must reproduce them bit-for-bit — integer i32
+//! accumulation is regrouping-invariant and every f32 epilogue is
+//! shared verbatim, so equality is exact, not approximate. Enforced
+//! here at four levels:
+//!
+//! 1. block level — `dot_block_q8`/`gemm_block_q8` per hot format, on
+//!    the shared seeded kernel fuzz loop (adversarial shapes first);
+//! 2. linear level — `gemm_q8` == `matvec_q8` == row shards, across
+//!    tiers and batch sizes 1/2/5/8;
+//! 3. padded level — `PaddedLinear::{matvec_q8,matmul_q8}` with the
+//!    scratch NaN-poisoned so a lane reading past the logical row end
+//!    cannot pass silently;
+//! 4. engine level — full decode with dispatch forced on vs off.
+//!
+//! Plus dispatch-table correctness: forcing a tier and *counting* the
+//! dispatched calls per tier proves the forced tier is the one that
+//! actually ran (a bad feature probe cannot silently fall back), and
+//! that formats without `has_q8_kernel` never touch the dispatcher.
+//!
+//! Tier forcing and the probe counters are process-global, so every
+//! test here serializes on one lock; unavailable tiers self-skip with
+//! the repo's standard skip message (under `ITQ3S_NO_SIMD=1` every
+//! non-scalar tier is unavailable by design and the whole suite
+//! degrades to scalar-vs-scalar — which is exactly what the CI
+//! dispatch-off run asserts).
+
+mod common;
+
+use common::{hot_formats, prompt_tokens, quant_engine, sequential_decode};
+use itq3s::model::weights::PaddedLinear;
+use itq3s::model::{KvCache, ModelConfig};
+use itq3s::quant::format_by_name;
+use itq3s::quant::matmul::{MatvecScratch, QuantizedLinear};
+use itq3s::quant::simd::{self, SimdTier};
+use itq3s::util::prop::{forall_kernel_cases, heavy_tailed_tensor};
+use itq3s::util::XorShift;
+use std::sync::Mutex;
+
+static DISPATCH_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    DISPATCH_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// RAII guard: follow hardware detection again when a test ends, even
+/// on panic.
+struct Restore;
+impl Drop for Restore {
+    fn drop(&mut self) {
+        simd::clear_force();
+    }
+}
+
+/// The non-scalar tiers this host can actually run.
+fn simd_tiers() -> Vec<SimdTier> {
+    [SimdTier::Avx2, SimdTier::Neon]
+        .into_iter()
+        .filter(|&t| simd::tier_available(t))
+        .collect()
+}
+
+fn skip_no_simd(test: &str) {
+    eprintln!(
+        "{test}: no SIMD tier available (scalar-only host or ITQ3S_NO_SIMD set); \
+         scalar==scalar holds trivially — skipping"
+    );
+}
+
+#[test]
+fn block_kernels_bitwise_equal_scalar_every_format_and_tier() {
+    let _g = lock();
+    let _r = Restore;
+    let tiers = simd_tiers();
+    if tiers.is_empty() {
+        skip_no_simd("block_kernels_bitwise_equal_scalar_every_format_and_tier");
+        return;
+    }
+    for name in hot_formats() {
+        let be = format_by_name(name).unwrap().block_elems();
+        let prop = format!("simd dot/gemm == scalar blocks [{name}]");
+        forall_kernel_cases(&prop, be, 12, |case, w, rows| {
+            let fmt = format_by_name(name).unwrap();
+            let mut bytes = Vec::new();
+            fmt.quantize_block(case, w, &mut bytes);
+            let cols = rows.len();
+            let flat: Vec<f32> = rows.concat();
+            let mut batch = itq3s::quant::act::QuantizedBatch::new();
+            batch.quantize(&flat, cols, be);
+            let bb = batch.block_at(0);
+            // Scalar oracle first.
+            assert!(simd::try_force(SimdTier::Scalar));
+            let mut tmp = Vec::new();
+            let dots_ref: Vec<f32> = (0..cols)
+                .map(|t| fmt.dot_block_q8(case, &bytes, bb.col(t), &mut tmp))
+                .collect();
+            let mut y_ref = vec![0.0f32; cols];
+            fmt.gemm_block_q8(case, &bytes, bb, &mut y_ref, &mut tmp);
+            for &tier in &tiers {
+                assert!(simd::try_force(tier), "{tier:?} vanished mid-test");
+                for t in 0..cols {
+                    let d = fmt.dot_block_q8(case, &bytes, bb.col(t), &mut tmp);
+                    assert_eq!(
+                        d.to_bits(),
+                        dots_ref[t].to_bits(),
+                        "{name} {tier:?} case {case} col {t}: {d} vs {}",
+                        dots_ref[t]
+                    );
+                }
+                let mut y = vec![0.0f32; cols];
+                fmt.gemm_block_q8(case, &bytes, bb, &mut y, &mut tmp);
+                for t in 0..cols {
+                    assert_eq!(
+                        y[t].to_bits(),
+                        y_ref[t].to_bits(),
+                        "{name} {tier:?} case {case} gemm col {t}: {} vs {}",
+                        y[t],
+                        y_ref[t]
+                    );
+                }
+            }
+            // Back to the oracle for the next fuzz case's reference.
+            assert!(simd::try_force(SimdTier::Scalar));
+        });
+    }
+}
+
+#[test]
+fn linear_gemm_and_matvec_bitwise_equal_across_tiers() {
+    let _g = lock();
+    let _r = Restore;
+    let tiers = simd_tiers();
+    if tiers.is_empty() {
+        skip_no_simd("linear_gemm_and_matvec_bitwise_equal_across_tiers");
+        return;
+    }
+    let w = heavy_tailed_tensor(37, 512, 71, 5.0); // odd rows: uneven shards
+    for name in hot_formats() {
+        let lin = QuantizedLinear::new(format_by_name(name).unwrap(), &w);
+        let mut scratch = MatvecScratch::new();
+        let mut rng = XorShift::new(72);
+        for batch in [1usize, 2, 5, 8] {
+            let x: Vec<f32> = (0..batch * 512).map(|_| rng.next_f32() - 0.5).collect();
+            assert!(simd::try_force(SimdTier::Scalar));
+            let mut y_ref = vec![0.0f32; batch * 37];
+            lin.gemm_q8(&x, batch, &mut y_ref, &mut scratch, 1);
+            for &tier in &tiers {
+                assert!(simd::try_force(tier));
+                // Batched GEMM: every batch size, bitwise vs scalar.
+                let mut y = vec![0.0f32; batch * 37];
+                lin.gemm_q8(&x, batch, &mut y, &mut scratch, 1);
+                assert_eq!(y, y_ref, "{name} {tier:?} gemm batch={batch}");
+                // Sequential matvec rows == the same GEMM rows (the
+                // linear-level contract), still on the SIMD tier.
+                for t in 0..batch {
+                    let mut yt = vec![0.0f32; 37];
+                    lin.matvec_q8(&x[t * 512..(t + 1) * 512], &mut yt, &mut scratch, 1);
+                    assert_eq!(
+                        &y[t * 37..(t + 1) * 37],
+                        &yt[..],
+                        "{name} {tier:?} batch={batch} row {t}"
+                    );
+                }
+                // Row sharding stays bit-identical on SIMD tiers too.
+                for shards in [3usize, 8] {
+                    let mut ys = vec![0.0f32; batch * 37];
+                    lin.gemm_q8(&x, batch, &mut ys, &mut scratch, shards);
+                    assert_eq!(ys, y_ref, "{name} {tier:?} batch={batch} shards={shards}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn padded_linears_with_poisoned_scratch_bitwise_equal_scalar() {
+    let _g = lock();
+    let _r = Restore;
+    // Tail-row guard: cols % block != 0 forces the padded staging path;
+    // the scratch (including the padding region) is NaN-poisoned before
+    // every call, so a SIMD lane reading past the logical row end drags
+    // NaN into y and fails the finite/bitwise asserts. Runs even
+    // scalar-only: the poison checks are meaningful on every tier.
+    let tiers = simd_tiers();
+    let mut rng = XorShift::new(81);
+    for (name, cols) in [("itq3_s", 300usize), ("q8_0", 260), ("q4_k_m", 300), ("iq3_s", 300)] {
+        let w = heavy_tailed_tensor(9, cols, 82, 5.0);
+        let pl = PaddedLinear::new(format_by_name(name).unwrap(), &w);
+        let mut scratch = MatvecScratch::new();
+        let batch = 5usize;
+        let x: Vec<f32> = (0..batch * cols).map(|_| rng.next_f32() - 0.5).collect();
+        assert!(simd::try_force(SimdTier::Scalar));
+        let mut y_ref = vec![0.0f32; 9];
+        scratch.poison();
+        pl.matvec_q8(&x[..cols], &mut y_ref, &mut scratch);
+        assert!(y_ref.iter().all(|v| v.is_finite()), "{name}: scalar poison leak");
+        let mut yb_ref = vec![0.0f32; batch * 9];
+        scratch.poison();
+        pl.matmul_q8(&x, batch, &mut yb_ref, &mut scratch);
+        assert!(yb_ref.iter().all(|v| v.is_finite()));
+        for &tier in &tiers {
+            assert!(simd::try_force(tier));
+            let mut y = vec![0.0f32; 9];
+            scratch.poison();
+            pl.matvec_q8(&x[..cols], &mut y, &mut scratch);
+            assert_eq!(y, y_ref, "{name} {tier:?} padded matvec");
+            let mut yb = vec![0.0f32; batch * 9];
+            scratch.poison();
+            pl.matmul_q8(&x, batch, &mut yb, &mut scratch);
+            assert_eq!(yb, yb_ref, "{name} {tier:?} padded matmul");
+        }
+    }
+    if tiers.is_empty() {
+        skip_no_simd("padded_linears_with_poisoned_scratch (SIMD legs)");
+    }
+}
+
+#[test]
+fn engine_decode_bitwise_identical_dispatch_on_vs_off() {
+    let _g = lock();
+    let _r = Restore;
+    let tiers = simd_tiers();
+    if tiers.is_empty() {
+        skip_no_simd("engine_decode_bitwise_identical_dispatch_on_vs_off");
+        return;
+    }
+    let prompt = prompt_tokens(12, 3);
+    let forced: Vec<u32> = (0..6u32).map(|i| (i * 29 + 7) % 256).collect();
+    for name in hot_formats() {
+        let eng = quant_engine(name, 91);
+        assert!(simd::try_force(SimdTier::Scalar));
+        let mut kv = KvCache::new(&ModelConfig::test());
+        let logits_ref = sequential_decode(&eng, &mut kv, &prompt, &forced);
+        for &tier in &tiers {
+            assert!(simd::try_force(tier));
+            let mut kv2 = KvCache::new(&ModelConfig::test());
+            let logits = sequential_decode(&eng, &mut kv2, &prompt, &forced);
+            assert_eq!(logits.len(), logits_ref.len());
+            for (step, (a, b)) in logits.iter().zip(&logits_ref).enumerate() {
+                assert_eq!(a.len(), b.len());
+                for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{name} {tier:?} step {step} logit {i}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_tier_is_what_actually_runs_and_matches_kernel_capability() {
+    let _g = lock();
+    let _r = Restore;
+    let w = heavy_tailed_tensor(4, 512, 101, 5.0);
+    let mut rng = XorShift::new(102);
+    let x: Vec<f32> = (0..512).map(|_| rng.next_f32() - 0.5).collect();
+    for tier in SimdTier::ALL {
+        if !simd::try_force(tier) {
+            assert!(
+                !simd::tier_available(tier),
+                "{tier:?}: try_force failed on an available tier"
+            );
+            eprintln!("tier {tier:?} unavailable on this host; skipping its forced run");
+            continue;
+        }
+        assert_eq!(simd::active_tier(), tier);
+        // Specialized formats: the forced tier — and only that tier —
+        // actually runs, so a bad feature probe cannot silently fall
+        // back to scalar while claiming SIMD (or vice versa).
+        for name in hot_formats() {
+            let fmt = format_by_name(name).unwrap();
+            assert!(fmt.has_q8_kernel(), "{name} listed hot without a kernel");
+            let lin = QuantizedLinear::new(fmt, &w);
+            let mut scratch = MatvecScratch::new();
+            let mut y = vec![0.0f32; 4];
+            simd::probe_begin();
+            lin.matvec_q8(&x, &mut y, &mut scratch, 1);
+            let counts = simd::probe_end();
+            assert!(
+                counts[tier.index()] > 0,
+                "{name}: forced {tier:?} never dispatched (counts {counts:?})"
+            );
+            for other in SimdTier::ALL {
+                if other != tier {
+                    assert_eq!(
+                        counts[other.index()],
+                        0,
+                        "{name}: {other:?} ran while {tier:?} was forced (counts {counts:?})"
+                    );
+                }
+            }
+        }
+        // Generic-fallback formats must never touch the dispatcher:
+        // kernel selection (has_q8_kernel) and dispatch agree.
+        for name in ["fp16", "iq4_xs", "quip3", "itq3_s_sub"] {
+            let fmt = format_by_name(name).unwrap();
+            assert!(!fmt.has_q8_kernel(), "{name} gained a kernel; update this test");
+            let lin = QuantizedLinear::new(fmt, &w);
+            let mut scratch = MatvecScratch::new();
+            let mut y = vec![0.0f32; 4];
+            simd::probe_begin();
+            lin.matvec_q8(&x, &mut y, &mut scratch, 1);
+            let counts = simd::probe_end();
+            assert_eq!(
+                counts,
+                [0, 0, 0],
+                "{name}: generic fallback reached the SIMD dispatcher"
+            );
+        }
+    }
+    // The CLI/env paths land on scalar.
+    simd::clear_force();
+    simd::set_enabled(false);
+    assert_eq!(simd::active_tier(), SimdTier::Scalar);
+    simd::set_enabled(true);
+    assert_eq!(simd::active_tier(), simd::detected_tier());
+}
